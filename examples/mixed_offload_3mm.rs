@@ -1,0 +1,63 @@
+//! Figure 4, row 1: Polybench 3mm in the mixed destination environment.
+//!
+//! Reproduces the paper's result shape — the GPU loop offload wins by three
+//! orders of magnitude, many-core lands in the mid-tens — then validates
+//! the chosen pattern *functionally*: the 3mm artifact (L2 JAX on the L1
+//! Pallas matmul kernel) is executed via PJRT and its output compared
+//! against the original run, exactly the paper's final-result check.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example mixed_offload_3mm
+//! ```
+
+use mixoff::app::workloads;
+use mixoff::codegen;
+use mixoff::coordinator::MixedOffloader;
+use mixoff::devices::DeviceKind;
+use mixoff::report;
+use mixoff::runtime::{ResultChecker, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let app = workloads::by_name("3mm")?;
+    let offloader = MixedOffloader::default(); // no target: run all six trials
+    let outcome = offloader.run(&app);
+
+    print!("{}", report::render_trials(&outcome));
+    println!();
+    print!("{}", report::render_figure4(&[report::figure4_row(&outcome)]));
+
+    // --- paper-shape assertions (fig. 4 row 1) ---
+    let chosen = outcome.chosen.as_ref().expect("3mm must offload");
+    assert_eq!(chosen.kind.device, DeviceKind::Gpu, "paper: GPU wins 3mm");
+    assert!(chosen.improvement > 200.0, "paper: 1120x; got {:.0}x", chosen.improvement);
+    let mc = outcome
+        .trials
+        .iter()
+        .find(|t| t.kind.device == DeviceKind::ManyCore && t.offloaded)
+        .expect("many-core trial succeeded too");
+    assert!(
+        (10.0..80.0).contains(&mc.improvement),
+        "paper: many-core 44.5x; got {:.1}x",
+        mc.improvement
+    );
+
+    // --- final-result check with real numerics (PJRT + Pallas artifact) ---
+    let mut rt = Runtime::load_default()?;
+    let mut chk = ResultChecker::default();
+    let artifact = app.artifact.as_deref().unwrap();
+    let ok = chk.check(&mut rt, artifact, true)?;
+    assert!(ok.is_match(), "valid pattern must reproduce the original output: {ok:?}");
+    let bad = chk.check(&mut rt, artifact, false)?;
+    assert!(!bad.is_match(), "a racing pattern must be caught: {bad:?}");
+    println!("\nfinal-result check on {artifact}: valid={ok:?}, corrupted={bad:?}");
+
+    // --- the Step-3 deliverable: converted code ---
+    let pattern = chosen.pattern.clone().expect("loop offload has a pattern");
+    let src = codegen::emit(&app, &pattern, chosen.kind.device);
+    println!("\n--- generated OpenACC-annotated source (excerpt) ---");
+    for line in src.lines().take(24) {
+        println!("{line}");
+    }
+    println!("mixed_offload_3mm OK");
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Figure 4, row 2: NAS.BT in the mixed destination environment.
+//!
+//! The defining negative result: the GPU trial drowns in per-invocation
+//! PCIe transfers (every explored pattern times out or loses), so the
+//! coordinator lands on the many-core CPU at ~5x — and the verification
+//! ledger shows why trying many-core *first* was the right order.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example mixed_offload_nas_bt
+//! ```
+
+use mixoff::app::workloads;
+use mixoff::coordinator::MixedOffloader;
+use mixoff::devices::DeviceKind;
+use mixoff::offload::pattern::Method;
+use mixoff::report;
+use mixoff::runtime::{checker, ResultChecker, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let app = workloads::by_name("nas_bt")?;
+    let offloader = MixedOffloader::default();
+    let outcome = offloader.run(&app);
+
+    print!("{}", report::render_trials(&outcome));
+    println!();
+    print!("{}", report::render_figure4(&[report::figure4_row(&outcome)]));
+    println!();
+    print!("{}", report::render_timing(&outcome));
+
+    // --- paper-shape assertions (fig. 4 row 2) ---
+    let chosen = outcome.chosen.as_ref().expect("BT must offload");
+    assert_eq!(chosen.kind.device, DeviceKind::ManyCore, "paper: many-core wins BT");
+    assert_eq!(chosen.kind.method, Method::LoopOffload);
+    assert!(
+        (2.0..9.0).contains(&chosen.improvement),
+        "paper: 5.39x; got {:.2}x",
+        chosen.improvement
+    );
+    let gpu = outcome
+        .trials
+        .iter()
+        .find(|t| t.kind.device == DeviceKind::Gpu && t.kind.method == Method::LoopOffload)
+        .expect("GPU loop trial ran");
+    assert!(
+        gpu.improvement < 1.5,
+        "paper: GPU try yields no gain; got {:.2}x",
+        gpu.improvement
+    );
+
+    // --- final-result check with real numerics: one ADI step via PJRT ---
+    let mut rt = Runtime::load_default()?;
+    let mut chk = ResultChecker::default();
+    let ok = chk.check(&mut rt, "bt_step_8", true)?;
+    assert!(ok.is_match(), "{ok:?}");
+    let bad = chk.check(&mut rt, "bt_step_8", false)?;
+    assert!(!bad.is_match(), "{bad:?}");
+    println!("\nfinal-result check on bt_step_8: valid={ok:?}, corrupted={bad:?}");
+
+    // Also prove the scanned 5-iteration artifact equals 5 manual steps
+    // (the L2 lax.scan is what a deployment would actually run).
+    let meta = rt.meta("bt_step_8").unwrap().clone();
+    let inputs = checker::canonical_inputs(&meta);
+    let via_run = rt.execute("bt_run_8_i5", &inputs)?;
+    let mut state = inputs[0].clone();
+    for _ in 0..5 {
+        let mut step_in = vec![state];
+        step_in.extend_from_slice(&inputs[1..]);
+        state = rt.execute("bt_step_8", &step_in)?;
+    }
+    let diff = via_run.max_abs_diff(&state);
+    assert!(diff < 1e-3, "scan vs iterated steps diverged: {diff}");
+    println!("bt_run_8_i5 == 5 x bt_step_8 (max diff {diff:.2e})");
+    println!("mixed_offload_nas_bt OK");
+    Ok(())
+}

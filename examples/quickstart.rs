@@ -1,0 +1,39 @@
+//! Quickstart: offload a trivially parallel app in a mixed environment.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use mixoff::app::workloads;
+use mixoff::coordinator::{MixedOffloader, UserRequirements};
+use mixoff::report;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Get an application (here: a generated vecadd; parse your own with
+    //    mixoff::app::parse / the MiniC DSL).
+    let app = workloads::by_name("vecadd")?;
+    println!(
+        "application {:?}: {} loops, {:.2} Mflop",
+        app.name,
+        app.loop_count(),
+        app.total_flops() / 1e6
+    );
+
+    // 2. Configure the mixed offloader: stop as soon as something reaches
+    //    2x within a 5k USD device budget.
+    let mut offloader = MixedOffloader::default();
+    offloader.requirements = UserRequirements {
+        target_improvement: Some(2.0),
+        max_price_usd: Some(5_000.0),
+    };
+
+    // 3. Run the six-trial flow and inspect the decision.
+    let outcome = offloader.run(&app);
+    print!("{}", report::render_trials(&outcome));
+    print!("{}", report::render_timing(&outcome));
+
+    let chosen = outcome.chosen.as_ref().expect("vecadd offloads somewhere");
+    assert!(chosen.improvement > 1.0);
+    println!("\nquickstart OK: {} at {:.2}x", chosen.kind.label(), chosen.improvement);
+    Ok(())
+}

@@ -1,0 +1,128 @@
+"""AOT compile path: lower every L2 workload to HLO text + a manifest.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the image's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via `make artifacts` (python -m compile.aot --out-dir ../artifacts).
+Python runs once here and never at offload time.
+
+Emitted artifacts (see `entries()`):
+  matmul_{n}            the function-block replacement unit (the 'CUDA
+                        library / IP core' the FB offload substitutes in)
+  three_mm_{n}          Polybench 3mm
+  bt_step_{n}           one NAS.BT ADI iteration
+  bt_run_{n}_i{k}       k ADI iterations under one lax.scan (e2e driver)
+  jacobi2d_{n}          one Jacobi sweep
+  jacobi2d_run_{n}_i{k} k sweeps under one lax.scan
+
+plus `manifest.json` describing input/output shapes for the Rust loader.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def _tuple_wrap(fn):
+    def wrapped(*args):
+        return (fn(*args),)
+
+    return wrapped
+
+
+def entries():
+    """name -> (fn, [input shapes]).  All f32; outputs are 1-tuples."""
+    out = {}
+    for n in (64, 128, 256):
+        out[f"matmul_{n}"] = (model.matmul, [(n, n), (n, n)])
+        out[f"three_mm_{n}"] = (model.three_mm, [(n, n)] * 4)
+    blk = model.BLOCK
+    coeff_shapes = [(blk, blk)] * 5  # a, b, c, m1, m2
+    for n in (8, 12):
+        out[f"bt_step_{n}"] = (model.bt_step, [(n, n, n, blk)] + coeff_shapes)
+    out["bt_run_8_i5"] = (
+        partial(model.bt_run, iters=5),
+        [(8, 8, 8, blk)] + coeff_shapes,
+    )
+    for n in (64, 128):
+        out[f"jacobi2d_{n}"] = (
+            lambda u: model.jacobi2d_run(u, iters=1),
+            [(n, n)],
+        )
+    out["jacobi2d_run_64_i10"] = (
+        partial(model.jacobi2d_run, iters=10),
+        [(64, 64)],
+    )
+    return out
+
+
+def lower_entry(name, fn, shapes):
+    specs = [_spec(s) for s in shapes]
+    lowered = jax.jit(_tuple_wrap(fn)).lower(*specs)
+    text = to_hlo_text(lowered)
+    out_shape = jax.eval_shape(fn, *specs)
+    return text, {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "inputs": [{"shape": list(s), "dtype": "f32"} for s in shapes],
+        "output": {"shape": list(out_shape.shape), "dtype": "f32"},
+        "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single entry")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for name, (fn, shapes) in entries().items():
+        if args.only and name != args.only:
+            continue
+        text, meta = lower_entry(name, fn, shapes)
+        path = os.path.join(args.out_dir, meta["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(meta)
+        print(f"  {name}: {len(text)} chars -> {meta['file']}")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    if args.only and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = {m["name"]: m for m in json.load(f)}
+        for m in manifest:
+            old[m["name"]] = m
+        manifest = list(old.values())
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest)} entries)")
+
+
+if __name__ == "__main__":
+    main()

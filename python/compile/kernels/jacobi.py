@@ -1,0 +1,42 @@
+"""L1 Pallas kernel: 2-D Jacobi stencil (extra Polybench-class workload).
+
+Used by the `extra` workload generators on the Rust side as a third
+application family (stencil codes are the canonical 'parallelizable loop
+nest that is memory-bound', the regime where the paper's many-core
+destination wins over the GPU because there is nothing to amortize the
+PCIe transfer against).
+
+The kernel processes the whole (small) grid per call: one VMEM-resident
+block with jnp.roll neighbours, interior updated, boundary preserved.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _jacobi_kernel(u_ref, o_ref):
+    u = u_ref[...]
+    up = jnp.roll(u, 1, axis=0)
+    down = jnp.roll(u, -1, axis=0)
+    left = jnp.roll(u, 1, axis=1)
+    right = jnp.roll(u, -1, axis=1)
+    new = 0.2 * (u + up + down + left + right)
+    n, m = u.shape
+    interior = (
+        (jnp.arange(n)[:, None] > 0)
+        & (jnp.arange(n)[:, None] < n - 1)
+        & (jnp.arange(m)[None, :] > 0)
+        & (jnp.arange(m)[None, :] < m - 1)
+    )
+    o_ref[...] = jnp.where(interior, new, u)
+
+
+@jax.jit
+def jacobi2d_step(u):
+    """One 5-point Jacobi sweep; boundary rows/cols are untouched."""
+    return pl.pallas_call(
+        _jacobi_kernel,
+        out_shape=jax.ShapeDtypeStruct(u.shape, u.dtype),
+        interpret=True,
+    )(u)

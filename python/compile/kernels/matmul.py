@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: tiled matmul.
+
+The paper's 3mm workload (Polybench) is three chained 1000x1000 matrix
+products; on the GPU destination the paper offloads its loop nests via
+OpenACC.  Re-thought for the TPU model (DESIGN.md #Hardware-Adaptation):
+instead of CUDA threadblocks we tile the product for VMEM residency and feed
+the MXU with (bm, bk) x (bk, bn) blocks, accumulating in f32.  The grid is
+(M/bm, N/bn, K/bk); the K axis is innermost so each output tile stays
+resident in VMEM across the whole reduction (one HBM write per tile).
+
+interpret=True is mandatory in this image: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT client cannot execute (see /opt/xla-example).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM tile edge.  128 matches the MXU systolic edge; tests shrink it
+# for small shapes.
+DEFAULT_BLOCK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output tile; K-step pl.program_id(2)."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, requested: int) -> int:
+    """Largest divisor of dim that is <= requested (keeps the grid exact)."""
+    b = min(requested, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@partial(jax.jit, static_argnames=("block",))
+def matmul(x, y, *, block: int = DEFAULT_BLOCK):
+    """Pallas tiled matmul: x (m, k) @ y (k, n) -> (m, n)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims differ: {k} vs {k2}"
+    bm = _pick_block(m, block)
+    bn = _pick_block(n, block)
+    bk = _pick_block(k, block)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, itemsize: int = 4) -> int:
+    """Estimated VMEM residency of one grid step (x tile + y tile + o tile).
+
+    Used by DESIGN.md/EXPERIMENTS.md to argue the real-TPU schedule fits the
+    ~16 MiB VMEM budget; interpret-mode wallclock is NOT a TPU proxy.
+    """
+    return (bm * bk + bk * bn + bm * bn) * itemsize
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int, block: int = DEFAULT_BLOCK) -> float:
+    """Fraction of MXU-issue slots doing useful work for this shape.
+
+    The 128x128 MXU is fully fed when every tile edge is a multiple of 128;
+    ragged edges waste (1 - edge/ceil128(edge)) of the array per dimension.
+    """
+
+    def eff(d: int) -> float:
+        b = _pick_block(d, block)
+        return b / float(-(-b // 128) * 128) if b < 128 else 1.0
+
+    return eff(m) * eff(n) * eff(k)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every L1 kernel.
+
+Independent implementations (dense solves, jnp.matmul, explicit slicing) so
+a kernel bug cannot hide in shared code.  pytest compares kernels against
+these; they are never lowered into artifacts.
+"""
+
+import jax.numpy as jnp
+
+BLOCK = 5
+
+
+def matmul_ref(x, y):
+    return jnp.matmul(x, y)
+
+
+def three_mm_ref(a, b, c, d):
+    """Polybench 3mm: G = (A.B) . (C.D)."""
+    return jnp.matmul(jnp.matmul(a, b), jnp.matmul(c, d))
+
+
+def bt_lines_ref(a, b, c, d):
+    """Dense oracle: assemble each line's (5n, 5n) matrix, jnp solve."""
+    nlines, n, _ = d.shape
+    big = jnp.zeros((n * BLOCK, n * BLOCK), dtype=d.dtype)
+    for i in range(n):
+        big = big.at[
+            i * BLOCK : (i + 1) * BLOCK, i * BLOCK : (i + 1) * BLOCK
+        ].set(b)
+        if i > 0:
+            big = big.at[
+                i * BLOCK : (i + 1) * BLOCK, (i - 1) * BLOCK : i * BLOCK
+            ].set(a)
+        if i < n - 1:
+            big = big.at[
+                i * BLOCK : (i + 1) * BLOCK, (i + 1) * BLOCK : (i + 2) * BLOCK
+            ].set(c)
+    flat = d.reshape(nlines, n * BLOCK)
+    sol = jnp.linalg.solve(
+        jnp.broadcast_to(big, (nlines, n * BLOCK, n * BLOCK)),
+        flat[..., None],
+    )[..., 0]
+    return sol.reshape(nlines, n, BLOCK)
+
+
+def jacobi2d_ref(u):
+    core = 0.2 * (
+        u[1:-1, 1:-1] + u[:-2, 1:-1] + u[2:, 1:-1] + u[1:-1, :-2] + u[1:-1, 2:]
+    )
+    return u.at[1:-1, 1:-1].set(core)
+
+
+def compute_rhs_ref(u, m1, m2):
+    """Periodic 7-point stencil mixed through 5x5 matrices (see model.py)."""
+    lap = (
+        jnp.roll(u, 1, 0) + jnp.roll(u, -1, 0)
+        + jnp.roll(u, 1, 1) + jnp.roll(u, -1, 1)
+        + jnp.roll(u, 1, 2) + jnp.roll(u, -1, 2)
+        - 6.0 * u
+    )
+    return u @ m1 + lap @ m2

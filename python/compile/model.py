@@ -1,0 +1,96 @@
+"""L2: JAX compute graphs for the paper's evaluated workloads.
+
+Two workload families from the paper's evaluation (sec. 4.1.1) plus one
+extra stencil family:
+
+  * three_mm  — Polybench 3mm, G = (A.B).(C.D), built on the L1 Pallas
+    tiled-matmul kernel (kernels/matmul.py).
+  * bt_step   — NAS.BT-shaped ADI iteration on a (n, n, n, 5) state: a
+    compute_rhs stencil then three block-tridiagonal line-solve sweeps
+    (x, y, z), each built on the L1 Pallas line solver
+    (kernels/bt_solve.py).
+  * jacobi2d  — 2-D Jacobi sweep on the L1 stencil kernel.
+
+These are lowered ONCE by aot.py to HLO text; the Rust coordinator executes
+them via PJRT to functionally validate offload patterns (the paper's
+'final-result check' of sec. 3.2.1) and to drive the e2e examples.  Python
+is never on the offload-time path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.bt_solve import bt_lines, well_conditioned_blocks
+from compile.kernels.jacobi import jacobi2d_step
+from compile.kernels.matmul import matmul
+
+BLOCK = 5
+
+
+def three_mm(a, b, c, d):
+    """Polybench 3mm on the Pallas matmul kernel: E=A.B, F=C.D, G=E.F."""
+    e = matmul(a, b)
+    f = matmul(c, d)
+    return matmul(e, f)
+
+
+def compute_rhs(u, m1, m2):
+    """NAS.BT-shaped RHS: periodic 7-point Laplacian mixed through 5x5
+    matrices.  Left to plain jnp so XLA fuses the rolls into one pass."""
+    lap = (
+        jnp.roll(u, 1, 0) + jnp.roll(u, -1, 0)
+        + jnp.roll(u, 1, 1) + jnp.roll(u, -1, 1)
+        + jnp.roll(u, 1, 2) + jnp.roll(u, -1, 2)
+        - 6.0 * u
+    )
+    return u @ m1 + lap @ m2
+
+
+def _sweep(u, a, b, c, axis):
+    """Solve every grid line along `axis` as a block-tridiagonal system."""
+    n = u.shape[0]
+    # Move the solved axis to the middle: (lines, n, 5).
+    perm = [ax for ax in range(3) if ax != axis] + [axis, 3]
+    ut = jnp.transpose(u, perm).reshape(n * n, n, BLOCK)
+    sol = bt_lines(a, b, c, ut)
+    sol = sol.reshape(n, n, n, BLOCK)
+    inv = [0] * 4
+    for pos, ax in enumerate(perm):
+        inv[ax] = pos
+    return jnp.transpose(sol, inv)
+
+
+def bt_step(u, a, b, c, m1, m2):
+    """One ADI iteration: rhs then x-, y-, z-sweeps (NAS.BT adi())."""
+    d = compute_rhs(u, m1, m2)
+    d = _sweep(d, a, b, c, axis=0)
+    d = _sweep(d, a, b, c, axis=1)
+    d = _sweep(d, a, b, c, axis=2)
+    return d
+
+
+def bt_run(u, a, b, c, m1, m2, *, iters: int):
+    """`iters` ADI iterations via lax.scan (no unrolling: one HLO while-loop
+    regardless of the iteration count)."""
+
+    def body(carry, _):
+        return bt_step(carry, a, b, c, m1, m2), None
+
+    out, _ = jax.lax.scan(body, u, None, length=iters)
+    return out
+
+
+def jacobi2d_run(u, *, iters: int):
+    def body(carry, _):
+        return jacobi2d_step(carry), None
+
+    out, _ = jax.lax.scan(body, u, None, length=iters)
+    return out
+
+
+def default_bt_coefficients(dtype=jnp.float32):
+    """The (A, B, C, M1, M2) constants every BT artifact/test shares."""
+    a, b, c = well_conditioned_blocks(dtype=dtype)
+    m1 = jnp.eye(BLOCK, dtype=dtype) * 0.9 + 0.01
+    m2 = jnp.eye(BLOCK, dtype=dtype) * 0.05
+    return a, b, c, m1, m2

@@ -1,0 +1,131 @@
+"""L1 block-tridiagonal line solver vs dense oracle + model-level invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.bt_solve import (
+    BLOCK,
+    bt_lines,
+    lines_vmem_footprint_bytes,
+    solve5,
+    thomas_block,
+    well_conditioned_blocks,
+)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+def test_solve5_against_linalg():
+    m = jnp.eye(BLOCK) * 3.0 + _rand(0, (BLOCK, BLOCK)) * 0.2
+    rhs = _rand(1, (BLOCK, 2))
+    np.testing.assert_allclose(
+        solve5(m, rhs), jnp.linalg.solve(m, rhs), rtol=1e-4, atol=1e-5
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), k=st.integers(1, 6))
+def test_solve5_hypothesis(seed, k):
+    m = jnp.eye(BLOCK) * 4.0 + _rand(seed, (BLOCK, BLOCK)) * 0.3
+    rhs = _rand(seed + 1, (BLOCK, k))
+    np.testing.assert_allclose(
+        solve5(m, rhs), jnp.linalg.solve(m, rhs), rtol=1e-4, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("n", [2, 3, 5, 8, 16])
+def test_thomas_block_residual(n):
+    a, b, c = well_conditioned_blocks()
+    d = _rand(10 + n, (n, BLOCK))
+    x = thomas_block(a, b, c, d)
+    # Verify the recurrence a x[i-1] + b x[i] + c x[i+1] = d[i] directly.
+    for i in range(n):
+        lhs = b @ x[i]
+        if i > 0:
+            lhs = lhs + a @ x[i - 1]
+        if i < n - 1:
+            lhs = lhs + c @ x[i + 1]
+        np.testing.assert_allclose(lhs, d[i], rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("nlines,n", [(1, 4), (4, 4), (9, 6), (16, 8)])
+def test_bt_lines_matches_dense_oracle(nlines, n):
+    a, b, c = well_conditioned_blocks()
+    d = _rand(20 + nlines, (nlines, n, BLOCK))
+    np.testing.assert_allclose(
+        bt_lines(a, b, c, d),
+        ref.bt_lines_ref(a, b, c, d),
+        rtol=1e-3,
+        atol=1e-4,
+    )
+
+
+def test_bt_lines_lines_are_independent():
+    """Solving lines together == solving them one at a time."""
+    a, b, c = well_conditioned_blocks()
+    d = _rand(30, (5, 6, BLOCK))
+    joint = bt_lines(a, b, c, d)
+    for i in range(5):
+        single = bt_lines(a, b, c, d[i : i + 1])
+        np.testing.assert_allclose(joint[i], single[0], rtol=1e-5, atol=1e-6)
+
+
+def test_compute_rhs_matches_ref():
+    _, _, _, m1, m2 = model.default_bt_coefficients()
+    u = _rand(40, (6, 6, 6, BLOCK))
+    np.testing.assert_allclose(
+        model.compute_rhs(u, m1, m2),
+        ref.compute_rhs_ref(u, m1, m2),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_bt_step_is_linear_in_state():
+    """Every op in the ADI step is linear => bt_step(alpha u) == alpha
+    bt_step(u).  A strong whole-model invariant."""
+    a, b, c, m1, m2 = model.default_bt_coefficients()
+    u = _rand(41, (4, 4, 4, BLOCK))
+    out1 = model.bt_step(u, a, b, c, m1, m2)
+    out2 = model.bt_step(2.5 * u, a, b, c, m1, m2)
+    np.testing.assert_allclose(2.5 * out1, out2, rtol=1e-4, atol=1e-4)
+
+
+def test_bt_step_additivity():
+    a, b, c, m1, m2 = model.default_bt_coefficients()
+    u = _rand(42, (4, 4, 4, BLOCK))
+    v = _rand(43, (4, 4, 4, BLOCK))
+    lhs = model.bt_step(u + v, a, b, c, m1, m2)
+    rhs = model.bt_step(u, a, b, c, m1, m2) + model.bt_step(v, a, b, c, m1, m2)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-4)
+
+
+def test_bt_run_equals_iterated_step():
+    a, b, c, m1, m2 = model.default_bt_coefficients()
+    u = _rand(44, (4, 4, 4, BLOCK))
+    via_run = model.bt_run(u, a, b, c, m1, m2, iters=3)
+    via_steps = u
+    for _ in range(3):
+        via_steps = model.bt_step(via_steps, a, b, c, m1, m2)
+    np.testing.assert_allclose(via_run, via_steps, rtol=1e-4, atol=1e-4)
+
+
+def test_bt_step_contracts():
+    """The generated system is diffusive: the solve damps the state, so the
+    iteration is stable (no blow-up over the e2e run)."""
+    a, b, c, m1, m2 = model.default_bt_coefficients()
+    u = _rand(45, (6, 6, 6, BLOCK))
+    out = model.bt_step(u, a, b, c, m1, m2)
+    assert float(jnp.linalg.norm(out)) < float(jnp.linalg.norm(u)) * 1.5
+
+
+def test_lines_vmem_footprint():
+    # A 64-point line must fit VMEM many times over (double-buffering room).
+    assert lines_vmem_footprint_bytes(64) < 2**20

@@ -1,0 +1,94 @@
+"""Cross-layer consistency guards.
+
+The Rust runtime's ResultChecker mirrors the BT coefficient constants
+(rust/src/runtime/checker.rs::bt_coefficients) so it can feed canonical
+inputs to the artifacts.  These tests pin the Python side to the exact
+closed form both implementations use — if either drifts, the golden-output
+comparison in the Rust integration tests would silently test the wrong
+system, so we fail loudly here instead.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels.bt_solve import well_conditioned_blocks
+
+# The same literal coupling matrix hard-coded in rust checker.rs.
+COUPLING = np.array(
+    [
+        [0.00, 0.02, -0.01, 0.01, 0.00],
+        [0.01, 0.00, 0.02, -0.01, 0.01],
+        [-0.01, 0.01, 0.00, 0.02, -0.01],
+        [0.02, -0.01, 0.01, 0.00, 0.01],
+        [0.01, 0.02, -0.01, 0.01, 0.00],
+    ],
+    dtype=np.float32,
+)
+
+
+def test_blocks_match_rust_checker_formulas():
+    a, b, c = well_conditioned_blocks()
+    eye = np.eye(5, dtype=np.float32)
+    np.testing.assert_array_equal(np.asarray(a), -0.25 * eye + 0.5 * COUPLING)
+    np.testing.assert_array_equal(np.asarray(c), -0.25 * eye - 0.5 * COUPLING)
+    np.testing.assert_array_equal(np.asarray(b), 2.0 * eye + COUPLING.T)
+
+
+def test_m_matrices_match_rust_checker_formulas():
+    _, _, _, m1, m2 = model.default_bt_coefficients()
+    eye = np.eye(5, dtype=np.float32)
+    np.testing.assert_allclose(np.asarray(m1), 0.9 * eye + 0.01, atol=0)
+    np.testing.assert_allclose(np.asarray(m2), 0.05 * eye, atol=0)
+
+
+def test_b_block_is_strictly_diagonally_dominant():
+    # The pivot-free solve5 requires this; the Rust test pins the same.
+    _, b, _ = well_conditioned_blocks()
+    b = np.asarray(b)
+    for i in range(5):
+        off = np.abs(b[i]).sum() - abs(b[i, i])
+        assert abs(b[i, i]) > off
+
+
+def test_checker_rng_matches_rust_tensor_random():
+    """`Tensor::random` (rust) and this re-implementation must stay in
+    lockstep: the checker's canonical inputs are generated on the Rust side
+    and the golden outputs flow through artifacts lowered from this Python
+    code."""
+
+    def rust_tensor_random(shape, seed):
+        n = int(np.prod(shape))
+        state = (seed * 0x9E3779B97F4A7C15) % (1 << 64)
+        state = max(state, 1)
+        out = []
+        for _ in range(n):
+            state ^= (state << 13) % (1 << 64)
+            state %= 1 << 64
+            state ^= state >> 7
+            state ^= (state << 17) % (1 << 64)
+            state %= 1 << 64
+            out.append((state >> 40) / float(1 << 23) - 1.0)
+        return np.array(out, dtype=np.float32).reshape(shape)
+
+    t = rust_tensor_random((4, 4), 7)
+    assert t.shape == (4, 4)
+    assert np.all((t >= -1.0) & (t <= 1.0))
+    # Determinism + seed sensitivity (mirrors rust tensor.rs unit tests).
+    np.testing.assert_array_equal(t, rust_tensor_random((4, 4), 7))
+    assert not np.array_equal(t, rust_tensor_random((4, 4), 8))
+
+
+def test_artifact_shapes_cover_checker_needs():
+    """Every artifact the Rust ResultChecker/examples name must exist in
+    aot.entries() with the shapes checker.rs assumes."""
+    from compile import aot
+
+    ents = aot.entries()
+    _, shapes = ents["bt_step_8"]
+    assert shapes[0] == (8, 8, 8, 5)
+    assert all(s == (5, 5) for s in shapes[1:])
+    _, shapes = ents["three_mm_128"]
+    assert shapes == [(128, 128)] * 4
+    _, shapes = ents["matmul_128"]
+    assert shapes == [(128, 128)] * 2

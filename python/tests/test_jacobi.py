@@ -1,0 +1,57 @@
+"""L1 Jacobi stencil kernel vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.jacobi import jacobi2d_step
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("n,m", [(4, 4), (8, 8), (16, 32), (64, 64)])
+def test_matches_ref(n, m):
+    u = _rand(0, (n, m))
+    np.testing.assert_allclose(
+        jacobi2d_step(u), ref.jacobi2d_ref(u), rtol=1e-5, atol=1e-6
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(3, 24), m=st.integers(3, 24), seed=st.integers(0, 2**16)
+)
+def test_hypothesis_shapes(n, m, seed):
+    u = _rand(seed, (n, m))
+    np.testing.assert_allclose(
+        jacobi2d_step(u), ref.jacobi2d_ref(u), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_boundary_preserved():
+    u = _rand(1, (12, 12))
+    out = jacobi2d_step(u)
+    np.testing.assert_array_equal(out[0], u[0])
+    np.testing.assert_array_equal(out[-1], u[-1])
+    np.testing.assert_array_equal(out[:, 0], u[:, 0])
+    np.testing.assert_array_equal(out[:, -1], u[:, -1])
+
+
+def test_constant_field_is_fixed_point():
+    u = jnp.full((10, 10), 3.0)
+    np.testing.assert_allclose(jacobi2d_step(u), u, rtol=1e-6)
+
+
+def test_run_equals_iterated_step():
+    u = _rand(2, (10, 10))
+    via_run = model.jacobi2d_run(u, iters=4)
+    via_steps = u
+    for _ in range(4):
+        via_steps = jacobi2d_step(via_steps)
+    np.testing.assert_allclose(via_run, via_steps, rtol=1e-5, atol=1e-6)

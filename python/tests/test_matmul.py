@@ -1,0 +1,90 @@
+"""L1 matmul kernel vs pure-jnp oracle: the CORE correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.matmul import (
+    _pick_block,
+    matmul,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("n", [16, 32, 64, 128])
+def test_square_matches_ref(n):
+    x, y = _rand(0, (n, n)), _rand(1, (n, n))
+    np.testing.assert_allclose(
+        matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize(
+    "m,k,n", [(16, 32, 48), (64, 16, 32), (48, 48, 16), (128, 64, 32)]
+)
+def test_rectangular_matches_ref(m, k, n):
+    x, y = _rand(2, (m, k)), _rand(3, (k, n))
+    np.testing.assert_allclose(
+        matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("block", [8, 16, 32, 64, 128, 1000])
+def test_block_size_does_not_change_result(block):
+    x, y = _rand(4, (64, 64)), _rand(5, (64, 64))
+    np.testing.assert_allclose(
+        matmul(x, y, block=block), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 24, 40, 56]),
+    k=st.sampled_from([8, 16, 24, 40]),
+    n=st.sampled_from([8, 16, 24, 40]),
+    block=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_shape_sweep(m, k, n, block, seed):
+    x, y = _rand(seed, (m, k)), _rand(seed + 1, (k, n))
+    np.testing.assert_allclose(
+        matmul(x, y, block=block), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_identity():
+    x = _rand(6, (32, 32))
+    np.testing.assert_allclose(
+        matmul(x, jnp.eye(32)), x, rtol=1e-5, atol=1e-5
+    )
+
+
+def test_zeros():
+    x = _rand(7, (16, 16))
+    assert jnp.all(matmul(x, jnp.zeros((16, 16))) == 0.0)
+
+
+def test_pick_block_divides():
+    for dim in (7, 16, 48, 100, 128, 1000):
+        for req in (8, 32, 128):
+            b = _pick_block(dim, req)
+            assert dim % b == 0 and 1 <= b <= max(req, 1)
+
+
+def test_vmem_footprint_within_budget():
+    # The production tile choice must fit comfortably in ~16 MiB VMEM.
+    assert vmem_footprint_bytes(128, 128, 128) < 16 * 2**20 // 4
+
+
+def test_mxu_utilization_estimates():
+    assert mxu_utilization_estimate(1024, 1024, 1024) == 1.0
+    assert mxu_utilization_estimate(64, 1024, 1024) == pytest.approx(0.5)
+    assert 0.0 < mxu_utilization_estimate(40, 40, 40) < 1.0

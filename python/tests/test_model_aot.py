@@ -1,0 +1,85 @@
+"""L2 model correctness + AOT lowering smoke tests."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("n", [16, 32, 64])
+def test_three_mm_matches_ref(n):
+    mats = [_rand(i, (n, n)) for i in range(4)]
+    np.testing.assert_allclose(
+        model.three_mm(*mats), ref.three_mm_ref(*mats), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_three_mm_associates_with_plain_matmul():
+    mats = [_rand(10 + i, (32, 32)) for i in range(4)]
+    e = jnp.matmul(mats[0], mats[1])
+    f = jnp.matmul(mats[2], mats[3])
+    np.testing.assert_allclose(
+        model.three_mm(*mats), jnp.matmul(e, f), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_entries_table_is_consistent():
+    ents = aot.entries()
+    # Every artifact the Rust runtime registry expects must exist.
+    for required in (
+        "matmul_128",
+        "three_mm_64",
+        "three_mm_128",
+        "bt_step_8",
+        "bt_run_8_i5",
+        "jacobi2d_64",
+    ):
+        assert required in ents, required
+    for name, (fn, shapes) in ents.items():
+        assert callable(fn) and shapes, name
+
+
+def test_lower_entry_produces_hlo_text():
+    ents = aot.entries()
+    fn, shapes = ents["matmul_64"]
+    text, meta = aot.lower_entry("matmul_64", fn, shapes)
+    assert "ENTRY" in text and "f32[64,64]" in text
+    assert meta["output"]["shape"] == [64, 64]
+    assert len(meta["sha256"]) == 16
+
+
+def test_lower_bt_entry_output_shape():
+    ents = aot.entries()
+    fn, shapes = ents["bt_step_8"]
+    out_shape = jax.eval_shape(
+        fn, *[jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    )
+    assert out_shape.shape == (8, 8, 8, 5)
+
+
+def test_manifest_roundtrip(tmp_path):
+    import os
+    import subprocess
+    import sys
+
+    # Full aot for the smallest entry only, into a temp dir.  cwd must be
+    # the python/ package root regardless of where pytest was launched.
+    pkg_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    res = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+         "--only", "matmul_64"],
+        capture_output=True, text=True, cwd=pkg_root,
+    )
+    assert res.returncode == 0, res.stderr
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest[0]["name"] == "matmul_64"
+    assert (tmp_path / "matmul_64.hlo.txt").exists()

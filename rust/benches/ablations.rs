@@ -1,0 +1,95 @@
+//! Bench: ablations of the design choices DESIGN.md calls out.
+//!
+//!  A. Trial ordering: paper order vs FPGA-first — simulated hours spent
+//!     before a 10x-target user is satisfied.
+//!  B. Fitness exponent: -1/2 (paper) vs -1 — search quality on 3mm.
+//!  C. Elite preservation: on (paper) vs off.
+//!  D. GPU transfer-reduction pass ([42]): on vs off.
+//!  E. Initial genome density: 0.10 / 0.25 / 0.50 on NAS.BT (bootstrap
+//!     probability of valid patterns).
+
+#[path = "support.rs"]
+mod support;
+
+use mixoff::app::workloads;
+use mixoff::coordinator::{MixedOffloader, UserRequirements};
+use mixoff::devices::{Gpu, ManyCore};
+use mixoff::ga::GaConfig;
+use mixoff::offload::{gpu_loop, manycore_loop};
+use support::metric;
+
+fn main() {
+    // ---- A. ordering vs FPGA-first under a 10x target ----
+    let app = workloads::by_name("blocked-gemm-app").unwrap();
+    let mut mo = MixedOffloader::default();
+    mo.requirements = UserRequirements { target_improvement: Some(10.0), max_price_usd: None };
+    let out = mo.run(&app);
+    metric("ordering.paper.cost_to_satisfy", out.clock.total_hours(), "h", None);
+    // FPGA-first counterfactual: the FB-FPGA trial alone burns a synthesis.
+    let fpga_first_cost = 3.0 + out.clock.total_hours(); // + 3h synthesis before the winner
+    metric("ordering.fpga_first.cost_to_satisfy", fpga_first_cost, "h", None);
+    println!();
+
+    // ---- B. fitness exponent ----
+    let app3 = workloads::by_name("3mm").unwrap();
+    for (label, exp) in [("paper_-0.5", -0.5), ("alt_-1.0", -1.0)] {
+        let cfg = GaConfig { population: 16, generations: 16, exponent: exp, ..Default::default() };
+        let out = manycore_loop::search(&app3, &ManyCore::default(), cfg);
+        metric(&format!("exponent.{label}.improvement"), out.improvement(), "x", None);
+    }
+    println!();
+
+    // ---- C. elite preservation ----
+    for (label, elite) in [("on", true), ("off", false)] {
+        let cfg = GaConfig { population: 16, generations: 16, elite, ..Default::default() };
+        let out = manycore_loop::search(&app3, &ManyCore::default(), cfg);
+        metric(&format!("elite.{label}.improvement"), out.improvement(), "x", None);
+    }
+    println!();
+
+    // ---- D. transfer hoisting ([42]) ----
+    // jacobi2d nests its sweep inside the time loop: without hoisting the
+    // ping-pong arrays re-cross PCIe every sweep.
+    let jac = workloads::by_name("jacobi2d").unwrap();
+    for (label, hoist) in [("on", true), ("off", false)] {
+        let gpu = Gpu { hoist_transfers: hoist, ..Gpu::default() };
+        let cfg = GaConfig { population: 8, generations: 8, ..Default::default() };
+        let out = gpu_loop::search(&jac, &gpu, cfg);
+        metric(&format!("hoisting.{label}.improvement"), out.improvement(), "x", None);
+    }
+    println!();
+
+    // ---- F. GA stagnation early-stop (extension) on the all-timeout
+    // NAS.BT GPU search: same answer, far fewer simulated hours ----
+    let btg = workloads::by_name("nas_bt").unwrap();
+    for (label, stop) in [("off_paper", None), ("on_5gens", Some(5))] {
+        let cfg = GaConfig { population: 20, generations: 20, stagnation_stop: stop, ..Default::default() };
+        let out = gpu_loop::search(&btg, &Gpu::default(), cfg);
+        metric(
+            &format!("earlystop.{label}.cost"),
+            out.simulated_cost_s / 3600.0,
+            "h",
+            Some("paper GA ~6 h"),
+        );
+        metric(&format!("earlystop.{label}.improvement"), out.improvement(), "x", None);
+    }
+    println!();
+
+    // ---- E. init density on NAS.BT (valid-bootstrap sensitivity) ----
+    let bt = workloads::by_name("nas_bt").unwrap();
+    for density in [0.10, 0.25, 0.50] {
+        let cfg = GaConfig {
+            population: 20,
+            generations: 20,
+            init_density: density,
+            ..Default::default()
+        };
+        let out = manycore_loop::search(&bt, &ManyCore::default(), cfg);
+        metric(
+            &format!("density.{density:.2}.improvement"),
+            out.improvement(),
+            "x",
+            None,
+        );
+    }
+}

@@ -1,0 +1,40 @@
+//! Bench: regenerate fig. 4 row 1 (Polybench 3mm) and time the search.
+//!
+//! Paper reference: single-core 51.3 s; GPU loop offload 0.046 s (1120x);
+//! many-core loop offload 1.05 s (44.5x); GPU selected.
+
+#[path = "support.rs"]
+mod support;
+
+use mixoff::app::workloads;
+use mixoff::coordinator::MixedOffloader;
+use mixoff::devices::DeviceKind;
+use mixoff::offload::pattern::Method;
+use mixoff::report;
+use support::{bench, metric};
+
+fn main() {
+    let app = workloads::by_name("3mm").unwrap();
+    let mo = MixedOffloader::default();
+    let out = mo.run(&app);
+
+    println!("{}", report::render_figure4(&[report::figure4_row(&out)]));
+    metric("3mm.single_core", out.baseline_seconds, "s", Some("51.3 s"));
+    let chosen = out.chosen.as_ref().expect("3mm offloads");
+    assert_eq!(chosen.kind.device, DeviceKind::Gpu, "paper: GPU must win");
+    metric("3mm.gpu_loop.seconds", chosen.seconds, "s", Some("0.046 s"));
+    metric("3mm.gpu_loop.improvement", chosen.improvement, "x", Some("1120x"));
+    let mc = out
+        .trials
+        .iter()
+        .find(|t| t.kind.device == DeviceKind::ManyCore && t.kind.method == Method::LoopOffload)
+        .unwrap();
+    metric("3mm.manycore_loop.seconds", mc.seconds, "s", Some("1.05 s"));
+    metric("3mm.manycore_loop.improvement", mc.improvement, "x", Some("44.5x"));
+    metric("3mm.verify_total", out.clock.total_hours(), "h", Some("~1 day incl. FPGA"));
+
+    // Wall-clock of the full mixed search (the thing a deployment repeats).
+    bench("3mm.full_mixed_search", 3, || {
+        let _ = MixedOffloader::default().run(&app);
+    });
+}

@@ -1,0 +1,39 @@
+//! Bench: regenerate fig. 4 row 2 (NAS.BT) and time the search.
+//!
+//! Paper reference: single-core 130 s; many-core loop offload 24.1 s
+//! (5.39x); GPU loop try exceeds the 150 s timeout -> no offload (1x);
+//! many-core selected.
+
+#[path = "support.rs"]
+mod support;
+
+use mixoff::app::workloads;
+use mixoff::coordinator::MixedOffloader;
+use mixoff::devices::DeviceKind;
+use mixoff::offload::pattern::Method;
+use mixoff::report;
+use support::{bench, metric};
+
+fn main() {
+    let app = workloads::by_name("nas_bt").unwrap();
+    let mo = MixedOffloader::default();
+    let out = mo.run(&app);
+
+    println!("{}", report::render_figure4(&[report::figure4_row(&out)]));
+    metric("bt.single_core", out.baseline_seconds, "s", Some("130 s"));
+    let chosen = out.chosen.as_ref().expect("BT offloads");
+    assert_eq!(chosen.kind.device, DeviceKind::ManyCore, "paper: many-core must win");
+    metric("bt.manycore_loop.seconds", chosen.seconds, "s", Some("24.1 s"));
+    metric("bt.manycore_loop.improvement", chosen.improvement, "x", Some("5.39x"));
+    let gpu = out
+        .trials
+        .iter()
+        .find(|t| t.kind.device == DeviceKind::Gpu && t.kind.method == Method::LoopOffload)
+        .unwrap();
+    metric("bt.gpu_loop.improvement", gpu.improvement, "x", Some("1.0x (timeout)"));
+    metric("bt.verify_total", out.clock.total_hours(), "h", Some("~1 day"));
+
+    bench("bt.full_mixed_search", 2, || {
+        let _ = MixedOffloader::default().run(&app);
+    });
+}

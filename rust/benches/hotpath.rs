@@ -1,0 +1,69 @@
+//! Bench: L3 hot-path micro-benchmarks (the EXPERIMENTS.md #Perf targets).
+//!
+//! The coordinator's inner loop is pattern -> device model -> fitness; a
+//! GA generation fans measurements across the worker pool.  These numbers
+//! are what the perf pass optimizes.
+
+#[path = "support.rs"]
+mod support;
+
+use mixoff::app::workloads;
+use mixoff::devices::{DeviceModel, Testbed};
+use mixoff::ga::GaConfig;
+use mixoff::offload::manycore_loop;
+use mixoff::offload::pattern::OffloadPattern;
+use mixoff::util::rng::Rng;
+use support::{bench, metric};
+
+fn main() {
+    let tb = Testbed::default();
+    let bt = workloads::by_name("nas_bt").unwrap();
+    let mut rng = Rng::new(7);
+    let patterns: Vec<OffloadPattern> = (0..512)
+        .map(|_| {
+            OffloadPattern::from_bits((0..bt.loop_count()).map(|_| rng.chance(0.25)).collect())
+        })
+        .collect();
+
+    // Single-measurement latencies per device model (120-loop app).
+    for (name, dev) in [
+        ("manycore", &tb.manycore as &dyn DeviceModel),
+        ("gpu", &tb.gpu as &dyn DeviceModel),
+        ("fpga", &tb.fpga as &dyn DeviceModel),
+    ] {
+        bench(&format!("measure.{name}.512_patterns"), 10, || {
+            for p in &patterns {
+                std::hint::black_box(dev.measure(&bt, p));
+            }
+        });
+    }
+
+    // Measurement throughput (the number the perf pass tracks).
+    let t0 = std::time::Instant::now();
+    let reps = 20usize;
+    for _ in 0..reps {
+        for p in &patterns {
+            std::hint::black_box(tb.gpu.measure(&bt, p));
+        }
+    }
+    let per_sec = (reps * patterns.len()) as f64 / t0.elapsed().as_secs_f64();
+    metric("measure.gpu.throughput", per_sec, "patterns/s", None);
+
+    // Full GA search wall time (BT many-core, the heaviest search).
+    bench("ga.bt_manycore.full_search", 3, || {
+        let cfg = GaConfig { population: 20, generations: 20, ..Default::default() };
+        std::hint::black_box(manycore_loop::search(&bt, &tb.manycore, cfg));
+    });
+
+    // Pattern algebra microcosts.
+    bench("pattern.region_roots.512", 20, || {
+        for p in &patterns {
+            std::hint::black_box(p.region_roots(&bt));
+        }
+    });
+    bench("pattern.valid.512", 20, || {
+        for p in &patterns {
+            std::hint::black_box(p.valid(&bt));
+        }
+    });
+}

@@ -1,0 +1,45 @@
+//! Bench: the sec. 4.2 verification-time accounting.
+//!
+//! Paper reference: FB searches take ~1 minute each; FPGA circuit setup is
+//! ~3 h per pattern (4 patterns ~ half a day); many-core/GPU GA searches
+//! take ~6 h each; everything together lands in the ~1 day band.
+
+#[path = "support.rs"]
+mod support;
+
+use mixoff::app::workloads;
+use mixoff::coordinator::MixedOffloader;
+use mixoff::devices::Fpga;
+use mixoff::offload::fpga_loop::{self, FpgaSearchConfig};
+use support::metric;
+
+fn main() {
+    for name in ["3mm", "nas_bt"] {
+        let app = workloads::by_name(name).unwrap();
+        let out = MixedOffloader::default().run(&app);
+        println!("--- {name} verification ledger ---");
+        for (label, s) in out.clock.by_label() {
+            let paper = if label.contains("function-block") {
+                "~1 min"
+            } else if label.contains("FPGA loop") {
+                "~half a day (4 patterns x 3 h)"
+            } else {
+                "~6 h GA"
+            };
+            metric(&format!("{name}.{}", label.replace(' ', "_")), s / 3600.0, "h", Some(paper));
+        }
+        metric(&format!("{name}.total"), out.clock.total_hours(), "h", Some("~1 day"));
+        println!();
+    }
+
+    // FPGA pattern count: exactly the paper's 3 singles + 1 combination.
+    let app = workloads::by_name("3mm").unwrap();
+    let (out, trace) = fpga_loop::search_traced(&app, &Fpga::default(), FpgaSearchConfig::default());
+    metric("fpga.patterns_measured", trace.measured.len() as f64, "patterns", Some("4"));
+    metric(
+        "fpga.synthesis_per_pattern",
+        out.simulated_cost_s / trace.measured.len() as f64 / 3600.0,
+        "h",
+        Some("~3 h"),
+    );
+}

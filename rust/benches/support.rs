@@ -1,0 +1,31 @@
+//! Shared mini-harness for the benches (offline substitute for criterion).
+//!
+//! Uniform output format:
+//!   `BENCH <name>: mean <x> ms  (min <y> ms, <n> iters)`
+//!   `METRIC <name> = <value> <unit>   [paper: <ref>]`
+//! so `cargo bench | grep -E "BENCH|METRIC"` yields the whole table.
+
+use std::time::Instant;
+
+#[allow(dead_code)]
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // Warm-up.
+    f();
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!("BENCH {name}: mean {mean:.3} ms  (min {min:.3} ms, {iters} iters)");
+}
+
+#[allow(dead_code)]
+pub fn metric(name: &str, value: f64, unit: &str, paper: Option<&str>) {
+    match paper {
+        Some(p) => println!("METRIC {name} = {value:.4} {unit}   [paper: {p}]"),
+        None => println!("METRIC {name} = {value:.4} {unit}"),
+    }
+}

@@ -1,0 +1,81 @@
+//! Dependence pre-filter: which loops even enter the GA genome.
+//!
+//! Clang-level analysis can prove a *recurrence* (`x[i] = f(x[i-1])`)
+//! sequential at compile time, so such loops are excluded from the search
+//! space — the paper's GPU offload [31] likewise only encodes loops the
+//! compiler accepts.  *Reductions* stay in the genome: naive
+//! parallelization of a reduction compiles fine and races at runtime,
+//! which is exactly the failure mode the final-result check (sec. 3.2.1)
+//! exists to catch.
+
+use crate::app::ir::{Application, Dependence, LoopId};
+
+/// `mask[i] == true` iff loop `i` may appear in a genome.
+pub fn genome_mask(app: &Application) -> Vec<bool> {
+    app.loops
+        .iter()
+        .map(|l| l.dependence != Dependence::Sequential)
+        .collect()
+}
+
+/// Loops eligible for offload search, in id order.
+pub fn eligible(app: &Application) -> Vec<LoopId> {
+    genome_mask(app)
+        .iter()
+        .enumerate()
+        .filter(|(_, &m)| m)
+        .map(|(i, _)| LoopId(i))
+        .collect()
+}
+
+/// Expand a compact genome (over eligible loops) to full pattern bits.
+pub fn expand_genome(mask: &[bool], genome: &[bool]) -> Vec<bool> {
+    let eligible = mask.iter().filter(|&&m| m).count();
+    assert_eq!(genome.len(), eligible, "genome length != eligible loop count");
+    let mut bits = vec![false; mask.len()];
+    let mut g = 0;
+    for (i, &m) in mask.iter().enumerate() {
+        if m {
+            bits[i] = genome[g];
+            g += 1;
+        }
+    }
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::workloads::nas_bt;
+
+    #[test]
+    fn recurrences_are_masked_out() {
+        let app = nas_bt::build(8, 5);
+        let mask = genome_mask(&app);
+        assert_eq!(mask.len(), 120);
+        let masked_out = mask.iter().filter(|&&m| !m).count();
+        // 6 sweep loops + adi.step + verify.report.
+        assert_eq!(masked_out, 8);
+        for l in &app.loops {
+            if l.dependence == Dependence::Sequential {
+                assert!(!mask[l.id.0]);
+            } else {
+                assert!(mask[l.id.0]);
+            }
+        }
+    }
+
+    #[test]
+    fn expand_genome_roundtrip() {
+        let mask = vec![true, false, true, true, false];
+        let genome = vec![true, false, true];
+        let bits = expand_genome(&mask, &genome);
+        assert_eq!(bits, vec![true, false, false, true, false]);
+    }
+
+    #[test]
+    #[should_panic(expected = "genome length")]
+    fn expand_genome_checks_length() {
+        expand_genome(&[true, true], &[true]);
+    }
+}

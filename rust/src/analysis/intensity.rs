@@ -1,0 +1,124 @@
+//! Arithmetic-intensity analysis (the paper's ROSE substitute, sec. 3.2.3).
+//!
+//! The FPGA offload narrows candidates to the loops with the highest
+//! flop/byte ratio x total work — a pipeline only pays off when the loop
+//! both reuses data and runs long enough to amortize the circuit.
+
+use crate::app::ir::{Application, LoopId};
+
+/// Aggregate intensity of the nest rooted at `root`: total flops of the
+/// nest divided by total bytes moved by the nest.
+pub fn nest_intensity(app: &Application, root: LoopId) -> f64 {
+    let mut flops = 0.0;
+    let mut bytes = 0.0;
+    for id in app.nest(root) {
+        let l = app.get(id);
+        flops += l.total_flops();
+        bytes += l.total_bytes();
+    }
+    if bytes == 0.0 {
+        if flops == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        flops / bytes
+    }
+}
+
+/// Rank candidate roots by (intensity, total work) and keep the top
+/// `keep`.  Mirrors the paper's "top-5 by arithmetic intensity" step,
+/// which also weighs loop counts: a nest must carry a meaningful share of
+/// the program's work (>= 0.1% of total flops) to be a candidate — nothing
+/// amortizes a circuit for a one-shot init loop.
+pub fn rank_by_intensity(app: &Application, keep: usize) -> Vec<LoopId> {
+    let work_floor = app.total_flops() * 1e-3;
+    let mut scored: Vec<(LoopId, f64, f64)> = app
+        .loops
+        .iter()
+        .map(|l| {
+            let flops: f64 = app.nest(l.id).iter().map(|&i| app.get(i).total_flops()).sum();
+            (l.id, nest_intensity(app, l.id), flops)
+        })
+        .filter(|&(_, _, flops)| flops > 0.0 && flops >= work_floor)
+        .collect();
+    // Sort by intensity desc, then work desc (stable tie-break by id).
+    scored.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap()
+            .then(b.2.partial_cmp(&a.2).unwrap())
+            .then(a.0 .0.cmp(&b.0 .0))
+    });
+    // Canonicalize to the outermost enclosing loop that keeps (almost) the
+    // same nest intensity: pipelining `mm.k` alone would leave the pipeline
+    // invoked N^2 times from the host, so the method offloads the whole
+    // nest when the outer levels are equally dense.
+    let canonical = |mut id: LoopId| -> LoopId {
+        loop {
+            let Some(p) = app.get(id).parent else { return id };
+            if nest_intensity(app, p) >= 0.95 * nest_intensity(app, id) {
+                id = p;
+            } else {
+                return id;
+            }
+        }
+    };
+    // Keep pairwise-disjoint nests, best-ranked first.
+    let mut out: Vec<LoopId> = Vec::new();
+    for (raw, _, _) in scored {
+        let id = canonical(raw);
+        if out.iter().any(|&kept| {
+            kept == id || app.is_ancestor(kept, id) || app.is_ancestor(id, kept)
+        }) {
+            continue;
+        }
+        out.push(id);
+        if out.len() == keep {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::workloads::threemm;
+
+    #[test]
+    fn threemm_top_candidates_are_matmul_nests() {
+        let app = threemm::build(1000);
+        let top = rank_by_intensity(&app, 5);
+        assert!(top.len() >= 3);
+        // The three matmul i-roots must rank above the init loops.
+        let names: Vec<&str> =
+            top.iter().map(|id| app.get(*id).name.as_str()).collect();
+        let mm_count = names.iter().filter(|n| n.starts_with("mm")).count();
+        assert!(mm_count >= 3, "{names:?}");
+    }
+
+    #[test]
+    fn subsumed_children_are_dropped() {
+        let app = threemm::build(1000);
+        let top = rank_by_intensity(&app, 5);
+        for (i, &a) in top.iter().enumerate() {
+            for &b in &top[i + 1..] {
+                assert!(!app.is_ancestor(a, b), "nested candidates");
+                assert!(!app.is_ancestor(b, a));
+            }
+        }
+    }
+
+    #[test]
+    fn intensity_of_pure_compute_is_infinite() {
+        use crate::app::builder::AppBuilder;
+        use crate::app::ir::Dependence;
+        let mut b = AppBuilder::new("t");
+        let l = b.open_loop("l", 4, Dependence::None);
+        b.body(2.0, 0.0, 0.0, &[]);
+        b.close_loop();
+        let app = b.finish();
+        assert!(nest_intensity(&app, l).is_infinite());
+    }
+}

@@ -1,0 +1,16 @@
+//! Static + dynamic analyses over the application IR.
+//!
+//! The paper's pipeline uses Clang syntax analysis, gcov-style dynamic
+//! profiling (trip counts), ROSE-based arithmetic-intensity analysis and an
+//! FPGA resource estimate.  These modules are their equivalents over our
+//! IR.
+
+pub mod dependence;
+pub mod intensity;
+pub mod profile;
+pub mod resources;
+
+pub use dependence::genome_mask;
+pub use intensity::{nest_intensity, rank_by_intensity};
+pub use profile::Profile;
+pub use resources::{FpgaResources, ResourceEstimate};

@@ -1,0 +1,86 @@
+//! Dynamic profile (the paper's gcov substitute): per-loop totals and
+//! hot-spot ranking used by reports and the FPGA narrowing.
+
+use crate::app::ir::{Application, LoopId};
+
+/// Per-loop dynamic totals.
+#[derive(Clone, Debug)]
+pub struct LoopProfile {
+    pub id: LoopId,
+    pub name: String,
+    pub total_iters: f64,
+    pub total_flops: f64,
+    pub total_bytes: f64,
+}
+
+/// Whole-application profile.
+#[derive(Clone, Debug)]
+pub struct Profile {
+    pub loops: Vec<LoopProfile>,
+    pub total_flops: f64,
+    pub total_bytes: f64,
+}
+
+impl Profile {
+    pub fn of(app: &Application) -> Self {
+        let loops: Vec<LoopProfile> = app
+            .loops
+            .iter()
+            .map(|l| LoopProfile {
+                id: l.id,
+                name: l.name.clone(),
+                total_iters: l.total_iters(),
+                total_flops: l.total_flops(),
+                total_bytes: l.total_bytes(),
+            })
+            .collect();
+        let total_flops = loops.iter().map(|l| l.total_flops).sum();
+        let total_bytes = loops.iter().map(|l| l.total_bytes).sum();
+        Self { loops, total_flops, total_bytes }
+    }
+
+    /// Loops sorted by flop contribution, heaviest first.
+    pub fn hottest(&self) -> Vec<&LoopProfile> {
+        let mut v: Vec<&LoopProfile> = self.loops.iter().collect();
+        v.sort_by(|a, b| b.total_flops.partial_cmp(&a.total_flops).unwrap());
+        v
+    }
+
+    /// Fraction of total flops in the top `k` loops (hot-spot
+    /// concentration; the paper's premise that "most time is in loops").
+    pub fn concentration(&self, k: usize) -> f64 {
+        if self.total_flops == 0.0 {
+            return 0.0;
+        }
+        self.hottest().iter().take(k).map(|l| l.total_flops).sum::<f64>() / self.total_flops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::workloads::{nas_bt, threemm};
+
+    #[test]
+    fn threemm_flops_concentrate_in_k_loops() {
+        let p = Profile::of(&threemm::build(1000));
+        assert!(p.concentration(3) > 0.95);
+        assert_eq!(p.hottest()[0].name, "mm1.k");
+    }
+
+    #[test]
+    fn bt_solvers_dominate() {
+        let p = Profile::of(&nas_bt::build(64, 200));
+        let top = p.hottest();
+        assert!(top[0].name.contains("fwd"), "{}", top[0].name);
+        assert!(p.concentration(10) > 0.7);
+    }
+
+    #[test]
+    fn totals_match_application() {
+        let app = threemm::build(100);
+        let p = Profile::of(&app);
+        assert_eq!(p.total_flops, app.total_flops());
+        assert_eq!(p.total_bytes, app.total_bytes());
+    }
+}

@@ -1,0 +1,126 @@
+//! FPGA resource estimation (paper sec. 3.2.3's "resource efficiency").
+//!
+//! A loop pipeline consumes DSPs (arithmetic), ALMs (control/glue) and
+//! BRAM (line buffers).  The narrowing step keeps the loops with the best
+//! intensity *per resource* and the measurement step refuses patterns that
+//! exceed the device budget — an Intel PAC Arria 10 GX here.
+
+use crate::app::ir::{Application, LoopId};
+
+/// Estimated resources for one loop nest's pipeline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ResourceEstimate {
+    pub dsps: f64,
+    pub alms: f64,
+    pub bram_kb: f64,
+}
+
+impl ResourceEstimate {
+    pub fn zero() -> Self {
+        Self { dsps: 0.0, alms: 0.0, bram_kb: 0.0 }
+    }
+
+    pub fn add(&self, other: &Self) -> Self {
+        Self {
+            dsps: self.dsps + other.dsps,
+            alms: self.alms + other.alms,
+            bram_kb: self.bram_kb + other.bram_kb,
+        }
+    }
+}
+
+/// Arria 10 GX 1150 budget (public device tables), derated to the ~80%
+/// the OpenCL shell realistically leaves for the kernel.
+#[derive(Clone, Copy, Debug)]
+pub struct FpgaResources {
+    pub dsps: f64,
+    pub alms: f64,
+    pub bram_kb: f64,
+}
+
+impl Default for FpgaResources {
+    fn default() -> Self {
+        Self { dsps: 1518.0 * 0.8, alms: 427_200.0 * 0.8, bram_kb: 66_000.0 * 0.8 }
+    }
+}
+
+impl FpgaResources {
+    pub fn fits(&self, est: &ResourceEstimate) -> bool {
+        est.dsps <= self.dsps && est.alms <= self.alms && est.bram_kb <= self.bram_kb
+    }
+}
+
+/// Estimate the pipeline cost of the nest rooted at `root`.
+///
+/// Heuristic mapping: one f64 FMA pipeline ~ 4 DSPs + 600 ALMs; each byte
+/// of per-iteration working set wants buffering; deeper nests need more
+/// control ALMs.  `unroll` scales arithmetic resources linearly.
+pub fn estimate(app: &Application, root: LoopId, unroll: f64) -> ResourceEstimate {
+    let mut flops_per_iter = 0.0;
+    let mut bytes_per_iter = 0.0;
+    let mut depth_max = 0usize;
+    for id in app.nest(root) {
+        let l = app.get(id);
+        flops_per_iter += l.flops_per_iter;
+        bytes_per_iter += l.bytes_read_per_iter + l.bytes_written_per_iter;
+        depth_max = depth_max.max(l.depth);
+    }
+    ResourceEstimate {
+        dsps: flops_per_iter * 2.0 * unroll,
+        alms: flops_per_iter * 300.0 * unroll + (depth_max as f64 + 1.0) * 2_000.0,
+        bram_kb: bytes_per_iter * unroll * 4.0,
+    }
+}
+
+/// Resource efficiency used by the second narrowing step: nest intensity
+/// divided by the (unit-unroll) resource footprint.
+pub fn resource_efficiency(app: &Application, root: LoopId) -> f64 {
+    let est = estimate(app, root, 1.0);
+    let denom = est.dsps.max(1.0) + est.alms / 1_000.0;
+    super::intensity::nest_intensity(app, root) / denom
+}
+
+/// Keep the `keep` candidates with the best resource efficiency.
+pub fn rank_by_efficiency(app: &Application, candidates: &[LoopId], keep: usize) -> Vec<LoopId> {
+    let mut scored: Vec<(LoopId, f64)> = candidates
+        .iter()
+        .map(|&id| (id, resource_efficiency(app, id)))
+        .collect();
+    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0 .0.cmp(&b.0 .0)));
+    scored.into_iter().take(keep).map(|(id, _)| id).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::workloads::threemm;
+
+    #[test]
+    fn estimates_scale_with_unroll() {
+        let app = threemm::build(1000);
+        let root = app.blocks[0].loop_ids[0];
+        let e1 = estimate(&app, root, 1.0);
+        let e4 = estimate(&app, root, 4.0);
+        assert!(e4.dsps > 3.9 * e1.dsps);
+        assert!(e4.alms > e1.alms);
+    }
+
+    #[test]
+    fn budget_checks() {
+        let budget = FpgaResources::default();
+        assert!(budget.fits(&ResourceEstimate::zero()));
+        assert!(!budget.fits(&ResourceEstimate {
+            dsps: 1e9,
+            alms: 0.0,
+            bram_kb: 0.0
+        }));
+    }
+
+    #[test]
+    fn efficiency_ranking_prefers_dense_compute() {
+        let app = threemm::build(1000);
+        let cands: Vec<LoopId> = app.loops.iter().map(|l| l.id).collect();
+        let top = rank_by_efficiency(&app, &cands, 3);
+        assert_eq!(top.len(), 3);
+    }
+}

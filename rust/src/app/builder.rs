@@ -1,0 +1,214 @@
+//! Fluent builder for [`Application`]s — shared by the MiniC parser and the
+//! programmatic workload generators.
+
+use std::collections::BTreeMap;
+
+use super::ir::{
+    Access, Application, ArrayInfo, Dependence, FunctionBlock, FunctionBlockKind, Loop, LoopId,
+};
+
+/// Stack-based builder: `open_loop`/`close_loop` mirror source nesting;
+/// `body` attaches per-iteration costs to the innermost open loop.
+pub struct AppBuilder {
+    name: String,
+    loops: Vec<Loop>,
+    stack: Vec<LoopId>,
+    blocks: Vec<FunctionBlock>,
+    arrays: BTreeMap<String, ArrayInfo>,
+    artifact: Option<String>,
+    /// Loops opened since `begin_block` (for block grouping).
+    block_start: Option<(String, FunctionBlockKind, Option<String>, usize)>,
+}
+
+impl AppBuilder {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            loops: Vec::new(),
+            stack: Vec::new(),
+            blocks: Vec::new(),
+            arrays: BTreeMap::new(),
+            artifact: None,
+            block_start: None,
+        }
+    }
+
+    pub fn artifact(&mut self, name: &str) -> &mut Self {
+        self.artifact = Some(name.to_string());
+        self
+    }
+
+    pub fn array(&mut self, name: &str, bytes: f64) -> &mut Self {
+        self.arrays
+            .insert(name.to_string(), ArrayInfo { name: name.to_string(), bytes });
+        self
+    }
+
+    /// Open a loop nested in the current innermost open loop.
+    pub fn open_loop(&mut self, name: &str, trip: u64, dep: Dependence) -> LoopId {
+        let id = LoopId(self.loops.len());
+        let parent = self.stack.last().copied();
+        let (depth, invocations) = match parent {
+            Some(p) => {
+                let pl = &self.loops[p.0];
+                (pl.depth + 1, pl.invocations * pl.trip_count)
+            }
+            None => (0, 1),
+        };
+        if let Some(p) = parent {
+            self.loops[p.0].children.push(id);
+        }
+        self.loops.push(Loop {
+            id,
+            name: name.to_string(),
+            parent,
+            depth,
+            trip_count: trip,
+            invocations,
+            flops_per_iter: 0.0,
+            bytes_read_per_iter: 0.0,
+            bytes_written_per_iter: 0.0,
+            dependence: dep,
+            access: Access::Streaming,
+            arrays: Vec::new(),
+            array_ids: Vec::new(),
+            children: Vec::new(),
+        });
+        self.stack.push(id);
+        id
+    }
+
+    /// Attach body costs to the innermost open loop (accumulates, so a loop
+    /// body interleaved around child loops can be described in pieces).
+    pub fn body(&mut self, flops: f64, read: f64, written: f64, arrays: &[&str]) -> &mut Self {
+        let id = *self.stack.last().expect("body() outside any loop");
+        let l = &mut self.loops[id.0];
+        l.flops_per_iter += flops;
+        l.bytes_read_per_iter += read;
+        l.bytes_written_per_iter += written;
+        for a in arrays {
+            if !l.arrays.iter().any(|x| x == a) {
+                l.arrays.push(a.to_string());
+            }
+        }
+        self
+    }
+
+    /// Set the access pattern of the innermost open loop (default Streaming).
+    pub fn access(&mut self, a: Access) -> &mut Self {
+        let id = *self.stack.last().expect("access() outside any loop");
+        self.loops[id.0].access = a;
+        self
+    }
+
+    pub fn close_loop(&mut self) -> &mut Self {
+        self.stack.pop().expect("close_loop() without open loop");
+        self
+    }
+
+    /// Begin grouping subsequently opened TOP-LEVEL loops into a block.
+    pub fn begin_block(&mut self, name: &str, kind: FunctionBlockKind, call: Option<&str>) {
+        assert!(self.block_start.is_none(), "nested begin_block");
+        self.block_start =
+            Some((name.to_string(), kind, call.map(String::from), self.loops.len()));
+    }
+
+    pub fn end_block(&mut self) {
+        let (name, kind, call, start) =
+            self.block_start.take().expect("end_block without begin_block");
+        let loop_ids: Vec<LoopId> = (start..self.loops.len())
+            .map(LoopId)
+            .filter(|id| {
+                // Only record the outermost loops of the block; nests follow.
+                self.loops[id.0]
+                    .parent
+                    .map(|p| p.0 < start)
+                    .unwrap_or(true)
+            })
+            .collect();
+        self.blocks.push(FunctionBlock { name, kind, loop_ids, call_name: call });
+    }
+
+    pub fn finish(mut self) -> Application {
+        assert!(self.stack.is_empty(), "unclosed loops: {:?}", self.stack);
+        assert!(self.block_start.is_none(), "unclosed block");
+        // Deterministic order is already guaranteed by construction.
+        let array_order: Vec<String> = self.arrays.keys().cloned().collect();
+        for l in &mut self.loops {
+            l.arrays.sort();
+            l.array_ids = l
+                .arrays
+                .iter()
+                .filter_map(|a| array_order.iter().position(|x| x == a))
+                .collect();
+        }
+        Application {
+            name: self.name,
+            loops: self.loops,
+            blocks: self.blocks,
+            arrays: self.arrays,
+            array_order,
+            artifact: self.artifact,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_grouping_captures_outermost_only() {
+        let mut b = AppBuilder::new("t");
+        b.begin_block("mm", FunctionBlockKind::Matmul, Some("gemm"));
+        b.open_loop("i", 8, Dependence::None);
+        b.open_loop("j", 8, Dependence::None);
+        b.body(2.0, 8.0, 8.0, &[]);
+        b.close_loop();
+        b.close_loop();
+        b.end_block();
+        b.open_loop("post", 4, Dependence::None);
+        b.body(1.0, 4.0, 4.0, &[]);
+        b.close_loop();
+        let app = b.finish();
+        assert_eq!(app.blocks.len(), 1);
+        assert_eq!(app.blocks[0].loop_ids, vec![LoopId(0)]);
+        assert_eq!(app.blocks[0].call_name.as_deref(), Some("gemm"));
+    }
+
+    #[test]
+    #[should_panic(expected = "unclosed loops")]
+    fn finish_rejects_unclosed() {
+        let mut b = AppBuilder::new("t");
+        b.open_loop("i", 8, Dependence::None);
+        b.finish();
+    }
+
+    #[test]
+    fn invocations_chain() {
+        let mut b = AppBuilder::new("t");
+        b.open_loop("a", 3, Dependence::None);
+        b.open_loop("b", 5, Dependence::None);
+        b.open_loop("c", 7, Dependence::None);
+        b.body(1.0, 0.0, 0.0, &[]);
+        b.close_loop();
+        b.close_loop();
+        b.close_loop();
+        let app = b.finish();
+        assert_eq!(app.loops[2].invocations, 15);
+        assert_eq!(app.loops[2].total_iters(), 105.0);
+    }
+
+    #[test]
+    fn body_accumulates() {
+        let mut b = AppBuilder::new("t");
+        b.open_loop("a", 2, Dependence::None);
+        b.body(1.0, 2.0, 3.0, &["X"]);
+        b.body(1.5, 0.5, 0.0, &["X", "Y"]);
+        b.close_loop();
+        let app = b.finish();
+        assert_eq!(app.loops[0].flops_per_iter, 2.5);
+        assert_eq!(app.loops[0].bytes_read_per_iter, 2.5);
+        assert_eq!(app.loops[0].arrays, vec!["X".to_string(), "Y".to_string()]);
+    }
+}

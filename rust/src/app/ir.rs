@@ -1,0 +1,362 @@
+//! Application IR: the loop-nest structure the offloader operates on.
+//!
+//! The paper parses C/C++ with Clang and works on two kinds of offload
+//! units: *loop statements* and *function blocks*.  This IR carries exactly
+//! the features those methods need — nesting, trip counts, per-iteration
+//! flop/byte costs, loop-carried-dependence flags, touched arrays, and
+//! block groupings — nothing more.  It is produced either by the MiniC
+//! parser (`app/parser.rs`) or by the programmatic workload generators
+//! (`app/workloads/`).
+
+use std::collections::BTreeMap;
+
+/// Index into [`Application::loops`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct LoopId(pub usize);
+
+/// Why a loop cannot be naively parallelized (drives the final-result
+/// check: selecting such a loop yields wrong output, not a compile error).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dependence {
+    /// No loop-carried dependence: safe to parallelize.
+    None,
+    /// Reduction (sum/max) — naive `parallel for` races on the accumulator.
+    Reduction,
+    /// True recurrence (e.g. a Thomas-algorithm sweep): never parallel.
+    Sequential,
+}
+
+impl Dependence {
+    pub fn parallelizable(self) -> bool {
+        matches!(self, Dependence::None)
+    }
+}
+
+/// Dominant memory-access pattern of a loop body.  Drives the device
+/// rooflines: a naive strided matmul is latency-bound on one core (huge
+/// parallel headroom), a streaming stencil saturates bandwidth quickly
+/// (parallel speedup caps at aggregate/single bandwidth).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Access {
+    /// Unit-stride, prefetcher-friendly.
+    Streaming,
+    /// Large strides / poor locality on a single core, but cacheable or
+    /// coalescible when tiled or parallelized (naive matmul inner loop).
+    Strided,
+    /// Pointer-chasing / gather-scatter.
+    Random,
+}
+
+/// One `for` statement.
+#[derive(Clone, Debug)]
+pub struct Loop {
+    pub id: LoopId,
+    /// Human-readable label, e.g. `"mm1.j"` or `"x_solve.fwd.k"`.
+    pub name: String,
+    pub parent: Option<LoopId>,
+    /// Nesting depth (0 = top level).
+    pub depth: usize,
+    /// Iterations per entry of this loop.
+    pub trip_count: u64,
+    /// Times the loop statement is entered = product of ancestor trips.
+    /// Filled in by the builder; 1 at top level.
+    pub invocations: u64,
+    /// Useful floating-point ops per iteration in the loop's own body
+    /// (excluding child loops, which account for themselves).
+    pub flops_per_iter: f64,
+    /// Bytes read / written per iteration in the loop's own body.
+    pub bytes_read_per_iter: f64,
+    pub bytes_written_per_iter: f64,
+    pub dependence: Dependence,
+    pub access: Access,
+    /// Arrays referenced in the loop's own body (names index
+    /// [`Application::arrays`]).
+    pub arrays: Vec<String>,
+    /// `arrays` resolved to dense indices in [`Application::array_order`]
+    /// (filled by the builder; hot-path device models use this instead of
+    /// string lookups).
+    pub array_ids: Vec<usize>,
+    pub children: Vec<LoopId>,
+}
+
+impl Loop {
+    /// Total iterations executed over the whole program run.
+    pub fn total_iters(&self) -> f64 {
+        self.invocations as f64 * self.trip_count as f64
+    }
+
+    /// Total flops contributed by this loop's own body.
+    pub fn total_flops(&self) -> f64 {
+        self.total_iters() * self.flops_per_iter
+    }
+
+    /// Total bytes moved by this loop's own body.
+    pub fn total_bytes(&self) -> f64 {
+        self.total_iters() * (self.bytes_read_per_iter + self.bytes_written_per_iter)
+    }
+
+    /// Arithmetic intensity of the loop body (flop/byte; f64::INFINITY for
+    /// pure-compute bodies).
+    pub fn intensity(&self) -> f64 {
+        let b = self.bytes_read_per_iter + self.bytes_written_per_iter;
+        if b == 0.0 {
+            f64::INFINITY
+        } else {
+            self.flops_per_iter / b
+        }
+    }
+}
+
+/// Known function-block identities the replacement DB can serve.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FunctionBlockKind {
+    Matmul,
+    Fft,
+    Stencil,
+    Tridiag,
+    Unknown,
+}
+
+/// A group of loops that together form a recognizable function block
+/// (the paper's second offload unit: replaceable by an IP core / CUDA
+/// library / tuned CPU library).
+#[derive(Clone, Debug)]
+pub struct FunctionBlock {
+    pub name: String,
+    pub kind: FunctionBlockKind,
+    /// Loops belonging to the block (whole nests, outermost first).
+    pub loop_ids: Vec<LoopId>,
+    /// Callee name if the block is an actual function call (name matching
+    /// works on this; inline loop nests have `None` and rely on the
+    /// Deckard-style similarity detector).
+    pub call_name: Option<String>,
+}
+
+/// A named array with its total footprint in bytes.
+#[derive(Clone, Debug)]
+pub struct ArrayInfo {
+    pub name: String,
+    pub bytes: f64,
+}
+
+/// A whole application: the unit the mixed offloader accepts.
+#[derive(Clone, Debug)]
+pub struct Application {
+    pub name: String,
+    pub loops: Vec<Loop>,
+    pub blocks: Vec<FunctionBlock>,
+    pub arrays: BTreeMap<String, ArrayInfo>,
+    /// Array names in dense-id order (the indices `Loop::array_ids` use).
+    pub array_order: Vec<String>,
+    /// AOT artifact used for the final-result numeric check (None = check
+    /// simulated only).
+    pub artifact: Option<String>,
+}
+
+impl Application {
+    pub fn loop_count(&self) -> usize {
+        self.loops.len()
+    }
+
+    pub fn get(&self, id: LoopId) -> &Loop {
+        &self.loops[id.0]
+    }
+
+    /// Total useful flops over the whole run.
+    pub fn total_flops(&self) -> f64 {
+        self.loops.iter().map(|l| l.total_flops()).sum()
+    }
+
+    /// Total bytes moved (body-level accounting).
+    pub fn total_bytes(&self) -> f64 {
+        self.loops.iter().map(|l| l.total_bytes()).sum()
+    }
+
+    /// Top-level loops (no parent), in declaration order.
+    pub fn roots(&self) -> impl Iterator<Item = &Loop> {
+        self.loops.iter().filter(|l| l.parent.is_none())
+    }
+
+    /// Visit `id` and all transitive descendants without allocating
+    /// (hot-path form of [`Application::nest`]).
+    pub fn visit_nest(&self, id: LoopId, f: &mut impl FnMut(&Loop)) {
+        let l = self.get(id);
+        f(l);
+        for &c in &l.children {
+            self.visit_nest(c, f);
+        }
+    }
+
+    /// All transitive descendants of `id`, including `id` itself.
+    pub fn nest(&self, id: LoopId) -> Vec<LoopId> {
+        let mut out = vec![id];
+        let mut stack = vec![id];
+        while let Some(cur) = stack.pop() {
+            for &c in &self.loops[cur.0].children {
+                out.push(c);
+                stack.push(c);
+            }
+        }
+        out
+    }
+
+    /// Ancestor chain of `id` (nearest first, excluding `id`).
+    pub fn ancestors(&self, id: LoopId) -> Vec<LoopId> {
+        let mut out = Vec::new();
+        let mut cur = self.loops[id.0].parent;
+        while let Some(p) = cur {
+            out.push(p);
+            cur = self.loops[p.0].parent;
+        }
+        out
+    }
+
+    /// Does `ancestor` (strictly) contain `id`?
+    pub fn is_ancestor(&self, ancestor: LoopId, id: LoopId) -> bool {
+        self.ancestors(id).contains(&ancestor)
+    }
+
+    /// Remove the given loops (used by the coordinator when a function
+    /// block was offloaded: later loop trials run on the remaining code).
+    /// Children of removed loops are removed too.  Ids are re-assigned;
+    /// the mapping old->new is returned alongside the new application.
+    pub fn without_loops(&self, remove: &[LoopId]) -> (Application, BTreeMap<LoopId, LoopId>) {
+        let mut doomed: Vec<LoopId> = Vec::new();
+        for &r in remove {
+            doomed.extend(self.nest(r));
+        }
+        doomed.sort_unstable();
+        doomed.dedup();
+
+        let mut mapping = BTreeMap::new();
+        let mut kept: Vec<Loop> = Vec::new();
+        for l in &self.loops {
+            if doomed.binary_search(&l.id).is_ok() {
+                continue;
+            }
+            let new_id = LoopId(kept.len());
+            mapping.insert(l.id, new_id);
+            kept.push(l.clone());
+        }
+        for l in &mut kept {
+            let old = l.id;
+            l.id = mapping[&old];
+            l.parent = l.parent.and_then(|p| mapping.get(&p).copied());
+            l.children = l
+                .children
+                .iter()
+                .filter_map(|c| mapping.get(c).copied())
+                .collect();
+            if l.parent.is_none() {
+                // Promoted to top level: recompute depth below.
+            }
+        }
+        // Recompute depths from the new parent links.
+        let by_id: BTreeMap<LoopId, usize> =
+            kept.iter().map(|l| (l.id, l.id.0)).collect();
+        let mut depths: Vec<usize> = vec![0; kept.len()];
+        for i in 0..kept.len() {
+            let mut d = 0;
+            let mut cur = kept[i].parent;
+            while let Some(p) = cur {
+                d += 1;
+                cur = kept[by_id[&p]].parent;
+            }
+            depths[i] = d;
+        }
+        for (l, d) in kept.iter_mut().zip(depths) {
+            l.depth = d;
+        }
+
+        let blocks = self
+            .blocks
+            .iter()
+            .filter(|b| b.loop_ids.iter().all(|id| mapping.contains_key(id)))
+            .map(|b| FunctionBlock {
+                name: b.name.clone(),
+                kind: b.kind,
+                loop_ids: b.loop_ids.iter().map(|id| mapping[id]).collect(),
+                call_name: b.call_name.clone(),
+            })
+            .collect();
+
+        (
+            Application {
+                name: self.name.clone(),
+                loops: kept,
+                blocks,
+                arrays: self.arrays.clone(),
+                array_order: self.array_order.clone(),
+                artifact: self.artifact.clone(),
+            },
+            mapping,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::builder::AppBuilder;
+
+    fn toy() -> Application {
+        let mut b = AppBuilder::new("toy");
+        b.array("A", 1024.0);
+        let outer = b.open_loop("outer", 10, Dependence::None);
+        b.body(2.0, 8.0, 8.0, &["A"]);
+        let inner = b.open_loop("inner", 100, Dependence::Sequential);
+        b.body(4.0, 16.0, 8.0, &["A"]);
+        b.close_loop(); // inner
+        b.close_loop(); // outer
+        let solo = b.open_loop("solo", 50, Dependence::Reduction);
+        b.body(1.0, 8.0, 0.0, &["A"]);
+        b.close_loop();
+        let app = b.finish();
+        assert_eq!(app.get(outer).invocations, 1);
+        assert_eq!(app.get(inner).invocations, 10);
+        assert_eq!(app.get(solo).invocations, 1);
+        app
+    }
+
+    #[test]
+    fn totals_respect_nesting() {
+        let app = toy();
+        let inner = &app.loops[1];
+        assert_eq!(inner.total_iters(), 1000.0);
+        assert_eq!(inner.total_flops(), 4000.0);
+        let total = app.total_flops();
+        assert_eq!(total, 10.0 * 2.0 + 1000.0 * 4.0 + 50.0 * 1.0);
+    }
+
+    #[test]
+    fn nest_and_ancestors() {
+        let app = toy();
+        let outer = LoopId(0);
+        let inner = LoopId(1);
+        assert_eq!(app.nest(outer), vec![outer, inner]);
+        assert_eq!(app.ancestors(inner), vec![outer]);
+        assert!(app.is_ancestor(outer, inner));
+        assert!(!app.is_ancestor(inner, outer));
+    }
+
+    #[test]
+    fn without_loops_removes_nest_and_remaps() {
+        let app = toy();
+        let (cut, mapping) = app.without_loops(&[LoopId(0)]);
+        assert_eq!(cut.loop_count(), 1);
+        assert_eq!(cut.loops[0].name, "solo");
+        assert_eq!(cut.loops[0].id, LoopId(0));
+        assert_eq!(mapping.get(&LoopId(2)), Some(&LoopId(0)));
+        assert!(!mapping.contains_key(&LoopId(1)));
+    }
+
+    #[test]
+    fn intensity_handles_zero_bytes() {
+        let mut b = AppBuilder::new("z");
+        b.open_loop("l", 4, Dependence::None);
+        b.body(2.0, 0.0, 0.0, &[]);
+        b.close_loop();
+        let app = b.finish();
+        assert!(app.loops[0].intensity().is_infinite());
+    }
+}

@@ -1,0 +1,10 @@
+//! Application layer: IR, builder, MiniC parser, and workload generators.
+
+pub mod builder;
+pub mod ir;
+pub mod parser;
+pub mod workloads;
+
+pub use builder::AppBuilder;
+pub use ir::{Access, Application, Dependence, FunctionBlock, FunctionBlockKind, Loop, LoopId};
+pub use parser::parse;

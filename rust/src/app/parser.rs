@@ -1,0 +1,351 @@
+//! MiniC: a small loop-oriented application description language.
+//!
+//! The paper's toolchain parses real C/C++ with Clang to find loop
+//! statements and function blocks.  Our Clang substitute is a compact DSL
+//! carrying exactly the IR's information; applications can be written by
+//! hand, shipped as `.mix` files, or produced by tooling.  Grammar:
+//!
+//! ```text
+//! app "name" [artifact "artifact_name"] {
+//!   array NAME BYTES ;
+//!   [block "name" kind (matmul|fft|stencil|tridiag|unknown) [call "fn"] { items }]
+//!   [for NAME TRIP (par|seq|red) [streaming|strided|random] { items }]
+//!   [stmt flops F read R write W [uses A B ...] ;]
+//! }
+//! ```
+//!
+//! `par` = no loop-carried dependence, `red` = reduction (naive parallel is
+//! invalid), `seq` = true recurrence.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::builder::AppBuilder;
+use super::ir::{Access, Application, Dependence, FunctionBlockKind};
+
+#[derive(Clone, Debug, PartialEq)]
+enum Tok {
+    Ident(String),
+    Str(String),
+    Num(f64),
+    LBrace,
+    RBrace,
+    Semi,
+}
+
+fn lex(src: &str) -> Result<Vec<Tok>> {
+    let mut out = Vec::new();
+    let b: Vec<char> = src.chars().collect();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            ' ' | '\t' | '\n' | '\r' => i += 1,
+            '#' => {
+                // line comment
+                while i < b.len() && b[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '{' => {
+                out.push(Tok::LBrace);
+                i += 1;
+            }
+            '}' => {
+                out.push(Tok::RBrace);
+                i += 1;
+            }
+            ';' => {
+                out.push(Tok::Semi);
+                i += 1;
+            }
+            '"' => {
+                let start = i + 1;
+                let mut j = start;
+                while j < b.len() && b[j] != '"' {
+                    j += 1;
+                }
+                if j == b.len() {
+                    bail!("unterminated string");
+                }
+                out.push(Tok::Str(b[start..j].iter().collect()));
+                i = j + 1;
+            }
+            c if c.is_ascii_digit() || c == '-' || c == '.' => {
+                let start = i;
+                while i < b.len()
+                    && (b[i].is_ascii_digit()
+                        || matches!(b[i], '.' | '-' | '+' | 'e' | 'E' | '_'))
+                {
+                    i += 1;
+                }
+                let s: String = b[start..i].iter().filter(|&&c| c != '_').collect();
+                out.push(Tok::Num(s.parse().map_err(|e| anyhow!("bad number {s:?}: {e}"))?));
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_alphanumeric() || matches!(b[i], '_' | '.')) {
+                    i += 1;
+                }
+                out.push(Tok::Ident(b[start..i].iter().collect()));
+            }
+            other => bail!("unexpected character {other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+struct P {
+    toks: Vec<Tok>,
+    i: usize,
+}
+
+impl P {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.i)
+    }
+
+    fn next(&mut self) -> Result<Tok> {
+        let t = self.toks.get(self.i).cloned().ok_or_else(|| anyhow!("unexpected EOF"))?;
+        self.i += 1;
+        Ok(t)
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        match self.next()? {
+            Tok::Ident(s) => Ok(s),
+            t => bail!("expected identifier, got {t:?}"),
+        }
+    }
+
+    fn keyword(&mut self, kw: &str) -> Result<()> {
+        let id = self.ident()?;
+        if id != kw {
+            bail!("expected {kw:?}, got {id:?}");
+        }
+        Ok(())
+    }
+
+    fn string(&mut self) -> Result<String> {
+        match self.next()? {
+            Tok::Str(s) => Ok(s),
+            t => bail!("expected string, got {t:?}"),
+        }
+    }
+
+    fn num(&mut self) -> Result<f64> {
+        match self.next()? {
+            Tok::Num(n) => Ok(n),
+            t => bail!("expected number, got {t:?}"),
+        }
+    }
+
+    fn eat(&mut self, t: Tok) -> Result<()> {
+        let got = self.next()?;
+        if got != t {
+            bail!("expected {t:?}, got {got:?}");
+        }
+        Ok(())
+    }
+}
+
+fn dependence(kw: &str) -> Result<Dependence> {
+    Ok(match kw {
+        "par" => Dependence::None,
+        "seq" => Dependence::Sequential,
+        "red" => Dependence::Reduction,
+        other => bail!("unknown dependence {other:?} (want par|seq|red)"),
+    })
+}
+
+fn block_kind(kw: &str) -> Result<FunctionBlockKind> {
+    Ok(match kw {
+        "matmul" => FunctionBlockKind::Matmul,
+        "fft" => FunctionBlockKind::Fft,
+        "stencil" => FunctionBlockKind::Stencil,
+        "tridiag" => FunctionBlockKind::Tridiag,
+        "unknown" => FunctionBlockKind::Unknown,
+        other => bail!("unknown block kind {other:?}"),
+    })
+}
+
+fn items(p: &mut P, b: &mut AppBuilder, in_loop: bool) -> Result<()> {
+    loop {
+        match p.peek() {
+            Some(Tok::RBrace) | None => return Ok(()),
+            _ => {}
+        }
+        let kw = p.ident()?;
+        match kw.as_str() {
+            "array" => {
+                let name = p.ident()?;
+                let bytes = p.num()?;
+                p.eat(Tok::Semi)?;
+                b.array(&name, bytes);
+            }
+            "for" => {
+                let name = p.ident()?;
+                let trip = p.num()? as u64;
+                let dep = dependence(&p.ident()?)?;
+                let acc = match p.peek() {
+                    Some(Tok::Ident(s)) if matches!(s.as_str(), "streaming" | "strided" | "random") => {
+                        match p.ident()?.as_str() {
+                            "strided" => Access::Strided,
+                            "random" => Access::Random,
+                            _ => Access::Streaming,
+                        }
+                    }
+                    _ => Access::Streaming,
+                };
+                p.eat(Tok::LBrace)?;
+                b.open_loop(&name, trip, dep);
+                b.access(acc);
+                items(p, b, true)?;
+                p.eat(Tok::RBrace)?;
+                b.close_loop();
+            }
+            "stmt" => {
+                if !in_loop {
+                    bail!("stmt outside any loop");
+                }
+                let mut flops = 0.0;
+                let mut read = 0.0;
+                let mut write = 0.0;
+                let mut uses: Vec<String> = Vec::new();
+                loop {
+                    match p.peek() {
+                        Some(Tok::Semi) => {
+                            p.next()?;
+                            break;
+                        }
+                        Some(Tok::Ident(_)) => {
+                            let field = p.ident()?;
+                            match field.as_str() {
+                                "flops" => flops = p.num()?,
+                                "read" => read = p.num()?,
+                                "write" => write = p.num()?,
+                                "uses" => {
+                                    while let Some(Tok::Ident(_)) = p.peek() {
+                                        uses.push(p.ident()?);
+                                    }
+                                }
+                                other => bail!("unknown stmt field {other:?}"),
+                            }
+                        }
+                        t => bail!("bad stmt token {t:?}"),
+                    }
+                }
+                let refs: Vec<&str> = uses.iter().map(|s| s.as_str()).collect();
+                b.body(flops, read, write, &refs);
+            }
+            "block" => {
+                let name = p.string()?;
+                p.keyword("kind")?;
+                let kind = block_kind(&p.ident()?)?;
+                let call = if matches!(p.peek(), Some(Tok::Ident(s)) if s == "call") {
+                    p.next()?;
+                    Some(p.string()?)
+                } else {
+                    None
+                };
+                p.eat(Tok::LBrace)?;
+                b.begin_block(&name, kind, call.as_deref());
+                items(p, b, in_loop)?;
+                p.eat(Tok::RBrace)?;
+                b.end_block();
+            }
+            other => bail!("unknown item {other:?}"),
+        }
+    }
+}
+
+/// Parse MiniC source into an [`Application`].
+pub fn parse(src: &str) -> Result<Application> {
+    let toks = lex(src)?;
+    let mut p = P { toks, i: 0 };
+    p.keyword("app")?;
+    let name = p.string()?;
+    let mut b = AppBuilder::new(&name);
+    if matches!(p.peek(), Some(Tok::Ident(s)) if s == "artifact") {
+        p.next()?;
+        let art = p.string()?;
+        b.artifact(&art);
+    }
+    p.eat(Tok::LBrace)?;
+    items(&mut p, &mut b, false)?;
+    p.eat(Tok::RBrace)?;
+    if p.peek().is_some() {
+        bail!("trailing tokens after app body");
+    }
+    Ok(b.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::ir::LoopId;
+
+    const SRC: &str = r#"
+app "demo" artifact "three_mm_64" {
+  array A 8000000;
+  array B 8000000;
+  # a recognizable matmul block
+  block "mm" kind matmul call "gemm" {
+    for i 1000 par {
+      for j 1000 par {
+        stmt flops 0 read 0 write 8 uses A;
+        for k 1000 red {
+          stmt flops 2 read 16 write 8 uses A B;
+        }
+      }
+    }
+  }
+  for t 10 seq {
+    for i 1000 par { stmt flops 1 read 8 write 8 uses B; }
+  }
+}
+"#;
+
+    #[test]
+    fn parses_demo() {
+        let app = parse(SRC).unwrap();
+        assert_eq!(app.name, "demo");
+        assert_eq!(app.artifact.as_deref(), Some("three_mm_64"));
+        assert_eq!(app.loop_count(), 5);
+        assert_eq!(app.blocks.len(), 1);
+        assert_eq!(app.blocks[0].call_name.as_deref(), Some("gemm"));
+        assert_eq!(app.blocks[0].loop_ids, vec![LoopId(0)]);
+        let k = &app.loops[2];
+        assert_eq!(k.name, "k");
+        assert_eq!(k.invocations, 1_000_000);
+        assert_eq!(k.flops_per_iter, 2.0);
+        assert!(!k.dependence.parallelizable());
+        assert_eq!(app.arrays.len(), 2);
+    }
+
+    #[test]
+    fn total_flops_matches_hand_count() {
+        let app = parse(SRC).unwrap();
+        let expect = 1e9 * 2.0 + 10.0 * 1000.0 * 1.0;
+        assert!((app.total_flops() - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn rejects_syntax_errors() {
+        assert!(parse("app demo {}").is_err()); // unquoted name
+        assert!(parse(r#"app "x" { for i 10 { } }"#).is_err()); // missing dep
+        assert!(parse(r#"app "x" { stmt flops 1 ; }"#).is_err()); // stmt outside loop
+        assert!(parse(r#"app "x" { for i 10 par { } } junk"#).is_err());
+        assert!(parse(r#"app "x" { blob ; }"#).is_err());
+    }
+
+    #[test]
+    fn comments_and_numbers() {
+        let app = parse(
+            "app \"c\" {\n# comment line\nfor i 1_000 par { stmt flops 2.5 read 1e3 write 0 ; }\n}",
+        )
+        .unwrap();
+        assert_eq!(app.loops[0].trip_count, 1000);
+        assert_eq!(app.loops[0].flops_per_iter, 2.5);
+        assert_eq!(app.loops[0].bytes_read_per_iter, 1000.0);
+    }
+}

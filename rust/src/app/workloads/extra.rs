@@ -1,0 +1,142 @@
+//! Extra workloads beyond the paper's two evaluation targets.
+//!
+//! * `jacobi2d`       — memory-bound stencil: the regime where many-core
+//!                      wins and GPU transfers hurt (paper sec. 3.3.1's
+//!                      rationale for trying many-core before GPU).
+//! * `gemm_call_app`  — an application that *calls* a named `dgemm`: the
+//!                      function-block offload path (paper sec. 3.2.4)
+//!                      detects it by name match and replaces it with the
+//!                      device-tuned implementation.
+//! * `vecadd`         — minimal quickstart workload.
+
+use crate::app::builder::AppBuilder;
+use crate::app::ir::{Access, Application, Dependence, FunctionBlockKind};
+
+const F64: f64 = 8.0;
+
+/// 2-D Jacobi, `n` x `n`, `iters` sweeps (ping-pong arrays).
+pub fn jacobi2d(n: u64, iters: u64) -> Application {
+    let nf = n as f64;
+    let mut b = AppBuilder::new("jacobi2d");
+    b.artifact("jacobi2d_64");
+    b.array("A", nf * nf * F64);
+    b.array("B", nf * nf * F64);
+
+    // init
+    b.open_loop("init.i", n, Dependence::None);
+    b.open_loop("init.j", n, Dependence::None);
+    b.body(1.0, 0.0, F64, &["A"]);
+    b.close_loop();
+    b.close_loop();
+
+    b.open_loop("time", iters, Dependence::Sequential);
+    b.begin_block("sweep", FunctionBlockKind::Stencil, None);
+    b.open_loop("sweep.i", n - 2, Dependence::None);
+    b.open_loop("sweep.j", n - 2, Dependence::None);
+    // B[i][j] = 0.2*(A + 4 neighbours): 5 loads, 1 store, 5 flops.
+    b.body(5.0, 5.0 * F64, F64, &["A", "B"]);
+    b.close_loop();
+    b.close_loop();
+    b.end_block();
+    b.open_loop("copy.i", n - 2, Dependence::None);
+    b.open_loop("copy.j", n - 2, Dependence::None);
+    b.body(0.0, F64, F64, &["A", "B"]);
+    b.close_loop();
+    b.close_loop();
+    b.close_loop(); // time
+
+    b.open_loop("checksum", n * n, Dependence::Reduction);
+    b.body(1.0, F64, 0.0, &["A"]);
+    b.close_loop();
+    b.finish()
+}
+
+/// An app whose hot spot is a *named* `dgemm(A, B, C)` call on `n` x `n`
+/// matrices, plus pre/post processing loops.  The FB detector name-matches
+/// `dgemm` against the replacement DB.
+pub fn gemm_call_app(n: u64) -> Application {
+    let nf = n as f64;
+    let mut b = AppBuilder::new("blocked-gemm-app");
+    b.artifact("matmul_128");
+    for arr in ["A", "B", "C"] {
+        b.array(arr, nf * nf * F64);
+    }
+
+    b.open_loop("scale.i", n * n, Dependence::None);
+    b.body(1.0, F64, F64, &["A"]);
+    b.close_loop();
+
+    b.begin_block("dgemm", FunctionBlockKind::Matmul, Some("dgemm"));
+    b.open_loop("dgemm.i", n, Dependence::None);
+    b.open_loop("dgemm.j", n, Dependence::None);
+    b.body(0.0, 0.0, F64, &["C"]);
+    b.open_loop("dgemm.k", n, Dependence::Reduction);
+    b.access(Access::Strided);
+    b.body(2.0, 2.0 * F64, F64, &["A", "B", "C"]);
+    b.close_loop();
+    b.close_loop();
+    b.close_loop();
+    b.end_block();
+
+    b.open_loop("postnorm", n * n, Dependence::Reduction);
+    b.body(2.0, F64, 0.0, &["C"]);
+    b.close_loop();
+    b.finish()
+}
+
+/// Vector addition, the quickstart demo: one embarrassingly parallel loop.
+pub fn vecadd(n: u64) -> Application {
+    let nf = n as f64;
+    let mut b = AppBuilder::new("vecadd");
+    b.artifact("jacobi2d_64");
+    b.array("x", nf * F64);
+    b.array("y", nf * F64);
+    b.array("z", nf * F64);
+    b.open_loop("init", n, Dependence::None);
+    b.body(2.0, 0.0, 2.0 * F64, &["x", "y"]);
+    b.close_loop();
+    b.open_loop("add", n, Dependence::None);
+    b.body(1.0, 2.0 * F64, F64, &["x", "y", "z"]);
+    b.close_loop();
+    b.open_loop("checksum", n, Dependence::Reduction);
+    b.body(1.0, F64, 0.0, &["z"]);
+    b.close_loop();
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jacobi_structure() {
+        let app = jacobi2d(4096, 1000);
+        assert_eq!(app.loop_count(), 8);
+        assert_eq!(app.blocks.len(), 1);
+        let sweep = app.loops.iter().find(|l| l.name == "sweep.i").unwrap();
+        assert_eq!(sweep.invocations, 1000);
+    }
+
+    #[test]
+    fn gemm_app_has_named_call() {
+        let app = gemm_call_app(1024);
+        assert_eq!(app.blocks.len(), 1);
+        assert_eq!(app.blocks[0].call_name.as_deref(), Some("dgemm"));
+        assert_eq!(app.blocks[0].kind, FunctionBlockKind::Matmul);
+    }
+
+    #[test]
+    fn vecadd_is_tiny_and_parallel() {
+        let app = vecadd(1 << 24);
+        assert_eq!(app.loop_count(), 3);
+        assert!(app.loops[1].dependence.parallelizable());
+    }
+
+    #[test]
+    fn by_name_resolves_all() {
+        for name in crate::app::workloads::ALL {
+            assert!(crate::app::workloads::by_name(name).is_ok(), "{name}");
+        }
+        assert!(crate::app::workloads::by_name("nope").is_err());
+    }
+}

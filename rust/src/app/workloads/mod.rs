@@ -1,0 +1,41 @@
+//! Workload generators: the paper's evaluated applications plus extras.
+//!
+//! Each generator reproduces the *loop structure* of its real counterpart
+//! (nesting, trip counts, dependences, flop/byte ratios, loop counts as
+//! reported in sec. 4.1.2: 3mm = 18 loops, NAS.BT = 120 loops) so the
+//! offload methods face the same search problem the paper's tool did.
+
+pub mod extra;
+pub mod nas_bt;
+pub mod polybench;
+pub mod threemm;
+
+use anyhow::{bail, Result};
+
+use super::ir::Application;
+
+/// Look up a workload by CLI name.
+pub fn by_name(name: &str) -> Result<Application> {
+    Ok(match name {
+        "3mm" | "threemm" => threemm::build(1000),
+        "3mm-small" => threemm::build(128),
+        "nas_bt" | "bt" => nas_bt::build(64, 200),
+        "bt-small" => nas_bt::build(8, 5),
+        "jacobi2d" => extra::jacobi2d(4096, 1000),
+        "blocked-gemm-app" => extra::gemm_call_app(1024),
+        "vecadd" => extra::vecadd(1 << 24),
+        "2mm" => polybench::two_mm(1000),
+        "atax" => polybench::atax(4000),
+        "gemver" => polybench::gemver(4000),
+        other => bail!(
+            "unknown workload {other:?} (want 3mm | nas_bt | jacobi2d | \
+             blocked-gemm-app | vecadd | 2mm | atax | gemver)"
+        ),
+    })
+}
+
+/// All workload names (for `mixoff inspect --all` and tests).
+pub const ALL: &[&str] = &[
+    "3mm", "nas_bt", "jacobi2d", "blocked-gemm-app", "vecadd", "2mm", "atax",
+    "gemver",
+];

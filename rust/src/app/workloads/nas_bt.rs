@@ -1,0 +1,226 @@
+//! NAS Parallel Benchmarks BT (block-tridiagonal solver), CLASS A shape.
+//!
+//! Loop inventory matches the paper's count of **120 loop statements**
+//! (sec. 4.1.2) with the real benchmark's phase structure:
+//!
+//! * `initialize` + `exact_rhs`  — one-shot setup (30 loops)
+//! * `adi` time loop (trip 200)  — per iteration:
+//!   `compute_rhs` (45 loops: fluxes + two dissipation orders + boundaries
+//!   per direction), `x/y/z_solve` (11 each: lhs setup, forward
+//!   elimination, back substitution, boundary), `add` (3)
+//! * verification norms + checksum (8 loops)
+//!
+//! The forward/backward sweeps carry a true recurrence along the solved
+//! axis (`Dependence::Sequential` on the innermost loop) — the line loops
+//! around them are the parallelism the paper's many-core offload finds.
+//! Everything is `Access::Streaming`: unlike 3mm, a single core already
+//! drives DRAM efficiently, so the parallel speedup caps at the aggregate
+//! bandwidth ratio — that is exactly why the paper measures only 5.39x on
+//! 32 cores and why the GPU attempt drowns in PCIe transfers.
+
+use crate::app::builder::AppBuilder;
+use crate::app::ir::{Application, Dependence};
+
+const F64: f64 = 8.0;
+const NCOMP: f64 = 5.0;
+
+/// Build NAS.BT at grid size `n`^3 and `iters` time steps (paper CLASS A:
+/// n = 64, iters = 200).
+pub fn build(n: u64, iters: u64) -> Application {
+    let cellbytes = NCOMP * F64; // one 5-component grid point
+    let nf = n as f64;
+    let mut b = AppBuilder::new(if n == 64 { "nas_bt" } else { "bt-small" });
+    b.artifact("bt_step_8");
+    for arr in ["u", "rhs", "forcing", "us", "square"] {
+        b.array(arr, nf * nf * nf * cellbytes);
+    }
+    // lhs holds three 5x5 blocks per cell (75 doubles = 600 B/cell); its
+    // sheer footprint is what makes per-invocation PCIe transfers of the
+    // solver loops hopeless on the GPU.
+    b.array("lhs", nf * nf * nf * 15.0 * cellbytes);
+
+    // Triple nest helper: (k, j, i) with the given deps, one body at i.
+    let triple = |b: &mut AppBuilder,
+                  label: &str,
+                  deps: [Dependence; 3],
+                  flops: f64,
+                  read: f64,
+                  write: f64,
+                  arrays: &[&str]| {
+        b.open_loop(&format!("{label}.k"), n, deps[0]);
+        b.open_loop(&format!("{label}.j"), n, deps[1]);
+        b.open_loop(&format!("{label}.i"), n, deps[2]);
+        b.body(flops, read, write, arrays);
+        b.close_loop();
+        b.close_loop();
+        b.close_loop();
+    };
+    let double = |b: &mut AppBuilder,
+                  label: &str,
+                  flops: f64,
+                  read: f64,
+                  write: f64,
+                  arrays: &[&str]| {
+        b.open_loop(&format!("{label}.j"), n, Dependence::None);
+        b.open_loop(&format!("{label}.i"), n, Dependence::None);
+        b.body(flops, read, write, arrays);
+        b.close_loop();
+        b.close_loop();
+    };
+    const PAR3: [Dependence; 3] = [Dependence::None; 3];
+
+    // ---- initialize(): 18 loops ----
+    triple(&mut b, "init.zero", PAR3, 0.0, 0.0, cellbytes, &["u"]);
+    triple(&mut b, "init.interior", PAR3, 30.0, 40.0, cellbytes, &["u"]);
+    for face in ["imin", "imax", "jmin", "jmax", "kmin", "kmax"] {
+        double(&mut b, &format!("init.face_{face}"), 30.0, 40.0, cellbytes, &["u"]);
+    }
+
+    // ---- exact_rhs(): 12 loops ----
+    for phase in ["init", "xi", "eta", "zeta"] {
+        triple(
+            &mut b,
+            &format!("exact_rhs.{phase}"),
+            PAR3,
+            40.0,
+            80.0,
+            cellbytes,
+            &["forcing"],
+        );
+    }
+
+    // ---- adi time loop (1 + 81 loops) ----
+    b.open_loop("adi.step", iters, Dependence::Sequential);
+
+    // compute_rhs: 45 loops.
+    triple(&mut b, "rhs.pre", PAR3, 15.0, cellbytes, 24.0, &["u", "us", "square"]);
+    for dir in ["xi", "eta", "zeta"] {
+        triple(
+            &mut b,
+            &format!("rhs.{dir}.flux"),
+            PAR3,
+            120.0,
+            200.0,
+            cellbytes,
+            &["u", "rhs", "us", "square"],
+        );
+        for order in ["diss1", "diss2"] {
+            triple(
+                &mut b,
+                &format!("rhs.{dir}.{order}"),
+                PAR3,
+                60.0,
+                280.0,
+                cellbytes,
+                &["u", "rhs"],
+            );
+        }
+        double(&mut b, &format!("rhs.{dir}.bnd_lo"), 50.0, 160.0, cellbytes, &["u", "rhs"]);
+        double(&mut b, &format!("rhs.{dir}.bnd_hi"), 50.0, 160.0, cellbytes, &["u", "rhs"]);
+    }
+    triple(&mut b, "rhs.add_forcing", PAR3, 25.0, 80.0, cellbytes, &["rhs", "forcing"]);
+
+    // x/y/z solves: 11 loops each.  The innermost sweep loop is a true
+    // recurrence (Thomas algorithm along the solved axis).
+    for dir in ["x", "y", "z"] {
+        let solve = format!("{dir}_solve");
+        triple(&mut b, &format!("{solve}.lhs"), PAR3, 130.0, 160.0, 120.0, &["lhs", "u"]);
+        triple(
+            &mut b,
+            &format!("{solve}.fwd"),
+            [Dependence::None, Dependence::None, Dependence::Sequential],
+            420.0,
+            560.0,
+            240.0,
+            &["lhs", "rhs"],
+        );
+        triple(
+            &mut b,
+            &format!("{solve}.back"),
+            [Dependence::None, Dependence::None, Dependence::Sequential],
+            60.0,
+            240.0,
+            cellbytes,
+            &["lhs", "rhs"],
+        );
+        double(&mut b, &format!("{solve}.bnd"), 40.0, 120.0, cellbytes, &["lhs", "rhs"]);
+    }
+
+    // add: u += rhs.
+    triple(&mut b, "add", PAR3, 5.0, 80.0, cellbytes, &["u", "rhs"]);
+
+    b.close_loop(); // adi.step
+
+    // ---- verification: 8 loops ----
+    const RED3: [Dependence; 3] = [Dependence::Reduction; 3];
+    triple(&mut b, "error_norm", RED3, 10.0, cellbytes, 0.0, &["u"]);
+    triple(&mut b, "rhs_norm", RED3, 10.0, cellbytes, 0.0, &["rhs"]);
+    b.open_loop("verify.checksum", n * n * n, Dependence::Reduction);
+    b.body(5.0, cellbytes, 0.0, &["u"]);
+    b.close_loop();
+    b.open_loop("verify.report", 16, Dependence::Sequential);
+    b.body(1.0, 8.0, 8.0, &[]);
+    b.close_loop();
+
+    // The three solves are Tridiag-shaped function blocks (inline, no
+    // callee name) — candidates for the FB similarity detector.
+    let app = b.finish();
+    debug_assert_eq!(app.loop_count(), 120);
+    app
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::ir::Access;
+
+    #[test]
+    fn has_paper_loop_count() {
+        assert_eq!(build(64, 200).loop_count(), 120);
+        assert_eq!(build(8, 5).loop_count(), 120);
+    }
+
+    #[test]
+    fn sweeps_are_sequential_recurrences() {
+        let app = build(64, 200);
+        let seqs: Vec<&str> = app
+            .loops
+            .iter()
+            .filter(|l| l.dependence == Dependence::Sequential)
+            .map(|l| l.name.as_str())
+            .collect();
+        // 6 sweep loops + the time loop + the report loop.
+        assert_eq!(seqs.len(), 8, "{seqs:?}");
+        assert!(seqs.contains(&"x_solve.fwd.i"));
+        assert!(seqs.contains(&"z_solve.back.i"));
+        assert!(seqs.contains(&"adi.step"));
+    }
+
+    #[test]
+    fn everything_is_streaming() {
+        let app = build(64, 200);
+        assert!(app.loops.iter().all(|l| l.access == Access::Streaming));
+    }
+
+    #[test]
+    fn time_loop_multiplies_invocations() {
+        let app = build(64, 200);
+        let fwd = app.loops.iter().find(|l| l.name == "x_solve.fwd.i").unwrap();
+        // invocations = iters * n * n
+        assert_eq!(fwd.invocations, 200 * 64 * 64);
+        let init = app.loops.iter().find(|l| l.name == "init.interior.i").unwrap();
+        assert_eq!(init.invocations, 64 * 64);
+    }
+
+    #[test]
+    fn flop_balance_is_solver_dominated() {
+        let app = build(64, 200);
+        let solve_flops: f64 = app
+            .loops
+            .iter()
+            .filter(|l| l.name.contains("_solve"))
+            .map(|l| l.total_flops())
+            .sum();
+        assert!(solve_flops > 0.4 * app.total_flops());
+    }
+}

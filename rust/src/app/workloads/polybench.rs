@@ -1,0 +1,132 @@
+//! Additional Polybench-family workloads beyond the paper's 3mm — the
+//! "existing applications" population the paper's intro motivates
+//! (machine-learning style dense algebra in varied shapes).  Used by the
+//! extended examples and the sizing sweeps.
+
+use crate::app::builder::AppBuilder;
+use crate::app::ir::{Access, Application, Dependence, FunctionBlockKind};
+
+const F64: f64 = 8.0;
+
+/// Polybench 2mm: D = alpha*A*B*C + beta*D (two matmuls + scalings).
+pub fn two_mm(n: u64) -> Application {
+    let nf = n as f64;
+    let mut b = AppBuilder::new("2mm");
+    b.artifact("three_mm_128");
+    for arr in ["A", "B", "C", "D", "tmp"] {
+        b.array(arr, nf * nf * F64);
+    }
+    for (label, x, y, out) in [("mm1", "A", "B", "tmp"), ("mm2", "tmp", "C", "D")] {
+        b.begin_block(label, FunctionBlockKind::Matmul, None);
+        b.open_loop(&format!("{label}.i"), n, Dependence::None);
+        b.open_loop(&format!("{label}.j"), n, Dependence::None);
+        b.body(1.0, 0.0, F64, &[out]); // scale/zero
+        b.open_loop(&format!("{label}.k"), n, Dependence::Reduction);
+        b.access(Access::Strided);
+        b.body(2.0, 2.0 * F64, F64, &[x, y, out]);
+        b.close_loop();
+        b.close_loop();
+        b.close_loop();
+        b.end_block();
+    }
+    b.open_loop("scale_d", n * n, Dependence::None);
+    b.body(2.0, F64, F64, &["D"]);
+    b.close_loop();
+    b.finish()
+}
+
+/// Polybench atax: y = A^T (A x) — two matvecs, memory-bound.
+pub fn atax(n: u64) -> Application {
+    let nf = n as f64;
+    let mut b = AppBuilder::new("atax");
+    b.array("A", nf * nf * F64);
+    b.array("x", nf * F64);
+    b.array("y", nf * F64);
+    b.array("tmp", nf * F64);
+    b.open_loop("init_y", n, Dependence::None);
+    b.body(0.0, 0.0, F64, &["y"]);
+    b.close_loop();
+    b.open_loop("mv1.i", n, Dependence::None);
+    b.body(0.0, 0.0, F64, &["tmp"]);
+    b.open_loop("mv1.j", n, Dependence::Reduction);
+    b.body(2.0, 2.0 * F64, F64, &["A", "x", "tmp"]);
+    b.close_loop();
+    b.close_loop();
+    // y += A^T tmp: inner loop writes y[j] -> race if j parallelized naively
+    b.open_loop("mv2.i", n, Dependence::None);
+    b.open_loop("mv2.j", n, Dependence::Reduction);
+    b.access(Access::Strided);
+    b.body(2.0, 2.0 * F64, F64, &["A", "tmp", "y"]);
+    b.close_loop();
+    b.close_loop();
+    b.finish()
+}
+
+/// Polybench gemver-like: rank-2 update + two matvecs, streaming.
+pub fn gemver(n: u64) -> Application {
+    let nf = n as f64;
+    let mut b = AppBuilder::new("gemver");
+    for arr in ["A", "u1", "v1", "u2", "v2", "x", "y", "w", "z"] {
+        let bytes = if arr == "A" { nf * nf * F64 } else { nf * F64 };
+        b.array(arr, bytes);
+    }
+    b.open_loop("rank2.i", n, Dependence::None);
+    b.open_loop("rank2.j", n, Dependence::None);
+    b.body(4.0, 4.0 * F64, F64, &["A", "u1", "v1", "u2", "v2"]);
+    b.close_loop();
+    b.close_loop();
+    b.open_loop("mv1.i", n, Dependence::None);
+    b.open_loop("mv1.j", n, Dependence::Reduction);
+    b.body(2.0, 2.0 * F64, F64, &["A", "y", "x"]);
+    b.close_loop();
+    b.close_loop();
+    b.open_loop("addz", n, Dependence::None);
+    b.body(1.0, 2.0 * F64, F64, &["x", "z"]);
+    b.close_loop();
+    b.open_loop("mv2.i", n, Dependence::None);
+    b.open_loop("mv2.j", n, Dependence::Reduction);
+    b.body(2.0, 2.0 * F64, F64, &["A", "x", "w"]);
+    b.close_loop();
+    b.close_loop();
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MixedOffloader;
+    use crate::devices::DeviceKind;
+
+    #[test]
+    fn two_mm_prefers_gpu_like_3mm() {
+        let out = MixedOffloader::default().run(&two_mm(1000));
+        let chosen = out.chosen.expect("2mm offloads");
+        assert_eq!(chosen.kind.device, DeviceKind::Gpu);
+        assert!(chosen.improvement > 100.0, "{:.0}", chosen.improvement);
+    }
+
+    #[test]
+    fn atax_offloads_without_racing_reductions() {
+        let app = atax(4000);
+        let out = MixedOffloader::default().run(&app);
+        if let Some(c) = &out.chosen {
+            if let Some(p) = &c.pattern {
+                for l in &app.loops {
+                    if l.dependence == Dependence::Reduction {
+                        assert!(!p.bits[l.id.0], "racing {}", l.name);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemver_is_streaming_bound() {
+        let app = gemver(4000);
+        let out = MixedOffloader::default().run(&app);
+        // Streaming rank-2 updates cap well below compute-bound wins.
+        if let Some(c) = &out.chosen {
+            assert!(c.improvement < 60.0, "{:.1}", c.improvement);
+        }
+    }
+}

@@ -1,0 +1,333 @@
+//! The mixed-destination coordinator — the paper's core contribution
+//! (sec. 3.3): run the six offload trials in the proposed order, stop
+//! early when the user's target is met, subtract offloaded function
+//! blocks from the code before the loop trials, and pick the final
+//! destination.
+
+pub mod requirements;
+pub mod sizing;
+pub mod trial;
+
+use crate::app::ir::{Application, LoopId};
+use crate::devices::{pricing, DeviceKind, SimClock, Testbed};
+use crate::ga::GaConfig;
+use crate::offload::fpga_loop::{self, FpgaSearchConfig};
+use crate::offload::function_block::{self, BlockDb, FbOffloadOutcome};
+use crate::offload::pattern::OffloadPattern;
+use crate::offload::{gpu_loop, manycore_loop};
+
+pub use requirements::UserRequirements;
+pub use trial::{TrialKind, TrialRecord};
+
+/// Final deployment decision.
+#[derive(Clone, Debug)]
+pub struct Chosen {
+    pub kind: TrialKind,
+    pub seconds: f64,
+    pub improvement: f64,
+    pub price_usd: f64,
+    pub pattern: Option<OffloadPattern>,
+    pub detail: String,
+}
+
+/// Everything the flow produced (feeds `report::figure4_row`).
+#[derive(Clone, Debug)]
+pub struct OffloadOutcome {
+    pub app_name: String,
+    pub baseline_seconds: f64,
+    pub trials: Vec<TrialRecord>,
+    pub chosen: Option<Chosen>,
+    pub clock: SimClock,
+}
+
+impl OffloadOutcome {
+    pub fn trial(&self, kind: TrialKind) -> Option<&TrialRecord> {
+        self.trials.iter().find(|t| t.kind == kind)
+    }
+}
+
+/// The coordinator.  Owns the simulated verification environment.
+pub struct MixedOffloader {
+    pub testbed: Testbed,
+    pub db: BlockDb,
+    pub requirements: UserRequirements,
+    pub ga_seed: u64,
+    pub fpga_cfg: FpgaSearchConfig,
+    /// Concurrent measurements per GA generation (wall clock only).
+    pub workers: usize,
+}
+
+impl Default for MixedOffloader {
+    fn default() -> Self {
+        Self {
+            testbed: Testbed::default(),
+            db: BlockDb::default(),
+            requirements: UserRequirements::default(),
+            ga_seed: 0xC0FFEE,
+            fpga_cfg: FpgaSearchConfig::default(),
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        }
+    }
+}
+
+impl MixedOffloader {
+    fn ga_config(&self, app: &Application) -> GaConfig {
+        let eligible = crate::analysis::dependence::genome_mask(app)
+            .iter()
+            .filter(|&&m| m)
+            .count();
+        GaConfig {
+            seed: self.ga_seed,
+            workers: self.workers,
+            ..GaConfig::sized_for(eligible)
+        }
+    }
+
+    /// Run the full mixed-destination flow on `app`.
+    pub fn run(&self, app: &Application) -> OffloadOutcome {
+        let baseline = self.testbed.baseline_seconds(app);
+        let mut clock = SimClock::new();
+        let mut trials: Vec<TrialRecord> = Vec::new();
+        let mut best_so_far: Option<(f64, f64)> = None; // (improvement, price)
+
+        // ---- Phase 1: function blocks (many-core -> GPU -> FPGA) ----
+        let mut best_fb: Option<FbOffloadOutcome> = None;
+        for kind in &TrialKind::order()[..3] {
+            if let Some(reason) = self.pre_skip(kind, &best_so_far) {
+                trials.push(TrialRecord::skipped(*kind, reason, baseline));
+                continue;
+            }
+            let device = self.testbed.device(kind.device);
+            let out = function_block::offload(app, device, &self.db);
+            clock.charge(kind.label(), out.simulated_cost_s);
+            let improvement = out.improvement();
+            let detail = if out.offloaded() {
+                let names: Vec<String> = out
+                    .replaced
+                    .iter()
+                    .map(|r| format!("{} ({:?})", r.name, r.matched))
+                    .collect();
+                format!("replaced {}", names.join(", "))
+            } else {
+                "no DB match".to_string()
+            };
+            trials.push(TrialRecord {
+                kind: *kind,
+                skipped: None,
+                seconds: out.seconds,
+                improvement,
+                offloaded: out.offloaded(),
+                cost_s: out.simulated_cost_s,
+                detail,
+                pattern: None,
+            });
+            if out.offloaded() {
+                let better = best_fb
+                    .as_ref()
+                    .map(|b| out.seconds < b.seconds)
+                    .unwrap_or(true);
+                if better {
+                    best_fb = Some(out.clone());
+                }
+                self.update_best(&mut best_so_far, improvement, device.price_usd());
+            }
+        }
+
+        // ---- Code subtraction: loop trials see the app minus offloaded
+        // function blocks (sec. 3.3.1). ----
+        let (loop_app, loop_map, fb_extra_seconds, fb_note) = match &best_fb {
+            Some(fb) if fb.offloaded() => {
+                let ids: Vec<LoopId> = fb
+                    .replaced
+                    .iter()
+                    .filter_map(|r| {
+                        app.blocks.iter().find(|b| b.name == r.name).map(|b| b.loop_ids.clone())
+                    })
+                    .flatten()
+                    .collect();
+                let (cut, mapping) = app.without_loops(&ids);
+                let lib_total: f64 = fb.replaced.iter().map(|r| r.library_seconds).sum();
+                (cut, Some(mapping), lib_total, format!(" + FB on {}", fb.device.label()))
+            }
+            _ => (app.clone(), None, 0.0, String::new()),
+        };
+        // Re-express a reduced-app pattern in the ORIGINAL app's loop ids so
+        // downstream consumers (codegen, reports) always index `app`.
+        let remap = |p: &OffloadPattern| -> OffloadPattern {
+            match &loop_map {
+                None => p.clone(),
+                Some(mapping) => {
+                    let mut bits = vec![false; app.loop_count()];
+                    for (old, new) in mapping {
+                        bits[old.0] = p.bits[new.0];
+                    }
+                    OffloadPattern::from_bits(bits)
+                }
+            }
+        };
+
+        // ---- Phase 2: loop offload (many-core -> GPU -> FPGA) ----
+        for kind in &TrialKind::order()[3..] {
+            if let Some(reason) = self.pre_skip(kind, &best_so_far) {
+                trials.push(TrialRecord::skipped(*kind, reason, baseline));
+                continue;
+            }
+            let cfg = self.ga_config(&loop_app);
+            let out = match kind.device {
+                DeviceKind::ManyCore => {
+                    manycore_loop::search(&loop_app, &self.testbed.manycore, cfg)
+                }
+                DeviceKind::Gpu => gpu_loop::search(&loop_app, &self.testbed.gpu, cfg),
+                DeviceKind::Fpga => {
+                    fpga_loop::search(&loop_app, &self.testbed.fpga, self.fpga_cfg)
+                }
+                DeviceKind::CpuSingle => unreachable!(),
+            };
+            clock.charge(kind.label(), out.simulated_cost_s);
+            let seconds = out.seconds() + fb_extra_seconds;
+            let improvement = baseline / seconds;
+            let detail = match (&out.best, out.offloaded()) {
+                (Some((p, _)), _) => {
+                    format!("{} loops offloaded{} ({} patterns measured)", p.count(), fb_note, out.evaluations)
+                }
+                (None, _) => format!(
+                    "no pattern beat the baseline ({} patterns measured)",
+                    out.evaluations
+                ),
+            };
+            let device = self.testbed.device(kind.device);
+            trials.push(TrialRecord {
+                kind: *kind,
+                skipped: None,
+                seconds,
+                improvement,
+                offloaded: out.offloaded(),
+                cost_s: out.simulated_cost_s,
+                detail,
+                pattern: out.best.as_ref().map(|(p, _)| remap(p)),
+            });
+            if out.offloaded() {
+                self.update_best(&mut best_so_far, improvement, device.price_usd());
+            }
+        }
+
+        let chosen = self.select(&trials);
+        OffloadOutcome {
+            app_name: app.name.clone(),
+            baseline_seconds: baseline,
+            trials,
+            chosen,
+            clock,
+        }
+    }
+
+    fn pre_skip(&self, kind: &TrialKind, best: &Option<(f64, f64)>) -> Option<String> {
+        if !self.requirements.price_ok(self.testbed.device(kind.device).price_usd()) {
+            return Some(format!(
+                "device over price cap ({} USD)",
+                self.testbed.device(kind.device).price_usd()
+            ));
+        }
+        if let Some((imp, price)) = best {
+            if self.requirements.satisfied(*imp, *price) {
+                return Some(format!("user target already met ({imp:.1}x)"));
+            }
+        }
+        None
+    }
+
+    fn update_best(&self, best: &mut Option<(f64, f64)>, improvement: f64, price: f64) {
+        let replace = best.map(|(i, _)| improvement > i).unwrap_or(true);
+        if replace {
+            *best = Some((improvement, price));
+        }
+    }
+
+    /// Final selection: best improvement among successful trials within the
+    /// price cap; ties go to the cheaper band, then to the earlier trial.
+    fn select(&self, trials: &[TrialRecord]) -> Option<Chosen> {
+        let mut cands: Vec<(usize, &TrialRecord)> = trials
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| {
+                t.skipped.is_none()
+                    && t.offloaded
+                    && t.improvement > 1.0
+                    && self
+                        .requirements
+                        .price_ok(self.testbed.device(t.kind.device).price_usd())
+            })
+            .collect();
+        cands.sort_by(|(ia, a), (ib, b)| {
+            b.improvement
+                .partial_cmp(&a.improvement)
+                .unwrap()
+                .then(pricing::price_band(a.kind.device).cmp(&pricing::price_band(b.kind.device)))
+                .then(ia.cmp(ib))
+        });
+        cands.first().map(|(_, t)| Chosen {
+            kind: t.kind,
+            seconds: t.seconds,
+            improvement: t.improvement,
+            price_usd: self.testbed.device(t.kind.device).price_usd(),
+            pattern: t.pattern.clone(),
+            detail: t.detail.clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::workloads::extra;
+    use crate::offload::pattern::Method;
+
+    #[test]
+    fn gemm_app_early_exits_after_first_fb_trial() {
+        let mut mo = MixedOffloader::default();
+        mo.requirements = UserRequirements {
+            target_improvement: Some(10.0),
+            max_price_usd: None,
+        };
+        let app = extra::gemm_call_app(1024);
+        let out = mo.run(&app);
+        // FB on many-core blows past 10x; everything after is skipped.
+        let first = &out.trials[0];
+        assert_eq!(first.kind.method, Method::FunctionBlock);
+        assert_eq!(first.kind.device, DeviceKind::ManyCore);
+        assert!(first.improvement > 10.0);
+        let skipped = out.trials.iter().filter(|t| t.skipped.is_some()).count();
+        assert_eq!(skipped, 5, "remaining five trials skipped");
+        let chosen = out.chosen.unwrap();
+        assert_eq!(chosen.kind.device, DeviceKind::ManyCore);
+    }
+
+    #[test]
+    fn price_cap_excludes_fpga() {
+        let mut mo = MixedOffloader::default();
+        mo.requirements = UserRequirements {
+            target_improvement: None,
+            max_price_usd: Some(5_000.0),
+        };
+        let app = extra::vecadd(1 << 24);
+        let out = mo.run(&app);
+        for t in &out.trials {
+            if t.kind.device == DeviceKind::Fpga {
+                assert!(t.skipped.is_some(), "FPGA must be skipped by price cap");
+            }
+        }
+    }
+
+    #[test]
+    fn clock_ledger_covers_all_executed_trials() {
+        let mo = MixedOffloader {
+            requirements: UserRequirements::default(),
+            ..Default::default()
+        };
+        let app = extra::vecadd(1 << 20);
+        let out = mo.run(&app);
+        let executed = out.trials.iter().filter(|t| t.skipped.is_none()).count();
+        assert_eq!(out.clock.by_label().len(), executed);
+        assert!(out.clock.total_seconds() > 0.0);
+    }
+}

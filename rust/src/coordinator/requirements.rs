@@ -1,0 +1,52 @@
+//! User requirements: target performance and price (sec. 3.3.1).
+//!
+//! "オフロード試行ではユーザが目標性能や価格を指定でき" — once an earlier
+//! trial satisfies both, the remaining (slower, pricier-to-verify) trials
+//! are skipped.
+
+/// What the user asked for.  All-None = exhaustive search (run all six).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UserRequirements {
+    /// Stop as soon as a trial reaches this improvement factor.
+    pub target_improvement: Option<f64>,
+    /// Never deploy to a device costing more than this.
+    pub max_price_usd: Option<f64>,
+}
+
+impl UserRequirements {
+    /// Is `improvement` on a device priced `price_usd` good enough to stop?
+    pub fn satisfied(&self, improvement: f64, price_usd: f64) -> bool {
+        match self.target_improvement {
+            Some(t) => improvement >= t && self.price_ok(price_usd),
+            None => false, // no target -> never early-exit
+        }
+    }
+
+    pub fn price_ok(&self, price_usd: f64) -> bool {
+        self.max_price_usd.map(|cap| price_usd <= cap).unwrap_or(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_target_never_satisfied() {
+        let r = UserRequirements::default();
+        assert!(!r.satisfied(1e9, 0.0));
+        assert!(r.price_ok(1e9));
+    }
+
+    #[test]
+    fn target_and_price_both_gate() {
+        let r = UserRequirements {
+            target_improvement: Some(10.0),
+            max_price_usd: Some(5_000.0),
+        };
+        assert!(r.satisfied(12.0, 4_000.0));
+        assert!(!r.satisfied(8.0, 4_000.0));
+        assert!(!r.satisfied(12.0, 10_000.0));
+        assert!(!r.price_ok(10_000.0));
+    }
+}

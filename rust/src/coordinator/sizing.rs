@@ -1,0 +1,231 @@
+//! Resource-amount adjustment — the paper's stated next step (sec. 5):
+//! "今後は、移行先環境が混在の際に、CPU、GPU、FPGA の処理リソース量を調整し、
+//! コスト対効果を高めるための検討を行う" — after the destination is chosen,
+//! size *how much* of it to buy so cost-effectiveness is maximized.
+//!
+//! We model resource amount as a scale factor on the chosen device
+//! (cores / SMs / pipeline replicas) with price growing linearly and
+//! returns diminishing per the device's own roofline: re-measuring the
+//! chosen pattern under each scaled device and picking the knee of the
+//! improvement-per-dollar curve.
+
+use crate::app::ir::Application;
+use crate::devices::{CpuSingle, DeviceKind, DeviceModel, Fpga, Gpu, ManyCore};
+use crate::offload::pattern::OffloadPattern;
+
+/// One evaluated sizing option.
+#[derive(Clone, Debug)]
+pub struct SizingPoint {
+    /// Resource multiplier vs. the default testbed device (0.25x..4x).
+    pub scale: f64,
+    pub seconds: f64,
+    pub improvement: f64,
+    pub price_usd: f64,
+    /// improvement per 1000 USD — the cost-effectiveness metric.
+    pub improvement_per_kusd: f64,
+}
+
+/// Result of the sizing sweep.
+#[derive(Clone, Debug)]
+pub struct SizingOutcome {
+    pub device: DeviceKind,
+    pub points: Vec<SizingPoint>,
+    /// Index into `points` with the best cost-effectiveness that still
+    /// meets `min_improvement` (if any).
+    pub recommended: Option<usize>,
+}
+
+/// Scale factors swept (quarter node .. quad node).
+pub const SCALES: [f64; 5] = [0.25, 0.5, 1.0, 2.0, 4.0];
+
+fn scaled_device(kind: DeviceKind, scale: f64) -> Box<dyn ScaledMeasure> {
+    match kind {
+        DeviceKind::ManyCore => {
+            let d = ManyCore::default();
+            Box::new(ManyCore {
+                threads_eff: d.threads_eff * scale,
+                bw_par_stream: d.bw_par_stream * scale.sqrt().max(0.5),
+                bw_par_strided: d.bw_par_strided * scale,
+                ..d
+            })
+        }
+        DeviceKind::Gpu => {
+            let d = Gpu::default();
+            Box::new(Gpu {
+                flops: d.flops * scale,
+                bw_dev: d.bw_dev * scale.sqrt().max(0.5),
+                ..d
+            })
+        }
+        DeviceKind::Fpga => {
+            let d = Fpga::default();
+            Box::new(Fpga { unroll: (d.unroll * scale).max(1.0), ..d })
+        }
+        DeviceKind::CpuSingle => Box::new(CpuSingle::default()),
+    }
+}
+
+/// Object-safe facade so the sweep handles all device types uniformly.
+trait ScaledMeasure {
+    fn seconds(&self, app: &Application, p: &OffloadPattern) -> f64;
+    fn price(&self) -> f64;
+}
+
+impl ScaledMeasure for ManyCore {
+    fn seconds(&self, app: &Application, p: &OffloadPattern) -> f64 {
+        self.app_seconds(app, p)
+    }
+    fn price(&self) -> f64 {
+        self.price_usd()
+    }
+}
+
+impl ScaledMeasure for Gpu {
+    fn seconds(&self, app: &Application, p: &OffloadPattern) -> f64 {
+        self.app_seconds(app, p)
+    }
+    fn price(&self) -> f64 {
+        self.price_usd()
+    }
+}
+
+impl ScaledMeasure for Fpga {
+    fn seconds(&self, app: &Application, p: &OffloadPattern) -> f64 {
+        self.app_seconds(app, p).unwrap_or(f64::INFINITY)
+    }
+    fn price(&self) -> f64 {
+        self.price_usd()
+    }
+}
+
+impl ScaledMeasure for CpuSingle {
+    fn seconds(&self, app: &Application, _p: &OffloadPattern) -> f64 {
+        self.app_seconds(app)
+    }
+    fn price(&self) -> f64 {
+        self.price_usd()
+    }
+}
+
+/// Sweep resource amounts for the chosen (device, pattern) and recommend
+/// the most cost-effective size meeting `min_improvement`.
+pub fn sweep(
+    app: &Application,
+    device: DeviceKind,
+    pattern: &OffloadPattern,
+    min_improvement: f64,
+) -> SizingOutcome {
+    let baseline = CpuSingle::default().app_seconds(app);
+    let base_price = scaled_device(device, 1.0).price();
+    let points: Vec<SizingPoint> = SCALES
+        .iter()
+        .map(|&scale| {
+            let dev = scaled_device(device, scale);
+            let seconds = dev.seconds(app, pattern);
+            let improvement = baseline / seconds;
+            // Price scales linearly with resource amount (cloud-style).
+            let price_usd = base_price * scale;
+            SizingPoint {
+                scale,
+                seconds,
+                improvement,
+                price_usd,
+                improvement_per_kusd: improvement / (price_usd / 1000.0),
+            }
+        })
+        .collect();
+    let recommended = points
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.improvement >= min_improvement && p.seconds.is_finite())
+        .max_by(|a, b| {
+            a.1.improvement_per_kusd
+                .partial_cmp(&b.1.improvement_per_kusd)
+                .unwrap()
+        })
+        .map(|(i, _)| i);
+    SizingOutcome { device, points, recommended }
+}
+
+/// Render the sweep as a table.
+pub fn render(out: &SizingOutcome) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "resource sizing on {} (improvement / kUSD is the metric):",
+        out.device.label()
+    );
+    for (i, p) in out.points.iter().enumerate() {
+        let mark = if Some(i) == out.recommended { " <= recommended" } else { "" };
+        let _ = writeln!(
+            s,
+            "  {:>5.2}x resources: {:>10.4} s  {:>8.2}x  {:>8.0} USD  {:>8.2} x/kUSD{mark}",
+            p.scale, p.seconds, p.improvement, p.price_usd, p.improvement_per_kusd
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::ir::LoopId;
+    use crate::app::workloads::{nas_bt, threemm};
+
+    fn mm_pattern(app: &Application) -> OffloadPattern {
+        let ids: Vec<LoopId> = app
+            .loops
+            .iter()
+            .filter(|l| l.name.ends_with(".i") && l.dependence.parallelizable())
+            .map(|l| l.id)
+            .collect();
+        OffloadPattern::selecting(app, &ids)
+    }
+
+    #[test]
+    fn bigger_devices_are_never_slower() {
+        let app = threemm::build(1000);
+        let p = mm_pattern(&app);
+        let out = sweep(&app, DeviceKind::ManyCore, &p, 1.0);
+        for w in out.points.windows(2) {
+            assert!(w[1].seconds <= w[0].seconds * 1.0001, "{w:?}");
+        }
+    }
+
+    #[test]
+    fn bandwidth_bound_bt_prefers_small_nodes() {
+        // NAS.BT's streaming loops saturate bandwidth early: scaling cores
+        // 4x costs 4x but buys little -> cost-effectiveness recommends a
+        // smaller-than-max node.
+        let app = nas_bt::build(64, 200);
+        let ids: Vec<LoopId> = app
+            .loops
+            .iter()
+            .filter(|l| l.dependence.parallelizable())
+            .map(|l| l.id)
+            .collect();
+        let p = OffloadPattern::selecting(&app, &ids);
+        let out = sweep(&app, DeviceKind::ManyCore, &p, 1.5);
+        let rec = out.recommended.expect("some size works");
+        assert!(out.points[rec].scale <= 1.0, "{}", render(&out));
+    }
+
+    #[test]
+    fn min_improvement_filters_recommendation() {
+        let app = threemm::build(1000);
+        let p = mm_pattern(&app);
+        let out = sweep(&app, DeviceKind::ManyCore, &p, 1e9);
+        assert!(out.recommended.is_none());
+    }
+
+    #[test]
+    fn render_lists_all_scales() {
+        let app = threemm::build(1000);
+        let p = mm_pattern(&app);
+        let out = sweep(&app, DeviceKind::Gpu, &p, 1.0);
+        let s = render(&out);
+        assert_eq!(s.matches("x resources").count(), SCALES.len());
+        assert!(s.contains("recommended"));
+    }
+}

@@ -1,0 +1,97 @@
+//! Trial identities and records for the mixed-destination flow.
+
+use crate::devices::DeviceKind;
+use crate::offload::pattern::{Method, OffloadPattern};
+
+/// One of the six (device x method) offload trials, in the paper's
+/// verification order (sec. 3.3.1): function blocks before loops (bigger
+/// wins first), many-core before GPU (same price band, fewer risks),
+/// FPGA last (3 h of synthesis per pattern).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TrialKind {
+    pub device: DeviceKind,
+    pub method: Method,
+}
+
+impl TrialKind {
+    /// The paper's proposed ordering.
+    pub fn order() -> [TrialKind; 6] {
+        use DeviceKind::*;
+        use Method::*;
+        [
+            TrialKind { device: ManyCore, method: FunctionBlock },
+            TrialKind { device: Gpu, method: FunctionBlock },
+            TrialKind { device: Fpga, method: FunctionBlock },
+            TrialKind { device: ManyCore, method: LoopOffload },
+            TrialKind { device: Gpu, method: LoopOffload },
+            TrialKind { device: Fpga, method: LoopOffload },
+        ]
+    }
+
+    pub fn label(&self) -> String {
+        let m = match self.method {
+            Method::FunctionBlock => "function-block",
+            Method::LoopOffload => "loop",
+        };
+        format!("{} {m} offload", self.device.label())
+    }
+}
+
+/// What happened to one trial.
+#[derive(Clone, Debug)]
+pub struct TrialRecord {
+    pub kind: TrialKind,
+    /// Some(reason) when the trial never ran (early exit, price cap).
+    pub skipped: Option<String>,
+    /// Achieved application seconds (baseline if nothing offloaded).
+    pub seconds: f64,
+    /// Improvement vs the single-core baseline (1.0 = no gain).
+    pub improvement: f64,
+    /// Did the method actually offload anything?
+    pub offloaded: bool,
+    /// Simulated verification cost of this trial.
+    pub cost_s: f64,
+    /// Human-readable outcome summary.
+    pub detail: String,
+    /// Winning loop pattern, when the method produces one.
+    pub pattern: Option<OffloadPattern>,
+}
+
+impl TrialRecord {
+    pub fn skipped(kind: TrialKind, reason: impl Into<String>, baseline: f64) -> Self {
+        Self {
+            kind,
+            skipped: Some(reason.into()),
+            seconds: baseline,
+            improvement: 1.0,
+            offloaded: false,
+            cost_s: 0.0,
+            detail: String::new(),
+            pattern: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn order_matches_paper() {
+        let o = TrialKind::order();
+        assert_eq!(o[0].method, Method::FunctionBlock);
+        assert_eq!(o[0].device, DeviceKind::ManyCore);
+        assert_eq!(o[2].device, DeviceKind::Fpga);
+        assert_eq!(o[3].method, Method::LoopOffload);
+        assert_eq!(o[5].device, DeviceKind::Fpga);
+        // FB strictly before loops; many-core before GPU before FPGA.
+        assert!(o[..3].iter().all(|t| t.method == Method::FunctionBlock));
+        assert!(o[3..].iter().all(|t| t.method == Method::LoopOffload));
+    }
+
+    #[test]
+    fn labels_are_readable() {
+        let t = TrialKind::order()[4];
+        assert_eq!(t.label(), "GPU loop offload");
+    }
+}

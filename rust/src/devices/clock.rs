@@ -1,0 +1,95 @@
+//! Simulated verification clock: the ledger behind the paper's sec. 4.2
+//! timing narrative (FB search ~1 min, GA searches ~6 h each, FPGA
+//! patterns ~3 h of synthesis each, everything together ~1 day).
+
+use std::fmt;
+
+/// One charged verification activity.
+#[derive(Clone, Debug)]
+pub struct ClockEvent {
+    pub label: String,
+    pub seconds: f64,
+}
+
+/// Accumulates simulated verification time per labelled phase.
+#[derive(Clone, Debug, Default)]
+pub struct SimClock {
+    events: Vec<ClockEvent>,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn charge(&mut self, label: impl Into<String>, seconds: f64) {
+        self.events.push(ClockEvent { label: label.into(), seconds });
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.events.iter().map(|e| e.seconds).sum()
+    }
+
+    pub fn total_hours(&self) -> f64 {
+        self.total_seconds() / 3600.0
+    }
+
+    /// Sum per distinct label, in first-seen order.
+    pub fn by_label(&self) -> Vec<(String, f64)> {
+        let mut order: Vec<String> = Vec::new();
+        let mut sums: std::collections::BTreeMap<String, f64> = Default::default();
+        for e in &self.events {
+            if !sums.contains_key(&e.label) {
+                order.push(e.label.clone());
+            }
+            *sums.entry(e.label.clone()).or_insert(0.0) += e.seconds;
+        }
+        order.into_iter().map(|l| { let s = sums[&l]; (l, s) }).collect()
+    }
+
+    pub fn events(&self) -> &[ClockEvent] {
+        &self.events
+    }
+
+    pub fn merge(&mut self, other: &SimClock) {
+        self.events.extend(other.events.iter().cloned());
+    }
+}
+
+impl fmt::Display for SimClock {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "simulated verification time: {:.1} h", self.total_hours())?;
+        for (label, s) in self.by_label() {
+            writeln!(f, "  {label:<40} {:>8.2} h", s / 3600.0)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_groups() {
+        let mut c = SimClock::new();
+        c.charge("ga", 100.0);
+        c.charge("fpga", 3600.0);
+        c.charge("ga", 50.0);
+        assert_eq!(c.total_seconds(), 3750.0);
+        let by = c.by_label();
+        assert_eq!(by[0], ("ga".to_string(), 150.0));
+        assert_eq!(by[1], ("fpga".to_string(), 3600.0));
+    }
+
+    #[test]
+    fn merge_combines_ledgers() {
+        let mut a = SimClock::new();
+        a.charge("x", 1.0);
+        let mut b = SimClock::new();
+        b.charge("y", 2.0);
+        a.merge(&b);
+        assert_eq!(a.total_seconds(), 3.0);
+        assert_eq!(a.events().len(), 2);
+    }
+}

@@ -1,0 +1,123 @@
+//! Single-core baseline CPU model (the paper's "通常CPU" reference).
+//!
+//! Per-iteration roofline: `max(flops / F, bytes / BW(access))`.  The
+//! effective single-core bandwidth depends strongly on the access pattern:
+//! a naive strided matmul is latency-bound around 1.4 GB/s of demand
+//! misses (which is why Polybench 3mm needs 51.3 s on the paper's
+//! testbed), while a streaming stencil drives the prefetchers at ~10 GB/s.
+
+use crate::app::ir::{Access, Application, Loop};
+use crate::offload::pattern::OffloadPattern;
+
+use super::{DeviceKind, DeviceModel, Measurement};
+
+/// Calibrated single-core rates (gcc -O2-class code on the fig. 3 Xeon /
+/// Ryzen testbeds; see EXPERIMENTS.md #calibration).
+#[derive(Clone, Copy, Debug)]
+pub struct CpuSingle {
+    /// Effective scalar flop rate.
+    pub flops: f64,
+    pub bw_stream: f64,
+    pub bw_strided: f64,
+    pub bw_random: f64,
+    /// Compile cost charged per measured pattern.
+    pub compile_s: f64,
+}
+
+impl Default for CpuSingle {
+    fn default() -> Self {
+        Self {
+            flops: 1.0e9,
+            bw_stream: 10.0e9,
+            bw_strided: 1.4e9,
+            bw_random: 0.8e9,
+            compile_s: 20.0,
+        }
+    }
+}
+
+impl CpuSingle {
+    pub fn bandwidth(&self, access: Access) -> f64 {
+        match access {
+            Access::Streaming => self.bw_stream,
+            Access::Strided => self.bw_strided,
+            Access::Random => self.bw_random,
+        }
+    }
+
+    /// Seconds per iteration of this loop's own body on one core.
+    pub fn body_time_per_iter(&self, l: &Loop) -> f64 {
+        let bytes = l.bytes_read_per_iter + l.bytes_written_per_iter;
+        (l.flops_per_iter / self.flops).max(bytes / self.bandwidth(l.access))
+    }
+
+    /// Whole-application single-core run time.
+    pub fn app_seconds(&self, app: &Application) -> f64 {
+        app.loops
+            .iter()
+            .map(|l| l.total_iters() * self.body_time_per_iter(l))
+            .sum()
+    }
+}
+
+impl DeviceModel for CpuSingle {
+    fn kind(&self) -> DeviceKind {
+        DeviceKind::CpuSingle
+    }
+
+    fn price_usd(&self) -> f64 {
+        1_500.0
+    }
+
+    fn measure(&self, app: &Application, _pattern: &OffloadPattern) -> Measurement {
+        // The baseline ignores pattern bits: nothing is offloaded.
+        Measurement {
+            seconds: self.app_seconds(app),
+            valid: true,
+            setup_seconds: self.compile_s,
+        }
+    }
+
+    fn fb_library_seconds(&self, flops: f64, bytes: f64, _transfer: f64) -> f64 {
+        // A tuned (blocked, vectorized) CPU library still runs on one core
+        // here; assume 4x the naive flop rate and streaming-quality access.
+        (flops / (4.0 * self.flops)).max(bytes / self.bw_stream)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::workloads::{nas_bt, threemm};
+
+    /// Calibration against the paper's fig. 4 baselines.
+    #[test]
+    fn threemm_baseline_near_51s() {
+        let cpu = CpuSingle::default();
+        let t = cpu.app_seconds(&threemm::build(1000));
+        assert!((40.0..65.0).contains(&t), "3mm single-core {t:.1}s vs paper 51.3s");
+    }
+
+    #[test]
+    fn nas_bt_baseline_near_130s() {
+        let cpu = CpuSingle::default();
+        let t = cpu.app_seconds(&nas_bt::build(64, 200));
+        assert!((100.0..165.0).contains(&t), "BT single-core {t:.1}s vs paper 130s");
+    }
+
+    #[test]
+    fn strided_is_slower_than_streaming() {
+        use crate::app::builder::AppBuilder;
+        use crate::app::ir::{Access, Dependence};
+        let cpu = CpuSingle::default();
+        let mk = |acc| {
+            let mut b = AppBuilder::new("t");
+            b.open_loop("l", 1000, Dependence::None);
+            b.access(acc);
+            b.body(1.0, 16.0, 8.0, &[]);
+            b.close_loop();
+            b.finish()
+        };
+        assert!(cpu.app_seconds(&mk(Access::Strided)) > cpu.app_seconds(&mk(Access::Streaming)));
+    }
+}

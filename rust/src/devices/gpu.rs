@@ -1,0 +1,237 @@
+//! GPU model: NVIDIA GeForce RTX 2080 Ti over PCIe (fig. 3).
+//!
+//! Offloaded regions (nest under each effective region root) run as
+//! kernels: compute-rate / device-bandwidth roofline with an
+//! access-pattern byte factor (strided loads coalesce and hit L2 when a
+//! threadblock tiles them — the reason naive OpenACC matmul still reaches
+//! ~130 GFLOPS).  Each region invocation pays a kernel launch, and —
+//! decisive for NAS.BT — every region invocation re-transfers its arrays
+//! over PCIe unless the transfer-reduction pass ([42], `hoist_transfers`)
+//! can keep them resident because no CPU code touches them.
+//!
+//! CPU and GPU also round differently (sec. 3.3.1): the final-result check
+//! runs with a tolerance, but valid here still requires dependence-free
+//! selected loops.
+
+
+
+use crate::app::ir::{Access, Application, LoopId};
+use crate::offload::pattern::OffloadPattern;
+
+use super::cpu::CpuSingle;
+use super::{DeviceKind, DeviceModel, Measurement};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Gpu {
+    pub host: CpuSingle,
+    /// Effective kernel flop rate (OpenACC-generated kernels).
+    pub flops: f64,
+    /// Device memory bandwidth.
+    pub bw_dev: f64,
+    /// PCIe host<->device bandwidth (one direction).
+    pub bw_pcie: f64,
+    /// Kernel launch + runtime dispatch per region invocation.
+    pub launch_s: f64,
+    /// PGI/OpenACC compile per pattern.
+    pub compile_s: f64,
+    /// Apply the transfer-reduction pass from [42]?
+    pub hoist_transfers: bool,
+}
+
+impl Default for Gpu {
+    fn default() -> Self {
+        Self {
+            host: CpuSingle::default(),
+            flops: 131.0e9,
+            bw_dev: 448.0e9,
+            bw_pcie: 16.0e9,
+            launch_s: 20.0e-6,
+            compile_s: 45.0,
+            hoist_transfers: true,
+        }
+    }
+}
+
+/// How many effective bytes a body iteration moves on-device.
+fn byte_factor(access: Access) -> f64 {
+    match access {
+        Access::Streaming => 1.0,
+        // Coalesced across the threadblock + L2 tile reuse.
+        Access::Strided => 0.25,
+        Access::Random => 2.0,
+    }
+}
+
+impl Gpu {
+    /// Device-side kernel time for the nest rooted at `root`.
+    fn kernel_seconds(&self, app: &Application, root: LoopId) -> f64 {
+        let mut t = 0.0;
+        app.visit_nest(root, &mut |l| {
+            let bytes =
+                (l.bytes_read_per_iter + l.bytes_written_per_iter) * byte_factor(l.access);
+            let per_iter = (l.flops_per_iter / self.flops).max(bytes / self.bw_dev);
+            t += l.total_iters() * per_iter;
+        });
+        t
+    }
+
+    /// PCIe transfer seconds for the whole pattern.
+    ///
+    /// Per region root r and array a touched inside r's nest: the array
+    /// crosses once per invocation of r, unless r runs once, or the
+    /// transfer-reduction pass proves a stays device-resident (no loop
+    /// outside any offloaded region touches it).
+    pub fn transfer_seconds(&self, app: &Application, pattern: &OffloadPattern) -> f64 {
+        let roots = pattern.region_roots(app);
+        if roots.is_empty() {
+            return 0.0;
+        }
+        // Dense array-id bitmasks (apps have a handful of arrays; 64 is
+        // plenty).  This path runs once per GA measurement — keep it
+        // allocation-light (see EXPERIMENTS.md #Perf).
+        debug_assert!(app.array_order.len() <= 64);
+        // Arrays touched by CPU-side loops (not in any region).
+        let mut cpu_touched: u64 = 0;
+        for l in &app.loops {
+            if !pattern.in_region(app, l.id) {
+                for &a in &l.array_ids {
+                    cpu_touched |= 1 << a;
+                }
+            }
+        }
+        let mut total_bytes = 0.0;
+        for &root in &roots {
+            let inv = app.get(root).invocations as f64;
+            let mut touched: u64 = 0;
+            app.visit_nest(root, &mut |l| {
+                for &a in &l.array_ids {
+                    touched |= 1 << a;
+                }
+            });
+            let mut rest = touched;
+            while rest != 0 {
+                let a = rest.trailing_zeros() as usize;
+                rest &= rest - 1;
+                let Some(info) = app.arrays.get(app.array_order[a].as_str()) else { continue };
+                let hoistable = self.hoist_transfers && cpu_touched & (1 << a) == 0;
+                let count = if hoistable { 1.0 } else { inv };
+                // In + out (we do not track read-only vs written per array
+                // finely enough to skip one direction reliably).
+                total_bytes += 2.0 * info.bytes * count;
+            }
+        }
+        total_bytes / self.bw_pcie
+    }
+
+    pub fn app_seconds(&self, app: &Application, pattern: &OffloadPattern) -> f64 {
+        let roots = pattern.region_roots(app);
+        let mut t = self.transfer_seconds(app, pattern);
+        for &root in &roots {
+            t += self.kernel_seconds(app, root);
+            t += app.get(root).invocations as f64 * self.launch_s;
+        }
+        for l in &app.loops {
+            if !pattern.in_region(app, l.id) {
+                t += l.total_iters() * self.host.body_time_per_iter(l);
+            }
+        }
+        t
+    }
+}
+
+impl DeviceModel for Gpu {
+    fn kind(&self) -> DeviceKind {
+        DeviceKind::Gpu
+    }
+
+    fn price_usd(&self) -> f64 {
+        4_000.0
+    }
+
+    fn measure(&self, app: &Application, pattern: &OffloadPattern) -> Measurement {
+        Measurement {
+            seconds: self.app_seconds(app, pattern),
+            valid: pattern.valid(app),
+            setup_seconds: self.compile_s,
+        }
+    }
+
+    fn fb_library_seconds(&self, flops: f64, bytes: f64, transfer_bytes: f64) -> f64 {
+        // cuBLAS/cuFFT-class tuned kernels: near device peak.
+        (flops / (4.0e12)).max(bytes * 0.25 / self.bw_dev) + transfer_bytes / self.bw_pcie
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::workloads::{nas_bt, threemm};
+
+    fn threemm_gpu_pattern(app: &Application) -> OffloadPattern {
+        // Offload the three matmul nests (root at each mm i-loop).
+        let ids: Vec<LoopId> = app
+            .loops
+            .iter()
+            .filter(|l| l.name.starts_with("mm") && l.name.ends_with(".i"))
+            .map(|l| l.id)
+            .collect();
+        OffloadPattern::selecting(app, &ids)
+    }
+
+    /// Calibration: fig. 4 reports 0.046 s / 1120x for 3mm on the GPU.
+    #[test]
+    fn threemm_improvement_near_1120x() {
+        let gpu = Gpu::default();
+        let app = threemm::build(1000);
+        let base = gpu.host.app_seconds(&app);
+        let t = gpu.app_seconds(&app, &threemm_gpu_pattern(&app));
+        let imp = base / t;
+        assert!((700.0..1600.0).contains(&imp), "3mm GPU {imp:.0}x vs paper 1120x");
+    }
+
+    /// Any NAS.BT pattern that offloads a solver line loop re-transfers the
+    /// grid tens of thousands of times -> blows the 3-minute timeout (the
+    /// paper's GPU trial outcome).
+    #[test]
+    fn nas_bt_line_loop_offload_times_out() {
+        let gpu = Gpu::default();
+        let app = nas_bt::build(64, 200);
+        let j = app.loops.iter().find(|l| l.name == "x_solve.fwd.j").unwrap().id;
+        let m = gpu.measure(&app, &OffloadPattern::selecting(&app, &[j]));
+        assert!(m.timed_out(), "expected timeout, got {:.1}s", m.seconds);
+    }
+
+    #[test]
+    fn transfer_hoisting_cuts_top_level_regions_to_one_pass() {
+        let gpu = Gpu::default();
+        let app = threemm::build(1000);
+        let p = threemm_gpu_pattern(&app);
+        let with = gpu.transfer_seconds(&app, &p);
+        let without = Gpu { hoist_transfers: false, ..gpu }.transfer_seconds(&app, &p);
+        // Top-level roots run once either way; hoisting equals here.
+        assert!(with <= without + 1e-12);
+        // Both are bounded by moving each matrix a few times over PCIe.
+        assert!(with < 0.1, "{with}");
+    }
+
+    #[test]
+    fn nested_region_without_hoist_pays_per_invocation() {
+        let gpu = Gpu::default();
+        let app = nas_bt::build(64, 200);
+        // rhs.pre is nested in the 200-step time loop and u IS touched by
+        // CPU solves, so it cannot be hoisted: 200 transfers of u+us+square.
+        let pre = app.loops.iter().find(|l| l.name == "rhs.pre.k").unwrap().id;
+        let p = OffloadPattern::selecting(&app, &[pre]);
+        let t = gpu.transfer_seconds(&app, &p);
+        let expect_min = 2.0 * 3.0 * 10.4e6 * 200.0 / gpu.bw_pcie * 0.5;
+        assert!(t > expect_min, "t={t}");
+    }
+
+    #[test]
+    fn empty_pattern_is_pure_host() {
+        let gpu = Gpu::default();
+        let app = threemm::build(1000);
+        let t = gpu.app_seconds(&app, &OffloadPattern::none(&app));
+        assert!((t - gpu.host.app_seconds(&app)).abs() < 1e-9);
+    }
+}

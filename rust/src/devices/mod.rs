@@ -1,0 +1,123 @@
+//! Device models: the simulated verification environment.
+//!
+//! The paper measures every candidate pattern on real machines (fig. 3:
+//! Ryzen Threadripper 2990WX, GeForce RTX 2080 Ti, Intel PAC Arria 10).
+//! Those machines are not available here (repro band 0/5), so each device
+//! is an analytic roofline model over the IR's per-loop features.  The
+//! models are calibrated against the paper's own measurements — see
+//! `calibration` tests and EXPERIMENTS.md — and they only ever answer the
+//! two questions the search needs: *how long does this pattern run* and
+//! *are its results correct*.
+
+pub mod clock;
+pub mod cpu;
+pub mod fpga;
+pub mod gpu;
+pub mod manycore;
+pub mod pricing;
+
+use crate::app::ir::Application;
+use crate::offload::pattern::OffloadPattern;
+
+pub use clock::SimClock;
+pub use cpu::CpuSingle;
+pub use fpga::Fpga;
+pub use gpu::Gpu;
+pub use manycore::ManyCore;
+
+/// The three offload destinations plus the single-core baseline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DeviceKind {
+    CpuSingle,
+    ManyCore,
+    Gpu,
+    Fpga,
+}
+
+impl DeviceKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DeviceKind::CpuSingle => "single-core CPU",
+            DeviceKind::ManyCore => "many-core CPU",
+            DeviceKind::Gpu => "GPU",
+            DeviceKind::Fpga => "FPGA",
+        }
+    }
+}
+
+/// Result of one simulated pattern measurement.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Measurement {
+    /// Simulated application run time, seconds.
+    pub seconds: f64,
+    /// Did the final-result check pass?  (Naive parallelization of a
+    /// dependence-carrying loop silently corrupts the output.)
+    pub valid: bool,
+    /// Simulated preparation cost charged to the verification clock
+    /// (compile for CPU/GPU, circuit synthesis for FPGA).
+    pub setup_seconds: f64,
+}
+
+impl Measurement {
+    /// The paper's 3-minute measurement timeout (sec. 4.1.2): patterns
+    /// exceeding it are treated as "processing time = infinity".
+    pub const TIMEOUT_S: f64 = 180.0;
+
+    pub fn timed_out(&self) -> bool {
+        self.seconds > Self::TIMEOUT_S
+    }
+}
+
+/// A device that can measure loop-offload patterns and run function-block
+/// library replacements.
+pub trait DeviceModel: Sync {
+    fn kind(&self) -> DeviceKind;
+
+    /// Node price in USD (paper sec. 3.3.1: manycore = GPU < FPGA).
+    fn price_usd(&self) -> f64;
+
+    /// Simulated run time + validity of `pattern` on this device.
+    fn measure(&self, app: &Application, pattern: &OffloadPattern) -> Measurement;
+
+    /// Run time of a device-tuned library implementation of a function
+    /// block with the given totals (CUDA library / OpenMP MKL-like / FPGA
+    /// IP core) — used by the FB offload method.  `transfer_bytes` is the
+    /// data that must cross to the device per program run.
+    fn fb_library_seconds(&self, flops: f64, bytes: f64, transfer_bytes: f64) -> f64;
+}
+
+/// The verification environment: one instance of each destination device
+/// plus the baseline CPU, as in fig. 3.
+pub struct Testbed {
+    pub cpu: CpuSingle,
+    pub manycore: ManyCore,
+    pub gpu: Gpu,
+    pub fpga: Fpga,
+}
+
+impl Default for Testbed {
+    fn default() -> Self {
+        Self {
+            cpu: CpuSingle::default(),
+            manycore: ManyCore::default(),
+            gpu: Gpu::default(),
+            fpga: Fpga::default(),
+        }
+    }
+}
+
+impl Testbed {
+    pub fn device(&self, kind: DeviceKind) -> &dyn DeviceModel {
+        match kind {
+            DeviceKind::CpuSingle => &self.cpu,
+            DeviceKind::ManyCore => &self.manycore,
+            DeviceKind::Gpu => &self.gpu,
+            DeviceKind::Fpga => &self.fpga,
+        }
+    }
+
+    /// Single-core baseline time of the whole application.
+    pub fn baseline_seconds(&self, app: &Application) -> f64 {
+        self.cpu.measure(app, &OffloadPattern::none(app)).seconds
+    }
+}

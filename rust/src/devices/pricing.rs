@@ -1,0 +1,41 @@
+//! Price/performance accounting (sec. 3.3.1: users state a target
+//! performance *and price*; the trial ordering exists partly because the
+//! FPGA band costs more to buy and to verify).
+
+use super::{DeviceKind, DeviceModel};
+
+/// Cost-performance of an offload outcome: improvement per 1000 USD.
+pub fn improvement_per_kusd(improvement: f64, device: &dyn DeviceModel) -> f64 {
+    improvement / (device.price_usd() / 1000.0)
+}
+
+/// The paper's ordering premise on node prices.
+pub fn price_band(kind: DeviceKind) -> u8 {
+    match kind {
+        DeviceKind::CpuSingle => 0,
+        DeviceKind::ManyCore | DeviceKind::Gpu => 1,
+        DeviceKind::Fpga => 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::Testbed;
+
+    #[test]
+    fn paper_price_ordering_holds() {
+        let tb = Testbed::default();
+        assert_eq!(tb.manycore.price_usd(), tb.gpu.price_usd());
+        assert!(tb.fpga.price_usd() > tb.gpu.price_usd());
+        assert!(price_band(DeviceKind::Fpga) > price_band(DeviceKind::Gpu));
+    }
+
+    #[test]
+    fn cost_performance_scales() {
+        let tb = Testbed::default();
+        let a = improvement_per_kusd(100.0, &tb.gpu);
+        let b = improvement_per_kusd(100.0, &tb.fpga);
+        assert!(a > b);
+    }
+}

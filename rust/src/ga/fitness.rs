@@ -1,0 +1,51 @@
+//! Fitness mapping from a simulated measurement.
+
+use crate::devices::Measurement;
+
+/// `(processing time)^exponent` with exponent < 0 (paper: -1/2);
+/// invalid results and timeouts score 0 ("time = infinity").
+pub fn fitness(m: &Measurement, exponent: f64) -> f64 {
+    if !m.valid || m.timed_out() || !m.seconds.is_finite() || m.seconds <= 0.0 {
+        return 0.0;
+    }
+    m.seconds.powf(exponent)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meas(seconds: f64, valid: bool) -> Measurement {
+        Measurement { seconds, valid, setup_seconds: 0.0 }
+    }
+
+    #[test]
+    fn faster_is_fitter() {
+        let fast = fitness(&meas(1.0, true), -0.5);
+        let slow = fitness(&meas(100.0, true), -0.5);
+        assert!(fast > slow);
+        assert_eq!(fast, 1.0);
+        assert_eq!(slow, 0.1);
+    }
+
+    #[test]
+    fn minus_half_flattens_vs_minus_one() {
+        // The -1/2 exponent must compress the advantage of a fast pattern.
+        let r_half = fitness(&meas(1.0, true), -0.5) / fitness(&meas(100.0, true), -0.5);
+        let r_one = fitness(&meas(1.0, true), -1.0) / fitness(&meas(100.0, true), -1.0);
+        assert!(r_half < r_one);
+    }
+
+    #[test]
+    fn invalid_and_timeout_score_zero() {
+        assert_eq!(fitness(&meas(1.0, false), -0.5), 0.0);
+        assert_eq!(fitness(&meas(Measurement::TIMEOUT_S + 1.0, true), -0.5), 0.0);
+        assert_eq!(fitness(&meas(f64::INFINITY, true), -0.5), 0.0);
+        assert_eq!(fitness(&meas(0.0, true), -0.5), 0.0);
+    }
+
+    #[test]
+    fn at_timeout_boundary_still_counts() {
+        assert!(fitness(&meas(Measurement::TIMEOUT_S, true), -0.5) > 0.0);
+    }
+}

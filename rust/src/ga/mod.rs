@@ -1,0 +1,14 @@
+//! Genetic-algorithm search engine (paper sec. 3.2.1 / 4.1.2).
+//!
+//! Genome = one bit per *eligible* loop ("parallelize / offload this loop
+//! or not").  Fitness = (processing time)^(-1/2) — the −1/2 exponent stops
+//! a single fast individual from collapsing the search; invalid results
+//! and 3-minute timeouts score 0.  Roulette selection with elite
+//! preservation, Pc = 0.9, Pm = 0.05.
+
+pub mod engine;
+pub mod fitness;
+pub mod population;
+
+pub use engine::{Ga, GaConfig, GaResult, GenStats};
+pub use fitness::fitness;

@@ -1,0 +1,86 @@
+//! Population initialization and variation operators.
+
+use crate::util::rng::Rng;
+
+/// Random genome with bit density `p_on`.
+///
+/// Density well below 0.5 matters on big applications: with 120 loops a
+/// half-dense pattern almost surely parallelizes some racing reduction and
+/// scores 0, so the GA could never bootstrap (the paper's tool seeds
+/// sparse patterns for the same reason).
+pub fn random_genome(rng: &mut Rng, len: usize, p_on: f64) -> Vec<bool> {
+    (0..len).map(|_| rng.chance(p_on)).collect()
+}
+
+/// Single-point crossover (paper Pc applies per pair).
+pub fn crossover(rng: &mut Rng, a: &[bool], b: &[bool]) -> (Vec<bool>, Vec<bool>) {
+    assert_eq!(a.len(), b.len());
+    if a.len() < 2 {
+        return (a.to_vec(), b.to_vec());
+    }
+    let cut = 1 + rng.below(a.len() - 1);
+    let mut c = a[..cut].to_vec();
+    c.extend_from_slice(&b[cut..]);
+    let mut d = b[..cut].to_vec();
+    d.extend_from_slice(&a[cut..]);
+    (c, d)
+}
+
+/// Per-bit flip mutation (paper Pm).
+pub fn mutate(rng: &mut Rng, genome: &mut [bool], pm: f64) {
+    for bit in genome.iter_mut() {
+        if rng.chance(pm) {
+            *bit = !*bit;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn density_is_respected() {
+        let mut rng = Rng::new(1);
+        let g = random_genome(&mut rng, 10_000, 0.25);
+        let on = g.iter().filter(|&&b| b).count();
+        assert!((2000..3000).contains(&on), "{on}");
+    }
+
+    #[test]
+    fn crossover_preserves_material() {
+        let mut rng = Rng::new(2);
+        let a = vec![true; 16];
+        let b = vec![false; 16];
+        let (c, d) = crossover(&mut rng, &a, &b);
+        for i in 0..16 {
+            assert_ne!(c[i], d[i]); // complementary parents stay complementary
+        }
+        assert!(c.iter().any(|&x| x) && c.iter().any(|&x| !x));
+    }
+
+    #[test]
+    fn crossover_on_tiny_genomes() {
+        let mut rng = Rng::new(3);
+        let (c, d) = crossover(&mut rng, &[true], &[false]);
+        assert_eq!(c, vec![true]);
+        assert_eq!(d, vec![false]);
+    }
+
+    #[test]
+    fn mutation_rate_sanity() {
+        let mut rng = Rng::new(4);
+        let mut g = vec![false; 10_000];
+        mutate(&mut rng, &mut g, 0.05);
+        let flipped = g.iter().filter(|&&b| b).count();
+        assert!((350..650).contains(&flipped), "{flipped}");
+    }
+
+    #[test]
+    fn zero_rate_is_identity() {
+        let mut rng = Rng::new(5);
+        let mut g = vec![true, false, true];
+        mutate(&mut rng, &mut g, 0.0);
+        assert_eq!(g, vec![true, false, true]);
+    }
+}

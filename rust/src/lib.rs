@@ -1,0 +1,36 @@
+//! # mixoff — mixed-destination automatic offloading
+//!
+//! Production-quality reproduction of Yamato (2020), *"Study of Automatic
+//! Offloading Method in Mixed Offloading Destination Environment"*: an
+//! environment-adaptive software element that takes code written for a
+//! plain CPU and automatically offloads its loop statements and function
+//! blocks to whichever of {many-core CPU, GPU, FPGA} the deployment
+//! environment offers, trying the six (device x method) combinations in a
+//! cost-aware order with early exit on user requirements.
+//!
+//! Architecture (see DESIGN.md):
+//! * **L3 (this crate)** — the coordinator: application IR + MiniC parser,
+//!   static/dynamic analyses, GA search engine, device roofline models
+//!   (the simulated verification environment), the four offload methods,
+//!   the mixed-destination trial ordering, codegen and reporting.
+//! * **L2/L1 (python/, build-time only)** — JAX workload graphs built on
+//!   Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **runtime** — loads those artifacts on the PJRT CPU client so offload
+//!   patterns are *functionally* validated with real numerics (the paper's
+//!   final-result check), while timing comes from the device models.
+
+pub mod analysis;
+pub mod app;
+pub mod codegen;
+pub mod coordinator;
+pub mod devices;
+pub mod ga;
+pub mod offload;
+pub mod report;
+pub mod runtime;
+pub mod util;
+
+pub use app::ir::{Application, FunctionBlockKind, Loop, LoopId};
+pub use coordinator::{MixedOffloader, OffloadOutcome, UserRequirements};
+pub use devices::{DeviceKind, Testbed};
+pub use offload::pattern::OffloadPattern;

@@ -1,0 +1,253 @@
+//! mixoff — mixed-destination automatic offloading CLI.
+//!
+//! Subcommands:
+//!   offload <workload>   run the full mixed flow on one workload
+//!   figure4              reproduce the paper's fig. 4 (3mm + NAS.BT)
+//!   inspect <workload>   loop structure, profile, FB detection
+//!   devices              the simulated verification environment (fig. 3)
+//!   codegen <workload>   emit annotated source for the chosen pattern
+//!   check <artifact>     run an AOT artifact through PJRT + result check
+//!
+//! Common options: --target <improvement>, --max-price <usd>, --seed <n>,
+//! --json, --timing.
+
+use anyhow::{anyhow, bail, Result};
+
+use mixoff::analysis::{intensity, Profile};
+use mixoff::app::workloads;
+use mixoff::codegen;
+use mixoff::coordinator::{MixedOffloader, UserRequirements};
+use mixoff::devices::{DeviceModel, Testbed};
+use mixoff::offload::function_block::BlockDb;
+use mixoff::report;
+use mixoff::runtime::{ResultChecker, Runtime};
+use mixoff::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("mixoff: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn offloader_from(args: &Args) -> Result<MixedOffloader> {
+    let mut mo = MixedOffloader::default();
+    mo.requirements = UserRequirements {
+        target_improvement: args.get_f64("target")?,
+        max_price_usd: args.get_f64("max-price")?,
+    };
+    if let Some(seed) = args.get_u64("seed")? {
+        mo.ga_seed = seed;
+    }
+    Ok(mo)
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("offload") => cmd_offload(&args),
+        Some("figure4") => cmd_figure4(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("devices") => cmd_devices(),
+        Some("codegen") => cmd_codegen(&args),
+        Some("check") => cmd_check(&args),
+        Some("sizing") => cmd_sizing(&args),
+        _ => {
+            println!("{}", HELP.trim());
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = r#"
+mixoff — automatic offloading for mixed GPU/FPGA/many-core environments
+  (reproduction of Yamato 2020; see DESIGN.md)
+
+usage: mixoff <command> [options]
+  offload <workload>    run the six-trial mixed flow (3mm | nas_bt |
+                        jacobi2d | blocked-gemm-app | vecadd)
+  figure4 [--timing]    reproduce the paper's fig. 4 table
+  inspect <workload>    loop table, hot spots, FB detection
+  devices               simulated verification environment (fig. 3)
+  codegen <workload>    annotated source for the winning pattern
+  check <artifact>      execute an AOT artifact via PJRT + result check
+  sizing <workload>     resource-amount sweep for the chosen destination
+options: --target <x> --max-price <usd> --seed <n> --json --timing
+"#;
+
+fn cmd_offload(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: mixoff offload <workload>"))?;
+    let app = workloads::by_name(name)?;
+    let mo = offloader_from(args)?;
+    let out = mo.run(&app);
+    if args.flag("json") {
+        println!("{}", report::to_json(&out));
+    } else {
+        print!("{}", report::render_trials(&out));
+        if args.flag("timing") {
+            print!("{}", report::render_timing(&out));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_figure4(args: &Args) -> Result<()> {
+    let mo = offloader_from(args)?;
+    let mut rows = Vec::new();
+    let mut outs = Vec::new();
+    for name in ["3mm", "nas_bt"] {
+        let app = workloads::by_name(name)?;
+        let out = mo.run(&app);
+        rows.push(report::figure4_row(&out));
+        outs.push(out);
+    }
+    println!("Figure 4 — offloading in the mixed destination environment\n");
+    print!("{}", report::render_figure4(&rows));
+    println!();
+    println!("paper:   3mm    51.3 s -> GPU loop offload 0.046 s (1120x); many-core 1.05 s (44.5x)");
+    println!("paper:   NAS.BT 130 s  -> many-core loop offload 24.1 s (5.39x); GPU try -> no gain (1x)");
+    if args.flag("timing") {
+        println!();
+        for out in &outs {
+            println!("--- {} ---", out.app_name);
+            print!("{}", report::render_timing(out));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: mixoff inspect <workload>"))?;
+    let app = workloads::by_name(name)?;
+    println!("{}: {} loops, {} blocks, {:.2} Gflop total", app.name, app.loop_count(), app.blocks.len(), app.total_flops() / 1e9);
+    let profile = Profile::of(&app);
+    println!("\nhottest loops (gcov-equivalent profile):");
+    for l in profile.hottest().iter().take(10) {
+        println!(
+            "  {:<24} iters {:>12.3e}  flops {:>10.3e}  bytes {:>10.3e}",
+            l.name, l.total_iters, l.total_flops, l.total_bytes
+        );
+    }
+    println!("\ntop arithmetic-intensity nests (ROSE-equivalent):");
+    for id in intensity::rank_by_intensity(&app, 5) {
+        println!(
+            "  {:<24} intensity {:.3} flop/B",
+            app.get(id).name,
+            intensity::nest_intensity(&app, id)
+        );
+    }
+    let db = BlockDb::default();
+    let hits = db.detect(&app);
+    println!("\nfunction-block detection: {} hit(s)", hits.len());
+    for h in hits {
+        println!("  block {:?} matched via {:?}", app.blocks[h.block_index].name, h.matched);
+    }
+    Ok(())
+}
+
+fn cmd_devices() -> Result<()> {
+    let tb = Testbed::default();
+    println!("simulated verification environment (paper fig. 3):\n");
+    println!(
+        "  {:<16} {:>10} — single-core roofline {:.1} Gflop/s, stream {:.0} GB/s",
+        tb.cpu.kind().label(),
+        format!("{} USD", tb.cpu.price_usd()),
+        tb.cpu.flops / 1e9,
+        tb.cpu.bw_stream / 1e9
+    );
+    println!(
+        "  {:<16} {:>10} — {} eff. threads, parallel stream {:.0} GB/s (2990WX-like NUMA)",
+        tb.manycore.kind().label(),
+        format!("{} USD", tb.manycore.price_usd()),
+        tb.manycore.threads_eff,
+        tb.manycore.bw_par_stream / 1e9
+    );
+    println!(
+        "  {:<16} {:>10} — {:.0} Gflop/s kernels, PCIe {:.0} GB/s, transfer hoisting: {}",
+        tb.gpu.kind().label(),
+        format!("{} USD", tb.gpu.price_usd()),
+        tb.gpu.flops / 1e9,
+        tb.gpu.bw_pcie / 1e9,
+        tb.gpu.hoist_transfers
+    );
+    println!(
+        "  {:<16} {:>10} — {:.0} MHz pipelines, synthesis {:.1} h/pattern",
+        tb.fpga.kind().label(),
+        format!("{} USD", tb.fpga.price_usd()),
+        tb.fpga.clock_hz / 1e6,
+        tb.fpga.synthesis_s / 3600.0
+    );
+    Ok(())
+}
+
+fn cmd_codegen(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: mixoff codegen <workload>"))?;
+    let app = workloads::by_name(name)?;
+    let mo = offloader_from(args)?;
+    let out = mo.run(&app);
+    let chosen = out
+        .chosen
+        .as_ref()
+        .ok_or_else(|| anyhow!("nothing was offloaded; no code to generate"))?;
+    let pattern = chosen
+        .pattern
+        .clone()
+        .ok_or_else(|| anyhow!("chosen trial was a function-block replacement"))?;
+    print!("{}", codegen::emit(&app, &pattern, chosen.kind.device));
+    Ok(())
+}
+
+fn cmd_sizing(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: mixoff sizing <workload>"))?;
+    let app = workloads::by_name(name)?;
+    let mo = offloader_from(args)?;
+    let out = mo.run(&app);
+    let chosen = out
+        .chosen
+        .as_ref()
+        .ok_or_else(|| anyhow!("nothing was offloaded; nothing to size"))?;
+    let pattern = chosen
+        .pattern
+        .clone()
+        .unwrap_or_else(|| mixoff::OffloadPattern::none(&app));
+    let min = args.get_f64("target")?.unwrap_or(1.0);
+    let sweep = mixoff::coordinator::sizing::sweep(&app, chosen.kind.device, &pattern, min);
+    print!("{}", mixoff::coordinator::sizing::render(&sweep));
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: mixoff check <artifact>"))?;
+    let mut rt = Runtime::load_default()?;
+    if !rt.has(name) {
+        bail!(
+            "unknown artifact {name:?}; available: {}",
+            rt.names().collect::<Vec<_>>().join(", ")
+        );
+    }
+    let mut chk = ResultChecker::default();
+    let ok = chk.check(&mut rt, name, true)?;
+    println!("{name}: valid-pattern run -> {ok:?}");
+    let bad = chk.check(&mut rt, name, false)?;
+    println!("{name}: corrupted (racing) run -> {bad:?}");
+    if !ok.is_match() || bad.is_match() {
+        bail!("result checker misbehaved");
+    }
+    println!("final-result check path OK");
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! The six offload methods: {many-core CPU, GPU, FPGA} x {loop statements,
+//! function blocks} (paper sec. 3.2).
+
+pub mod fpga_loop;
+pub mod function_block;
+pub mod gpu_loop;
+pub mod manycore_loop;
+pub mod pattern;
+
+use crate::devices::{DeviceKind, Measurement};
+use crate::ga::GenStats;
+use pattern::OffloadPattern;
+
+/// Outcome of one loop-offload search on one device.
+#[derive(Clone, Debug)]
+pub struct LoopOffloadOutcome {
+    pub device: DeviceKind,
+    /// Best valid, in-time pattern (None = search found nothing usable —
+    /// the paper's NAS.BT GPU trial falls back to the baseline).
+    pub best: Option<(OffloadPattern, Measurement)>,
+    pub baseline_seconds: f64,
+    /// Simulated verification cost of the whole search.
+    pub simulated_cost_s: f64,
+    pub history: Vec<GenStats>,
+    pub evaluations: usize,
+}
+
+impl LoopOffloadOutcome {
+    /// Achieved seconds: best pattern, else the untouched baseline.
+    pub fn seconds(&self) -> f64 {
+        self.best
+            .as_ref()
+            .map(|(_, m)| m.seconds)
+            .unwrap_or(self.baseline_seconds)
+    }
+
+    pub fn improvement(&self) -> f64 {
+        self.baseline_seconds / self.seconds()
+    }
+
+    pub fn offloaded(&self) -> bool {
+        self.best.is_some()
+    }
+}

@@ -1,0 +1,149 @@
+//! Offload patterns: which loops go to the device, and what that implies.
+//!
+//! A loop pattern is one bit per loop ("add `#pragma omp parallel for` /
+//! `#pragma acc kernels loop` here or not" — the paper's gene encoding,
+//! sec. 3.2.1).  From the bits we derive the *effective regions*: the
+//! outermost selected loops; everything nested below a region root executes
+//! inside the offloaded region.
+
+use crate::app::ir::{Application, Dependence, LoopId};
+
+/// Where a pattern runs (see `devices/`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    LoopOffload,
+    FunctionBlock,
+}
+
+/// One candidate offload pattern over an application.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OffloadPattern {
+    /// One bit per loop in `Application::loops` order.
+    pub bits: Vec<bool>,
+}
+
+impl OffloadPattern {
+    pub fn none(app: &Application) -> Self {
+        Self { bits: vec![false; app.loop_count()] }
+    }
+
+    pub fn from_bits(bits: Vec<bool>) -> Self {
+        Self { bits }
+    }
+
+    /// Pattern selecting exactly the given loops.
+    pub fn selecting(app: &Application, ids: &[LoopId]) -> Self {
+        let mut bits = vec![false; app.loop_count()];
+        for id in ids {
+            bits[id.0] = true;
+        }
+        Self { bits }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        !self.bits.iter().any(|&b| b)
+    }
+
+    pub fn selected(&self) -> impl Iterator<Item = LoopId> + '_ {
+        self.bits
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b)
+            .map(|(i, _)| LoopId(i))
+    }
+
+    pub fn count(&self) -> usize {
+        self.bits.iter().filter(|&&b| b).count()
+    }
+
+    /// Does any (strict) ancestor of `id` have its bit set?
+    /// Allocation-free parent-chain walk — this is on the GA's innermost
+    /// path (see benches/hotpath.rs and EXPERIMENTS.md #Perf).
+    #[inline]
+    fn ancestor_selected(&self, app: &Application, id: LoopId) -> bool {
+        let mut cur = app.get(id).parent;
+        while let Some(p) = cur {
+            if self.bits[p.0] {
+                return true;
+            }
+            cur = app.get(p).parent;
+        }
+        false
+    }
+
+    /// Effective region roots: selected loops with no selected ancestor.
+    pub fn region_roots(&self, app: &Application) -> Vec<LoopId> {
+        self.selected()
+            .filter(|&id| !self.ancestor_selected(app, id))
+            .collect()
+    }
+
+    /// Is `id` inside (or the root of) any effective region?
+    #[inline]
+    pub fn in_region(&self, app: &Application, id: LoopId) -> bool {
+        self.bits[id.0] || self.ancestor_selected(app, id)
+    }
+
+    /// The paper's correctness rule: naively parallelizing a loop that
+    /// carries a dependence produces *wrong results* (not a compile error).
+    /// A pattern is valid iff every selected loop is dependence-free.
+    pub fn valid(&self, app: &Application) -> bool {
+        self.selected().all(|id| app.get(id).dependence == Dependence::None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::builder::AppBuilder;
+    use crate::app::ir::Dependence;
+
+    fn app() -> Application {
+        let mut b = AppBuilder::new("t");
+        b.open_loop("outer", 4, Dependence::None); // 0
+        b.open_loop("mid", 4, Dependence::None); // 1
+        b.open_loop("inner", 4, Dependence::Sequential); // 2
+        b.body(1.0, 8.0, 8.0, &[]);
+        b.close_loop();
+        b.close_loop();
+        b.close_loop();
+        b.open_loop("red", 4, Dependence::Reduction); // 3
+        b.body(1.0, 8.0, 0.0, &[]);
+        b.close_loop();
+        b.finish()
+    }
+
+    #[test]
+    fn region_roots_are_outermost_selected() {
+        let a = app();
+        let p = OffloadPattern::from_bits(vec![true, true, false, false]);
+        assert_eq!(p.region_roots(&a), vec![LoopId(0)]);
+        let p2 = OffloadPattern::from_bits(vec![false, true, false, true]);
+        assert_eq!(p2.region_roots(&a), vec![LoopId(1), LoopId(3)]);
+    }
+
+    #[test]
+    fn in_region_covers_descendants() {
+        let a = app();
+        let p = OffloadPattern::from_bits(vec![true, false, false, false]);
+        assert!(p.in_region(&a, LoopId(2)));
+        assert!(!p.in_region(&a, LoopId(3)));
+    }
+
+    #[test]
+    fn validity_rejects_dependences() {
+        let a = app();
+        assert!(OffloadPattern::from_bits(vec![true, true, false, false]).valid(&a));
+        assert!(!OffloadPattern::from_bits(vec![false, false, true, false]).valid(&a));
+        assert!(!OffloadPattern::from_bits(vec![true, false, false, true]).valid(&a));
+        assert!(OffloadPattern::none(&a).valid(&a));
+    }
+
+    #[test]
+    fn selecting_roundtrip() {
+        let a = app();
+        let p = OffloadPattern::selecting(&a, &[LoopId(1), LoopId(3)]);
+        assert_eq!(p.count(), 2);
+        assert_eq!(p.selected().collect::<Vec<_>>(), vec![LoopId(1), LoopId(3)]);
+    }
+}

@@ -1,0 +1,212 @@
+//! Report rendering: fig. 4-style result tables, trial breakdowns, the
+//! sec. 4.2 timing ledger, and machine-readable JSON.
+
+use std::fmt::Write as _;
+
+use crate::coordinator::{OffloadOutcome, TrialKind};
+use crate::devices::DeviceKind;
+use crate::offload::pattern::Method;
+use crate::util::json::Json;
+
+/// One row of the paper's fig. 4 table.
+#[derive(Clone, Debug)]
+pub struct Figure4Row {
+    pub app: String,
+    pub single_core_s: f64,
+    pub chosen_label: String,
+    pub chosen_s: f64,
+    pub improvement: f64,
+    pub alt_label: String,
+    pub alt_s: f64,
+    pub alt_improvement: f64,
+}
+
+fn method_label(kind: TrialKind) -> String {
+    let m = match kind.method {
+        Method::LoopOffload => "loop offload",
+        Method::FunctionBlock => "function block",
+    };
+    format!("{}, {m}", kind.device.label())
+}
+
+/// Distill an outcome into the fig. 4 row: the chosen destination plus the
+/// best *other-device* trial result (the paper's right-hand columns).
+pub fn figure4_row(out: &OffloadOutcome) -> Figure4Row {
+    let (chosen_label, chosen_s) = match &out.chosen {
+        Some(c) => (method_label(c.kind), c.seconds),
+        None => ("none (stay on CPU)".to_string(), out.baseline_seconds),
+    };
+    let chosen_device: Option<DeviceKind> = out.chosen.as_ref().map(|c| c.kind.device);
+    let alt = out
+        .trials
+        .iter()
+        .filter(|t| t.skipped.is_none() && Some(t.kind.device) != chosen_device)
+        .max_by(|a, b| a.improvement.partial_cmp(&b.improvement).unwrap());
+    let (alt_label, alt_s, alt_improvement) = match alt {
+        Some(t) => {
+            let label = if t.offloaded {
+                method_label(t.kind)
+            } else {
+                format!("({}) (try {})", t.kind.device.label(), match t.kind.method {
+                    Method::LoopOffload => "loop offload",
+                    Method::FunctionBlock => "function block",
+                })
+            };
+            (label, t.seconds, t.improvement)
+        }
+        None => ("-".to_string(), f64::NAN, f64::NAN),
+    };
+    Figure4Row {
+        app: out.app_name.clone(),
+        single_core_s: out.baseline_seconds,
+        chosen_label,
+        chosen_s,
+        improvement: out.baseline_seconds / chosen_s,
+        alt_label,
+        alt_s,
+        alt_improvement,
+    }
+}
+
+/// Render rows in the paper's fig. 4 shape.
+pub fn render_figure4(rows: &[Figure4Row]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:<10} {:>12} | {:<28} {:>12} {:>8} | {:<30} {:>12} {:>8}",
+        "app", "1-core [s]", "offload device & method", "time [s]", "improve",
+        "other device result", "time [s]", "improve"
+    );
+    let _ = writeln!(s, "{}", "-".repeat(130));
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "{:<10} {:>12.3} | {:<28} {:>12.4} {:>7.1}x | {:<30} {:>12.4} {:>7.2}x",
+            r.app,
+            r.single_core_s,
+            r.chosen_label,
+            r.chosen_s,
+            r.improvement,
+            r.alt_label,
+            r.alt_s,
+            r.alt_improvement,
+        );
+    }
+    s
+}
+
+/// Full trial-by-trial breakdown.
+pub fn render_trials(out: &OffloadOutcome) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{} — single-core baseline {:.2} s",
+        out.app_name, out.baseline_seconds
+    );
+    for t in &out.trials {
+        match &t.skipped {
+            Some(reason) => {
+                let _ = writeln!(s, "  {:<36} SKIPPED: {reason}", t.kind.label());
+            }
+            None => {
+                let _ = writeln!(
+                    s,
+                    "  {:<36} {:>10.4} s  {:>8.2}x  (verify {:>7.2} h)  {}",
+                    t.kind.label(),
+                    t.seconds,
+                    t.improvement,
+                    t.cost_s / 3600.0,
+                    t.detail
+                );
+            }
+        }
+    }
+    match &out.chosen {
+        Some(c) => {
+            let _ = writeln!(
+                s,
+                "  => chosen: {} — {:.4} s, {:.1}x, {} USD",
+                c.kind.label(),
+                c.seconds,
+                c.improvement,
+                c.price_usd
+            );
+        }
+        None => {
+            let _ = writeln!(s, "  => chosen: none (stay on single-core CPU)");
+        }
+    }
+    s
+}
+
+/// The sec. 4.2 timing narrative from the clock ledger.
+pub fn render_timing(out: &OffloadOutcome) -> String {
+    format!("{}", out.clock)
+}
+
+/// Machine-readable outcome.
+pub fn to_json(out: &OffloadOutcome) -> Json {
+    use std::collections::BTreeMap;
+    let mut root = BTreeMap::new();
+    root.insert("app".into(), Json::Str(out.app_name.clone()));
+    root.insert("baseline_seconds".into(), Json::Num(out.baseline_seconds));
+    let trials: Vec<Json> = out
+        .trials
+        .iter()
+        .map(|t| {
+            let mut m = BTreeMap::new();
+            m.insert("trial".into(), Json::Str(t.kind.label()));
+            match &t.skipped {
+                Some(r) => {
+                    m.insert("skipped".into(), Json::Str(r.clone()));
+                }
+                None => {
+                    m.insert("seconds".into(), Json::Num(t.seconds));
+                    m.insert("improvement".into(), Json::Num(t.improvement));
+                    m.insert("offloaded".into(), Json::Bool(t.offloaded));
+                    m.insert("verify_seconds".into(), Json::Num(t.cost_s));
+                    m.insert("detail".into(), Json::Str(t.detail.clone()));
+                }
+            }
+            Json::Obj(m)
+        })
+        .collect();
+    root.insert("trials".into(), Json::Arr(trials));
+    if let Some(c) = &out.chosen {
+        let mut m = BTreeMap::new();
+        m.insert("trial".into(), Json::Str(c.kind.label()));
+        m.insert("seconds".into(), Json::Num(c.seconds));
+        m.insert("improvement".into(), Json::Num(c.improvement));
+        m.insert("price_usd".into(), Json::Num(c.price_usd));
+        root.insert("chosen".into(), Json::Obj(m));
+    }
+    root.insert(
+        "verify_total_hours".into(),
+        Json::Num(out.clock.total_hours()),
+    );
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MixedOffloader;
+
+    #[test]
+    fn figure4_row_and_render_smoke() {
+        let mo = MixedOffloader::default();
+        let app = crate::app::workloads::extra::vecadd(1 << 22);
+        let out = mo.run(&app);
+        let row = figure4_row(&out);
+        assert_eq!(row.app, "vecadd");
+        assert!(row.single_core_s > 0.0);
+        let table = render_figure4(&[row]);
+        assert!(table.contains("vecadd"));
+        let trials = render_trials(&out);
+        assert!(trials.contains("loop offload"));
+        let j = to_json(&out);
+        assert!(j.get("trials").is_some());
+        // JSON must round-trip through our parser.
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+}

@@ -1,0 +1,169 @@
+//! Artifact registry: manifest-driven loading of AOT HLO-text modules.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::tensor::Tensor;
+use crate::util::json::Json;
+
+/// Shape/dtype of one artifact input or output (mirrors aot.py's manifest).
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    fn from_json(v: &Json) -> Result<Self> {
+        let shape = v
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("shape not an array"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v.req("dtype")?.as_str().unwrap_or("f32").to_string();
+        Ok(Self { shape, dtype })
+    }
+}
+
+/// One entry of `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub output: TensorMeta,
+    pub sha256: String,
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.req("name")?.as_str().unwrap_or_default().to_string(),
+            file: v.req("file")?.as_str().unwrap_or_default().to_string(),
+            inputs: v
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("inputs not an array"))?
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            output: TensorMeta::from_json(v.req("output")?)?,
+            sha256: v
+                .get("sha256")
+                .and_then(|s| s.as_str())
+                .unwrap_or_default()
+                .to_string(),
+        })
+    }
+}
+
+/// PJRT-backed executor for the AOT artifacts.
+///
+/// Compilation is cached per artifact name; `execute` is the only entry the
+/// coordinator's hot path uses.  Single-threaded by design: numeric
+/// validation happens once per candidate pattern, outside the simulated
+/// measurement fan-out.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    metas: HashMap<String, ArtifactMeta>,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir` (usually `artifacts/`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.json");
+        let raw = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {manifest:?} — run `make artifacts` first"))?;
+        let parsed = Json::parse(&raw)?;
+        let list = parsed.as_arr().ok_or_else(|| anyhow!("manifest not an array"))?;
+        let metas = list
+            .iter()
+            .map(|v| ArtifactMeta::from_json(v).map(|m| (m.name.clone(), m)))
+            .collect::<Result<HashMap<_, _>>>()?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, dir, metas, cache: HashMap::new() })
+    }
+
+    /// Default artifact directory: `$MIXOFF_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("MIXOFF_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(dir)
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.metas.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.metas.keys().map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.metas.contains_key(name)
+    }
+
+    fn compile(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .metas
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` with `inputs`; returns the single output.
+    ///
+    /// Inputs are validated against the manifest shapes before dispatch so a
+    /// mis-wired caller fails with a message, not an XLA abort.
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Tensor> {
+        self.compile(name)?;
+        let meta = self.metas.get(name).unwrap().clone();
+        anyhow::ensure!(
+            inputs.len() == meta.inputs.len(),
+            "{name}: expected {} inputs, got {}",
+            meta.inputs.len(),
+            inputs.len()
+        );
+        for (i, (t, m)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            anyhow::ensure!(
+                t.shape == m.shape,
+                "{name}: input {i} shape {:?} != manifest {:?}",
+                t.shape,
+                m.shape
+            );
+        }
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let exe = self.cache.get(name).unwrap();
+        let out = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let inner = out.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        Tensor::from_literal(&inner, &meta.output.shape)
+    }
+
+    /// Number of artifacts compiled so far (metrics/tests).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+}

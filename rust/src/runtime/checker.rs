@@ -1,0 +1,183 @@
+//! Final-result correctness checker (paper sec. 3.2.1).
+//!
+//! OpenMP/OpenACC compilers do not reject an invalid parallelization — the
+//! program just computes wrong numbers.  The paper therefore compares every
+//! measured pattern's *final output* against the original single-core run
+//! and assigns fitness 0 on mismatch.  We reproduce that path with real
+//! numerics: the workload's AOT artifact is executed via PJRT with canonical
+//! inputs; an *invalid* pattern's run is corrupted before comparison (the
+//! simulated analogue of a data race), so the accept/reject logic is
+//! exercised end to end.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::artifact::Runtime;
+use super::tensor::Tensor;
+
+/// NAS.BT 5x5 coefficient blocks — exact mirror of
+/// `python/compile/kernels/bt_solve.py::well_conditioned_blocks` and
+/// `model.default_bt_coefficients`.  Keep in sync (test_bt_constants_match
+/// in python/tests would catch drift through the artifact itself).
+const COUPLING: [[f32; 5]; 5] = [
+    [0.00, 0.02, -0.01, 0.01, 0.00],
+    [0.01, 0.00, 0.02, -0.01, 0.01],
+    [-0.01, 0.01, 0.00, 0.02, -0.01],
+    [0.02, -0.01, 0.01, 0.00, 0.01],
+    [0.01, 0.02, -0.01, 0.01, 0.00],
+];
+
+/// (A, B, C, M1, M2) constants shared by every BT artifact.
+pub fn bt_coefficients() -> [Tensor; 5] {
+    let mut a = Tensor::zeros(&[5, 5]);
+    let mut b = Tensor::zeros(&[5, 5]);
+    let mut c = Tensor::zeros(&[5, 5]);
+    let mut m1 = Tensor::zeros(&[5, 5]);
+    let mut m2 = Tensor::zeros(&[5, 5]);
+    for i in 0..5 {
+        for j in 0..5 {
+            let idx = i * 5 + j;
+            let eye = if i == j { 1.0 } else { 0.0 };
+            a.data[idx] = -0.25 * eye + 0.5 * COUPLING[i][j];
+            c.data[idx] = -0.25 * eye - 0.5 * COUPLING[i][j];
+            b.data[idx] = 2.0 * eye + COUPLING[j][i];
+            m1.data[idx] = 0.9 * eye + 0.01;
+            m2.data[idx] = 0.05 * eye;
+        }
+    }
+    [a, b, c, m1, m2]
+}
+
+/// Deterministic canonical inputs for an artifact, given its manifest meta.
+///
+/// BT artifacts get the well-conditioned coefficient blocks (the kernel's
+/// pivot-free 5x5 solver requires diagonal dominance); everything else gets
+/// seeded pseudo-random tensors.
+pub fn canonical_inputs(meta: &super::artifact::ArtifactMeta) -> Vec<Tensor> {
+    if meta.name.starts_with("bt_") {
+        let mut v = vec![Tensor::random(&meta.inputs[0].shape, 0xB7)];
+        v.extend(bt_coefficients());
+        v
+    } else {
+        meta.inputs
+            .iter()
+            .enumerate()
+            .map(|(i, m)| Tensor::random(&m.shape, 0x5EED + i as u64))
+            .collect()
+    }
+}
+
+/// Result of one final-output comparison.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CheckOutcome {
+    /// Output matches the original run within tolerance.
+    Match { max_diff: f32 },
+    /// Output diverges — the pattern must get fitness 0.
+    Mismatch { max_diff: f32 },
+}
+
+impl CheckOutcome {
+    pub fn is_match(&self) -> bool {
+        matches!(self, CheckOutcome::Match { .. })
+    }
+}
+
+/// Caches the original ("single-core") golden outputs per artifact and
+/// compares candidate runs against them.
+pub struct ResultChecker {
+    golden: HashMap<String, Tensor>,
+    pub tolerance: f32,
+}
+
+impl Default for ResultChecker {
+    fn default() -> Self {
+        Self::new(1e-4)
+    }
+}
+
+impl ResultChecker {
+    pub fn new(tolerance: f32) -> Self {
+        Self { golden: HashMap::new(), tolerance }
+    }
+
+    /// Golden output of `name` (computed once, cached).
+    pub fn golden(&mut self, rt: &mut Runtime, name: &str) -> Result<Tensor> {
+        if let Some(g) = self.golden.get(name) {
+            return Ok(g.clone());
+        }
+        let meta = rt
+            .meta(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name}"))?
+            .clone();
+        let inputs = canonical_inputs(&meta);
+        let out = rt.execute(name, &inputs)?;
+        self.golden.insert(name.to_string(), out.clone());
+        Ok(out)
+    }
+
+    /// Run `name` and compare with the golden output.  `valid == false`
+    /// corrupts the candidate run first (simulated race from an invalid
+    /// parallelization), so the mismatch path really fires.
+    pub fn check(&mut self, rt: &mut Runtime, name: &str, valid: bool) -> Result<CheckOutcome> {
+        let golden = self.golden(rt, name)?;
+        let meta = rt.meta(name).unwrap().clone();
+        let inputs = canonical_inputs(&meta);
+        let mut out = rt.execute(name, &inputs)?;
+        if !valid {
+            corrupt(&mut out, 0xDEAD);
+        }
+        let max_diff = out.max_abs_diff(&golden);
+        Ok(if max_diff <= self.tolerance {
+            CheckOutcome::Match { max_diff }
+        } else {
+            CheckOutcome::Mismatch { max_diff }
+        })
+    }
+}
+
+/// Perturb ~1% of elements by an O(norm) amount — what a lost-update race in
+/// a wrongly parallelized reduction looks like in the final output.
+fn corrupt(t: &mut Tensor, seed: u64) {
+    let scale = (t.norm() / (t.len() as f32).sqrt()).max(1.0);
+    let stride = (t.len() / 100).max(1);
+    let mut state = seed | 1;
+    let mut i = 0;
+    while i < t.len() {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        t.data[i] += scale * (1.0 + (state % 7) as f32);
+        i += stride;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bt_coefficients_are_diagonally_dominant() {
+        let [_, b, _, _, _] = bt_coefficients();
+        for i in 0..5 {
+            let diag = b.data[i * 5 + i].abs();
+            let off: f32 =
+                (0..5).filter(|&j| j != i).map(|j| b.data[i * 5 + j].abs()).sum();
+            assert!(diag > off, "row {i}: {diag} <= {off}");
+        }
+    }
+
+    #[test]
+    fn corrupt_changes_values() {
+        let mut t = Tensor::filled(&[10, 10], 1.0);
+        let orig = t.clone();
+        corrupt(&mut t, 42);
+        assert!(t.max_abs_diff(&orig) > 0.5);
+    }
+
+    #[test]
+    fn outcome_is_match() {
+        assert!(CheckOutcome::Match { max_diff: 0.0 }.is_match());
+        assert!(!CheckOutcome::Mismatch { max_diff: 1.0 }.is_match());
+    }
+}

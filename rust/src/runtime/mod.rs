@@ -1,0 +1,14 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The build path (`make artifacts`) lowers each L2 workload to HLO *text*
+//! (see `python/compile/aot.py` for why text, not serialized protos); this
+//! module compiles them once on the PJRT CPU client and executes them from
+//! the coordinator's hot path.  Python is never invoked here.
+
+pub mod artifact;
+pub mod checker;
+pub mod tensor;
+
+pub use artifact::{ArtifactMeta, Runtime};
+pub use checker::{CheckOutcome, ResultChecker};
+pub use tensor::Tensor;

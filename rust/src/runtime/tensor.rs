@@ -1,0 +1,138 @@
+//! Minimal dense f32 tensor used at the rust<->PJRT boundary.
+
+use anyhow::{ensure, Result};
+
+/// Row-major f32 tensor.  All artifact I/O is f32 (matching aot.py).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        ensure!(
+            n == data.len(),
+            "shape {:?} wants {} elements, got {}",
+            shape,
+            n,
+            data.len()
+        );
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// Identity matrix (square 2-D only).
+    pub fn eye(n: usize) -> Self {
+        let mut t = Self::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    /// Deterministic pseudo-random fill in [-1, 1] (xorshift; no rand dep on
+    /// the hot path, reproducible across runs for the correctness checker).
+    pub fn random(shape: &[usize], seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut state = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1);
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            // 24-bit mantissa slice -> [-1, 1)
+            let v = ((state >> 40) as f32) / ((1u64 << 23) as f32) - 1.0;
+            data.push(v);
+        }
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Max absolute elementwise difference; Inf if shapes differ.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        if self.shape != other.shape {
+            return f32::INFINITY;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// L2 norm (used by stability checks in examples).
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&self.data);
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Self> {
+        let data = lit.to_vec::<f32>()?;
+        Tensor::new(shape.to_vec(), data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_element_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn random_is_deterministic_and_bounded() {
+        let a = Tensor::random(&[4, 4], 7);
+        let b = Tensor::random(&[4, 4], 7);
+        assert_eq!(a, b);
+        assert!(a.data.iter().all(|v| (-1.0..=1.0).contains(v)));
+        let c = Tensor::random(&[4, 4], 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn max_abs_diff_shape_mismatch_is_inf() {
+        let a = Tensor::zeros(&[2, 2]);
+        let b = Tensor::zeros(&[4]);
+        assert_eq!(a.max_abs_diff(&b), f32::INFINITY);
+    }
+
+    #[test]
+    fn eye_diagonal() {
+        let t = Tensor::eye(3);
+        assert_eq!(t.data[0], 1.0);
+        assert_eq!(t.data[4], 1.0);
+        assert_eq!(t.data[1], 0.0);
+    }
+
+    #[test]
+    fn norm_of_unit() {
+        let t = Tensor::new(vec![2], vec![3.0, 4.0]).unwrap();
+        assert!((t.norm() - 5.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,119 @@
+//! Tiny CLI argument parser (offline substitute for clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments; subcommand dispatch is done by the caller on the first
+//! positional.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command line: positionals in order + `--key [value]` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) or `std::env::args` (main).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut a = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.options.insert(body.to_string(), v);
+                } else {
+                    a.options.insert(body.to_string(), String::from("true"));
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.options.get(name).map(|v| v != "false").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.get(name)
+            .map(|v| v.parse::<f64>().map_err(|e| anyhow!("--{name}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name)
+            .map(|v| v.parse::<usize>().map_err(|e| anyhow!("--{name}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>> {
+        self.get(name)
+            .map(|v| v.parse::<u64>().map_err(|e| anyhow!("--{name}: {e}")))
+            .transpose()
+    }
+
+    /// First positional = subcommand; remainder stays available.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = parse("offload 3mm --target-ratio 10 --price=5 --verbose");
+        assert_eq!(a.subcommand(), Some("offload"));
+        assert_eq!(a.positional[1], "3mm");
+        assert_eq!(a.get("target-ratio"), Some("10"));
+        assert_eq!(a.get("price"), Some("5"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn numeric_accessors() {
+        let a = parse("--m 16 --pc 0.9");
+        assert_eq!(a.get_usize("m").unwrap(), Some(16));
+        assert_eq!(a.get_f64("pc").unwrap(), Some(0.9));
+        assert_eq!(a.get_f64("absent").unwrap(), None);
+        let bad = parse("--m xyz");
+        assert!(bad.get_usize("m").is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--a --b v");
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

@@ -1,0 +1,15 @@
+//! In-tree substrates that would normally be external crates.
+//!
+//! The build environment is offline (only the `xla` crate's closure is
+//! vendored), so the JSON parser, PRNG, CLI argument parser, thread pool,
+//! bench harness and property-test driver live here, each with their own
+//! unit tests.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,79 @@
+//! Seeded property-test driver (offline substitute for proptest).
+//!
+//! `forall(cases, |rng| ...)` runs a closure over `cases` independent RNG
+//! streams; on failure it reports the failing seed so the case replays with
+//! `forall_seed(seed, ...)`.  No shrinking — generators here are small
+//! enough that the seed is an adequate repro handle.
+
+use super::rng::Rng;
+
+/// Run `body` for `cases` seeds (0..cases), panicking with the failing seed.
+pub fn forall(cases: u64, body: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        forall_seed(seed, &body);
+    }
+}
+
+/// Run one property case with an explicit seed (replay helper).
+pub fn forall_seed(seed: u64, body: impl Fn(&mut Rng)) {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut rng = Rng::new(seed ^ 0xA5A5_A5A5_A5A5_A5A5);
+        body(&mut rng);
+    }));
+    if let Err(e) = result {
+        let msg = e
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_else(|| "<non-string panic>".into());
+        panic!("property failed at seed {seed}: {msg}");
+    }
+}
+
+/// Generator helpers shared by property tests.
+pub mod gen {
+    use super::Rng;
+
+    /// Random bit-vector of length n.
+    pub fn bits(rng: &mut Rng, n: usize) -> Vec<bool> {
+        (0..n).map(|_| rng.chance(0.5)).collect()
+    }
+
+    /// Vector of uniform floats in [lo, hi).
+    pub fn floats(rng: &mut Rng, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| lo + rng.f64() * (hi - lo)).collect()
+    }
+
+    /// Uniform usize in [lo, hi] inclusive.
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        forall(50, |rng| {
+            let v = gen::usize_in(rng, 3, 9);
+            assert!((3..=9).contains(&v));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at seed")]
+    fn reports_failing_seed() {
+        forall(50, |rng| {
+            assert!(rng.f64() < 0.9, "tail case");
+        });
+    }
+
+    #[test]
+    fn bits_length() {
+        forall(10, |rng| {
+            assert_eq!(gen::bits(rng, 17).len(), 17);
+        });
+    }
+}

@@ -1,0 +1,96 @@
+//! Fixed-size scoped thread pool (offline substitute for tokio/rayon).
+//!
+//! The coordinator measures a GA generation's individuals concurrently
+//! across the verification-machine pool; `map_parallel` preserves input
+//! order in its output, which the GA requires to keep genome/fitness
+//! alignment.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Run `f` over `items` on up to `workers` OS threads; results come back in
+/// input order.  Panics in `f` propagate as a panic here (fail fast — a
+/// poisoned measurement must not be silently dropped).
+pub fn map_parallel<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return items.into_iter().map(f).collect();
+    }
+
+    let queue: Arc<Mutex<Vec<(usize, T)>>> =
+        Arc::new(Mutex::new(items.into_iter().enumerate().rev().collect()));
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            let f = &f;
+            scope.spawn(move || loop {
+                let job = queue.lock().unwrap().pop();
+                match job {
+                    Some((i, item)) => {
+                        // If the channel is gone the receiver panicked; stop.
+                        if tx.send((i, f(item))).is_err() {
+                            return;
+                        }
+                    }
+                    None => return,
+                }
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter()
+            .map(|o| o.expect("worker died before producing result"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn preserves_order() {
+        let out = map_parallel((0..100).collect(), 8, |i| i * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runs_concurrently() {
+        let peak = AtomicUsize::new(0);
+        let live = AtomicUsize::new(0);
+        map_parallel((0..16).collect::<Vec<usize>>(), 4, |_| {
+            let cur = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(cur, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            live.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(peak.load(Ordering::SeqCst) >= 2);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let out: Vec<i32> = map_parallel(Vec::<i32>::new(), 4, |i| i);
+        assert!(out.is_empty());
+        assert_eq!(map_parallel(vec![7], 4, |i| i + 1), vec![8]);
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        assert_eq!(map_parallel(vec![1, 2], 64, |i| i), vec![1, 2]);
+    }
+}

@@ -1,0 +1,131 @@
+//! Integration smoke tests over the PJRT runtime + real artifacts.
+//!
+//! Requires `make artifacts` to have run (the `test` make target orders
+//! this).  These tests validate the full python-AOT -> rust-PJRT bridge on
+//! every artifact family, including the Pallas-bearing ones.
+
+use mixoff::runtime::{checker, CheckOutcome, ResultChecker, Runtime, Tensor};
+
+fn rt() -> Runtime {
+    let dir = std::env::var("MIXOFF_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    Runtime::load(dir).expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn manifest_has_all_expected_entries() {
+    let rt = rt();
+    for name in [
+        "matmul_64",
+        "matmul_128",
+        "three_mm_64",
+        "three_mm_128",
+        "bt_step_8",
+        "bt_run_8_i5",
+        "jacobi2d_64",
+    ] {
+        assert!(rt.has(name), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn matmul_identity_roundtrip() {
+    let mut rt = rt();
+    let x = Tensor::random(&[64, 64], 3);
+    let eye = Tensor::eye(64);
+    let out = rt.execute("matmul_64", &[x.clone(), eye]).unwrap();
+    assert!(out.max_abs_diff(&x) < 1e-5, "diff {}", out.max_abs_diff(&x));
+}
+
+#[test]
+fn matmul_against_host_reference() {
+    let mut rt = rt();
+    let a = Tensor::random(&[64, 64], 10);
+    let b = Tensor::random(&[64, 64], 11);
+    let out = rt.execute("matmul_64", &[a.clone(), b.clone()]).unwrap();
+    // Naive host matmul as an independent oracle.
+    let mut expect = Tensor::zeros(&[64, 64]);
+    for i in 0..64 {
+        for k in 0..64 {
+            let av = a.data[i * 64 + k];
+            for j in 0..64 {
+                expect.data[i * 64 + j] += av * b.data[k * 64 + j];
+            }
+        }
+    }
+    assert!(out.max_abs_diff(&expect) < 1e-3, "diff {}", out.max_abs_diff(&expect));
+}
+
+#[test]
+fn three_mm_composes_matmuls() {
+    let mut rt = rt();
+    let mats: Vec<Tensor> = (0..4).map(|i| Tensor::random(&[64, 64], 20 + i)).collect();
+    let g = rt.execute("three_mm_64", &mats.clone()).unwrap();
+    let e = rt.execute("matmul_64", &[mats[0].clone(), mats[1].clone()]).unwrap();
+    let f = rt.execute("matmul_64", &[mats[2].clone(), mats[3].clone()]).unwrap();
+    let g2 = rt.execute("matmul_64", &[e, f]).unwrap();
+    assert!(g.max_abs_diff(&g2) < 1e-2, "diff {}", g.max_abs_diff(&g2));
+}
+
+#[test]
+fn bt_step_executes_and_is_finite() {
+    let mut rt = rt();
+    let meta = rt.meta("bt_step_8").unwrap().clone();
+    let inputs = checker::canonical_inputs(&meta);
+    let out = rt.execute("bt_step_8", &inputs).unwrap();
+    assert_eq!(out.shape, vec![8, 8, 8, 5]);
+    assert!(out.data.iter().all(|v| v.is_finite()));
+    // The generated system is diffusive: no blow-up.
+    assert!(out.norm() < inputs[0].norm() * 2.0);
+}
+
+#[test]
+fn bt_run_equals_five_steps() {
+    let mut rt = rt();
+    let meta = rt.meta("bt_step_8").unwrap().clone();
+    let inputs = checker::canonical_inputs(&meta);
+    let via_run = rt.execute("bt_run_8_i5", &inputs).unwrap();
+    let mut state = inputs[0].clone();
+    for _ in 0..5 {
+        let mut step_in = vec![state.clone()];
+        step_in.extend_from_slice(&inputs[1..]);
+        state = rt.execute("bt_step_8", &step_in).unwrap();
+    }
+    assert!(
+        via_run.max_abs_diff(&state) < 1e-3,
+        "diff {}",
+        via_run.max_abs_diff(&state)
+    );
+}
+
+#[test]
+fn jacobi_preserves_boundary() {
+    let mut rt = rt();
+    let u = Tensor::random(&[64, 64], 33);
+    let out = rt.execute("jacobi2d_64", &[u.clone()]).unwrap();
+    for j in 0..64 {
+        assert_eq!(out.data[j], u.data[j]); // first row untouched
+        assert_eq!(out.data[63 * 64 + j], u.data[63 * 64 + j]);
+    }
+}
+
+#[test]
+fn checker_accepts_valid_and_rejects_corrupted() {
+    let mut rt = rt();
+    let mut chk = ResultChecker::default();
+    let ok = chk.check(&mut rt, "three_mm_64", true).unwrap();
+    assert!(ok.is_match(), "{ok:?}");
+    let bad = chk.check(&mut rt, "three_mm_64", false).unwrap();
+    assert!(!bad.is_match(), "{bad:?}");
+    match bad {
+        CheckOutcome::Mismatch { max_diff } => assert!(max_diff > 0.1),
+        _ => unreachable!(),
+    }
+}
+
+#[test]
+fn execute_validates_input_shapes() {
+    let mut rt = rt();
+    let wrong = vec![Tensor::zeros(&[8, 8]), Tensor::zeros(&[8, 8])];
+    assert!(rt.execute("matmul_64", &wrong).is_err());
+    assert!(rt.execute("nonexistent", &[]).is_err());
+}
