@@ -16,7 +16,7 @@ use mixoff::coordinator::{MixedOffloader, UserRequirements};
 use mixoff::devices::{Gpu, ManyCore};
 use mixoff::ga::GaConfig;
 use mixoff::offload::{gpu_loop, manycore_loop};
-use support::metric;
+use support::{finish, metric};
 
 fn main() {
     // ---- A. ordering vs FPGA-first under a 10x target ----
@@ -92,4 +92,6 @@ fn main() {
             None,
         );
     }
+
+    finish("ablations");
 }

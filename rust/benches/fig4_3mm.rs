@@ -11,7 +11,7 @@ use mixoff::coordinator::MixedOffloader;
 use mixoff::devices::DeviceKind;
 use mixoff::offload::pattern::Method;
 use mixoff::report;
-use support::{bench, metric};
+use support::{bench, finish, metric};
 
 fn main() {
     let app = workloads::by_name("3mm").unwrap();
@@ -37,4 +37,6 @@ fn main() {
     bench("3mm.full_mixed_search", 3, || {
         let _ = MixedOffloader::default().run(&app);
     });
+
+    finish("fig4_3mm");
 }

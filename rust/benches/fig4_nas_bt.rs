@@ -12,7 +12,7 @@ use mixoff::coordinator::MixedOffloader;
 use mixoff::devices::DeviceKind;
 use mixoff::offload::pattern::Method;
 use mixoff::report;
-use support::{bench, metric};
+use support::{bench, finish, metric};
 
 fn main() {
     let app = workloads::by_name("nas_bt").unwrap();
@@ -36,4 +36,6 @@ fn main() {
     bench("bt.full_mixed_search", 2, || {
         let _ = MixedOffloader::default().run(&app);
     });
+
+    finish("fig4_nas_bt");
 }

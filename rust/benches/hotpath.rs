@@ -3,17 +3,24 @@
 //! The coordinator's inner loop is pattern -> device model -> fitness; a
 //! GA generation fans measurements across the worker pool.  These numbers
 //! are what the perf pass optimizes.
+//!
+//! Two measurement paths are timed against each other:
+//!   * `measure.<dev>.direct.*` — `DeviceModel::measure`, which re-derives
+//!     region roots / parent chains / transfer masks from the IR per call;
+//!   * `measure.<dev>.*` (and `measure.gpu.throughput`) — the precompiled
+//!     `MeasurementPlan` path the GA actually uses (devices/plan.rs).
 
 #[path = "support.rs"]
 mod support;
 
 use mixoff::app::workloads;
-use mixoff::devices::{DeviceModel, Testbed};
+use mixoff::devices::{DeviceModel, MeasurementPlan, Testbed};
 use mixoff::ga::GaConfig;
 use mixoff::offload::manycore_loop;
 use mixoff::offload::pattern::OffloadPattern;
+use mixoff::util::bits::PatternBits;
 use mixoff::util::rng::Rng;
-use support::{bench, metric};
+use support::{bench, finish, metric};
 
 fn main() {
     let tb = Testbed::default();
@@ -24,30 +31,58 @@ fn main() {
             OffloadPattern::from_bits((0..bt.loop_count()).map(|_| rng.chance(0.25)).collect())
         })
         .collect();
+    let packed: Vec<PatternBits> = patterns.iter().map(|p| p.bits).collect();
 
-    // Single-measurement latencies per device model (120-loop app).
+    // Single-measurement latencies per device model (120-loop app),
+    // direct path vs precompiled plan.
     for (name, dev) in [
         ("manycore", &tb.manycore as &dyn DeviceModel),
         ("gpu", &tb.gpu as &dyn DeviceModel),
         ("fpga", &tb.fpga as &dyn DeviceModel),
     ] {
-        bench(&format!("measure.{name}.512_patterns"), 10, || {
+        bench(&format!("measure.{name}.direct.512_patterns"), 10, || {
             for p in &patterns {
                 std::hint::black_box(dev.measure(&bt, p));
             }
         });
+        let plan = dev.compile_plan(&bt);
+        bench(&format!("measure.{name}.plan.512_patterns"), 10, || {
+            for b in &packed {
+                std::hint::black_box(plan.measure(b));
+            }
+        });
     }
 
-    // Measurement throughput (the number the perf pass tracks).
+    // Measurement throughput (the number the perf pass tracks): the plan
+    // path, because that is what every GA generation pays per pattern.
+    let plan: MeasurementPlan = tb.gpu.compile_plan(&bt);
     let t0 = std::time::Instant::now();
-    let reps = 20usize;
+    let reps = 200usize;
     for _ in 0..reps {
+        for b in &packed {
+            std::hint::black_box(plan.measure(b));
+        }
+    }
+    let per_sec = (reps * packed.len()) as f64 / t0.elapsed().as_secs_f64();
+    metric("measure.gpu.throughput", per_sec, "patterns/s", None);
+
+    // Same workload through the direct path, for the before/after ratio.
+    let t0 = std::time::Instant::now();
+    let direct_reps = 20usize;
+    for _ in 0..direct_reps {
         for p in &patterns {
             std::hint::black_box(tb.gpu.measure(&bt, p));
         }
     }
-    let per_sec = (reps * patterns.len()) as f64 / t0.elapsed().as_secs_f64();
-    metric("measure.gpu.throughput", per_sec, "patterns/s", None);
+    let direct_per_sec =
+        (direct_reps * patterns.len()) as f64 / t0.elapsed().as_secs_f64();
+    metric("measure.gpu.direct.throughput", direct_per_sec, "patterns/s", None);
+    metric("measure.gpu.plan_speedup", per_sec / direct_per_sec, "x", None);
+
+    // Plan compilation amortization: one compile buys a whole search.
+    bench("plan.gpu.compile", 20, || {
+        std::hint::black_box(tb.gpu.compile_plan(&bt));
+    });
 
     // Full GA search wall time (BT many-core, the heaviest search).
     bench("ga.bt_manycore.full_search", 3, || {
@@ -66,4 +101,11 @@ fn main() {
             std::hint::black_box(p.valid(&bt));
         }
     });
+    bench("pattern.count.512", 20, || {
+        for p in &patterns {
+            std::hint::black_box(p.count());
+        }
+    });
+
+    finish("hotpath");
 }

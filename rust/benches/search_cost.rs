@@ -11,7 +11,7 @@ use mixoff::app::workloads;
 use mixoff::coordinator::MixedOffloader;
 use mixoff::devices::Fpga;
 use mixoff::offload::fpga_loop::{self, FpgaSearchConfig};
-use support::metric;
+use support::{finish, metric};
 
 fn main() {
     for name in ["3mm", "nas_bt"] {
@@ -42,4 +42,6 @@ fn main() {
         "h",
         Some("~3 h"),
     );
+
+    finish("search_cost");
 }

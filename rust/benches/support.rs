@@ -4,8 +4,30 @@
 //!   `BENCH <name>: mean <x> ms  (min <y> ms, <n> iters)`
 //!   `METRIC <name> = <value> <unit>   [paper: <ref>]`
 //! so `cargo bench | grep -E "BENCH|METRIC"` yields the whole table.
+//!
+//! Every number is also recorded in-process; calling [`finish`] at the end
+//! of a bench main writes `BENCH_<bench>.json` at the repo root —
+//! machine-readable `{metric, value, unit}` rows so successive PRs can
+//! diff perf trajectories (see EXPERIMENTS.md #Perf).
 
+use std::sync::Mutex;
 use std::time::Instant;
+
+struct Record {
+    metric: String,
+    value: f64,
+    unit: String,
+}
+
+static RECORDS: Mutex<Vec<Record>> = Mutex::new(Vec::new());
+
+fn record(metric: &str, value: f64, unit: &str) {
+    RECORDS.lock().unwrap().push(Record {
+        metric: metric.to_string(),
+        value,
+        unit: unit.to_string(),
+    });
+}
 
 #[allow(dead_code)]
 pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
@@ -20,6 +42,8 @@ pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     let mean = times.iter().sum::<f64>() / times.len() as f64;
     let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
     println!("BENCH {name}: mean {mean:.3} ms  (min {min:.3} ms, {iters} iters)");
+    record(&format!("bench.{name}.mean"), mean, "ms");
+    record(&format!("bench.{name}.min"), min, "ms");
 }
 
 #[allow(dead_code)]
@@ -27,5 +51,32 @@ pub fn metric(name: &str, value: f64, unit: &str, paper: Option<&str>) {
     match paper {
         Some(p) => println!("METRIC {name} = {value:.4} {unit}   [paper: {p}]"),
         None => println!("METRIC {name} = {value:.4} {unit}"),
+    }
+    record(name, value, unit);
+}
+
+/// Write everything recorded so far to `BENCH_<bench>.json` at the repo
+/// root (one array of `{"metric", "value", "unit"}` objects).  Call once,
+/// at the end of each bench's `main`.
+#[allow(dead_code)]
+pub fn finish(bench: &str) {
+    let records = RECORDS.lock().unwrap();
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        let value = if r.value.is_finite() { format!("{}", r.value) } else { "null".to_string() };
+        out.push_str(&format!(
+            "  {{\"metric\": {:?}, \"value\": {}, \"unit\": {:?}}}{}\n",
+            r.metric,
+            value,
+            r.unit,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("]\n");
+    // CARGO_MANIFEST_DIR is <repo>/rust; the JSON lands at the repo root.
+    let path = format!("{}/../BENCH_{bench}.json", env!("CARGO_MANIFEST_DIR"));
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("WROTE {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
     }
 }

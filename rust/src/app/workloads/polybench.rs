@@ -113,7 +113,7 @@ mod tests {
             if let Some(p) = &c.pattern {
                 for l in &app.loops {
                     if l.dependence == Dependence::Reduction {
-                        assert!(!p.bits[l.id.0], "racing {}", l.name);
+                        assert!(!p.get(l.id.0), "racing {}", l.name);
                     }
                 }
             }

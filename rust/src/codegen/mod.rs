@@ -30,8 +30,8 @@ fn emit_loop(
 ) {
     let l = app.get(id);
     let pad = "  ".repeat(indent);
-    if pattern.bits[id.0] {
-        let is_root = !app.ancestors(id).iter().any(|a| pattern.bits[a.0]);
+    if pattern.get(id.0) {
+        let is_root = !app.ancestors(id).iter().any(|a| pattern.get(a.0));
         let _ = writeln!(out, "{pad}{}", pragma(device, is_root));
     }
     let _ = writeln!(

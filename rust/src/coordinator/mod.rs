@@ -155,21 +155,39 @@ impl MixedOffloader {
         // downstream consumers (codegen, reports) always index `app`.
         let remap = |p: &OffloadPattern| -> OffloadPattern {
             match &loop_map {
-                None => p.clone(),
+                None => *p,
                 Some(mapping) => {
-                    let mut bits = vec![false; app.loop_count()];
+                    let mut bits = crate::util::bits::PatternBits::zeros(app.loop_count());
                     for (old, new) in mapping {
-                        bits[old.0] = p.bits[new.0];
+                        bits.set(old.0, p.get(new.0));
                     }
-                    OffloadPattern::from_bits(bits)
+                    OffloadPattern::from_packed(bits)
                 }
             }
         };
 
         // ---- Phase 2: loop offload (many-core -> GPU -> FPGA) ----
+        // When the dependence-free genome mask is all-false there is no
+        // search space: don't run generations of empty work (the old
+        // behaviour for `GaConfig::sized_for(0)`), record why instead.
+        // The FPGA method tolerates recurrences (pipelines run them at
+        // II > 1), so it only short-circuits when no loops remain at all.
+        let eligible_loops = crate::analysis::dependence::eligible(&loop_app).len();
         for kind in &TrialKind::order()[3..] {
             if let Some(reason) = self.pre_skip(kind, &best_so_far) {
                 trials.push(TrialRecord::skipped(*kind, reason, baseline));
+                continue;
+            }
+            let ga_based = matches!(kind.device, DeviceKind::ManyCore | DeviceKind::Gpu);
+            if loop_app.loop_count() == 0 || (ga_based && eligible_loops == 0) {
+                let why = if loop_app.loop_count() == 0 {
+                    "no eligible loops (all loops offloaded as function blocks)"
+                } else {
+                    "no eligible loops (every loop carries a sequential dependence)"
+                };
+                let mut rec = TrialRecord::skipped(*kind, why, baseline);
+                rec.detail = why.to_string();
+                trials.push(rec);
                 continue;
             }
             let cfg = self.ga_config(&loop_app);
@@ -316,6 +334,35 @@ mod tests {
                 assert!(t.skipped.is_some(), "FPGA must be skipped by price cap");
             }
         }
+    }
+
+    #[test]
+    fn all_sequential_app_skips_ga_loop_trials() {
+        use crate::app::builder::AppBuilder;
+        use crate::app::ir::Dependence;
+        let mut b = AppBuilder::new("seq-only");
+        b.array("X", 1e6);
+        b.open_loop("sweep", 1 << 20, Dependence::Sequential);
+        b.body(4.0, 16.0, 8.0, &["X"]);
+        b.close_loop();
+        let app = b.finish();
+        let out = MixedOffloader::default().run(&app);
+        assert_eq!(out.trials.len(), 6);
+        for t in &out.trials {
+            if t.kind.method == Method::LoopOffload && t.kind.device != DeviceKind::Fpga {
+                let reason = t.skipped.as_deref().unwrap_or("");
+                assert!(reason.contains("no eligible loops"), "{reason:?}");
+                assert!(t.detail.contains("no eligible loops"), "{:?}", t.detail);
+                assert_eq!(t.cost_s, 0.0);
+            }
+        }
+        // The FPGA loop trial still runs: pipelines tolerate recurrences.
+        let fpga = out
+            .trials
+            .iter()
+            .find(|t| t.kind.device == DeviceKind::Fpga && t.kind.method == Method::LoopOffload)
+            .unwrap();
+        assert!(fpga.skipped.is_none());
     }
 
     #[test]

@@ -78,6 +78,10 @@ impl DeviceModel for CpuSingle {
         }
     }
 
+    fn compile_plan(&self, app: &Application) -> super::MeasurementPlan {
+        super::MeasurementPlan::for_cpu(self, app)
+    }
+
     fn fb_library_seconds(&self, flops: f64, bytes: f64, _transfer: f64) -> f64 {
         // A tuned (blocked, vectorized) CPU library still runs on one core
         // here; assume 4x the naive flop rate and streaming-quality access.

@@ -69,7 +69,9 @@ impl Fpga {
         None
     }
 
-    fn pipeline_seconds(&self, app: &Application, root: LoopId, unroll: f64) -> f64 {
+    /// (`pub(crate)`: tabulated per (root, unroll level) by the
+    /// measurement-plan compiler — devices/plan.rs.)
+    pub(crate) fn pipeline_seconds(&self, app: &Application, root: LoopId, unroll: f64) -> f64 {
         let mut t = 0.0;
         let flop_rate = self.clock_hz * self.flops_per_cycle_per_unit * unroll;
         app.visit_nest(root, &mut |l| {
@@ -81,18 +83,25 @@ impl Fpga {
     }
 
     fn transfer_seconds(&self, app: &Application, roots: &[LoopId]) -> f64 {
+        // Dense array-id bitmask per nest (same technique as the GPU
+        // model): distinct arrays accumulate in ascending dense-id order,
+        // which the measurement-plan path reproduces exactly.  Hard assert:
+        // a 65th array would silently alias under the u64 mask.
+        assert!(app.array_order.len() <= 64, "array masks are u64-wide");
         let mut bytes = 0.0;
         for &root in roots {
             let inv = app.get(root).invocations as f64;
-            let mut seen = std::collections::BTreeSet::new();
-            for id in app.nest(root) {
-                for a in &app.get(id).arrays {
-                    if seen.insert(a.as_str()) {
-                        if let Some(info) = app.arrays.get(a.as_str()) {
-                            bytes += 2.0 * info.bytes * inv;
-                        }
-                    }
+            let mut touched: u64 = 0;
+            app.visit_nest(root, &mut |l| {
+                for &a in &l.array_ids {
+                    touched |= 1 << a;
                 }
+            });
+            while touched != 0 {
+                let a = touched.trailing_zeros() as usize;
+                touched &= touched - 1;
+                let Some(info) = app.arrays.get(app.array_order[a].as_str()) else { continue };
+                bytes += 2.0 * info.bytes * inv;
             }
         }
         bytes / self.bw_pcie
@@ -138,6 +147,10 @@ impl DeviceModel for Fpga {
                 setup_seconds: self.synthesis_s,
             },
         }
+    }
+
+    fn compile_plan(&self, app: &Application) -> super::MeasurementPlan {
+        super::MeasurementPlan::for_fpga(self, app)
     }
 
     fn fb_library_seconds(&self, flops: f64, bytes: f64, transfer_bytes: f64) -> f64 {

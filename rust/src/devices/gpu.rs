@@ -64,7 +64,9 @@ fn byte_factor(access: Access) -> f64 {
 
 impl Gpu {
     /// Device-side kernel time for the nest rooted at `root`.
-    fn kernel_seconds(&self, app: &Application, root: LoopId) -> f64 {
+    /// (`pub(crate)`: the measurement-plan compiler tabulates this per
+    /// candidate root so `measure` becomes a lookup — devices/plan.rs.)
+    pub(crate) fn kernel_seconds(&self, app: &Application, root: LoopId) -> f64 {
         let mut t = 0.0;
         app.visit_nest(root, &mut |l| {
             let bytes =
@@ -88,8 +90,9 @@ impl Gpu {
         }
         // Dense array-id bitmasks (apps have a handful of arrays; 64 is
         // plenty).  This path runs once per GA measurement — keep it
-        // allocation-light (see EXPERIMENTS.md #Perf).
-        debug_assert!(app.array_order.len() <= 64);
+        // allocation-light (see EXPERIMENTS.md #Perf).  Hard assert: a
+        // 65th array would silently alias under the u64 mask.
+        assert!(app.array_order.len() <= 64, "array masks are u64-wide");
         // Arrays touched by CPU-side loops (not in any region).
         let mut cpu_touched: u64 = 0;
         for l in &app.loops {
@@ -154,6 +157,10 @@ impl DeviceModel for Gpu {
             valid: pattern.valid(app),
             setup_seconds: self.compile_s,
         }
+    }
+
+    fn compile_plan(&self, app: &Application) -> super::MeasurementPlan {
+        super::MeasurementPlan::for_gpu(self, app)
     }
 
     fn fb_library_seconds(&self, flops: f64, bytes: f64, transfer_bytes: f64) -> f64 {

@@ -54,20 +54,29 @@ impl ManyCore {
         }
     }
 
+    /// Total seconds of one loop's own body when it runs inside a parallel
+    /// region (three-way roofline: thread-scaled flops, aggregate
+    /// bandwidth, no super-linear scaling).  Shared verbatim by the direct
+    /// path below and the measurement-plan tables (devices/plan.rs), so
+    /// both produce bit-identical sums.
+    pub(crate) fn par_body_secs(&self, l: &crate::app::ir::Loop) -> f64 {
+        let t1 = self.single.body_time_per_iter(l);
+        let bytes = l.bytes_read_per_iter + l.bytes_written_per_iter;
+        let per_iter = (l.flops_per_iter / (self.single.flops * self.threads_eff))
+            .max(bytes / self.bw_par(l.access))
+            .max(t1 / self.threads_eff);
+        l.total_iters() * per_iter
+    }
+
     /// App run time under `pattern` (regardless of validity).
     pub fn app_seconds(&self, app: &Application, pattern: &OffloadPattern) -> f64 {
         let mut t = 0.0;
         for l in &app.loops {
-            let t1 = self.single.body_time_per_iter(l);
-            let per_iter = if pattern.in_region(app, l.id) {
-                let bytes = l.bytes_read_per_iter + l.bytes_written_per_iter;
-                (l.flops_per_iter / (self.single.flops * self.threads_eff))
-                    .max(bytes / self.bw_par(l.access))
-                    .max(t1 / self.threads_eff)
+            t += if pattern.in_region(app, l.id) {
+                self.par_body_secs(l)
             } else {
-                t1
+                l.total_iters() * self.single.body_time_per_iter(l)
             };
-            t += l.total_iters() * per_iter;
         }
         for root in pattern.region_roots(app) {
             t += app.get(root).invocations as f64 * self.omp_overhead_s;
@@ -91,6 +100,10 @@ impl DeviceModel for ManyCore {
             valid: pattern.valid(app),
             setup_seconds: self.compile_s,
         }
+    }
+
+    fn compile_plan(&self, app: &Application) -> super::MeasurementPlan {
+        super::MeasurementPlan::for_manycore(self, app)
     }
 
     fn fb_library_seconds(&self, flops: f64, bytes: f64, _transfer: f64) -> f64 {

@@ -14,6 +14,7 @@ pub mod cpu;
 pub mod fpga;
 pub mod gpu;
 pub mod manycore;
+pub mod plan;
 pub mod pricing;
 
 use crate::app::ir::Application;
@@ -24,6 +25,7 @@ pub use cpu::CpuSingle;
 pub use fpga::Fpga;
 pub use gpu::Gpu;
 pub use manycore::ManyCore;
+pub use plan::MeasurementPlan;
 
 /// The three offload destinations plus the single-core baseline.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -77,7 +79,17 @@ pub trait DeviceModel: Sync {
     fn price_usd(&self) -> f64;
 
     /// Simulated run time + validity of `pattern` on this device.
+    ///
+    /// This is the direct (executable-specification) path: it re-derives
+    /// everything from the IR per call.  Search loops should compile a
+    /// [`MeasurementPlan`] once via [`DeviceModel::compile_plan`] and
+    /// measure through it instead — same results bit-for-bit, orders of
+    /// magnitude cheaper per pattern.
     fn measure(&self, app: &Application, pattern: &OffloadPattern) -> Measurement;
+
+    /// Compile `app` into a [`MeasurementPlan`] for this device (flat
+    /// per-loop tables; see devices/plan.rs).
+    fn compile_plan(&self, app: &Application) -> MeasurementPlan;
 
     /// Run time of a device-tuned library implementation of a function
     /// block with the given totals (CUDA library / OpenMP MKL-like / FPGA

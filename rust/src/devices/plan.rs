@@ -1,0 +1,502 @@
+//! Precompiled measurement plans — the GA hot path.
+//!
+//! The direct `DeviceModel::measure` path re-derives region roots, parent
+//! chains and array-transfer masks from the IR on every call, so a GA
+//! search over a 120-loop application costs O(loops × depth × arrays) per
+//! measurement.  A [`MeasurementPlan`] compiles an `(Application,
+//! DeviceModel)` pair **once** into flat per-loop tables:
+//!
+//! * parent indices as a flat `u32` array (`u32::MAX` = top level),
+//! * per-loop host seconds and per-device seconds (`total_iters ×
+//!   per_iter` products, precomputed with the device's own arithmetic so
+//!   results stay bit-identical to the direct path),
+//! * per-nest aggregates (GPU kernel seconds / FPGA pipeline seconds and
+//!   resource estimates per candidate root),
+//! * per-loop array-touch `u64` masks (own body and whole nest),
+//! * the dependence-free validity mask as packed bits.
+//!
+//! `measure(bits)` is then table lookups plus bit arithmetic with zero
+//! heap allocation: region coverage is an incremental bitset pass (parents
+//! always precede children in id order), roots fall out of one extra mask
+//! test, and validity is a word-wise subset check.  The direct device
+//! methods remain the executable specification; `tests/properties.rs`
+//! asserts bit-for-bit equality between both paths on random apps and
+//! patterns for all four device models.
+
+use crate::analysis::resources::{estimate, FpgaResources, ResourceEstimate};
+use crate::app::ir::{Application, Dependence, LoopId};
+use crate::util::bits::PatternBits;
+
+use super::cpu::CpuSingle;
+use super::fpga::Fpga;
+use super::gpu::Gpu;
+use super::manycore::ManyCore;
+use super::{DeviceKind, Measurement};
+
+const NO_PARENT: u32 = u32::MAX;
+
+/// One unroll level of the FPGA plan: the halving sequence the OpenCL
+/// compiler walks in `Fpga::feasible_unroll`, tabulated per candidate root.
+struct FpgaLevel {
+    /// The unroll factor this level represents (diagnostics only).
+    #[allow(dead_code)]
+    unroll: f64,
+    /// Resource estimate of the nest rooted at each loop, at this unroll.
+    est: Vec<ResourceEstimate>,
+    /// Pipeline seconds of the nest rooted at each loop, at this unroll.
+    pipe_nest: Vec<f64>,
+}
+
+/// Device-specific precomputed tables.
+enum DevicePlan {
+    /// Baseline ignores the pattern entirely: one precomputed total.
+    Cpu { total_secs: f64 },
+    ManyCore {
+        /// Seconds of loop i's body when inside a parallel region.
+        par_secs: Vec<f64>,
+        /// Fork/join overhead if loop i is a region root (inv × omp).
+        omp_secs: Vec<f64>,
+    },
+    Gpu {
+        /// Kernel seconds of the whole nest rooted at loop i.
+        kernel_nest: Vec<f64>,
+        /// Launch overhead if loop i is a region root (inv × launch).
+        launch_nest: Vec<f64>,
+        hoist: bool,
+        bw_pcie: f64,
+    },
+    Fpga {
+        /// Unroll levels in the order `feasible_unroll` tries them.
+        levels: Vec<FpgaLevel>,
+        budget: FpgaResources,
+        bw_pcie: f64,
+    },
+}
+
+/// An `(Application, DeviceModel)` pair compiled for fast measurement.
+pub struct MeasurementPlan {
+    kind: DeviceKind,
+    n: usize,
+    /// Constant preparation cost this device charges per measurement.
+    setup_seconds: f64,
+    /// Parent loop index, `NO_PARENT` at top level.  The builder assigns
+    /// ids in open order, so `parent[i] < i` always holds — which is what
+    /// lets region coverage resolve in one ascending pass.
+    parent: Vec<u32>,
+    /// Invocations of each loop, as f64.
+    inv: Vec<f64>,
+    /// Seconds of loop i's own body on the device's host CPU.
+    host_secs: Vec<f64>,
+    /// Arrays touched by loop i's own body (dense-id bitmask).
+    self_amask: Vec<u64>,
+    /// Arrays touched anywhere in the nest rooted at loop i.
+    nest_amask: Vec<u64>,
+    /// Bytes of each array, by dense id.
+    array_bytes: Vec<f64>,
+    /// Loops with no loop-carried dependence (the validity mask).
+    dep_free: PatternBits,
+    device: DevicePlan,
+}
+
+/// Shared per-application tables (device-independent except for the host
+/// CPU calibration used for off-device loop time).
+struct Tables {
+    n: usize,
+    parent: Vec<u32>,
+    inv: Vec<f64>,
+    host_secs: Vec<f64>,
+    self_amask: Vec<u64>,
+    nest_amask: Vec<u64>,
+    array_bytes: Vec<f64>,
+    dep_free: PatternBits,
+}
+
+fn tables(app: &Application, host: &CpuSingle) -> Tables {
+    let n = app.loop_count();
+    // Hard assert (not debug): a 65th array would silently alias under the
+    // u64 masks and mis-measure every transfer.
+    assert!(app.array_order.len() <= 64, "array masks are u64-wide");
+    let mut parent = Vec::with_capacity(n);
+    let mut inv = Vec::with_capacity(n);
+    let mut host_secs = Vec::with_capacity(n);
+    let mut self_amask = Vec::with_capacity(n);
+    let mut dep_free = PatternBits::zeros(n);
+    for l in &app.loops {
+        let p = match l.parent {
+            Some(p) => {
+                debug_assert!(p.0 < l.id.0, "parents must precede children in id order");
+                p.0 as u32
+            }
+            None => NO_PARENT,
+        };
+        parent.push(p);
+        inv.push(l.invocations as f64);
+        host_secs.push(l.total_iters() * host.body_time_per_iter(l));
+        let mut m = 0u64;
+        for &a in &l.array_ids {
+            m |= 1 << a;
+        }
+        self_amask.push(m);
+        if l.dependence == Dependence::None {
+            dep_free.set(l.id.0, true);
+        }
+    }
+    // Nest masks bottom-up: children always carry larger ids.
+    let mut nest_amask = self_amask.clone();
+    for i in (0..n).rev() {
+        for &c in &app.loops[i].children {
+            let child = nest_amask[c.0];
+            nest_amask[i] |= child;
+        }
+    }
+    let array_bytes = app
+        .array_order
+        .iter()
+        .map(|name| app.arrays[name.as_str()].bytes)
+        .collect();
+    Tables { n, parent, inv, host_secs, self_amask, nest_amask, array_bytes, dep_free }
+}
+
+impl MeasurementPlan {
+    pub fn for_cpu(cpu: &CpuSingle, app: &Application) -> Self {
+        let t = tables(app, cpu);
+        Self::assemble(
+            DeviceKind::CpuSingle,
+            cpu.compile_s,
+            t,
+            DevicePlan::Cpu { total_secs: cpu.app_seconds(app) },
+        )
+    }
+
+    pub fn for_manycore(mc: &ManyCore, app: &Application) -> Self {
+        let t = tables(app, &mc.single);
+        let par_secs = app.loops.iter().map(|l| mc.par_body_secs(l)).collect();
+        let omp_secs = app
+            .loops
+            .iter()
+            .map(|l| l.invocations as f64 * mc.omp_overhead_s)
+            .collect();
+        Self::assemble(
+            DeviceKind::ManyCore,
+            mc.compile_s,
+            t,
+            DevicePlan::ManyCore { par_secs, omp_secs },
+        )
+    }
+
+    pub fn for_gpu(gpu: &Gpu, app: &Application) -> Self {
+        let t = tables(app, &gpu.host);
+        let kernel_nest = (0..t.n).map(|i| gpu.kernel_seconds(app, LoopId(i))).collect();
+        let launch_nest = app
+            .loops
+            .iter()
+            .map(|l| l.invocations as f64 * gpu.launch_s)
+            .collect();
+        Self::assemble(
+            DeviceKind::Gpu,
+            gpu.compile_s,
+            t,
+            DevicePlan::Gpu {
+                kernel_nest,
+                launch_nest,
+                hoist: gpu.hoist_transfers,
+                bw_pcie: gpu.bw_pcie,
+            },
+        )
+    }
+
+    pub fn for_fpga(fpga: &Fpga, app: &Application) -> Self {
+        let t = tables(app, &fpga.host);
+        let mut levels = Vec::new();
+        let mut u = fpga.unroll;
+        while u >= 1.0 {
+            levels.push(FpgaLevel {
+                unroll: u,
+                est: (0..t.n).map(|i| estimate(app, LoopId(i), u)).collect(),
+                pipe_nest: (0..t.n)
+                    .map(|i| fpga.pipeline_seconds(app, LoopId(i), u))
+                    .collect(),
+            });
+            u /= 2.0;
+        }
+        Self::assemble(
+            DeviceKind::Fpga,
+            fpga.synthesis_s,
+            t,
+            DevicePlan::Fpga { levels, budget: fpga.budget, bw_pcie: fpga.bw_pcie },
+        )
+    }
+
+    fn assemble(kind: DeviceKind, setup_seconds: f64, t: Tables, device: DevicePlan) -> Self {
+        Self {
+            kind,
+            n: t.n,
+            setup_seconds,
+            parent: t.parent,
+            inv: t.inv,
+            host_secs: t.host_secs,
+            self_amask: t.self_amask,
+            nest_amask: t.nest_amask,
+            array_bytes: t.array_bytes,
+            dep_free: t.dep_free,
+            device,
+        }
+    }
+
+    pub fn kind(&self) -> DeviceKind {
+        self.kind
+    }
+
+    /// Number of loops the plan was compiled over.
+    pub fn loop_count(&self) -> usize {
+        self.n
+    }
+
+    /// Region coverage as an inline bitset: loop i is covered iff its bit
+    /// or any ancestor's bit is set.  One ascending pass, zero heap
+    /// allocation (`PatternBits` is a stack value).
+    #[inline]
+    fn covered(&self, bits: &PatternBits) -> PatternBits {
+        let mut cov = PatternBits::zeros(self.n);
+        for i in 0..self.n {
+            let mut c = bits.get(i);
+            if !c {
+                let p = self.parent[i];
+                if p != NO_PARENT {
+                    c = cov.get(p as usize);
+                }
+            }
+            if c {
+                cov.set(i, true);
+            }
+        }
+        cov
+    }
+
+    /// Is loop i an effective region root (selected, no selected ancestor)?
+    #[inline]
+    fn is_root(&self, bits: &PatternBits, cov: &PatternBits, i: usize) -> bool {
+        if !bits.get(i) {
+            return false;
+        }
+        let p = self.parent[i];
+        p == NO_PARENT || !cov.get(p as usize)
+    }
+
+    /// Simulated run time + validity of the pattern — table lookups and bit
+    /// arithmetic only, no heap allocation.  Bit-identical to the direct
+    /// `DeviceModel::measure` path.
+    pub fn measure(&self, bits: &PatternBits) -> Measurement {
+        // Hard assert: a pattern for the wrong app (e.g. the original app
+        // vs the function-block-subtracted one) would otherwise yield a
+        // plausible-but-wrong Measurement in release builds.
+        assert_eq!(bits.len(), self.n, "pattern length != plan loop count");
+        match &self.device {
+            DevicePlan::Cpu { total_secs } => Measurement {
+                seconds: *total_secs,
+                valid: true,
+                setup_seconds: self.setup_seconds,
+            },
+            DevicePlan::ManyCore { par_secs, omp_secs } => {
+                let cov = self.covered(bits);
+                let mut t = 0.0;
+                for i in 0..self.n {
+                    t += if cov.get(i) { par_secs[i] } else { self.host_secs[i] };
+                }
+                for i in 0..self.n {
+                    if self.is_root(bits, &cov, i) {
+                        t += omp_secs[i];
+                    }
+                }
+                Measurement {
+                    seconds: t,
+                    valid: bits.is_subset_of(&self.dep_free),
+                    setup_seconds: self.setup_seconds,
+                }
+            }
+            DevicePlan::Gpu { kernel_nest, launch_nest, hoist, bw_pcie } => {
+                let cov = self.covered(bits);
+                // PCIe transfers: per region root, each array touched in
+                // the nest crosses once per invocation unless the
+                // transfer-reduction pass keeps it device-resident.
+                let mut cpu_touched = 0u64;
+                for i in 0..self.n {
+                    if !cov.get(i) {
+                        cpu_touched |= self.self_amask[i];
+                    }
+                }
+                let mut total_bytes = 0.0;
+                for i in 0..self.n {
+                    if !self.is_root(bits, &cov, i) {
+                        continue;
+                    }
+                    let mut rest = self.nest_amask[i];
+                    while rest != 0 {
+                        let a = rest.trailing_zeros() as usize;
+                        rest &= rest - 1;
+                        let hoistable = *hoist && cpu_touched & (1u64 << a) == 0;
+                        let count = if hoistable { 1.0 } else { self.inv[i] };
+                        total_bytes += 2.0 * self.array_bytes[a] * count;
+                    }
+                }
+                let mut t = total_bytes / bw_pcie;
+                for i in 0..self.n {
+                    if self.is_root(bits, &cov, i) {
+                        t += kernel_nest[i];
+                        t += launch_nest[i];
+                    }
+                }
+                for i in 0..self.n {
+                    if !cov.get(i) {
+                        t += self.host_secs[i];
+                    }
+                }
+                Measurement {
+                    seconds: t,
+                    valid: bits.is_subset_of(&self.dep_free),
+                    setup_seconds: self.setup_seconds,
+                }
+            }
+            DevicePlan::Fpga { levels, budget, bw_pcie } => {
+                let cov = self.covered(bits);
+                // Largest unroll whose combined estimate fits, in the same
+                // halving order as `Fpga::feasible_unroll`.
+                let mut fit: Option<&FpgaLevel> = None;
+                for lv in levels {
+                    let mut total = ResourceEstimate::zero();
+                    for i in 0..self.n {
+                        if self.is_root(bits, &cov, i) {
+                            total = total.add(&lv.est[i]);
+                        }
+                    }
+                    if budget.fits(&total) {
+                        fit = Some(lv);
+                        break;
+                    }
+                }
+                let Some(lv) = fit else {
+                    // Does not fit even at unroll 1: synthesis fails after
+                    // burning its hours (same as the direct path).
+                    return Measurement {
+                        seconds: f64::INFINITY,
+                        valid: false,
+                        setup_seconds: self.setup_seconds,
+                    };
+                };
+                let mut bytes = 0.0;
+                for i in 0..self.n {
+                    if !self.is_root(bits, &cov, i) {
+                        continue;
+                    }
+                    let mut rest = self.nest_amask[i];
+                    while rest != 0 {
+                        let a = rest.trailing_zeros() as usize;
+                        rest &= rest - 1;
+                        bytes += 2.0 * self.array_bytes[a] * self.inv[i];
+                    }
+                }
+                let mut t = bytes / bw_pcie;
+                for i in 0..self.n {
+                    if self.is_root(bits, &cov, i) {
+                        t += lv.pipe_nest[i];
+                    }
+                }
+                for i in 0..self.n {
+                    if !cov.get(i) {
+                        t += self.host_secs[i];
+                    }
+                }
+                Measurement { seconds: t, valid: true, setup_seconds: self.setup_seconds }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{DeviceModel, Testbed};
+    use super::*;
+    use crate::app::workloads::{nas_bt, threemm};
+    use crate::offload::pattern::OffloadPattern;
+    use crate::util::rng::Rng;
+
+    fn assert_same(direct: Measurement, fast: Measurement) {
+        assert_eq!(direct.seconds.to_bits(), fast.seconds.to_bits(), "{direct:?} vs {fast:?}");
+        assert_eq!(direct.valid, fast.valid);
+        assert_eq!(direct.setup_seconds.to_bits(), fast.setup_seconds.to_bits());
+    }
+
+    #[test]
+    fn plan_matches_direct_on_workload_patterns() {
+        let tb = Testbed::default();
+        for app in [threemm::build(300), nas_bt::build(16, 10)] {
+            let plans = [
+                tb.cpu.compile_plan(&app),
+                tb.manycore.compile_plan(&app),
+                tb.gpu.compile_plan(&app),
+                tb.fpga.compile_plan(&app),
+            ];
+            let devices: [&dyn DeviceModel; 4] = [&tb.cpu, &tb.manycore, &tb.gpu, &tb.fpga];
+            let mut rng = Rng::new(0xBEEF);
+            for trial in 0..64 {
+                let density = [0.0, 0.1, 0.25, 0.5, 1.0][trial % 5];
+                let mut bits = PatternBits::zeros(app.loop_count());
+                for i in 0..app.loop_count() {
+                    if rng.chance(density) {
+                        bits.set(i, true);
+                    }
+                }
+                let pattern = OffloadPattern::from_packed(bits);
+                for (dev, plan) in devices.iter().zip(&plans) {
+                    assert_same(dev.measure(&app, &pattern), plan.measure(&bits));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_reports_device_kind_and_size() {
+        let tb = Testbed::default();
+        let app = threemm::build(100);
+        let plan = tb.gpu.compile_plan(&app);
+        assert_eq!(plan.kind(), DeviceKind::Gpu);
+        assert_eq!(plan.loop_count(), app.loop_count());
+    }
+
+    #[test]
+    fn covered_matches_in_region_semantics() {
+        let tb = Testbed::default();
+        let app = nas_bt::build(8, 5);
+        let plan = tb.manycore.compile_plan(&app);
+        let mut rng = Rng::new(7);
+        for _ in 0..32 {
+            let mut bits = PatternBits::zeros(app.loop_count());
+            for i in 0..app.loop_count() {
+                if rng.chance(0.2) {
+                    bits.set(i, true);
+                }
+            }
+            let pattern = OffloadPattern::from_packed(bits);
+            let cov = plan.covered(&bits);
+            let roots = pattern.region_roots(&app);
+            for l in &app.loops {
+                assert_eq!(cov.get(l.id.0), pattern.in_region(&app, l.id));
+                assert_eq!(plan.is_root(&bits, &cov, l.id.0), roots.contains(&l.id));
+            }
+        }
+    }
+
+    #[test]
+    fn fpga_infeasible_pattern_is_invalid_infinite() {
+        let mut fpga = Fpga::default();
+        fpga.budget = FpgaResources { dsps: 1.0, alms: 10.0, bram_kb: 0.1 };
+        let app = threemm::build(300);
+        let root = app.blocks[0].loop_ids[0];
+        let pattern = OffloadPattern::selecting(&app, &[root]);
+        let plan = fpga.compile_plan(&app);
+        let m = plan.measure(&pattern.bits);
+        assert!(!m.valid);
+        assert!(m.seconds.is_infinite());
+        assert_same(fpga.measure(&app, &pattern), m);
+    }
+}

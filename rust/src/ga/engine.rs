@@ -1,14 +1,23 @@
 //! The GA search loop: evaluate -> select (roulette + elite) -> crossover
 //! -> mutate, with an evaluation cache and simulated-cost accounting.
+//!
+//! Genomes are packed bitsets ([`Genome`]): the evaluation cache hashes
+//! four words instead of walking a `Vec<bool>`, per-generation dedup is a
+//! `HashSet` probe instead of an O(population²) linear scan, and genomes
+//! are `Copy` — nothing on the per-generation path allocates per genome.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use crate::devices::Measurement;
+use crate::util::bits::PatternBits;
 use crate::util::rng::Rng;
 use crate::util::threadpool::map_parallel;
 
 use super::fitness::fitness;
 use super::population::{crossover, mutate, random_genome};
+
+/// A GA individual: one bit per eligible loop, packed.
+pub type Genome = PatternBits;
 
 /// GA hyper-parameters (paper sec. 4.1.2 defaults).
 #[derive(Clone, Copy, Debug)]
@@ -80,7 +89,7 @@ pub struct GenStats {
 pub struct GaResult {
     /// Best valid, non-timeout genome found (None = nothing beat zero
     /// fitness — the paper's NAS.BT-on-GPU outcome).
-    pub best: Option<(Vec<bool>, Measurement)>,
+    pub best: Option<(Genome, Measurement)>,
     pub history: Vec<GenStats>,
     /// Distinct genomes measured.
     pub evaluations: usize,
@@ -98,46 +107,44 @@ impl GaResult {
 pub struct Ga<'a> {
     pub config: GaConfig,
     /// Measure one genome (simulated device run).
-    pub evaluate: &'a (dyn Fn(&[bool]) -> Measurement + Sync),
+    pub evaluate: &'a (dyn Fn(&Genome) -> Measurement + Sync),
 }
 
 impl<'a> Ga<'a> {
     pub fn run(&self, genome_len: usize) -> GaResult {
         let cfg = self.config;
         let mut rng = Rng::new(cfg.seed);
-        let mut cache: HashMap<Vec<bool>, Measurement> = HashMap::new();
+        let mut cache: HashMap<Genome, Measurement> = HashMap::new();
         let mut cost = 0.0;
         let mut history = Vec::with_capacity(cfg.generations);
-        let mut best: Option<(Vec<bool>, Measurement)> = None;
+        let mut best: Option<(Genome, Measurement)> = None;
 
         let mut stagnant = 0usize;
         let mut last_best = f64::INFINITY;
-        let mut pop: Vec<Vec<bool>> = (0..cfg.population)
+        let mut pop: Vec<Genome> = (0..cfg.population)
             .map(|_| random_genome(&mut rng, genome_len, cfg.init_density))
             .collect();
 
         for generation in 0..cfg.generations {
-            // Measure genomes not yet in the cache, concurrently.
-            let fresh: Vec<Vec<bool>> = {
-                let mut seen: Vec<Vec<bool>> = Vec::new();
-                for g in &pop {
-                    if !cache.contains_key(g) && !seen.contains(g) {
-                        seen.push(g.clone());
-                    }
+            // Measure genomes not yet in the cache, concurrently.  Dedup is
+            // one HashSet probe per individual (genomes hash word-wise).
+            let mut seen: HashSet<Genome> = HashSet::with_capacity(pop.len());
+            let mut fresh: Vec<Genome> = Vec::with_capacity(pop.len());
+            for g in &pop {
+                if !cache.contains_key(g) && seen.insert(*g) {
+                    fresh.push(*g);
                 }
-                seen
-            };
+            }
             let new_evaluations = fresh.len();
-            let results = map_parallel(fresh.clone(), cfg.workers, |g| (self.evaluate)(&g));
-            for (g, m) in fresh.into_iter().zip(results) {
+            let results = map_parallel(fresh, cfg.workers, |g| (g, (self.evaluate)(&g)));
+            for (g, m) in results {
                 // Simulated verification wall: compile/synthesis + the run
                 // itself, capped by the measurement timeout.
                 cost += m.setup_seconds + m.seconds.min(Measurement::TIMEOUT_S);
                 cache.insert(g, m);
             }
 
-            let measurements: Vec<Measurement> =
-                pop.iter().map(|g| cache[g]).collect();
+            let measurements: Vec<Measurement> = pop.iter().map(|g| cache[g]).collect();
             let fits: Vec<f64> =
                 measurements.iter().map(|m| fitness(m, cfg.exponent)).collect();
 
@@ -149,7 +156,7 @@ impl<'a> Ga<'a> {
                         None => true,
                     };
                     if better {
-                        best = Some((g.clone(), *m));
+                        best = Some((*g, *m));
                     }
                 }
             }
@@ -180,18 +187,18 @@ impl<'a> Ga<'a> {
             }
 
             // ---- next generation ----
-            let mut next: Vec<Vec<bool>> = Vec::with_capacity(cfg.population);
+            let mut next: Vec<Genome> = Vec::with_capacity(cfg.population);
             // Elite preservation: the generation's best (by fitness) is
             // copied unchanged (sec. 4.1.2).
             if cfg.elite {
                 if let Some(ei) = fits
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
                     .map(|(i, _)| i)
                 {
                     if fits[ei] > 0.0 {
-                        next.push(pop[ei].clone());
+                        next.push(pop[ei]);
                     }
                 }
             }
@@ -208,7 +215,7 @@ impl<'a> Ga<'a> {
                 let (mut c, mut d) = if rng.chance(cfg.pc) {
                     crossover(&mut rng, &pop[pa], &pop[pb])
                 } else {
-                    (pop[pa].clone(), pop[pb].clone())
+                    (pop[pa], pop[pb])
                 };
                 mutate(&mut rng, &mut c, cfg.pm);
                 mutate(&mut rng, &mut d, cfg.pm);
@@ -235,13 +242,13 @@ mod tests {
 
     /// Toy landscape: time = 10 - (number of bits set in the first half)
     /// + penalty for bits in the second half; bit 7 poisons validity.
-    fn toy_eval(g: &[bool]) -> Measurement {
+    fn toy_eval(g: &Genome) -> Measurement {
         let half = g.len() / 2;
-        let good = g[..half].iter().filter(|&&b| b).count() as f64;
-        let bad = g[half..].iter().filter(|&&b| b).count() as f64;
+        let good = g.ones().filter(|&i| i < half).count() as f64;
+        let bad = g.ones().filter(|&i| i >= half).count() as f64;
         Measurement {
             seconds: (10.0 - good + 2.0 * bad).max(0.5),
-            valid: g.len() <= 7 || !g[7],
+            valid: g.len() <= 7 || !g.get(7),
             setup_seconds: 1.0,
         }
     }
@@ -251,7 +258,7 @@ mod tests {
         let ga = Ga { config: GaConfig { seed: 42, ..GaConfig::sized_for(16) }, evaluate: &toy_eval };
         let r = ga.run(16);
         let (g, m) = r.best.expect("found something");
-        assert!(!g[7], "elite must be valid");
+        assert!(!g.get(7), "elite must be valid");
         assert!(m.seconds <= 5.0, "best {}", m.seconds);
         // Best-so-far curve is monotone non-increasing.
         for w in r.history.windows(2) {
@@ -264,14 +271,14 @@ mod tests {
         let cfg = GaConfig { seed: 7, ..GaConfig::sized_for(12) };
         let a = Ga { config: cfg, evaluate: &toy_eval }.run(12);
         let b = Ga { config: cfg, evaluate: &toy_eval }.run(12);
-        assert_eq!(a.best.as_ref().map(|(g, _)| g.clone()), b.best.as_ref().map(|(g, _)| g.clone()));
+        assert_eq!(a.best.as_ref().map(|(g, _)| *g), b.best.as_ref().map(|(g, _)| *g));
         assert_eq!(a.evaluations, b.evaluations);
         assert_eq!(a.simulated_cost_s, b.simulated_cost_s);
     }
 
     #[test]
     fn all_invalid_landscape_returns_none() {
-        let eval = |_g: &[bool]| Measurement { seconds: 1.0, valid: false, setup_seconds: 0.5 };
+        let eval = |_g: &Genome| Measurement { seconds: 1.0, valid: false, setup_seconds: 0.5 };
         let ga = Ga { config: GaConfig::sized_for(8), evaluate: &eval };
         let r = ga.run(8);
         assert!(r.best.is_none());
@@ -281,8 +288,8 @@ mod tests {
 
     #[test]
     fn timeouts_never_win() {
-        let eval = |g: &[bool]| {
-            let on = g.iter().filter(|&&b| b).count() as f64;
+        let eval = |g: &Genome| {
+            let on = g.count_ones() as f64;
             Measurement { seconds: if on > 0.0 { 1.0 } else { 1000.0 }, valid: true, setup_seconds: 0.0 }
         };
         let ga = Ga { config: GaConfig::sized_for(10), evaluate: &eval };

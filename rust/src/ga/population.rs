@@ -1,5 +1,11 @@
 //! Population initialization and variation operators.
+//!
+//! Genomes are packed bitsets ([`crate::util::bits::PatternBits`]): `Copy`,
+//! no heap traffic, and crossover is word-mask splicing.  The per-bit RNG
+//! call sequence is identical to the old `Vec<bool>` implementation, so
+//! fixed seeds reproduce the same searches.
 
+use crate::util::bits::PatternBits;
 use crate::util::rng::Rng;
 
 /// Random genome with bit density `p_on`.
@@ -8,29 +14,31 @@ use crate::util::rng::Rng;
 /// half-dense pattern almost surely parallelizes some racing reduction and
 /// scores 0, so the GA could never bootstrap (the paper's tool seeds
 /// sparse patterns for the same reason).
-pub fn random_genome(rng: &mut Rng, len: usize, p_on: f64) -> Vec<bool> {
-    (0..len).map(|_| rng.chance(p_on)).collect()
+pub fn random_genome(rng: &mut Rng, len: usize, p_on: f64) -> PatternBits {
+    let mut g = PatternBits::zeros(len);
+    for i in 0..len {
+        if rng.chance(p_on) {
+            g.set(i, true);
+        }
+    }
+    g
 }
 
 /// Single-point crossover (paper Pc applies per pair).
-pub fn crossover(rng: &mut Rng, a: &[bool], b: &[bool]) -> (Vec<bool>, Vec<bool>) {
+pub fn crossover(rng: &mut Rng, a: &PatternBits, b: &PatternBits) -> (PatternBits, PatternBits) {
     assert_eq!(a.len(), b.len());
     if a.len() < 2 {
-        return (a.to_vec(), b.to_vec());
+        return (*a, *b);
     }
     let cut = 1 + rng.below(a.len() - 1);
-    let mut c = a[..cut].to_vec();
-    c.extend_from_slice(&b[cut..]);
-    let mut d = b[..cut].to_vec();
-    d.extend_from_slice(&a[cut..]);
-    (c, d)
+    (a.splice(b, cut), b.splice(a, cut))
 }
 
 /// Per-bit flip mutation (paper Pm).
-pub fn mutate(rng: &mut Rng, genome: &mut [bool], pm: f64) {
-    for bit in genome.iter_mut() {
+pub fn mutate(rng: &mut Rng, genome: &mut PatternBits, pm: f64) {
+    for i in 0..genome.len() {
         if rng.chance(pm) {
-            *bit = !*bit;
+            genome.toggle(i);
         }
     }
 }
@@ -42,45 +50,55 @@ mod tests {
     #[test]
     fn density_is_respected() {
         let mut rng = Rng::new(1);
-        let g = random_genome(&mut rng, 10_000, 0.25);
-        let on = g.iter().filter(|&&b| b).count();
+        // Average over many draws: 40 genomes x 250 bits at p=0.25.
+        let mut on = 0usize;
+        for _ in 0..40 {
+            on += random_genome(&mut rng, 250, 0.25).count_ones();
+        }
         assert!((2000..3000).contains(&on), "{on}");
     }
 
     #[test]
     fn crossover_preserves_material() {
         let mut rng = Rng::new(2);
-        let a = vec![true; 16];
-        let b = vec![false; 16];
+        let a = PatternBits::from_bools(&[true; 16]);
+        let b = PatternBits::from_bools(&[false; 16]);
         let (c, d) = crossover(&mut rng, &a, &b);
         for i in 0..16 {
-            assert_ne!(c[i], d[i]); // complementary parents stay complementary
+            assert_ne!(c.get(i), d.get(i)); // complementary parents stay complementary
         }
-        assert!(c.iter().any(|&x| x) && c.iter().any(|&x| !x));
+        assert!(c.any_set() && c.count_ones() < 16);
     }
 
     #[test]
     fn crossover_on_tiny_genomes() {
         let mut rng = Rng::new(3);
-        let (c, d) = crossover(&mut rng, &[true], &[false]);
-        assert_eq!(c, vec![true]);
-        assert_eq!(d, vec![false]);
+        let a = PatternBits::from_bools(&[true]);
+        let b = PatternBits::from_bools(&[false]);
+        let (c, d) = crossover(&mut rng, &a, &b);
+        assert_eq!(c, a);
+        assert_eq!(d, b);
     }
 
     #[test]
     fn mutation_rate_sanity() {
         let mut rng = Rng::new(4);
-        let mut g = vec![false; 10_000];
-        mutate(&mut rng, &mut g, 0.05);
-        let flipped = g.iter().filter(|&&b| b).count();
+        // 40 genomes x 250 bits at pm=0.05: ~500 flips expected.
+        let mut flipped = 0usize;
+        for _ in 0..40 {
+            let mut g = PatternBits::zeros(250);
+            mutate(&mut rng, &mut g, 0.05);
+            flipped += g.count_ones();
+        }
         assert!((350..650).contains(&flipped), "{flipped}");
     }
 
     #[test]
     fn zero_rate_is_identity() {
         let mut rng = Rng::new(5);
-        let mut g = vec![true, false, true];
+        let mut g = PatternBits::from_bools(&[true, false, true]);
+        let orig = g;
         mutate(&mut rng, &mut g, 0.0);
-        assert_eq!(g, vec![true, false, true]);
+        assert_eq!(g, orig);
     }
 }

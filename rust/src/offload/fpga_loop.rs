@@ -49,10 +49,13 @@ pub fn search_traced(
     let top_intensity = rank_by_intensity(app, cfg.intensity_keep);
     let candidates = rank_by_efficiency(app, &top_intensity, cfg.efficiency_keep);
 
+    // Only ~4 patterns are measured, but the plan also amortizes the
+    // per-root resource/pipeline tabulation across them (devices/plan.rs).
+    let plan = device.compile_plan(app);
     let mut measured: Vec<(Vec<LoopId>, Measurement)> = Vec::new();
     let mut cost = 0.0;
     let mut measure = |ids: &[LoopId]| -> Measurement {
-        let m = device.measure(app, &OffloadPattern::selecting(app, ids));
+        let m = plan.measure(&OffloadPattern::selecting(app, ids).bits);
         cost += m.setup_seconds + m.seconds.min(Measurement::TIMEOUT_S);
         measured.push((ids.to_vec(), m));
         m

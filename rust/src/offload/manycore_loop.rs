@@ -8,10 +8,11 @@
 //! compile a racing reduction, so wrong-answer patterns are caught here
 //! and scored 0.
 
-use crate::analysis::dependence::{expand_genome, genome_mask};
+use crate::analysis::dependence::eligible;
 use crate::app::ir::Application;
 use crate::devices::{DeviceModel, ManyCore};
-use crate::ga::{Ga, GaConfig};
+use crate::ga::{Ga, GaConfig, Genome};
+use crate::util::bits::PatternBits;
 
 use super::pattern::OffloadPattern;
 use super::LoopOffloadOutcome;
@@ -22,23 +23,48 @@ pub fn search(app: &Application, device: &ManyCore, config: GaConfig) -> LoopOff
 }
 
 /// Shared GA-over-mask driver (also used by the GPU method).
+///
+/// The device is compiled into a [`crate::devices::MeasurementPlan`] once;
+/// every GA measurement is then table lookups + bit arithmetic instead of
+/// an IR walk (see devices/plan.rs and EXPERIMENTS.md #Perf).
 pub(crate) fn search_on(
     app: &Application,
     device: &dyn DeviceModel,
     config: GaConfig,
 ) -> LoopOffloadOutcome {
-    let mask = genome_mask(app);
-    let genome_len = mask.iter().filter(|&&m| m).count();
-    let evaluate = |genome: &[bool]| {
-        let bits = expand_genome(&mask, genome);
-        device.measure(app, &OffloadPattern::from_bits(bits))
+    let baseline_seconds = crate::devices::CpuSingle::default().app_seconds(app);
+    let eligible = eligible(app);
+    let genome_len = eligible.len();
+    // No loop may enter the genome (everything is a proven recurrence):
+    // there is nothing to search, so don't spend generations measuring
+    // empty patterns.
+    if genome_len == 0 {
+        return LoopOffloadOutcome {
+            device: device.kind(),
+            best: None,
+            baseline_seconds,
+            simulated_cost_s: 0.0,
+            history: Vec::new(),
+            evaluations: 0,
+        };
+    }
+
+    let plan = device.compile_plan(app);
+    // Expand a compact genome (one bit per eligible loop) to full pattern
+    // bits.  PatternBits is Copy — no allocation on the hot path.
+    let expand = |genome: &Genome| -> PatternBits {
+        let mut bits = PatternBits::zeros(app.loop_count());
+        for gi in genome.ones() {
+            bits.set(eligible[gi].0, true);
+        }
+        bits
     };
+    let evaluate = |genome: &Genome| plan.measure(&expand(genome));
     let result = Ga { config, evaluate: &evaluate }.run(genome_len);
 
-    let baseline_seconds = crate::devices::CpuSingle::default().app_seconds(app);
-    let best = result.best.map(|(genome, m)| {
-        (OffloadPattern::from_bits(expand_genome(&mask, &genome)), m)
-    });
+    let best = result
+        .best
+        .map(|(genome, m)| (OffloadPattern::from_packed(expand(&genome)), m));
     // Keep the best only if it actually beats running untouched.
     let best = best.filter(|(_, m)| m.seconds < baseline_seconds);
     LoopOffloadOutcome {
@@ -86,5 +112,21 @@ mod tests {
         let out = search(&app, &ManyCore::default(), cfg);
         // Dozens of measurements x (compile 30s + run) >> 10 min.
         assert!(out.simulated_cost_s > 600.0);
+    }
+
+    #[test]
+    fn all_sequential_app_short_circuits() {
+        use crate::app::builder::AppBuilder;
+        use crate::app::ir::Dependence;
+        let mut b = AppBuilder::new("seq-only");
+        b.open_loop("sweep", 64, Dependence::Sequential);
+        b.body(4.0, 16.0, 8.0, &[]);
+        b.close_loop();
+        let app = b.finish();
+        let out = search(&app, &ManyCore::default(), GaConfig::sized_for(0));
+        assert!(out.best.is_none());
+        assert_eq!(out.evaluations, 0);
+        assert_eq!(out.simulated_cost_s, 0.0);
+        assert!(out.history.is_empty());
     }
 }

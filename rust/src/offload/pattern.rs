@@ -5,8 +5,13 @@
 //! sec. 3.2.1).  From the bits we derive the *effective regions*: the
 //! outermost selected loops; everything nested below a region root executes
 //! inside the offloaded region.
+//!
+//! Bits are stored packed (`util::bits::PatternBits`): a pattern is `Copy`,
+//! hashes/compares word-wise, and the GA hot path never touches the heap
+//! for one (see EXPERIMENTS.md #Perf).
 
 use crate::app::ir::{Application, Dependence, LoopId};
+use crate::util::bits::PatternBits;
 
 /// Where a pattern runs (see `devices/`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -16,44 +21,52 @@ pub enum Method {
 }
 
 /// One candidate offload pattern over an application.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct OffloadPattern {
-    /// One bit per loop in `Application::loops` order.
-    pub bits: Vec<bool>,
+    /// One bit per loop in `Application::loops` order, packed.
+    pub bits: PatternBits,
 }
 
 impl OffloadPattern {
     pub fn none(app: &Application) -> Self {
-        Self { bits: vec![false; app.loop_count()] }
+        Self { bits: PatternBits::zeros(app.loop_count()) }
     }
 
+    /// Build from an unpacked bit vector (tests, MiniC-era call sites).
     pub fn from_bits(bits: Vec<bool>) -> Self {
+        Self { bits: PatternBits::from_bools(&bits) }
+    }
+
+    /// Build from an already-packed bitset (the GA hot path).
+    pub fn from_packed(bits: PatternBits) -> Self {
         Self { bits }
     }
 
     /// Pattern selecting exactly the given loops.
     pub fn selecting(app: &Application, ids: &[LoopId]) -> Self {
-        let mut bits = vec![false; app.loop_count()];
+        let mut bits = PatternBits::zeros(app.loop_count());
         for id in ids {
-            bits[id.0] = true;
+            bits.set(id.0, true);
         }
         Self { bits }
     }
 
+    /// Is loop `i` (by index) selected?
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        self.bits.get(i)
+    }
+
     pub fn is_empty(&self) -> bool {
-        !self.bits.iter().any(|&b| b)
+        self.bits.none_set()
     }
 
     pub fn selected(&self) -> impl Iterator<Item = LoopId> + '_ {
-        self.bits
-            .iter()
-            .enumerate()
-            .filter(|(_, &b)| b)
-            .map(|(i, _)| LoopId(i))
+        self.bits.ones().map(LoopId)
     }
 
     pub fn count(&self) -> usize {
-        self.bits.iter().filter(|&&b| b).count()
+        self.bits.count_ones()
     }
 
     /// Does any (strict) ancestor of `id` have its bit set?
@@ -63,7 +76,7 @@ impl OffloadPattern {
     fn ancestor_selected(&self, app: &Application, id: LoopId) -> bool {
         let mut cur = app.get(id).parent;
         while let Some(p) = cur {
-            if self.bits[p.0] {
+            if self.bits.get(p.0) {
                 return true;
             }
             cur = app.get(p).parent;
@@ -81,7 +94,7 @@ impl OffloadPattern {
     /// Is `id` inside (or the root of) any effective region?
     #[inline]
     pub fn in_region(&self, app: &Application, id: LoopId) -> bool {
-        self.bits[id.0] || self.ancestor_selected(app, id)
+        self.bits.get(id.0) || self.ancestor_selected(app, id)
     }
 
     /// The paper's correctness rule: naively parallelizing a loop that
@@ -145,5 +158,16 @@ mod tests {
         let p = OffloadPattern::selecting(&a, &[LoopId(1), LoopId(3)]);
         assert_eq!(p.count(), 2);
         assert_eq!(p.selected().collect::<Vec<_>>(), vec![LoopId(1), LoopId(3)]);
+    }
+
+    #[test]
+    fn packed_and_unpacked_constructions_agree() {
+        let a = app();
+        let unpacked = OffloadPattern::from_bits(vec![true, false, true, false]);
+        let mut packed = PatternBits::zeros(a.loop_count());
+        packed.set(0, true);
+        packed.set(2, true);
+        assert_eq!(unpacked, OffloadPattern::from_packed(packed));
+        assert!(unpacked.get(0) && !unpacked.get(1));
     }
 }

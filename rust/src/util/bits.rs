@@ -1,0 +1,269 @@
+//! Packed fixed-capacity bitset — the GA genome / offload-pattern carrier.
+//!
+//! The GA's innermost loop hashes, compares, copies and mutates bit
+//! vectors thousands of times per generation.  `Vec<bool>` pays a heap
+//! allocation plus a byte-per-bit walk for every one of those; this type
+//! packs up to [`MAX_BITS`] bits into four `u64` words held inline, so a
+//! genome is `Copy`, equality/hashing are four word compares, `count()` is
+//! four `count_ones`, and validity against a dependence-free mask is a
+//! word-wise AND (see EXPERIMENTS.md #Perf).
+//!
+//! Invariant: bits at positions >= `len` are always zero, so derived
+//! `Eq`/`Hash` over the raw words are consistent with logical equality.
+
+/// Capacity cap.  The paper's largest application (NAS.BT) has 120 loops;
+/// 256 leaves generous headroom while keeping the type four words wide.
+pub const MAX_BITS: usize = 256;
+/// Number of `u64` words backing a bitset.
+pub const WORDS: usize = MAX_BITS / 64;
+
+/// Fixed-capacity packed bitset of `len <= MAX_BITS` bits.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PatternBits {
+    len: u32,
+    words: [u64; WORDS],
+}
+
+impl PatternBits {
+    /// All-zero bitset of logical length `len`.
+    ///
+    /// Panics if `len > MAX_BITS` — applications beyond 256 loops would
+    /// need a wider backing array (bump [`MAX_BITS`]).
+    #[inline]
+    pub fn zeros(len: usize) -> Self {
+        assert!(
+            len <= MAX_BITS,
+            "PatternBits supports at most {MAX_BITS} bits, got {len} (bump util::bits::MAX_BITS)"
+        );
+        Self { len: len as u32, words: [0; WORDS] }
+    }
+
+    pub fn from_bools(bits: &[bool]) -> Self {
+        let mut out = Self::zeros(bits.len());
+        for (i, &v) in bits.iter().enumerate() {
+            if v {
+                out.words[i >> 6] |= 1u64 << (i & 63);
+            }
+        }
+        out
+    }
+
+    pub fn to_bools(&self) -> Vec<bool> {
+        (0..self.len()).map(|i| self.get(i)).collect()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len(), "bit {i} out of range (len {})", self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len(), "bit {i} out of range (len {})", self.len);
+        if v {
+            self.words[i >> 6] |= 1u64 << (i & 63);
+        } else {
+            self.words[i >> 6] &= !(1u64 << (i & 63));
+        }
+    }
+
+    #[inline]
+    pub fn toggle(&mut self, i: usize) {
+        debug_assert!(i < self.len(), "bit {i} out of range (len {})", self.len);
+        self.words[i >> 6] ^= 1u64 << (i & 63);
+    }
+
+    /// True iff no bit is set.
+    #[inline]
+    pub fn none_set(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    #[inline]
+    pub fn any_set(&self) -> bool {
+        !self.none_set()
+    }
+
+    /// Number of set bits (popcount).
+    #[inline]
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// `self & !mask == 0` — every set bit of `self` is also set in `mask`.
+    #[inline]
+    pub fn is_subset_of(&self, mask: &Self) -> bool {
+        self.words.iter().zip(&mask.words).all(|(a, b)| a & !b == 0)
+    }
+
+    #[inline]
+    pub fn intersects(&self, other: &Self) -> bool {
+        self.words.iter().zip(&other.words).any(|(a, b)| a & b != 0)
+    }
+
+    /// Single-point crossover: bits `[0, cut)` from `self`, `[cut, len)`
+    /// from `other`.
+    pub fn splice(&self, other: &Self, cut: usize) -> Self {
+        debug_assert_eq!(self.len, other.len);
+        debug_assert!(cut <= self.len());
+        let mut out = *self;
+        for w in 0..WORDS {
+            let lo = low_mask(cut, w);
+            out.words[w] = (self.words[w] & lo) | (other.words[w] & !lo);
+        }
+        out
+    }
+
+    /// Indices of set bits, ascending.
+    pub fn ones(&self) -> Ones<'_> {
+        Ones { bits: self, w: 0, cur: self.words[0] }
+    }
+}
+
+/// Mask of bit positions `< cut` within word `w`.
+#[inline]
+fn low_mask(cut: usize, w: usize) -> u64 {
+    let base = w * 64;
+    if cut <= base {
+        0
+    } else if cut >= base + 64 {
+        u64::MAX
+    } else {
+        (1u64 << (cut - base)) - 1
+    }
+}
+
+impl std::fmt::Debug for PatternBits {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PatternBits(len={}, set=[", self.len)?;
+        for (k, i) in self.ones().enumerate() {
+            if k > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{i}")?;
+        }
+        write!(f, "])")
+    }
+}
+
+/// Iterator over set-bit indices (word-at-a-time `trailing_zeros`).
+pub struct Ones<'a> {
+    bits: &'a PatternBits,
+    w: usize,
+    cur: u64,
+}
+
+impl Iterator for Ones<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        loop {
+            if self.cur != 0 {
+                let b = self.cur.trailing_zeros() as usize;
+                self.cur &= self.cur - 1;
+                return Some(self.w * 64 + b);
+            }
+            self.w += 1;
+            if self.w >= WORDS {
+                return None;
+            }
+            self.cur = self.bits.words[self.w];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bools() {
+        let src: Vec<bool> = (0..130).map(|i| i % 3 == 0).collect();
+        let b = PatternBits::from_bools(&src);
+        assert_eq!(b.to_bools(), src);
+        assert_eq!(b.len(), 130);
+        assert_eq!(b.count_ones(), src.iter().filter(|&&x| x).count());
+    }
+
+    #[test]
+    fn set_get_toggle_across_word_boundaries() {
+        let mut b = PatternBits::zeros(200);
+        for &i in &[0, 63, 64, 127, 128, 199] {
+            assert!(!b.get(i));
+            b.set(i, true);
+            assert!(b.get(i));
+            b.toggle(i);
+            assert!(!b.get(i));
+            b.toggle(i);
+            assert!(b.get(i));
+        }
+        assert_eq!(b.count_ones(), 6);
+        assert_eq!(b.ones().collect::<Vec<_>>(), vec![0, 63, 64, 127, 128, 199]);
+    }
+
+    #[test]
+    fn equality_and_hash_ignore_nothing() {
+        use std::collections::HashSet;
+        let a = PatternBits::from_bools(&[true, false, true]);
+        let b = PatternBits::from_bools(&[true, false, true]);
+        let c = PatternBits::from_bools(&[true, true, true]);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        let mut set = HashSet::new();
+        assert!(set.insert(a));
+        assert!(!set.insert(b));
+        assert!(set.insert(c));
+    }
+
+    #[test]
+    fn subset_and_intersection() {
+        let small = PatternBits::from_bools(&[true, false, false, true]);
+        let big = PatternBits::from_bools(&[true, true, false, true]);
+        let other = PatternBits::from_bools(&[false, true, true, false]);
+        assert!(small.is_subset_of(&big));
+        assert!(!big.is_subset_of(&small));
+        assert!(small.intersects(&big));
+        assert!(!small.intersects(&other));
+        assert!(PatternBits::zeros(4).none_set());
+        assert!(small.any_set());
+    }
+
+    #[test]
+    fn splice_is_single_point_crossover() {
+        let a = PatternBits::from_bools(&vec![true; 150]);
+        let b = PatternBits::from_bools(&vec![false; 150]);
+        for cut in [0, 1, 63, 64, 65, 128, 149, 150] {
+            let c = a.splice(&b, cut);
+            for i in 0..150 {
+                assert_eq!(c.get(i), i < cut, "cut {cut} bit {i}");
+            }
+            let d = b.splice(&a, cut);
+            for i in 0..150 {
+                assert_eq!(d.get(i), i >= cut, "cut {cut} bit {i}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at most")]
+    fn capacity_is_enforced() {
+        PatternBits::zeros(MAX_BITS + 1);
+    }
+
+    #[test]
+    fn debug_lists_set_bits() {
+        let b = PatternBits::from_bools(&[true, false, true]);
+        assert_eq!(format!("{b:?}"), "PatternBits(len=3, set=[0,2])");
+    }
+}

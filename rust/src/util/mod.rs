@@ -5,6 +5,7 @@
 //! bench harness and property-test driver live here, each with their own
 //! unit tests.
 
+pub mod bits;
 pub mod cli;
 pub mod json;
 pub mod prop;

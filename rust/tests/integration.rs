@@ -188,7 +188,7 @@ app "usercode" {
     // Reduction loop must never be in the winning pattern.
     if let Some(p) = &chosen.pattern {
         let chk = app.loops.iter().find(|l| l.name == "chk").unwrap();
-        assert!(!p.bits[chk.id.0], "racing reduction selected");
+        assert!(!p.get(chk.id.0), "racing reduction selected");
     }
 }
 

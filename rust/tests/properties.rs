@@ -115,6 +115,50 @@ fn genome_mask_expansion_never_selects_recurrences() {
     });
 }
 
+/// Old-vs-new equivalence: compiling an (app, device) pair into a
+/// MeasurementPlan and measuring through it must return *bit-identical*
+/// `Measurement`s to the direct `DeviceModel::measure` path, for random
+/// apps and random patterns, across all four device models.  This is the
+/// contract that lets the GA hot path use plans while the direct methods
+/// stay the executable specification (devices/plan.rs).
+#[test]
+fn plan_based_measure_is_bit_identical_to_direct() {
+    let tb = Testbed::default();
+    forall(80, |rng| {
+        let app = random_app(rng);
+        let devices: [&dyn DeviceModel; 4] = [&tb.cpu, &tb.manycore, &tb.gpu, &tb.fpga];
+        let plans = [
+            tb.cpu.compile_plan(&app),
+            tb.manycore.compile_plan(&app),
+            tb.gpu.compile_plan(&app),
+            tb.fpga.compile_plan(&app),
+        ];
+        for _ in 0..6 {
+            let p = random_pattern(rng, &app);
+            for (dev, plan) in devices.iter().zip(&plans) {
+                let direct = dev.measure(&app, &p);
+                let fast = plan.measure(&p.bits);
+                assert_eq!(
+                    direct.seconds.to_bits(),
+                    fast.seconds.to_bits(),
+                    "{:?}: direct {} != plan {} for {:?}",
+                    plan.kind(),
+                    direct.seconds,
+                    fast.seconds,
+                    p
+                );
+                assert_eq!(direct.valid, fast.valid, "{:?} validity", plan.kind());
+                assert_eq!(
+                    direct.setup_seconds.to_bits(),
+                    fast.setup_seconds.to_bits(),
+                    "{:?} setup",
+                    plan.kind()
+                );
+            }
+        }
+    });
+}
+
 #[test]
 fn device_models_respect_floors_and_baselines() {
     let tb = Testbed::default();

@@ -1,0 +1,142 @@
+//! Offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The verification environment has no registry access, so this vendored
+//! crate provides exactly the surface `mixoff` uses: `Error`, `Result`,
+//! the `anyhow!` / `bail!` / `ensure!` macros, and the `Context`
+//! extension trait.  Errors are eagerly stringified — no backtraces, no
+//! downcasting — which is all the CLI and tests need.
+
+use std::fmt;
+
+/// A stringly error type.  Like `anyhow::Error`, it deliberately does NOT
+/// implement `std::error::Error`, so the blanket `From` below stays
+/// coherent with the reflexive `From<Error> for Error`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $msg))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+/// Attach context to an error, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 42)
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "boom 42");
+        assert_eq!(format!("{e:?}"), "boom 42");
+    }
+
+    #[test]
+    fn ensure_returns_error() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert!(check(1).is_ok());
+        assert_eq!(check(-1).unwrap_err().to_string(), "x must be positive, got -1");
+    }
+
+    #[test]
+    fn from_std_error_and_context() {
+        fn io() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")?;
+            Ok(s)
+        }
+        assert!(io().is_err());
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("while formatting").unwrap_err();
+        assert!(e.to_string().starts_with("while formatting: "));
+        let o: Option<i32> = None;
+        assert_eq!(o.with_context(|| "missing").unwrap_err().to_string(), "missing");
+    }
+}
