@@ -1,0 +1,47 @@
+//! BATCH SERVICE DEMO: the mixed-destination flow as a concurrent
+//! service — the five named workloads offloaded at once, sharing one
+//! measurement-plan cache (DESIGN.md, "Batch service").
+//!
+//! A production deployment faces a queue of user applications, not a
+//! single one.  `BatchOffloader` runs each through the full schedule
+//! (function blocks → code subtraction → loop searches, early exit on
+//! user requirements) on its own worker, while compiled `(app, device)`
+//! measurement plans are shared so repeats cost nothing to re-plan.
+//!
+//! ```bash
+//! cargo run --release --example batch_service
+//! ```
+
+use mixoff::app::workloads;
+use mixoff::coordinator::BatchOffloader;
+use mixoff::report;
+
+fn main() -> anyhow::Result<()> {
+    let names = ["3mm", "nas_bt", "jacobi2d", "blocked-gemm-app", "vecadd"];
+    let apps = names
+        .iter()
+        .map(|n| workloads::by_name(n))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+
+    let batcher = BatchOffloader::default();
+    let out = batcher.run(&apps);
+    print!("{}", report::render_batch(&out));
+
+    // The service guarantee: concurrency never changes an answer.  Each
+    // app's chosen destination equals a sequential run with the same seed.
+    for (app, batched) in apps.iter().zip(&out.outcomes) {
+        let solo = batcher.offloader.run(app);
+        assert_eq!(
+            batched.chosen.as_ref().map(|c| c.kind),
+            solo.chosen.as_ref().map(|c| c.kind),
+            "{} diverged between batch and sequential",
+            app.name
+        );
+    }
+    println!(
+        "verified: {} destinations identical to sequential runs",
+        out.outcomes.len()
+    );
+    println!("batch_service OK");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Bench: the concurrent batch offload service — throughput (apps/s) and
+//! plan-cache behaviour across the five named workloads, against a
+//! sequential reference of the same coordinator (EXPERIMENTS.md #Perf).
+//!
+//! The two hard lines this bench holds:
+//!  * batch chosen destinations are identical to sequential runs with the
+//!    same seed (concurrency changes wall-clock only);
+//!  * the shared plan cache compiles each (app, device) pair exactly once
+//!    across a batch, however often an application repeats.
+
+#[path = "support.rs"]
+mod support;
+
+use std::time::Instant;
+
+use mixoff::app::workloads;
+use mixoff::coordinator::BatchOffloader;
+use support::{finish, metric};
+
+fn main() {
+    let names = ["3mm", "nas_bt", "jacobi2d", "blocked-gemm-app", "vecadd"];
+    let apps: Vec<_> = names.iter().map(|n| workloads::by_name(n).unwrap()).collect();
+    let b = BatchOffloader::default();
+
+    // Sequential reference: the same coordinator, one application at a time.
+    let t0 = Instant::now();
+    let solo: Vec<_> = apps.iter().map(|a| b.offloader.run(a)).collect();
+    let seq_wall = t0.elapsed().as_secs_f64();
+    metric("batch.sequential.wall", seq_wall, "s", None);
+    metric("batch.sequential.throughput", apps.len() as f64 / seq_wall, "apps/s", None);
+
+    let out = b.run(&apps);
+    metric("batch.wall", out.wall_seconds, "s", None);
+    metric("batch.throughput", out.throughput(), "apps/s", None);
+    metric("batch.speedup_vs_sequential", seq_wall / out.wall_seconds, "x", None);
+    metric("batch.plan_cache.compiles", out.plan_compiles as f64, "plans", None);
+    metric("batch.plan_cache.hits", out.plan_hits as f64, "lookups", None);
+    metric("batch.plan_cache.hit_rate", out.plan_hit_rate(), "frac", None);
+    metric("batch.verify_total", out.total_verify_hours(), "h", None);
+
+    // Destinations must match the sequential runs exactly.
+    let mismatches = out
+        .outcomes
+        .iter()
+        .zip(&solo)
+        .filter(|(a, s)| a.chosen.as_ref().map(|c| c.kind) != s.chosen.as_ref().map(|c| c.kind))
+        .count();
+    assert_eq!(mismatches, 0, "batch diverged from sequential runs");
+    metric("batch.vs_sequential.mismatches", mismatches as f64, "apps", None);
+
+    // Every workload three times: the cache must hold compiles at the
+    // unique-pair count — each (app, device) pair compiled exactly once.
+    let tripled: Vec<_> = apps.iter().cloned().cycle().take(apps.len() * 3).collect();
+    let out3 = b.run(&tripled);
+    assert_eq!(out3.plan_compiles, out.plan_compiles, "repeats must not recompile plans");
+    metric("batch.x3.plan_cache.compiles", out3.plan_compiles as f64, "plans", None);
+    metric("batch.x3.plan_cache.hit_rate", out3.plan_hit_rate(), "frac", None);
+    metric("batch.x3.throughput", out3.throughput(), "apps/s", None);
+
+    finish("batch");
+}

@@ -10,6 +10,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::util::fnv::Fnv;
+
 /// Index into [`Application::loops`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct LoopId(pub usize);
@@ -214,6 +216,47 @@ impl Application {
     /// Does `ancestor` (strictly) contain `id`?
     pub fn is_ancestor(&self, ancestor: LoopId, id: LoopId) -> bool {
         self.ancestors(id).contains(&ancestor)
+    }
+
+    /// Structural fingerprint over everything the device models read:
+    /// loop shapes, costs, dependences, access patterns and array
+    /// footprints.  Used as the plan-cache key (`devices::PlanCache`), so
+    /// two applications with equal fingerprints must measure identically
+    /// on every device.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.bytes(self.name.as_bytes());
+        for name in &self.array_order {
+            h.bytes(name.as_bytes());
+            h.u64(self.arrays[name.as_str()].bytes.to_bits());
+        }
+        for l in &self.loops {
+            h.bytes(l.name.as_bytes());
+            h.u64(match l.parent {
+                Some(p) => p.0 as u64 + 1,
+                None => 0,
+            });
+            h.u64(l.trip_count);
+            h.u64(l.invocations);
+            h.u64(l.flops_per_iter.to_bits());
+            h.u64(l.bytes_read_per_iter.to_bits());
+            h.u64(l.bytes_written_per_iter.to_bits());
+            h.u64(match l.dependence {
+                Dependence::None => 0,
+                Dependence::Reduction => 1,
+                Dependence::Sequential => 2,
+            });
+            h.u64(match l.access {
+                Access::Streaming => 0,
+                Access::Strided => 1,
+                Access::Random => 2,
+            });
+            h.u64(l.array_ids.len() as u64);
+            for &a in &l.array_ids {
+                h.u64(a as u64);
+            }
+        }
+        h.finish()
     }
 
     /// Remove the given loops (used by the coordinator when a function

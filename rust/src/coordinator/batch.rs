@@ -1,0 +1,181 @@
+//! Concurrent batch offload service — the ROADMAP's service skeleton.
+//!
+//! A deployment doesn't offload one application at a time: many user
+//! applications arrive and each must flow through the mixed-destination
+//! verification schedule.  [`BatchOffloader`] fans the flow out over
+//! `util::threadpool::map_parallel` and shares one [`PlanCache`] across
+//! all runs, so each (application, device) measurement plan is compiled
+//! exactly once per batch no matter how many concurrent runs ask for it.
+//!
+//! Every run is independent and seeded, so a batch result is *identical*
+//! (bit-for-bit, per application) to running the same applications
+//! sequentially with the same coordinator — concurrency and plan sharing
+//! change wall-clock only.  `tests` below and `benches/batch.rs` hold
+//! that line.
+
+use std::time::Instant;
+
+use crate::app::ir::Application;
+use crate::devices::PlanCache;
+use crate::util::threadpool::map_parallel;
+
+use super::{MixedOffloader, OffloadOutcome};
+
+/// Runs many applications through the mixed flow concurrently.
+pub struct BatchOffloader {
+    /// The per-application coordinator (schedule, registry, requirements
+    /// and seed are shared by every run in the batch).
+    pub offloader: MixedOffloader,
+    /// Applications in flight at once (distinct from the GA's
+    /// per-generation measurement workers inside each run).
+    pub batch_workers: usize,
+}
+
+impl Default for BatchOffloader {
+    fn default() -> Self {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self {
+            offloader: MixedOffloader {
+                // Batch-level concurrency replaces per-run GA fan-out: with
+                // `cores` applications in flight, per-run measurement
+                // workers would oversubscribe the machine quadratically
+                // (cores² threads during overlapping generations).  The GA
+                // worker count is wall-clock only — results are identical
+                // for any value.
+                workers: 1,
+                ..MixedOffloader::default()
+            },
+            batch_workers: cores,
+        }
+    }
+}
+
+/// What a whole batch produced.
+pub struct BatchOutcome {
+    /// Per-application outcomes, in input order.
+    pub outcomes: Vec<OffloadOutcome>,
+    /// Real wall-clock seconds the batch took.
+    pub wall_seconds: f64,
+    /// Measurement plans compiled (== distinct (app, device) pairs).
+    pub plan_compiles: usize,
+    /// Plan lookups answered from the shared cache.
+    pub plan_hits: usize,
+}
+
+impl BatchOutcome {
+    /// Fraction of plan lookups answered from the cache.
+    pub fn plan_hit_rate(&self) -> f64 {
+        let total = (self.plan_hits + self.plan_compiles) as f64;
+        if total == 0.0 {
+            0.0
+        } else {
+            self.plan_hits as f64 / total
+        }
+    }
+
+    /// Applications processed per wall-clock second.
+    pub fn throughput(&self) -> f64 {
+        if self.wall_seconds == 0.0 {
+            0.0
+        } else {
+            self.outcomes.len() as f64 / self.wall_seconds
+        }
+    }
+
+    /// Total simulated verification hours across the batch.
+    pub fn total_verify_hours(&self) -> f64 {
+        self.outcomes.iter().map(|o| o.clock.total_hours()).sum()
+    }
+}
+
+impl BatchOffloader {
+    /// Offload every application, up to `batch_workers` concurrently.
+    pub fn run(&self, apps: &[Application]) -> BatchOutcome {
+        let cache = PlanCache::new();
+        let t0 = Instant::now();
+        let outcomes = map_parallel(apps.iter().collect(), self.batch_workers, |app| {
+            self.offloader.run_with_cache(app, &cache)
+        });
+        BatchOutcome {
+            outcomes,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            plan_compiles: cache.compiles(),
+            plan_hits: cache.hits(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::workloads;
+
+    fn apps(names: &[&str]) -> Vec<Application> {
+        names.iter().map(|n| workloads::by_name(n).unwrap()).collect()
+    }
+
+    /// The acceptance line: batch results are bit-identical to sequential
+    /// runs of the same coordinator on the same applications.
+    #[test]
+    fn batch_matches_sequential_runs_exactly() {
+        let apps = apps(&["vecadd", "jacobi2d", "blocked-gemm-app"]);
+        let b = BatchOffloader::default();
+        let batch = b.run(&apps);
+        assert_eq!(batch.outcomes.len(), apps.len());
+        for (app, out) in apps.iter().zip(&batch.outcomes) {
+            let solo = b.offloader.run(app);
+            assert_eq!(out.app_name, solo.app_name);
+            assert_eq!(
+                out.chosen.as_ref().map(|c| c.kind),
+                solo.chosen.as_ref().map(|c| c.kind),
+                "{}",
+                app.name
+            );
+            assert_eq!(
+                out.chosen.as_ref().map(|c| c.seconds.to_bits()),
+                solo.chosen.as_ref().map(|c| c.seconds.to_bits())
+            );
+            assert_eq!(out.trials.len(), solo.trials.len());
+            for (a, s) in out.trials.iter().zip(&solo.trials) {
+                assert_eq!(a.kind, s.kind);
+                assert_eq!(a.skipped, s.skipped);
+                assert_eq!(a.seconds.to_bits(), s.seconds.to_bits());
+                assert_eq!(a.detail, s.detail);
+            }
+            assert_eq!(
+                out.clock.total_seconds().to_bits(),
+                solo.clock.total_seconds().to_bits()
+            );
+        }
+    }
+
+    /// Repeated applications hit the shared plan cache instead of
+    /// recompiling: vecadd's loop trials compile (app, device) plans for
+    /// many-core, GPU and FPGA once, every repeat is three hits.
+    #[test]
+    fn plan_cache_dedups_repeated_apps() {
+        let apps = apps(&["vecadd", "vecadd", "vecadd"]);
+        let b = BatchOffloader::default();
+        let batch = b.run(&apps);
+        assert_eq!(batch.plan_compiles, 3, "one plan per device for the one distinct app");
+        assert_eq!(batch.plan_hits, 6, "two repeats x three devices");
+        assert!((batch.plan_hit_rate() - 6.0 / 9.0).abs() < 1e-12);
+        // Identical inputs, identical outputs.
+        let first = &batch.outcomes[0];
+        for out in &batch.outcomes[1..] {
+            assert_eq!(
+                out.chosen.as_ref().map(|c| (c.kind, c.seconds.to_bits())),
+                first.chosen.as_ref().map(|c| (c.kind, c.seconds.to_bits()))
+            );
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let batch = BatchOffloader::default().run(&[]);
+        assert!(batch.outcomes.is_empty());
+        assert_eq!(batch.plan_compiles, 0);
+        assert_eq!(batch.plan_hit_rate(), 0.0);
+        assert_eq!(batch.throughput(), 0.0);
+    }
+}

@@ -1,22 +1,35 @@
 //! The mixed-destination coordinator — the paper's core contribution
-//! (sec. 3.3): run the six offload trials in the proposed order, stop
+//! (sec. 3.3): run the offload trials in a schedule-driven order, stop
 //! early when the user's target is met, subtract offloaded function
 //! blocks from the code before the loop trials, and pick the final
 //! destination.
+//!
+//! The coordinator itself is a generic executor (see DESIGN.md): a
+//! [`Schedule`] value supplies the trial order (paper order by default),
+//! and every (device × method) pair resolves through the
+//! [`StrategyRegistry`], so new devices and methods plug in without
+//! touching this module.  `batch.rs` runs many applications through the
+//! same executor concurrently.
 
+pub mod batch;
 pub mod requirements;
+pub mod schedule;
 pub mod sizing;
 pub mod trial;
 
-use crate::app::ir::{Application, LoopId};
-use crate::devices::{pricing, DeviceKind, SimClock, Testbed};
-use crate::ga::GaConfig;
-use crate::offload::fpga_loop::{self, FpgaSearchConfig};
-use crate::offload::function_block::{self, BlockDb, FbOffloadOutcome};
-use crate::offload::pattern::OffloadPattern;
-use crate::offload::{gpu_loop, manycore_loop};
+use std::borrow::Cow;
+use std::collections::BTreeMap;
 
+use crate::app::ir::{Application, LoopId};
+use crate::devices::{pricing, PlanCache, SimClock, Testbed};
+use crate::offload::fpga_loop::FpgaSearchConfig;
+use crate::offload::function_block::{BlockDb, FbOffloadOutcome};
+use crate::offload::pattern::OffloadPattern;
+use crate::offload::strategy::{StrategyRegistry, TrialCtx};
+
+pub use batch::{BatchOffloader, BatchOutcome};
 pub use requirements::UserRequirements;
+pub use schedule::{remap_pattern, Schedule, ScheduleStep};
 pub use trial::{TrialKind, TrialRecord};
 
 /// Final deployment decision.
@@ -46,7 +59,9 @@ impl OffloadOutcome {
     }
 }
 
-/// The coordinator.  Owns the simulated verification environment.
+/// The coordinator.  Owns the simulated verification environment, the
+/// trial schedule, and the strategy registry the schedule resolves
+/// against.
 pub struct MixedOffloader {
     pub testbed: Testbed,
     pub db: BlockDb,
@@ -55,6 +70,10 @@ pub struct MixedOffloader {
     pub fpga_cfg: FpgaSearchConfig,
     /// Concurrent measurements per GA generation (wall clock only).
     pub workers: usize,
+    /// Trial order (paper order by default; see [`Schedule`]).
+    pub schedule: Schedule,
+    /// (device × method) → strategy bindings; register new pairs here.
+    pub registry: StrategyRegistry,
 }
 
 impl Default for MixedOffloader {
@@ -66,166 +85,142 @@ impl Default for MixedOffloader {
             ga_seed: 0xC0FFEE,
             fpga_cfg: FpgaSearchConfig::default(),
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            schedule: Schedule::paper(),
+            registry: StrategyRegistry::standard(),
         }
     }
 }
 
 impl MixedOffloader {
-    fn ga_config(&self, app: &Application) -> GaConfig {
-        let eligible = crate::analysis::dependence::genome_mask(app)
-            .iter()
-            .filter(|&&m| m)
-            .count();
-        GaConfig {
-            seed: self.ga_seed,
-            workers: self.workers,
-            ..GaConfig::sized_for(eligible)
-        }
+    /// Run the full mixed-destination flow on `app` (the configured
+    /// schedule, a private plan cache).
+    pub fn run(&self, app: &Application) -> OffloadOutcome {
+        self.run_with_cache(app, &PlanCache::new())
     }
 
-    /// Run the full mixed-destination flow on `app`.
-    pub fn run(&self, app: &Application) -> OffloadOutcome {
+    /// Run the flow with an explicit schedule (ordering experiments,
+    /// custom deployments).
+    pub fn run_scheduled(&self, app: &Application, schedule: &Schedule) -> OffloadOutcome {
+        self.execute(app, schedule, &PlanCache::new())
+    }
+
+    /// Run the configured schedule measuring through a shared plan cache —
+    /// the batch service entry point (each (app, device) pair compiles
+    /// once across all concurrent runs sharing `plans`).
+    pub fn run_with_cache(&self, app: &Application, plans: &PlanCache) -> OffloadOutcome {
+        self.execute(app, &self.schedule, plans)
+    }
+
+    /// The generic schedule executor: walk the steps, resolve each trial
+    /// through the registry, track the running best for early exit, and
+    /// subtract offloaded blocks where the schedule says to.
+    fn execute(
+        &self,
+        app: &Application,
+        schedule: &Schedule,
+        plans: &PlanCache,
+    ) -> OffloadOutcome {
         let baseline = self.testbed.baseline_seconds(app);
         let mut clock = SimClock::new();
         let mut trials: Vec<TrialRecord> = Vec::new();
         let mut best_so_far: Option<(f64, f64)> = None; // (improvement, price)
-
-        // ---- Phase 1: function blocks (many-core -> GPU -> FPGA) ----
         let mut best_fb: Option<FbOffloadOutcome> = None;
-        for kind in &TrialKind::order()[..3] {
-            if let Some(reason) = self.pre_skip(kind, &best_so_far) {
-                trials.push(TrialRecord::skipped(*kind, reason, baseline));
-                continue;
-            }
-            let device = self.testbed.device(kind.device);
-            let out = function_block::offload(app, device, &self.db);
-            clock.charge(kind.label(), out.simulated_cost_s);
-            let improvement = out.improvement();
-            let detail = if out.offloaded() {
-                let names: Vec<String> = out
-                    .replaced
-                    .iter()
-                    .map(|r| format!("{} ({:?})", r.name, r.matched))
-                    .collect();
-                format!("replaced {}", names.join(", "))
-            } else {
-                "no DB match".to_string()
-            };
-            trials.push(TrialRecord {
-                kind: *kind,
-                skipped: None,
-                seconds: out.seconds,
-                improvement,
-                offloaded: out.offloaded(),
-                cost_s: out.simulated_cost_s,
-                detail,
-                pattern: None,
-            });
-            if out.offloaded() {
-                let better = best_fb
-                    .as_ref()
-                    .map(|b| out.seconds < b.seconds)
-                    .unwrap_or(true);
-                if better {
-                    best_fb = Some(out.clone());
-                }
-                self.update_best(&mut best_so_far, improvement, device.price_usd());
-            }
-        }
+        // The working code: `app` until a SubtractBlocks step folds the
+        // best function-block result out of it (sec. 3.3.1).
+        let mut cur_app: Cow<'_, Application> = Cow::Borrowed(app);
+        let mut loop_map: Option<BTreeMap<LoopId, LoopId>> = None;
+        // Library seconds of subtracted blocks, folded into later trials.
+        let mut fb_extra_seconds = 0.0;
+        let mut fb_note = String::new();
 
-        // ---- Code subtraction: loop trials see the app minus offloaded
-        // function blocks (sec. 3.3.1). ----
-        let (loop_app, loop_map, fb_extra_seconds, fb_note) = match &best_fb {
-            Some(fb) if fb.offloaded() => {
-                let ids: Vec<LoopId> = fb
-                    .replaced
-                    .iter()
-                    .filter_map(|r| {
-                        app.blocks.iter().find(|b| b.name == r.name).map(|b| b.loop_ids.clone())
-                    })
-                    .flatten()
-                    .collect();
-                let (cut, mapping) = app.without_loops(&ids);
-                let lib_total: f64 = fb.replaced.iter().map(|r| r.library_seconds).sum();
-                (cut, Some(mapping), lib_total, format!(" + FB on {}", fb.device.label()))
-            }
-            _ => (app.clone(), None, 0.0, String::new()),
-        };
-        // Re-express a reduced-app pattern in the ORIGINAL app's loop ids so
-        // downstream consumers (codegen, reports) always index `app`.
-        let remap = |p: &OffloadPattern| -> OffloadPattern {
-            match &loop_map {
-                None => *p,
-                Some(mapping) => {
-                    let mut bits = crate::util::bits::PatternBits::zeros(app.loop_count());
-                    for (old, new) in mapping {
-                        bits.set(old.0, p.get(new.0));
+        for step in &schedule.steps {
+            let kind = match step {
+                ScheduleStep::SubtractBlocks => {
+                    if let Some(fb) = best_fb.as_ref().filter(|fb| fb.offloaded()) {
+                        let ids: Vec<LoopId> = fb
+                            .replaced
+                            .iter()
+                            .filter_map(|r| {
+                                app.blocks
+                                    .iter()
+                                    .find(|b| b.name == r.name)
+                                    .map(|b| b.loop_ids.clone())
+                            })
+                            .flatten()
+                            .collect();
+                        let (cut, mapping) = app.without_loops(&ids);
+                        fb_extra_seconds =
+                            fb.replaced.iter().map(|r| r.library_seconds).sum();
+                        fb_note = format!(" + FB on {}", fb.device.label());
+                        cur_app = Cow::Owned(cut);
+                        loop_map = Some(mapping);
                     }
-                    OffloadPattern::from_packed(bits)
+                    continue;
                 }
-            }
-        };
+                ScheduleStep::Trial(kind) => kind,
+            };
 
-        // ---- Phase 2: loop offload (many-core -> GPU -> FPGA) ----
-        // When the dependence-free genome mask is all-false there is no
-        // search space: don't run generations of empty work (the old
-        // behaviour for `GaConfig::sized_for(0)`), record why instead.
-        // The FPGA method tolerates recurrences (pipelines run them at
-        // II > 1), so it only short-circuits when no loops remain at all.
-        let eligible_loops = crate::analysis::dependence::eligible(&loop_app).len();
-        for kind in &TrialKind::order()[3..] {
             if let Some(reason) = self.pre_skip(kind, &best_so_far) {
                 trials.push(TrialRecord::skipped(*kind, reason, baseline));
                 continue;
             }
-            let ga_based = matches!(kind.device, DeviceKind::ManyCore | DeviceKind::Gpu);
-            if loop_app.loop_count() == 0 || (ga_based && eligible_loops == 0) {
-                let why = if loop_app.loop_count() == 0 {
-                    "no eligible loops (all loops offloaded as function blocks)"
-                } else {
-                    "no eligible loops (every loop carries a sequential dependence)"
-                };
-                let mut rec = TrialRecord::skipped(*kind, why, baseline);
-                rec.detail = why.to_string();
-                trials.push(rec);
+            let Some(strategy) = self.registry.get(kind.device, kind.method) else {
+                let reason = format!("no strategy registered for {}", kind.label());
+                trials.push(TrialRecord::skipped(*kind, reason, baseline));
+                continue;
+            };
+            if let Some(reason) = strategy.pre_check(&cur_app) {
+                trials.push(TrialRecord::skipped(*kind, reason, baseline));
                 continue;
             }
-            let cfg = self.ga_config(&loop_app);
-            let out = match kind.device {
-                DeviceKind::ManyCore => {
-                    manycore_loop::search(&loop_app, &self.testbed.manycore, cfg)
-                }
-                DeviceKind::Gpu => gpu_loop::search(&loop_app, &self.testbed.gpu, cfg),
-                DeviceKind::Fpga => {
-                    fpga_loop::search(&loop_app, &self.testbed.fpga, self.fpga_cfg)
-                }
-                DeviceKind::CpuSingle => unreachable!(),
+
+            let ctx = TrialCtx {
+                testbed: &self.testbed,
+                db: &self.db,
+                ga_seed: self.ga_seed,
+                ga_workers: self.workers,
+                fpga_cfg: self.fpga_cfg,
+                fb_note: &fb_note,
+                plans,
             };
-            clock.charge(kind.label(), out.simulated_cost_s);
-            let seconds = out.seconds() + fb_extra_seconds;
+            let out = strategy.execute(&cur_app, kind.device, &ctx);
+            clock.charge(kind.label(), out.cost_s);
+            let seconds = out.seconds + fb_extra_seconds;
             let improvement = baseline / seconds;
-            let detail = match (&out.best, out.offloaded()) {
-                (Some((p, _)), _) => {
-                    format!("{} loops offloaded{} ({} patterns measured)", p.count(), fb_note, out.evaluations)
-                }
-                (None, _) => format!(
-                    "no pattern beat the baseline ({} patterns measured)",
-                    out.evaluations
-                ),
-            };
-            let device = self.testbed.device(kind.device);
+            // Patterns over a reduced app are re-expressed in the ORIGINAL
+            // app's loop ids so downstream consumers (codegen, reports)
+            // always index `app`.
+            let pattern = out.pattern.as_ref().map(|p| match &loop_map {
+                Some(mapping) => remap_pattern(app, mapping, p),
+                None => *p,
+            });
             trials.push(TrialRecord {
                 kind: *kind,
                 skipped: None,
                 seconds,
                 improvement,
-                offloaded: out.offloaded(),
-                cost_s: out.simulated_cost_s,
-                detail,
-                pattern: out.best.as_ref().map(|(p, _)| remap(p)),
+                offloaded: out.offloaded,
+                cost_s: out.cost_s,
+                detail: out.detail,
+                pattern,
             });
-            if out.offloaded() {
-                self.update_best(&mut best_so_far, improvement, device.price_usd());
+            if out.offloaded {
+                // Only pre-subtraction FB results feed `best_fb`: once a
+                // SubtractBlocks step has reduced the working code, an FB
+                // trial measures a *different* application, so its seconds
+                // are not comparable and it must not drive a later
+                // subtraction of the original.
+                if loop_map.is_none() {
+                    if let Some(fb) = out.fb {
+                        let better =
+                            best_fb.as_ref().map(|b| fb.seconds < b.seconds).unwrap_or(true);
+                        if better {
+                            best_fb = Some(fb);
+                        }
+                    }
+                }
+                let price = self.testbed.device(kind.device).price_usd();
+                self.update_best(&mut best_so_far, improvement, price);
             }
         }
 
@@ -298,6 +293,7 @@ impl MixedOffloader {
 mod tests {
     use super::*;
     use crate::app::workloads::extra;
+    use crate::devices::DeviceKind;
     use crate::offload::pattern::Method;
 
     #[test]

@@ -1,0 +1,153 @@
+//! Trial schedules: the data that drives the coordinator's executor.
+//!
+//! The paper's verification flow (sec. 3.3.1) is one *ordering policy*
+//! over the open set of (device × method) trials: function blocks before
+//! loops, many-core before GPU, FPGA last, with the offloaded blocks
+//! subtracted from the code before the loop trials.  Encoding that policy
+//! as a [`Schedule`] value — a list of [`ScheduleStep`]s — lets the same
+//! executor run the paper order, a price-ascending order, or any custom
+//! order a deployment wants, without touching the coordinator core.
+
+use std::collections::BTreeMap;
+
+use crate::app::ir::{Application, LoopId};
+use crate::devices::pricing::price_band;
+use crate::offload::pattern::{Method, OffloadPattern};
+use crate::util::bits::PatternBits;
+
+use super::trial::TrialKind;
+
+/// One step of the verification flow.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleStep {
+    /// Run one (device × method) trial through the strategy registry.
+    Trial(TrialKind),
+    /// Code subtraction (sec. 3.3.1): fold the best function-block result
+    /// so far into the working code — later trials run on the original app
+    /// minus the replaced blocks, and their recorded seconds include the
+    /// blocks' library time.  A no-op when no block was offloaded.  FB
+    /// trials scheduled *after* an effective subtraction measure the
+    /// reduced code and never feed a later subtraction (their seconds are
+    /// not comparable with pre-subtraction results).
+    SubtractBlocks,
+}
+
+/// An ordered verification plan.  `Default` is the paper's proposal.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schedule {
+    pub steps: Vec<ScheduleStep>,
+}
+
+impl Schedule {
+    /// The paper's proposed order: FB (many-core → GPU → FPGA), subtract
+    /// the offloaded blocks, then loops (many-core → GPU → FPGA).
+    pub fn paper() -> Self {
+        Self::from_trials(&TrialKind::order())
+    }
+
+    /// Cheapest destinations first (price band ascending, paper order
+    /// within a band): all many-core/GPU trials before anything FPGA.
+    /// Useful when the user cap is likely to exclude the expensive band —
+    /// no FPGA synthesis hours are burnt before the cheap band answers.
+    pub fn price_ascending() -> Self {
+        let mut kinds = TrialKind::order().to_vec();
+        kinds.sort_by_key(|k| price_band(k.device));
+        Self::from_trials(&kinds)
+    }
+
+    /// Custom trial order.  A [`ScheduleStep::SubtractBlocks`] step is
+    /// inserted before the first loop trial that has a function-block
+    /// trial somewhere ahead of it, mirroring the paper's code
+    /// subtraction; FB trials scheduled *after* that point run on the
+    /// reduced code.
+    pub fn from_trials(kinds: &[TrialKind]) -> Self {
+        let mut steps = Vec::with_capacity(kinds.len() + 1);
+        let mut subtracted = false;
+        for (i, k) in kinds.iter().enumerate() {
+            let fb_before = kinds[..i].iter().any(|p| p.method == Method::FunctionBlock);
+            if !subtracted && k.method == Method::LoopOffload && fb_before {
+                steps.push(ScheduleStep::SubtractBlocks);
+                subtracted = true;
+            }
+            steps.push(ScheduleStep::Trial(*k));
+        }
+        Self { steps }
+    }
+
+    /// The trial kinds in execution order (subtraction steps elided).
+    pub fn trials(&self) -> impl Iterator<Item = TrialKind> + '_ {
+        self.steps.iter().filter_map(|s| match s {
+            ScheduleStep::Trial(k) => Some(*k),
+            ScheduleStep::SubtractBlocks => None,
+        })
+    }
+}
+
+impl Default for Schedule {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+/// Re-express a pattern over a `without_loops`-reduced application in the
+/// ORIGINAL application's loop ids, so downstream consumers (codegen,
+/// reports) always index the original app.  `mapping` is the old → new id
+/// map returned by [`Application::without_loops`]; bits of removed loops
+/// stay zero, so popcount is preserved and every set bit names a loop that
+/// exists in `original`.
+pub fn remap_pattern(
+    original: &Application,
+    mapping: &BTreeMap<LoopId, LoopId>,
+    p: &OffloadPattern,
+) -> OffloadPattern {
+    let mut bits = PatternBits::zeros(original.loop_count());
+    for (old, new) in mapping {
+        bits.set(old.0, p.get(new.0));
+    }
+    OffloadPattern::from_packed(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::DeviceKind;
+
+    #[test]
+    fn paper_schedule_is_order_with_one_subtraction() {
+        let s = Schedule::paper();
+        assert_eq!(s, Schedule::default());
+        assert_eq!(s.trials().collect::<Vec<_>>(), TrialKind::order().to_vec());
+        assert_eq!(s.steps.len(), 7);
+        // Subtraction sits exactly between the FB and loop phases.
+        assert_eq!(s.steps[3], ScheduleStep::SubtractBlocks);
+    }
+
+    #[test]
+    fn price_ascending_defers_the_fpga_band() {
+        let s = Schedule::price_ascending();
+        let kinds: Vec<TrialKind> = s.trials().collect();
+        assert_eq!(kinds.len(), 6);
+        let first_fpga = kinds.iter().position(|k| k.device == DeviceKind::Fpga).unwrap();
+        assert!(
+            kinds[..first_fpga].iter().all(|k| k.device != DeviceKind::Fpga)
+                && kinds[first_fpga..].iter().all(|k| k.device == DeviceKind::Fpga),
+            "{kinds:?}"
+        );
+        // Subtraction still precedes the first loop trial.
+        let sub = s.steps.iter().position(|x| *x == ScheduleStep::SubtractBlocks).unwrap();
+        let first_loop = s
+            .steps
+            .iter()
+            .position(|x| matches!(x, ScheduleStep::Trial(k) if k.method == Method::LoopOffload))
+            .unwrap();
+        assert!(sub < first_loop);
+    }
+
+    #[test]
+    fn loops_only_schedule_has_no_subtraction() {
+        let kinds = [TrialKind::order()[3], TrialKind::order()[4]];
+        let s = Schedule::from_trials(&kinds);
+        assert_eq!(s.steps.len(), 2);
+        assert!(s.steps.iter().all(|x| matches!(x, ScheduleStep::Trial(_))));
+    }
+}

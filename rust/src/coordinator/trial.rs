@@ -58,15 +58,18 @@ pub struct TrialRecord {
 }
 
 impl TrialRecord {
+    /// A trial that never ran.  The reason is carried in `detail` too, so
+    /// report consumers that only read `detail` still see why.
     pub fn skipped(kind: TrialKind, reason: impl Into<String>, baseline: f64) -> Self {
+        let reason = reason.into();
         Self {
             kind,
-            skipped: Some(reason.into()),
+            skipped: Some(reason.clone()),
             seconds: baseline,
             improvement: 1.0,
             offloaded: false,
             cost_s: 0.0,
-            detail: String::new(),
+            detail: reason,
             pattern: None,
         }
     }
@@ -93,5 +96,14 @@ mod tests {
     fn labels_are_readable() {
         let t = TrialKind::order()[4];
         assert_eq!(t.label(), "GPU loop offload");
+    }
+
+    #[test]
+    fn skipped_records_carry_the_reason_in_detail() {
+        let rec = TrialRecord::skipped(TrialKind::order()[0], "price cap", 10.0);
+        assert_eq!(rec.skipped.as_deref(), Some("price cap"));
+        assert_eq!(rec.detail, "price cap");
+        assert_eq!(rec.cost_s, 0.0);
+        assert!(!rec.offloaded);
     }
 }

@@ -82,6 +82,14 @@ impl DeviceModel for CpuSingle {
         super::MeasurementPlan::for_cpu(self, app)
     }
 
+    fn config_fingerprint(&self) -> u64 {
+        let mut h = crate::util::fnv::Fnv::new();
+        for v in [self.flops, self.bw_stream, self.bw_strided, self.bw_random, self.compile_s] {
+            h.u64(v.to_bits());
+        }
+        h.finish()
+    }
+
     fn fb_library_seconds(&self, flops: f64, bytes: f64, _transfer: f64) -> f64 {
         // A tuned (blocked, vectorized) CPU library still runs on one core
         // here; assume 4x the naive flop rate and streaming-quality access.

@@ -153,6 +153,25 @@ impl DeviceModel for Fpga {
         super::MeasurementPlan::for_fpga(self, app)
     }
 
+    fn config_fingerprint(&self) -> u64 {
+        let mut h = crate::util::fnv::Fnv::new();
+        h.u64(self.host.config_fingerprint());
+        for v in [
+            self.clock_hz,
+            self.flops_per_cycle_per_unit,
+            self.unroll,
+            self.bw_mem,
+            self.bw_pcie,
+            self.synthesis_s,
+            self.budget.dsps,
+            self.budget.alms,
+            self.budget.bram_kb,
+        ] {
+            h.u64(v.to_bits());
+        }
+        h.finish()
+    }
+
     fn fb_library_seconds(&self, flops: f64, bytes: f64, transfer_bytes: f64) -> f64 {
         // Hand-tuned IP core: deeper pipeline than OpenCL codegen.
         (flops / 150.0e9).max(bytes / self.bw_mem) + transfer_bytes / self.bw_pcie

@@ -163,6 +163,16 @@ impl DeviceModel for Gpu {
         super::MeasurementPlan::for_gpu(self, app)
     }
 
+    fn config_fingerprint(&self) -> u64 {
+        let mut h = crate::util::fnv::Fnv::new();
+        h.u64(self.host.config_fingerprint());
+        for v in [self.flops, self.bw_dev, self.bw_pcie, self.launch_s, self.compile_s] {
+            h.u64(v.to_bits());
+        }
+        h.u64(self.hoist_transfers as u64);
+        h.finish()
+    }
+
     fn fb_library_seconds(&self, flops: f64, bytes: f64, transfer_bytes: f64) -> f64 {
         // cuBLAS/cuFFT-class tuned kernels: near device peak.
         (flops / (4.0e12)).max(bytes * 0.25 / self.bw_dev) + transfer_bytes / self.bw_pcie

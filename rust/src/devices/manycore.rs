@@ -106,6 +106,22 @@ impl DeviceModel for ManyCore {
         super::MeasurementPlan::for_manycore(self, app)
     }
 
+    fn config_fingerprint(&self) -> u64 {
+        let mut h = crate::util::fnv::Fnv::new();
+        h.u64(self.single.config_fingerprint());
+        for v in [
+            self.threads_eff,
+            self.bw_par_stream,
+            self.bw_par_strided,
+            self.bw_par_random,
+            self.omp_overhead_s,
+            self.compile_s,
+        ] {
+            h.u64(v.to_bits());
+        }
+        h.finish()
+    }
+
     fn fb_library_seconds(&self, flops: f64, bytes: f64, _transfer: f64) -> f64 {
         // Tuned threaded library (MKL/BLIS-class): near-peak threaded flops,
         // streaming-bandwidth bound.

@@ -25,7 +25,7 @@ pub use cpu::CpuSingle;
 pub use fpga::Fpga;
 pub use gpu::Gpu;
 pub use manycore::ManyCore;
-pub use plan::MeasurementPlan;
+pub use plan::{MeasurementPlan, PlanCache};
 
 /// The three offload destinations plus the single-core baseline.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -90,6 +90,12 @@ pub trait DeviceModel: Sync {
     /// Compile `app` into a [`MeasurementPlan`] for this device (flat
     /// per-loop tables; see devices/plan.rs).
     fn compile_plan(&self, app: &Application) -> MeasurementPlan;
+
+    /// Fingerprint of every model parameter that affects measurement.
+    /// Part of the [`PlanCache`] key: two device instances with different
+    /// configurations (e.g. `Gpu { hoist_transfers: false, .. }`) must
+    /// never share a compiled plan.
+    fn config_fingerprint(&self) -> u64;
 
     /// Run time of a device-tuned library implementation of a function
     /// block with the given totals (CUDA library / OpenMP MKL-like / FPGA

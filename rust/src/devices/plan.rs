@@ -23,6 +23,10 @@
 //! asserts bit-for-bit equality between both paths on random apps and
 //! patterns for all four device models.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
 use crate::analysis::resources::{estimate, FpgaResources, ResourceEstimate};
 use crate::app::ir::{Application, Dependence, LoopId};
 use crate::util::bits::PatternBits;
@@ -31,7 +35,7 @@ use super::cpu::CpuSingle;
 use super::fpga::Fpga;
 use super::gpu::Gpu;
 use super::manycore::ManyCore;
-use super::{DeviceKind, Measurement};
+use super::{DeviceKind, DeviceModel, Measurement};
 
 const NO_PARENT: u32 = u32::MAX;
 
@@ -412,9 +416,70 @@ impl MeasurementPlan {
     }
 }
 
+/// Concurrent cache of compiled [`MeasurementPlan`]s, keyed by
+/// ([`Application::fingerprint`], device kind,
+/// [`DeviceModel::config_fingerprint`]) — the config component keeps
+/// differently-parameterized instances of the same device kind (e.g.
+/// `Gpu { hoist_transfers: false, .. }`) from sharing a plan.
+///
+/// One offload run compiles each (app, device) pair at most once anyway;
+/// the cache is for the *batch* service (coordinator/batch.rs), where many
+/// applications flow through the six-trial schedule concurrently and the
+/// same app may appear more than once.  The map lock is held across
+/// compilation so each pair is compiled exactly once even under
+/// contention — plan compilation is O(loops × depth), far cheaper than the
+/// duplicated compile it prevents.
+#[derive(Default)]
+pub struct PlanCache {
+    plans: Mutex<HashMap<(u64, DeviceKind, u64), Arc<MeasurementPlan>>>,
+    hits: AtomicUsize,
+    compiles: AtomicUsize,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The plan for (`app`, `device`), compiling on first use.
+    pub fn plan(&self, app: &Application, device: &dyn DeviceModel) -> Arc<MeasurementPlan> {
+        let key = (app.fingerprint(), device.kind(), device.config_fingerprint());
+        let mut map = self.plans.lock().unwrap();
+        if let Some(plan) = map.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(plan);
+        }
+        self.compiles.fetch_add(1, Ordering::Relaxed);
+        let plan = Arc::new(device.compile_plan(app));
+        map.insert(key, Arc::clone(&plan));
+        plan
+    }
+
+    /// Lookups answered from the cache.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Plans actually compiled (== distinct (app, device) pairs seen).
+    pub fn compiles(&self) -> usize {
+        self.compiles.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of lookups answered from the cache (0.0 when unused).
+    pub fn hit_rate(&self) -> f64 {
+        let hits = self.hits() as f64;
+        let total = hits + self.compiles() as f64;
+        if total == 0.0 {
+            0.0
+        } else {
+            hits / total
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
-    use super::super::{DeviceModel, Testbed};
+    use super::super::Testbed;
     use super::*;
     use crate::app::workloads::{nas_bt, threemm};
     use crate::offload::pattern::OffloadPattern;
@@ -484,6 +549,55 @@ mod tests {
                 assert_eq!(plan.is_root(&bits, &cov, l.id.0), roots.contains(&l.id));
             }
         }
+    }
+
+    #[test]
+    fn plan_cache_compiles_each_pair_once() {
+        let tb = Testbed::default();
+        let cache = PlanCache::new();
+        let a = threemm::build(100);
+        let b = nas_bt::build(8, 5);
+        let p1 = cache.plan(&a, &tb.gpu);
+        let p2 = cache.plan(&a, &tb.gpu);
+        assert!(Arc::ptr_eq(&p1, &p2), "second lookup must reuse the plan");
+        cache.plan(&a, &tb.manycore);
+        cache.plan(&b, &tb.gpu);
+        cache.plan(&b, &tb.gpu);
+        assert_eq!(cache.compiles(), 3);
+        assert_eq!(cache.hits(), 2);
+        assert!((cache.hit_rate() - 0.4).abs() < 1e-12);
+        // Cached plans measure identically to freshly compiled ones.
+        let fresh = tb.gpu.compile_plan(&a);
+        let bits = PatternBits::zeros(a.loop_count());
+        assert_same(fresh.measure(&bits), p1.measure(&bits));
+    }
+
+    #[test]
+    fn plan_cache_distinguishes_device_configs() {
+        let cache = PlanCache::new();
+        let app = threemm::build(100);
+        let hoisted = Gpu::default();
+        let unhoisted = Gpu { hoist_transfers: false, ..Gpu::default() };
+        let p1 = cache.plan(&app, &hoisted);
+        let p2 = cache.plan(&app, &unhoisted);
+        assert!(!Arc::ptr_eq(&p1, &p2), "configs must not share a plan");
+        assert_eq!(cache.compiles(), 2);
+        assert_eq!(cache.hits(), 0);
+        // The cached plan measures exactly like a fresh compile of its
+        // own device config.
+        let pattern = OffloadPattern::selecting(&app, &[app.blocks[0].loop_ids[0]]);
+        assert_same(unhoisted.compile_plan(&app).measure(&pattern.bits), p2.measure(&pattern.bits));
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_apps_and_survives_clone() {
+        let a = threemm::build(100);
+        assert_eq!(a.fingerprint(), a.clone().fingerprint());
+        assert_ne!(a.fingerprint(), threemm::build(101).fingerprint());
+        assert_ne!(a.fingerprint(), nas_bt::build(8, 5).fingerprint());
+        // Subtracting a nest changes the structure, hence the key.
+        let (cut, _) = a.without_loops(&[a.blocks[0].loop_ids[0]]);
+        assert_ne!(a.fingerprint(), cut.fingerprint());
     }
 
     #[test]

@@ -31,6 +31,9 @@ pub mod runtime;
 pub mod util;
 
 pub use app::ir::{Application, FunctionBlockKind, Loop, LoopId};
-pub use coordinator::{MixedOffloader, OffloadOutcome, UserRequirements};
-pub use devices::{DeviceKind, Testbed};
+pub use coordinator::{
+    BatchOffloader, BatchOutcome, MixedOffloader, OffloadOutcome, Schedule, UserRequirements,
+};
+pub use devices::{DeviceKind, PlanCache, Testbed};
 pub use offload::pattern::OffloadPattern;
+pub use offload::strategy::{OffloadStrategy, StrategyRegistry, TrialCtx, TrialOutcome};

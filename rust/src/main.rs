@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   offload <workload>   run the full mixed flow on one workload
+//!   batch [workloads…]   run many workloads through the flow concurrently
 //!   figure4              reproduce the paper's fig. 4 (3mm + NAS.BT)
 //!   inspect <workload>   loop structure, profile, FB detection
 //!   devices              the simulated verification environment (fig. 3)
@@ -16,7 +17,7 @@ use anyhow::{anyhow, bail, Result};
 use mixoff::analysis::{intensity, Profile};
 use mixoff::app::workloads;
 use mixoff::codegen;
-use mixoff::coordinator::{MixedOffloader, UserRequirements};
+use mixoff::coordinator::{BatchOffloader, MixedOffloader, UserRequirements};
 use mixoff::devices::{DeviceModel, Testbed};
 use mixoff::offload::function_block::BlockDb;
 use mixoff::report;
@@ -46,6 +47,7 @@ fn run() -> Result<()> {
     let args = Args::from_env();
     match args.subcommand() {
         Some("offload") => cmd_offload(&args),
+        Some("batch") => cmd_batch(&args),
         Some("figure4") => cmd_figure4(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("devices") => cmd_devices(),
@@ -66,6 +68,9 @@ mixoff — automatic offloading for mixed GPU/FPGA/many-core environments
 usage: mixoff <command> [options]
   offload <workload>    run the six-trial mixed flow (3mm | nas_bt |
                         jacobi2d | blocked-gemm-app | vecadd)
+  batch [workloads…]    run many workloads through the flow concurrently,
+                        sharing compiled measurement plans (default: all
+                        five named workloads)
   figure4 [--timing]    reproduce the paper's fig. 4 table
   inspect <workload>    loop table, hot spots, FB detection
   devices               simulated verification environment (fig. 3)
@@ -73,6 +78,7 @@ usage: mixoff <command> [options]
   check <artifact>      execute an AOT artifact via PJRT + result check
   sizing <workload>     resource-amount sweep for the chosen destination
 options: --target <x> --max-price <usd> --seed <n> --json --timing
+        --workers <n> (batch: applications in flight at once)
 "#;
 
 fn cmd_offload(args: &Args) -> Result<()> {
@@ -89,6 +95,44 @@ fn cmd_offload(args: &Args) -> Result<()> {
         print!("{}", report::render_trials(&out));
         if args.flag("timing") {
             print!("{}", report::render_timing(&out));
+        }
+    }
+    Ok(())
+}
+
+/// The five workloads `batch` runs when none are named.
+const BATCH_DEFAULT: [&str; 5] = ["3mm", "nas_bt", "jacobi2d", "blocked-gemm-app", "vecadd"];
+
+fn cmd_batch(args: &Args) -> Result<()> {
+    let names: Vec<&str> = if args.positional.len() > 1 {
+        args.positional[1..].iter().map(|s| s.as_str()).collect()
+    } else {
+        BATCH_DEFAULT.to_vec()
+    };
+    let apps = names
+        .iter()
+        .map(|n| workloads::by_name(n))
+        .collect::<Result<Vec<_>>>()?;
+    // Take only requirements + seed from the args: BatchOffloader::default()
+    // deliberately sets the per-run GA workers to 1 (batch-level concurrency
+    // replaces per-run fan-out) and that guard must survive configuration.
+    let configured = offloader_from(args)?;
+    let mut batcher = BatchOffloader::default();
+    batcher.offloader.requirements = configured.requirements;
+    batcher.offloader.ga_seed = configured.ga_seed;
+    if let Some(w) = args.get_usize("workers")? {
+        batcher.batch_workers = w.max(1);
+    }
+    let out = batcher.run(&apps);
+    if args.flag("json") {
+        println!("{}", report::batch_to_json(&out));
+    } else {
+        print!("{}", report::render_batch(&out));
+        if args.flag("timing") {
+            for o in &out.outcomes {
+                println!("--- {} ---", o.app_name);
+                print!("{}", report::render_timing(o));
+            }
         }
     }
     Ok(())

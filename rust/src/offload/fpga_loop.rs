@@ -11,7 +11,7 @@
 use crate::analysis::intensity::rank_by_intensity;
 use crate::analysis::resources::rank_by_efficiency;
 use crate::app::ir::{Application, LoopId};
-use crate::devices::{DeviceModel, Fpga, Measurement};
+use crate::devices::{DeviceModel, Fpga, Measurement, MeasurementPlan};
 
 use super::pattern::OffloadPattern;
 use super::LoopOffloadOutcome;
@@ -46,12 +46,30 @@ pub fn search_traced(
     device: &Fpga,
     cfg: FpgaSearchConfig,
 ) -> (LoopOffloadOutcome, FpgaTrace) {
+    // Only ~4 patterns are measured, but the plan also amortizes the
+    // per-root resource/pipeline tabulation across them (devices/plan.rs).
+    search_traced_with_plan(app, &device.compile_plan(app), cfg)
+}
+
+/// Narrowed search measuring through an already-compiled plan (the
+/// strategy layer routes plans through `devices::PlanCache`).
+pub(crate) fn search_with_plan(
+    app: &Application,
+    plan: &MeasurementPlan,
+    cfg: FpgaSearchConfig,
+) -> LoopOffloadOutcome {
+    let (out, _) = search_traced_with_plan(app, plan, cfg);
+    out
+}
+
+pub(crate) fn search_traced_with_plan(
+    app: &Application,
+    plan: &MeasurementPlan,
+    cfg: FpgaSearchConfig,
+) -> (LoopOffloadOutcome, FpgaTrace) {
     let top_intensity = rank_by_intensity(app, cfg.intensity_keep);
     let candidates = rank_by_efficiency(app, &top_intensity, cfg.efficiency_keep);
 
-    // Only ~4 patterns are measured, but the plan also amortizes the
-    // per-root resource/pipeline tabulation across them (devices/plan.rs).
-    let plan = device.compile_plan(app);
     let mut measured: Vec<(Vec<LoopId>, Measurement)> = Vec::new();
     let mut cost = 0.0;
     let mut measure = |ids: &[LoopId]| -> Measurement {
@@ -87,7 +105,7 @@ pub fn search_traced(
     let evaluations = measured.len();
     (
         LoopOffloadOutcome {
-            device: device.kind(),
+            device: plan.kind(),
             best,
             baseline_seconds,
             simulated_cost_s: cost,

@@ -10,7 +10,7 @@
 
 use crate::analysis::dependence::eligible;
 use crate::app::ir::Application;
-use crate::devices::{DeviceModel, ManyCore};
+use crate::devices::{DeviceModel, ManyCore, MeasurementPlan};
 use crate::ga::{Ga, GaConfig, Genome};
 use crate::util::bits::PatternBits;
 
@@ -32,24 +32,41 @@ pub(crate) fn search_on(
     device: &dyn DeviceModel,
     config: GaConfig,
 ) -> LoopOffloadOutcome {
-    let baseline_seconds = crate::devices::CpuSingle::default().app_seconds(app);
+    // No loop may enter the genome (everything is a proven recurrence):
+    // there is nothing to search, so don't even compile a plan.
+    if eligible(app).is_empty() {
+        return empty_search(device.kind(), app);
+    }
+    search_with_plan(app, &device.compile_plan(app), config)
+}
+
+/// The no-search-space outcome: nothing measured, baseline untouched.
+fn empty_search(device: crate::devices::DeviceKind, app: &Application) -> LoopOffloadOutcome {
+    LoopOffloadOutcome {
+        device,
+        best: None,
+        baseline_seconds: crate::devices::CpuSingle::default().app_seconds(app),
+        simulated_cost_s: 0.0,
+        history: Vec::new(),
+        evaluations: 0,
+    }
+}
+
+/// GA-over-mask driver measuring through an already-compiled plan (the
+/// strategy layer routes plans through `devices::PlanCache` so a batch
+/// compiles each (app, device) pair exactly once; see coordinator/batch.rs).
+pub(crate) fn search_with_plan(
+    app: &Application,
+    plan: &MeasurementPlan,
+    config: GaConfig,
+) -> LoopOffloadOutcome {
     let eligible = eligible(app);
     let genome_len = eligible.len();
-    // No loop may enter the genome (everything is a proven recurrence):
-    // there is nothing to search, so don't spend generations measuring
-    // empty patterns.
     if genome_len == 0 {
-        return LoopOffloadOutcome {
-            device: device.kind(),
-            best: None,
-            baseline_seconds,
-            simulated_cost_s: 0.0,
-            history: Vec::new(),
-            evaluations: 0,
-        };
+        return empty_search(plan.kind(), app);
     }
+    let baseline_seconds = crate::devices::CpuSingle::default().app_seconds(app);
 
-    let plan = device.compile_plan(app);
     // Expand a compact genome (one bit per eligible loop) to full pattern
     // bits.  PatternBits is Copy — no allocation on the hot path.
     let expand = |genome: &Genome| -> PatternBits {
@@ -68,7 +85,7 @@ pub(crate) fn search_on(
     // Keep the best only if it actually beats running untouched.
     let best = best.filter(|(_, m)| m.seconds < baseline_seconds);
     LoopOffloadOutcome {
-        device: device.kind(),
+        device: plan.kind(),
         best,
         baseline_seconds,
         simulated_cost_s: result.simulated_cost_s,

@@ -6,6 +6,7 @@ pub mod function_block;
 pub mod gpu_loop;
 pub mod manycore_loop;
 pub mod pattern;
+pub mod strategy;
 
 use crate::devices::{DeviceKind, Measurement};
 use crate::ga::GenStats;

@@ -1,0 +1,352 @@
+//! Pluggable trial strategies: one `execute` interface over every
+//! (device × method) search entry point.
+//!
+//! The paper treats the mixed-destination flow as an *open set* of offload
+//! trials under one verification controller (sec. 3.3; also the companion
+//! proposal arXiv:2011.12431): many-core/GPU/FPGA today, new devices and
+//! methods tomorrow.  The coordinator therefore never matches on device or
+//! method — it walks a `Schedule` and resolves each (device × method) pair
+//! through the [`StrategyRegistry`], so a new pair plugs in by registering
+//! a [`OffloadStrategy`] implementation, without touching the core.
+//!
+//! Three strategies cover the paper's six trials:
+//! * [`FunctionBlockStrategy`] — code-pattern-DB replacement, any device;
+//! * [`GaLoopStrategy`] — the GA pattern search (many-core and GPU; any
+//!   device whose measurement is cheap enough to afford a GA);
+//! * [`FpgaLoopStrategy`] — the statically narrowed FPGA search (synthesis
+//!   is hours per pattern, so the GA is hopeless there).
+
+use std::sync::Arc;
+
+use crate::analysis::dependence;
+use crate::app::ir::Application;
+use crate::devices::{DeviceKind, PlanCache, Testbed};
+use crate::ga::GaConfig;
+
+use super::fpga_loop::{self, FpgaSearchConfig};
+use super::function_block::{self, BlockDb, FbOffloadOutcome};
+use super::manycore_loop;
+use super::pattern::{Method, OffloadPattern};
+use super::LoopOffloadOutcome;
+
+/// Everything a strategy may need from the verification controller.
+/// Built per trial by the schedule executor.
+pub struct TrialCtx<'a> {
+    /// The simulated verification environment (all device models).
+    pub testbed: &'a Testbed,
+    /// The code-pattern DB for function-block detection.
+    pub db: &'a BlockDb,
+    /// Seed for GA-based searches (recorded in reports for replay).
+    pub ga_seed: u64,
+    /// Concurrent measurements per GA generation (wall clock only).
+    pub ga_workers: usize,
+    /// Narrowing parameters for the FPGA loop search.
+    pub fpga_cfg: FpgaSearchConfig,
+    /// Suffix for loop-trial details when function-block library time is
+    /// folded into the recorded seconds (e.g. `" + FB on GPU"`).
+    pub fb_note: &'a str,
+    /// Shared measurement-plan cache: one compile per (app, device) pair
+    /// across the whole run — or the whole batch (see coordinator/batch.rs).
+    pub plans: &'a PlanCache,
+}
+
+/// What one trial produced, device- and method-agnostic.  `seconds` is the
+/// achieved time of the application the strategy was handed; the executor
+/// folds in any previously subtracted function-block library time and
+/// derives the improvement against the original baseline.
+#[derive(Clone, Debug)]
+pub struct TrialOutcome {
+    /// Achieved application seconds (baseline if nothing offloaded).
+    pub seconds: f64,
+    /// Did the method actually offload anything?
+    pub offloaded: bool,
+    /// Simulated verification cost charged to the clock.
+    pub cost_s: f64,
+    /// Human-readable outcome summary.
+    pub detail: String,
+    /// Winning loop pattern over the app the strategy ran on (the executor
+    /// remaps it to original loop ids when code was subtracted).
+    pub pattern: Option<OffloadPattern>,
+    /// Distinct patterns measured.
+    pub evaluations: usize,
+    /// Function-block outcome, when the method is a block replacement (the
+    /// executor tracks the best one for the code-subtraction step).
+    pub fb: Option<FbOffloadOutcome>,
+}
+
+impl TrialOutcome {
+    fn from_loop_search(out: LoopOffloadOutcome, fb_note: &str) -> Self {
+        let detail = match &out.best {
+            Some((p, _)) => format!(
+                "{} loops offloaded{fb_note} ({} patterns measured)",
+                p.count(),
+                out.evaluations
+            ),
+            None => format!(
+                "no pattern beat the baseline ({} patterns measured)",
+                out.evaluations
+            ),
+        };
+        Self {
+            seconds: out.seconds(),
+            offloaded: out.offloaded(),
+            cost_s: out.simulated_cost_s,
+            detail,
+            pattern: out.best.as_ref().map(|(p, _)| *p),
+            evaluations: out.evaluations,
+            fb: None,
+        }
+    }
+}
+
+/// One pluggable (device × method) trial implementation.
+pub trait OffloadStrategy: Send + Sync {
+    /// Short name for registries and reports.
+    fn name(&self) -> &'static str;
+
+    /// Structural reason this trial cannot run on `app` at all (recorded
+    /// as a skip with zero cost).  `None` = run it.
+    fn pre_check(&self, _app: &Application) -> Option<String> {
+        None
+    }
+
+    /// Run the trial of `app` on `device` and report what happened.
+    fn execute(&self, app: &Application, device: DeviceKind, ctx: &TrialCtx) -> TrialOutcome;
+}
+
+/// Function-block replacement via the code-pattern DB (sec. 3.2.4).
+pub struct FunctionBlockStrategy;
+
+impl OffloadStrategy for FunctionBlockStrategy {
+    fn name(&self) -> &'static str {
+        "function-block"
+    }
+
+    fn execute(&self, app: &Application, device: DeviceKind, ctx: &TrialCtx) -> TrialOutcome {
+        let out = function_block::offload(app, ctx.testbed.device(device), ctx.db);
+        let detail = if out.offloaded() {
+            let names: Vec<String> = out
+                .replaced
+                .iter()
+                .map(|r| format!("{} ({:?})", r.name, r.matched))
+                .collect();
+            format!("replaced {}", names.join(", "))
+        } else {
+            "no DB match".to_string()
+        };
+        TrialOutcome {
+            seconds: out.seconds,
+            offloaded: out.offloaded(),
+            cost_s: out.simulated_cost_s,
+            detail,
+            pattern: None,
+            evaluations: out.replaced.len(),
+            fb: Some(out),
+        }
+    }
+}
+
+/// GA search over `#pragma`-per-loop bit patterns (sec. 3.2.1) — the
+/// many-core and GPU loop methods, and any future device whose measurement
+/// is cheap enough for a population × generations budget.
+pub struct GaLoopStrategy;
+
+impl OffloadStrategy for GaLoopStrategy {
+    fn name(&self) -> &'static str {
+        "ga-loop"
+    }
+
+    fn pre_check(&self, app: &Application) -> Option<String> {
+        // When the dependence-free genome mask is all-false there is no
+        // search space: don't run generations of empty work, record why.
+        if app.loop_count() == 0 {
+            Some("no eligible loops (all loops offloaded as function blocks)".to_string())
+        } else if dependence::eligible(app).is_empty() {
+            Some("no eligible loops (every loop carries a sequential dependence)".to_string())
+        } else {
+            None
+        }
+    }
+
+    fn execute(&self, app: &Application, device: DeviceKind, ctx: &TrialCtx) -> TrialOutcome {
+        let eligible = dependence::eligible(app).len();
+        let cfg = GaConfig {
+            seed: ctx.ga_seed,
+            workers: ctx.ga_workers,
+            ..GaConfig::sized_for(eligible)
+        };
+        let plan = ctx.plans.plan(app, ctx.testbed.device(device));
+        let out = manycore_loop::search_with_plan(app, &plan, cfg);
+        TrialOutcome::from_loop_search(out, ctx.fb_note)
+    }
+}
+
+/// Statically narrowed FPGA loop search (sec. 4.1.2): intensity top-5,
+/// efficiency top-3, four measured patterns.  Pipelines tolerate
+/// recurrences (they run them at II > 1), so unlike the GA methods this
+/// only short-circuits when no loops remain at all.
+pub struct FpgaLoopStrategy;
+
+impl OffloadStrategy for FpgaLoopStrategy {
+    fn name(&self) -> &'static str {
+        "fpga-loop"
+    }
+
+    fn pre_check(&self, app: &Application) -> Option<String> {
+        if app.loop_count() == 0 {
+            Some("no eligible loops (all loops offloaded as function blocks)".to_string())
+        } else {
+            None
+        }
+    }
+
+    fn execute(&self, app: &Application, device: DeviceKind, ctx: &TrialCtx) -> TrialOutcome {
+        let plan = ctx.plans.plan(app, ctx.testbed.device(device));
+        let out = fpga_loop::search_with_plan(app, &plan, ctx.fpga_cfg);
+        TrialOutcome::from_loop_search(out, ctx.fb_note)
+    }
+}
+
+/// The open set of (device × method) → strategy bindings.  Last
+/// registration for a pair wins, so callers can override the standard
+/// bindings without rebuilding the registry.
+pub struct StrategyRegistry {
+    entries: Vec<((DeviceKind, Method), Arc<dyn OffloadStrategy>)>,
+}
+
+impl StrategyRegistry {
+    /// No bindings at all (every trial skips as unregistered).
+    pub fn empty() -> Self {
+        Self { entries: Vec::new() }
+    }
+
+    /// The paper's six trials: FB on all three destinations, GA loop
+    /// search on many-core + GPU, narrowed loop search on FPGA.
+    pub fn standard() -> Self {
+        let mut r = Self::empty();
+        let fb: Arc<dyn OffloadStrategy> = Arc::new(FunctionBlockStrategy);
+        let ga: Arc<dyn OffloadStrategy> = Arc::new(GaLoopStrategy);
+        for device in [DeviceKind::ManyCore, DeviceKind::Gpu, DeviceKind::Fpga] {
+            r.register(device, Method::FunctionBlock, Arc::clone(&fb));
+        }
+        r.register(DeviceKind::ManyCore, Method::LoopOffload, Arc::clone(&ga));
+        r.register(DeviceKind::Gpu, Method::LoopOffload, ga);
+        r.register(DeviceKind::Fpga, Method::LoopOffload, Arc::new(FpgaLoopStrategy));
+        r
+    }
+
+    /// Bind `strategy` to the (device × method) pair, replacing any
+    /// previous binding.
+    pub fn register(
+        &mut self,
+        device: DeviceKind,
+        method: Method,
+        strategy: Arc<dyn OffloadStrategy>,
+    ) {
+        self.entries.retain(|((d, m), _)| !(*d == device && *m == method));
+        self.entries.push(((device, method), strategy));
+    }
+
+    /// Resolve the strategy for a (device × method) pair.
+    pub fn get(&self, device: DeviceKind, method: Method) -> Option<&dyn OffloadStrategy> {
+        self.entries
+            .iter()
+            .find(|((d, m), _)| *d == device && *m == method)
+            .map(|(_, s)| s.as_ref())
+    }
+
+    /// All registered (device × method) pairs, in registration order.
+    pub fn pairs(&self) -> impl Iterator<Item = (DeviceKind, Method)> + '_ {
+        self.entries.iter().map(|(k, _)| *k)
+    }
+}
+
+impl Default for StrategyRegistry {
+    fn default() -> Self {
+        Self::standard()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::builder::AppBuilder;
+    use crate::app::ir::Dependence;
+    use crate::app::workloads::extra;
+
+    fn ctx<'a>(tb: &'a Testbed, db: &'a BlockDb, plans: &'a PlanCache) -> TrialCtx<'a> {
+        TrialCtx {
+            testbed: tb,
+            db,
+            ga_seed: 0xC0FFEE,
+            ga_workers: 2,
+            fpga_cfg: FpgaSearchConfig::default(),
+            fb_note: "",
+            plans,
+        }
+    }
+
+    #[test]
+    fn standard_registry_covers_all_six_pairs() {
+        let r = StrategyRegistry::standard();
+        assert_eq!(r.pairs().count(), 6);
+        for device in [DeviceKind::ManyCore, DeviceKind::Gpu, DeviceKind::Fpga] {
+            for method in [Method::FunctionBlock, Method::LoopOffload] {
+                assert!(r.get(device, method).is_some(), "{device:?} {method:?}");
+            }
+        }
+        assert!(r.get(DeviceKind::CpuSingle, Method::LoopOffload).is_none());
+    }
+
+    #[test]
+    fn register_replaces_existing_binding() {
+        let mut r = StrategyRegistry::standard();
+        r.register(DeviceKind::Gpu, Method::LoopOffload, Arc::new(FpgaLoopStrategy));
+        assert_eq!(r.pairs().count(), 6);
+        assert_eq!(r.get(DeviceKind::Gpu, Method::LoopOffload).unwrap().name(), "fpga-loop");
+    }
+
+    #[test]
+    fn fb_strategy_matches_direct_offload_call() {
+        let tb = Testbed::default();
+        let db = BlockDb::default();
+        let plans = PlanCache::new();
+        let app = extra::gemm_call_app(1024);
+        let out = FunctionBlockStrategy.execute(&app, DeviceKind::ManyCore, &ctx(&tb, &db, &plans));
+        let direct = function_block::offload(&app, &tb.manycore, &db);
+        assert!(out.offloaded);
+        assert_eq!(out.seconds.to_bits(), direct.seconds.to_bits());
+        assert_eq!(out.cost_s.to_bits(), direct.simulated_cost_s.to_bits());
+        assert!(out.detail.starts_with("replaced "));
+        assert!(out.fb.is_some());
+    }
+
+    #[test]
+    fn ga_strategy_matches_direct_search() {
+        let tb = Testbed::default();
+        let db = BlockDb::default();
+        let plans = PlanCache::new();
+        let app = extra::vecadd(1 << 22);
+        let c = ctx(&tb, &db, &plans);
+        let out = GaLoopStrategy.execute(&app, DeviceKind::ManyCore, &c);
+        let eligible = dependence::eligible(&app).len();
+        let cfg = GaConfig { seed: c.ga_seed, workers: c.ga_workers, ..GaConfig::sized_for(eligible) };
+        let direct = manycore_loop::search(&app, &tb.manycore, cfg);
+        assert_eq!(out.seconds.to_bits(), direct.seconds().to_bits());
+        assert_eq!(out.evaluations, direct.evaluations);
+        assert_eq!(out.pattern, direct.best.map(|(p, _)| p));
+    }
+
+    #[test]
+    fn ga_pre_check_names_the_reason() {
+        let mut b = AppBuilder::new("seq-only");
+        b.open_loop("sweep", 64, Dependence::Sequential);
+        b.body(4.0, 16.0, 8.0, &[]);
+        b.close_loop();
+        let app = b.finish();
+        let why = GaLoopStrategy.pre_check(&app).unwrap();
+        assert!(why.contains("sequential dependence"), "{why}");
+        // The FPGA strategy still runs it: pipelines tolerate recurrences.
+        assert!(FpgaLoopStrategy.pre_check(&app).is_none());
+    }
+}

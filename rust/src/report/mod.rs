@@ -3,7 +3,7 @@
 
 use std::fmt::Write as _;
 
-use crate::coordinator::{OffloadOutcome, TrialKind};
+use crate::coordinator::{BatchOutcome, OffloadOutcome, TrialKind};
 use crate::devices::DeviceKind;
 use crate::offload::pattern::Method;
 use crate::util::json::Json;
@@ -144,6 +144,77 @@ pub fn render_timing(out: &OffloadOutcome) -> String {
     format!("{}", out.clock)
 }
 
+/// Batch-service aggregation: one row per application plus the batch
+/// totals (throughput, plan-cache behaviour, simulated verification).
+pub fn render_batch(batch: &BatchOutcome) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:<18} {:>12} | {:<30} {:>12} {:>8} {:>10} | {:>10}",
+        "app", "1-core [s]", "chosen destination", "time [s]", "improve", "price", "verify [h]"
+    );
+    let _ = writeln!(s, "{}", "-".repeat(112));
+    for out in &batch.outcomes {
+        let (label, secs, imp, price) = match &out.chosen {
+            Some(c) => (
+                c.kind.label(),
+                c.seconds,
+                format!("{:.1}x", c.improvement),
+                format!("{} USD", c.price_usd),
+            ),
+            None => (
+                "none (stay on CPU)".to_string(),
+                out.baseline_seconds,
+                "1.0x".to_string(),
+                "-".to_string(),
+            ),
+        };
+        let _ = writeln!(
+            s,
+            "{:<18} {:>12.3} | {:<30} {:>12.4} {:>8} {:>10} | {:>10.1}",
+            out.app_name,
+            out.baseline_seconds,
+            label,
+            secs,
+            imp,
+            price,
+            out.clock.total_hours()
+        );
+    }
+    let _ = writeln!(
+        s,
+        "batch: {} apps in {:.2} s wall ({:.2} apps/s); plan cache {} compiles, {} hits ({:.0}% hit rate); simulated verification {:.1} h total",
+        batch.outcomes.len(),
+        batch.wall_seconds,
+        batch.throughput(),
+        batch.plan_compiles,
+        batch.plan_hits,
+        batch.plan_hit_rate() * 100.0,
+        batch.total_verify_hours(),
+    );
+    s
+}
+
+/// Machine-readable batch outcome (per-app outcomes + batch totals).
+pub fn batch_to_json(batch: &BatchOutcome) -> Json {
+    use std::collections::BTreeMap;
+    let mut root = BTreeMap::new();
+    root.insert(
+        "apps".into(),
+        Json::Arr(batch.outcomes.iter().map(to_json).collect()),
+    );
+    root.insert("wall_seconds".into(), Json::Num(batch.wall_seconds));
+    root.insert("throughput_apps_per_s".into(), Json::Num(batch.throughput()));
+    root.insert("plan_compiles".into(), Json::Num(batch.plan_compiles as f64));
+    root.insert("plan_hits".into(), Json::Num(batch.plan_hits as f64));
+    root.insert("plan_hit_rate".into(), Json::Num(batch.plan_hit_rate()));
+    root.insert(
+        "verify_total_hours".into(),
+        Json::Num(batch.total_verify_hours()),
+    );
+    Json::Obj(root)
+}
+
 /// Machine-readable outcome.
 pub fn to_json(out: &OffloadOutcome) -> Json {
     use std::collections::BTreeMap;
@@ -208,5 +279,22 @@ mod tests {
         assert!(j.get("trials").is_some());
         // JSON must round-trip through our parser.
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn batch_render_and_json_roundtrip() {
+        use crate::coordinator::BatchOffloader;
+        let apps = vec![
+            crate::app::workloads::extra::vecadd(1 << 20),
+            crate::app::workloads::extra::vecadd(1 << 21),
+        ];
+        let batch = BatchOffloader::default().run(&apps);
+        let table = render_batch(&batch);
+        assert!(table.contains("vecadd"));
+        assert!(table.contains("plan cache"));
+        let j = batch_to_json(&batch);
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        assert_eq!(j.req("apps").unwrap().as_arr().unwrap().len(), 2);
+        assert!(j.get("plan_hit_rate").is_some());
     }
 }

@@ -1,0 +1,66 @@
+//! FNV-1a, 64-bit — stable across runs and platforms (unlike
+//! `DefaultHasher`, whose algorithm is unspecified), so fingerprints are
+//! usable as cross-process cache keys (`Application::fingerprint`,
+//! `DeviceModel::config_fingerprint`, the `devices::PlanCache` key).
+
+pub struct Fnv(u64);
+
+impl Fnv {
+    pub fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+        // Length terminator so ("ab","c") and ("a","bc") differ.
+        self.u64(bytes.len() as u64);
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_sensitive() {
+        let hash = |f: &dyn Fn(&mut Fnv)| {
+            let mut h = Fnv::new();
+            f(&mut h);
+            h.finish()
+        };
+        assert_eq!(hash(&|h| h.bytes(b"abc")), hash(&|h| h.bytes(b"abc")));
+        assert_ne!(hash(&|h| h.bytes(b"abc")), hash(&|h| h.bytes(b"abd")));
+        assert_ne!(hash(&|h| h.u64(1)), hash(&|h| h.u64(2)));
+        // Boundary shifts change the hash (length terminator).
+        assert_ne!(
+            hash(&|h| {
+                h.bytes(b"ab");
+                h.bytes(b"c");
+            }),
+            hash(&|h| {
+                h.bytes(b"a");
+                h.bytes(b"bc");
+            })
+        );
+    }
+}

@@ -7,6 +7,7 @@
 
 pub mod bits;
 pub mod cli;
+pub mod fnv;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -7,7 +7,7 @@
 
 use mixoff::app::{parse, workloads};
 use mixoff::codegen;
-use mixoff::coordinator::{MixedOffloader, TrialKind, UserRequirements};
+use mixoff::coordinator::{MixedOffloader, Schedule, TrialKind, UserRequirements};
 use mixoff::devices::DeviceKind;
 use mixoff::offload::pattern::Method;
 use mixoff::report;
@@ -216,6 +216,122 @@ fn codegen_for_chosen_patterns() {
     let src = codegen::emit(&app, &p, chosen.kind.device);
     assert_eq!(src.matches('{').count(), src.matches('}').count());
     assert!(src.contains("#pragma acc kernels loop"));
+}
+
+/// Schedule equivalence: `run()` (the generic executor on the configured
+/// schedule) and an explicit paper `Schedule` agree record-for-record —
+/// same trial order, same skip reasons, same seconds, same destination.
+#[test]
+fn explicit_paper_schedule_matches_default_run() {
+    for name in ["blocked-gemm-app", "vecadd", "jacobi2d"] {
+        let app = workloads::by_name(name).unwrap();
+        let mo = offloader();
+        let a = mo.run(&app);
+        let b = mo.run_scheduled(&app, &Schedule::paper());
+        assert_eq!(a.trials.len(), b.trials.len());
+        for (x, y) in a.trials.iter().zip(&b.trials) {
+            assert_eq!(x.kind, y.kind, "{name}");
+            assert_eq!(x.skipped, y.skipped, "{name}");
+            assert_eq!(x.seconds.to_bits(), y.seconds.to_bits(), "{name}");
+            assert_eq!(x.detail, y.detail, "{name}");
+            assert_eq!(x.cost_s.to_bits(), y.cost_s.to_bits(), "{name}");
+        }
+        assert_eq!(
+            a.chosen.as_ref().map(|c| (c.kind, c.seconds.to_bits())),
+            b.chosen.as_ref().map(|c| (c.kind, c.seconds.to_bits())),
+            "{name}"
+        );
+    }
+}
+
+/// Schedule equivalence, seed scenario 1 (gemm early exit): a satisfied
+/// 10x target after the first FB trial skips the remaining five, in the
+/// paper order, with the many-core FB trial chosen.
+#[test]
+fn paper_schedule_reproduces_gemm_early_exit() {
+    let mut mo = offloader();
+    mo.requirements =
+        UserRequirements { target_improvement: Some(10.0), max_price_usd: None };
+    let app = workloads::by_name("blocked-gemm-app").unwrap();
+    let out = mo.run_scheduled(&app, &Schedule::paper());
+    let kinds: Vec<TrialKind> = out.trials.iter().map(|t| t.kind).collect();
+    assert_eq!(kinds, TrialKind::order().to_vec(), "exact paper trial order");
+    assert!(out.trials[0].improvement > 10.0);
+    for t in &out.trials[1..] {
+        let reason = t.skipped.as_deref().expect("skipped after early exit");
+        assert!(reason.contains("user target already met"), "{reason:?}");
+        assert_eq!(t.detail, reason, "skip reason carried in detail");
+    }
+    assert_eq!(out.chosen.unwrap().kind.device, DeviceKind::ManyCore);
+}
+
+/// Schedule equivalence, seed scenario 2 (FPGA price cap): both FPGA
+/// trials skip with the price-cap reason; nothing else does.
+#[test]
+fn paper_schedule_reproduces_fpga_price_cap() {
+    let mut mo = offloader();
+    mo.requirements =
+        UserRequirements { target_improvement: None, max_price_usd: Some(5_000.0) };
+    let app = workloads::by_name("vecadd").unwrap();
+    let out = mo.run_scheduled(&app, &Schedule::paper());
+    for t in &out.trials {
+        if t.kind.device == DeviceKind::Fpga {
+            let reason = t.skipped.as_deref().expect("FPGA skipped by price cap");
+            assert!(reason.contains("over price cap"), "{reason:?}");
+        } else {
+            assert!(t.skipped.is_none());
+        }
+    }
+}
+
+/// Schedule equivalence, seed scenario 3 (all-sequential app): the GA
+/// loop trials skip with the no-eligible-loops reason, the FPGA loop
+/// trial still runs (pipelines tolerate recurrences).
+#[test]
+fn paper_schedule_reproduces_all_sequential_skip() {
+    let src = r#"
+app "seq-only" {
+  array X 1000000;
+  for sweep 1048576 seq { stmt flops 4 read 16 write 8 uses X ; }
+}
+"#;
+    let app = parse(src).unwrap();
+    let out = offloader().run_scheduled(&app, &Schedule::paper());
+    assert_eq!(out.trials.len(), 6);
+    for t in &out.trials {
+        if t.kind.method == Method::LoopOffload && t.kind.device != DeviceKind::Fpga {
+            let reason = t.skipped.as_deref().unwrap_or("");
+            assert!(reason.contains("no eligible loops"), "{reason:?}");
+            assert_eq!(t.cost_s, 0.0);
+        }
+    }
+    let fpga = out
+        .trials
+        .iter()
+        .find(|t| t.kind.device == DeviceKind::Fpga && t.kind.method == Method::LoopOffload)
+        .unwrap();
+    assert!(fpga.skipped.is_none());
+}
+
+/// A custom order is constructible and runs end to end: price-ascending
+/// defers the FPGA band, yet still records all six trials and picks the
+/// same destination as the paper order when nothing early-exits.
+#[test]
+fn price_ascending_schedule_runs_and_agrees_on_3mm() {
+    let app = workloads::by_name("3mm").unwrap();
+    let mo = offloader();
+    let paper = mo.run_scheduled(&app, &Schedule::paper());
+    let cheap = mo.run_scheduled(&app, &Schedule::price_ascending());
+    assert_eq!(cheap.trials.len(), 6);
+    let first_fpga =
+        cheap.trials.iter().position(|t| t.kind.device == DeviceKind::Fpga).unwrap();
+    assert!(cheap.trials[..first_fpga].iter().all(|t| t.kind.device != DeviceKind::Fpga));
+    // No target / cap set: every trial runs under both orders, and the
+    // winner is order-independent.
+    assert_eq!(
+        paper.chosen.as_ref().map(|c| c.kind),
+        cheap.chosen.as_ref().map(|c| c.kind)
+    );
 }
 
 /// Determinism: identical seeds give identical outcomes.

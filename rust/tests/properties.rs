@@ -8,7 +8,7 @@
 use mixoff::analysis::dependence::{expand_genome, genome_mask};
 use mixoff::app::builder::AppBuilder;
 use mixoff::app::ir::{Access, Application, Dependence, LoopId};
-use mixoff::coordinator::MixedOffloader;
+use mixoff::coordinator::{remap_pattern, MixedOffloader};
 use mixoff::devices::{DeviceModel, Testbed};
 use mixoff::offload::pattern::OffloadPattern;
 use mixoff::util::prop::{forall, gen};
@@ -215,6 +215,35 @@ fn without_loops_preserves_remaining_features() {
         let removed_flops: f64 = removed.iter().map(|&id| app.get(id).total_flops()).sum();
         let diff = (app.total_flops() - removed_flops - cut.total_flops()).abs();
         assert!(diff <= 1e-6 * app.total_flops().max(1.0));
+    });
+}
+
+/// Code subtraction bookkeeping: a pattern found on the reduced app,
+/// re-expressed in the original app's loop ids by `remap_pattern`, keeps
+/// its popcount and only ever names loops that survive in the original
+/// app (bits of removed loops stay zero).
+#[test]
+fn remapped_patterns_preserve_popcount_and_original_ids() {
+    forall(120, |rng| {
+        let app = random_app(rng);
+        let victims: Vec<LoopId> =
+            (0..app.loop_count()).filter(|_| rng.chance(0.3)).map(LoopId).collect();
+        let (cut, mapping) = app.without_loops(&victims);
+        let p = random_pattern(rng, &cut);
+        let r = remap_pattern(&app, &mapping, &p);
+        assert_eq!(r.bits.len(), app.loop_count());
+        assert_eq!(r.count(), p.count(), "popcount must survive the remap");
+        for id in r.selected() {
+            let new_id = mapping
+                .get(&id)
+                .expect("every selected bit must name a surviving original loop");
+            assert!(id.0 < app.loop_count());
+            assert_eq!(app.get(id).name, cut.get(*new_id).name);
+        }
+        // Every surviving loop's bit round-trips old <- new.
+        for (old, new) in &mapping {
+            assert_eq!(r.get(old.0), p.get(new.0));
+        }
     });
 }
 
