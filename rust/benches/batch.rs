@@ -15,6 +15,7 @@ use std::time::Instant;
 
 use mixoff::app::workloads;
 use mixoff::coordinator::BatchOffloader;
+use mixoff::util::threadpool::WorkerPool;
 use support::{finish, metric};
 
 fn main() {
@@ -56,6 +57,15 @@ fn main() {
     metric("batch.x3.plan_cache.compiles", out3.plan_compiles as f64, "plans", None);
     metric("batch.x3.plan_cache.hit_rate", out3.plan_hit_rate(), "frac", None);
     metric("batch.x3.throughput", out3.throughput(), "apps/s", None);
+
+    // Both batches (and every GA generation inside them) ran on the one
+    // persistent pool: total OS threads spawned == pool size.
+    metric(
+        "batch.pool.spawned_threads",
+        WorkerPool::global().spawned_threads() as f64,
+        "threads",
+        None,
+    );
 
     finish("batch");
 }

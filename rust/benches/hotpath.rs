@@ -4,11 +4,16 @@
 //! GA generation fans measurements across the worker pool.  These numbers
 //! are what the perf pass optimizes.
 //!
-//! Two measurement paths are timed against each other:
+//! Three measurement paths are timed against each other:
 //!   * `measure.<dev>.direct.*` — `DeviceModel::measure`, which re-derives
 //!     region roots / parent chains / transfer masks from the IR per call;
-//!   * `measure.<dev>.*` (and `measure.gpu.throughput`) — the precompiled
-//!     `MeasurementPlan` path the GA actually uses (devices/plan.rs).
+//!   * `measure.<dev>.dense.*` — the PR-1 dense plan path retained as
+//!     `MeasurementPlan::measure_dense` (four full `0..n` passes);
+//!   * `measure.<dev>.sparse.*` / `measure.<dev>.*` — the sparse
+//!     word-parallel kernel the GA actually uses (devices/plan.rs);
+//!     `measure.<dev>.sparse_speedup` records sparse/dense throughput.
+//! `pool.spawned_threads` proves the persistent worker pool spawns
+//! pool-size OS threads total, not per generation.
 
 #[path = "support.rs"]
 mod support;
@@ -20,6 +25,7 @@ use mixoff::offload::manycore_loop;
 use mixoff::offload::pattern::OffloadPattern;
 use mixoff::util::bits::PatternBits;
 use mixoff::util::rng::Rng;
+use mixoff::util::threadpool::WorkerPool;
 use support::{bench, finish, metric};
 
 fn main() {
@@ -51,6 +57,37 @@ fn main() {
                 std::hint::black_box(plan.measure(b));
             }
         });
+    }
+
+    // Sparse word-parallel kernel vs the PR-1 dense-plan reference
+    // (`MeasurementPlan::measure_dense`), per device, on the same
+    // density-0.25 patterns the GA seeds with: the
+    // `measure.<dev>.sparse_speedup` acceptance metrics.
+    for (name, dev) in [
+        ("cpu", &tb.cpu as &dyn DeviceModel),
+        ("manycore", &tb.manycore as &dyn DeviceModel),
+        ("gpu", &tb.gpu as &dyn DeviceModel),
+        ("fpga", &tb.fpga as &dyn DeviceModel),
+    ] {
+        let plan = dev.compile_plan(&bt);
+        let reps = 50usize;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            for b in &packed {
+                std::hint::black_box(plan.measure_dense(b));
+            }
+        }
+        let dense_tput = (reps * packed.len()) as f64 / t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            for b in &packed {
+                std::hint::black_box(plan.measure(b));
+            }
+        }
+        let sparse_tput = (reps * packed.len()) as f64 / t0.elapsed().as_secs_f64();
+        metric(&format!("measure.{name}.dense.throughput"), dense_tput, "patterns/s", None);
+        metric(&format!("measure.{name}.sparse.throughput"), sparse_tput, "patterns/s", None);
+        metric(&format!("measure.{name}.sparse_speedup"), sparse_tput / dense_tput, "x", None);
     }
 
     // Measurement throughput (the number the perf pass tracks): the plan
@@ -89,6 +126,16 @@ fn main() {
         let cfg = GaConfig { population: 20, generations: 20, ..Default::default() };
         std::hint::black_box(manycore_loop::search(&bt, &tb.manycore, cfg));
     });
+
+    // Worker-pool persistence: after all the generations above, the
+    // process has spawned exactly pool-size measurement threads — PR 1
+    // spawned `workers` fresh OS threads per generation instead.
+    metric(
+        "pool.spawned_threads",
+        WorkerPool::global().spawned_threads() as f64,
+        "threads",
+        None,
+    );
 
     // Pattern algebra microcosts.
     bench("pattern.region_roots.512", 20, || {

@@ -2,10 +2,13 @@
 //!
 //! A deployment doesn't offload one application at a time: many user
 //! applications arrive and each must flow through the mixed-destination
-//! verification schedule.  [`BatchOffloader`] fans the flow out over
-//! `util::threadpool::map_parallel` and shares one [`PlanCache`] across
-//! all runs, so each (application, device) measurement plan is compiled
-//! exactly once per batch no matter how many concurrent runs ask for it.
+//! verification schedule.  [`BatchOffloader`] fans the flow out over the
+//! persistent process-wide [`WorkerPool`] — the same long-lived threads
+//! every GA generation measures on, so back-to-back batches spawn zero
+//! new OS threads — and shares one [`PlanCache`] across all runs, so each
+//! (application, device) measurement plan is compiled exactly once per
+//! batch no matter how many concurrent runs ask for it (distinct pairs
+//! compile concurrently; the cache serializes only same-pair compiles).
 //!
 //! Every run is independent and seeded, so a batch result is *identical*
 //! (bit-for-bit, per application) to running the same applications
@@ -17,7 +20,7 @@ use std::time::Instant;
 
 use crate::app::ir::Application;
 use crate::devices::PlanCache;
-use crate::util::threadpool::map_parallel;
+use crate::util::threadpool::WorkerPool;
 
 use super::{MixedOffloader, OffloadOutcome};
 
@@ -89,11 +92,12 @@ impl BatchOutcome {
 }
 
 impl BatchOffloader {
-    /// Offload every application, up to `batch_workers` concurrently.
+    /// Offload every application, up to `batch_workers` concurrently, on
+    /// the persistent process-wide worker pool.
     pub fn run(&self, apps: &[Application]) -> BatchOutcome {
         let cache = PlanCache::new();
         let t0 = Instant::now();
-        let outcomes = map_parallel(apps.iter().collect(), self.batch_workers, |app| {
+        let outcomes = WorkerPool::global().map(apps.iter().collect(), self.batch_workers, |app| {
             self.offloader.run_with_cache(app, &cache)
         });
         BatchOutcome {

@@ -69,14 +69,25 @@ impl ManyCore {
     }
 
     /// App run time under `pattern` (regardless of validity).
+    ///
+    /// The accumulation order is part of the executable specification the
+    /// sparse measurement plan reproduces bit-for-bit (devices/plan.rs):
+    /// covered-loop parallel seconds in ascending id order, then host
+    /// residue in ascending id order, then fork/join overhead per region
+    /// root in ascending id order — three separate class-pure sums, so
+    /// the plan can walk set bits of the coverage bitset / its complement
+    /// without changing any floating-point result.
     pub fn app_seconds(&self, app: &Application, pattern: &OffloadPattern) -> f64 {
         let mut t = 0.0;
         for l in &app.loops {
-            t += if pattern.in_region(app, l.id) {
-                self.par_body_secs(l)
-            } else {
-                l.total_iters() * self.single.body_time_per_iter(l)
-            };
+            if pattern.in_region(app, l.id) {
+                t += self.par_body_secs(l);
+            }
+        }
+        for l in &app.loops {
+            if !pattern.in_region(app, l.id) {
+                t += l.total_iters() * self.single.body_time_per_iter(l);
+            }
         }
         for root in pattern.region_roots(app) {
             t += app.get(root).invocations as f64 * self.omp_overhead_s;

@@ -13,19 +13,30 @@
 //! * per-nest aggregates (GPU kernel seconds / FPGA pipeline seconds and
 //!   resource estimates per candidate root),
 //! * per-loop array-touch `u64` masks (own body and whole nest),
+//! * per-loop *subtree* and *ancestor* masks as [`PatternBits`],
 //! * the dependence-free validity mask as packed bits.
 //!
 //! `measure(bits)` is then table lookups plus bit arithmetic with zero
-//! heap allocation: region coverage is an incremental bitset pass (parents
-//! always precede children in id order), roots fall out of one extra mask
-//! test, and validity is a word-wise subset check.  The direct device
-//! methods remain the executable specification; `tests/properties.rs`
-//! asserts bit-for-bit equality between both paths on random apps and
-//! patterns for all four device models.
+//! heap allocation, and — since the sparse rewrite — **word-parallel and
+//! sparse**: the root test is one word-wise intersection against the
+//! precomputed ancestor mask (`bits & ancestor_mask[i] == 0`, four ANDs)
+//! instead of a parent-chain walk, region coverage is the union of the
+//! root subtree masks (four ORs per root), and every accumulation walks
+//! only the set bits of the coverage bitset / its complement via
+//! `PatternBits::ones()`.  Ascending set-bit iteration visits exactly the
+//! indices the dense `for i in 0..n` passes visited, in the same order,
+//! so every floating-point sum accumulates in the identical order and the
+//! results stay **bit-identical** to the direct `DeviceModel::measure`
+//! specification.  [`MeasurementPlan::measure_dense`] retains the PR-1
+//! dense path as the differential-testing and benchmarking reference
+//! (`benches/hotpath.rs` emits `measure.<dev>.sparse_speedup` against
+//! it).  The direct device methods remain the executable specification;
+//! `tests/properties.rs` asserts bit-for-bit equality between all three
+//! paths on random apps and patterns for all four device models.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::analysis::resources::{estimate, FpgaResources, ResourceEstimate};
 use crate::app::ir::{Application, Dependence, LoopId};
@@ -99,6 +110,13 @@ pub struct MeasurementPlan {
     array_bytes: Vec<f64>,
     /// Loops with no loop-carried dependence (the validity mask).
     dep_free: PatternBits,
+    /// Bits of the whole nest rooted at loop i (i itself + descendants).
+    /// Region coverage is the union of these over the pattern's roots.
+    subtree: Vec<PatternBits>,
+    /// Bits of the strict ancestors of loop i.  Loop i is an effective
+    /// region root iff its bit is set and `bits ∩ ancestors[i] = ∅` — a
+    /// word-wise test replacing the parent-chain walk.
+    ancestors: Vec<PatternBits>,
     device: DevicePlan,
 }
 
@@ -113,6 +131,8 @@ struct Tables {
     nest_amask: Vec<u64>,
     array_bytes: Vec<f64>,
     dep_free: PatternBits,
+    subtree: Vec<PatternBits>,
+    ancestors: Vec<PatternBits>,
 }
 
 fn tables(app: &Application, host: &CpuSingle) -> Tables {
@@ -153,12 +173,46 @@ fn tables(app: &Application, host: &CpuSingle) -> Tables {
             nest_amask[i] |= child;
         }
     }
+    // Subtree bitsets, same bottom-up sweep: subtree[i] = {i} ∪ subtrees
+    // of i's children.
+    let mut subtree: Vec<PatternBits> = (0..n).map(|i| PatternBits::from_ones(n, [i])).collect();
+    for i in (0..n).rev() {
+        for &c in &app.loops[i].children {
+            let child = subtree[c.0];
+            subtree[i].union_with(&child);
+        }
+    }
+    // Ancestor bitsets top-down: parents always precede children in id
+    // order, so the parent's set is complete when the child needs it.
+    let mut ancestors: Vec<PatternBits> = Vec::with_capacity(n);
+    for l in &app.loops {
+        let anc = match l.parent {
+            Some(p) => {
+                let mut a = ancestors[p.0];
+                a.set(p.0, true);
+                a
+            }
+            None => PatternBits::zeros(n),
+        };
+        ancestors.push(anc);
+    }
     let array_bytes = app
         .array_order
         .iter()
         .map(|name| app.arrays[name.as_str()].bytes)
         .collect();
-    Tables { n, parent, inv, host_secs, self_amask, nest_amask, array_bytes, dep_free }
+    Tables {
+        n,
+        parent,
+        inv,
+        host_secs,
+        self_amask,
+        nest_amask,
+        array_bytes,
+        dep_free,
+        subtree,
+        ancestors,
+    }
 }
 
 impl MeasurementPlan {
@@ -243,6 +297,8 @@ impl MeasurementPlan {
             nest_amask: t.nest_amask,
             array_bytes: t.array_bytes,
             dep_free: t.dep_free,
+            subtree: t.subtree,
+            ancestors: t.ancestors,
             device,
         }
     }
@@ -256,11 +312,43 @@ impl MeasurementPlan {
         self.n
     }
 
-    /// Region coverage as an inline bitset: loop i is covered iff its bit
-    /// or any ancestor's bit is set.  One ascending pass, zero heap
-    /// allocation (`PatternBits` is a stack value).
+    /// The sparse region kernel: effective roots and region coverage in
+    /// one pass over the pattern's *set bits only*.  A set bit i is a root
+    /// iff no ancestor bit is set — one word-wise intersection against the
+    /// precomputed ancestor mask — and coverage is the union of the root
+    /// subtree masks (four word ORs per root).  Zero heap allocation;
+    /// cost scales with the popcount, not the loop count.
     #[inline]
-    fn covered(&self, bits: &PatternBits) -> PatternBits {
+    fn roots_cov(&self, bits: &PatternBits) -> (PatternBits, PatternBits) {
+        let mut roots = PatternBits::zeros(self.n);
+        let mut cov = PatternBits::zeros(self.n);
+        for i in bits.ones() {
+            if !bits.intersects(&self.ancestors[i]) {
+                roots.set(i, true);
+                cov.union_with(&self.subtree[i]);
+            }
+        }
+        (roots, cov)
+    }
+
+    /// Region coverage bitset: loop i is covered iff its bit or any
+    /// ancestor's bit is set.  Agrees with `OffloadPattern::in_region`
+    /// (proven in `tests/properties.rs`).
+    pub fn covered_bits(&self, bits: &PatternBits) -> PatternBits {
+        self.roots_cov(bits).1
+    }
+
+    /// Effective region roots as a bitset: selected loops with no selected
+    /// ancestor.  Agrees with `OffloadPattern::region_roots` (proven in
+    /// `tests/properties.rs`).
+    pub fn root_bits(&self, bits: &PatternBits) -> PatternBits {
+        self.roots_cov(bits).0
+    }
+
+    /// Dense region coverage — the PR-1 incremental parent pass, retained
+    /// as the reference for `measure_dense`.
+    #[inline]
+    fn covered_dense(&self, bits: &PatternBits) -> PatternBits {
         let mut cov = PatternBits::zeros(self.n);
         for i in 0..self.n {
             let mut c = bits.get(i);
@@ -277,9 +365,10 @@ impl MeasurementPlan {
         cov
     }
 
-    /// Is loop i an effective region root (selected, no selected ancestor)?
+    /// Dense root test — the PR-1 parent lookup, retained for
+    /// `measure_dense`.
     #[inline]
-    fn is_root(&self, bits: &PatternBits, cov: &PatternBits, i: usize) -> bool {
+    fn is_root_dense(&self, bits: &PatternBits, cov: &PatternBits, i: usize) -> bool {
         if !bits.get(i) {
             return false;
         }
@@ -287,9 +376,13 @@ impl MeasurementPlan {
         p == NO_PARENT || !cov.get(p as usize)
     }
 
-    /// Simulated run time + validity of the pattern — table lookups and bit
-    /// arithmetic only, no heap allocation.  Bit-identical to the direct
-    /// `DeviceModel::measure` path.
+    /// Simulated run time + validity of the pattern — table lookups and
+    /// bit arithmetic only, no heap allocation.  Sparse and word-parallel:
+    /// all sums iterate set bits of the coverage bitset / its complement /
+    /// the root bitset in ascending order, which visits the same indices
+    /// in the same order as the direct IR walk, so the result is
+    /// bit-identical to the direct `DeviceModel::measure` path (and to
+    /// [`Self::measure_dense`]).
     pub fn measure(&self, bits: &PatternBits) -> Measurement {
         // Hard assert: a pattern for the wrong app (e.g. the original app
         // vs the function-block-subtracted one) would otherwise yield a
@@ -302,15 +395,17 @@ impl MeasurementPlan {
                 setup_seconds: self.setup_seconds,
             },
             DevicePlan::ManyCore { par_secs, omp_secs } => {
-                let cov = self.covered(bits);
+                let (roots, cov) = self.roots_cov(bits);
+                let ncov = cov.complement();
                 let mut t = 0.0;
-                for i in 0..self.n {
-                    t += if cov.get(i) { par_secs[i] } else { self.host_secs[i] };
+                for i in cov.ones() {
+                    t += par_secs[i];
                 }
-                for i in 0..self.n {
-                    if self.is_root(bits, &cov, i) {
-                        t += omp_secs[i];
-                    }
+                for i in ncov.ones() {
+                    t += self.host_secs[i];
+                }
+                for i in roots.ones() {
+                    t += omp_secs[i];
                 }
                 Measurement {
                     seconds: t,
@@ -319,21 +414,17 @@ impl MeasurementPlan {
                 }
             }
             DevicePlan::Gpu { kernel_nest, launch_nest, hoist, bw_pcie } => {
-                let cov = self.covered(bits);
+                let (roots, cov) = self.roots_cov(bits);
+                let ncov = cov.complement();
                 // PCIe transfers: per region root, each array touched in
                 // the nest crosses once per invocation unless the
                 // transfer-reduction pass keeps it device-resident.
                 let mut cpu_touched = 0u64;
-                for i in 0..self.n {
-                    if !cov.get(i) {
-                        cpu_touched |= self.self_amask[i];
-                    }
+                for i in ncov.ones() {
+                    cpu_touched |= self.self_amask[i];
                 }
                 let mut total_bytes = 0.0;
-                for i in 0..self.n {
-                    if !self.is_root(bits, &cov, i) {
-                        continue;
-                    }
+                for i in roots.ones() {
                     let mut rest = self.nest_amask[i];
                     while rest != 0 {
                         let a = rest.trailing_zeros() as usize;
@@ -344,16 +435,12 @@ impl MeasurementPlan {
                     }
                 }
                 let mut t = total_bytes / bw_pcie;
-                for i in 0..self.n {
-                    if self.is_root(bits, &cov, i) {
-                        t += kernel_nest[i];
-                        t += launch_nest[i];
-                    }
+                for i in roots.ones() {
+                    t += kernel_nest[i];
+                    t += launch_nest[i];
                 }
-                for i in 0..self.n {
-                    if !cov.get(i) {
-                        t += self.host_secs[i];
-                    }
+                for i in ncov.ones() {
+                    t += self.host_secs[i];
                 }
                 Measurement {
                     seconds: t,
@@ -362,16 +449,14 @@ impl MeasurementPlan {
                 }
             }
             DevicePlan::Fpga { levels, budget, bw_pcie } => {
-                let cov = self.covered(bits);
+                let (roots, cov) = self.roots_cov(bits);
                 // Largest unroll whose combined estimate fits, in the same
                 // halving order as `Fpga::feasible_unroll`.
                 let mut fit: Option<&FpgaLevel> = None;
                 for lv in levels {
                     let mut total = ResourceEstimate::zero();
-                    for i in 0..self.n {
-                        if self.is_root(bits, &cov, i) {
-                            total = total.add(&lv.est[i]);
-                        }
+                    for i in roots.ones() {
+                        total = total.add(&lv.est[i]);
                     }
                     if budget.fits(&total) {
                         fit = Some(lv);
@@ -388,8 +473,130 @@ impl MeasurementPlan {
                     };
                 };
                 let mut bytes = 0.0;
+                for i in roots.ones() {
+                    let mut rest = self.nest_amask[i];
+                    while rest != 0 {
+                        let a = rest.trailing_zeros() as usize;
+                        rest &= rest - 1;
+                        bytes += 2.0 * self.array_bytes[a] * self.inv[i];
+                    }
+                }
+                let mut t = bytes / bw_pcie;
+                for i in roots.ones() {
+                    t += lv.pipe_nest[i];
+                }
+                for i in cov.complement().ones() {
+                    t += self.host_secs[i];
+                }
+                Measurement { seconds: t, valid: true, setup_seconds: self.setup_seconds }
+            }
+        }
+    }
+
+    /// The PR-1 dense measurement path: four full `0..n` passes per call,
+    /// with per-bit coverage/root tests.  Retained as the executable
+    /// reference the sparse kernel is benchmarked against
+    /// (`measure.<dev>.sparse_speedup` in `benches/hotpath.rs`) and
+    /// differentially tested against (`tests/properties.rs`).  Returns
+    /// bit-identical `Measurement`s to [`Self::measure`] and to the direct
+    /// device path.
+    pub fn measure_dense(&self, bits: &PatternBits) -> Measurement {
+        assert_eq!(bits.len(), self.n, "pattern length != plan loop count");
+        match &self.device {
+            DevicePlan::Cpu { total_secs } => Measurement {
+                seconds: *total_secs,
+                valid: true,
+                setup_seconds: self.setup_seconds,
+            },
+            DevicePlan::ManyCore { par_secs, omp_secs } => {
+                let cov = self.covered_dense(bits);
+                let mut t = 0.0;
                 for i in 0..self.n {
-                    if !self.is_root(bits, &cov, i) {
+                    if cov.get(i) {
+                        t += par_secs[i];
+                    }
+                }
+                for i in 0..self.n {
+                    if !cov.get(i) {
+                        t += self.host_secs[i];
+                    }
+                }
+                for i in 0..self.n {
+                    if self.is_root_dense(bits, &cov, i) {
+                        t += omp_secs[i];
+                    }
+                }
+                Measurement {
+                    seconds: t,
+                    valid: bits.is_subset_of(&self.dep_free),
+                    setup_seconds: self.setup_seconds,
+                }
+            }
+            DevicePlan::Gpu { kernel_nest, launch_nest, hoist, bw_pcie } => {
+                let cov = self.covered_dense(bits);
+                let mut cpu_touched = 0u64;
+                for i in 0..self.n {
+                    if !cov.get(i) {
+                        cpu_touched |= self.self_amask[i];
+                    }
+                }
+                let mut total_bytes = 0.0;
+                for i in 0..self.n {
+                    if !self.is_root_dense(bits, &cov, i) {
+                        continue;
+                    }
+                    let mut rest = self.nest_amask[i];
+                    while rest != 0 {
+                        let a = rest.trailing_zeros() as usize;
+                        rest &= rest - 1;
+                        let hoistable = *hoist && cpu_touched & (1u64 << a) == 0;
+                        let count = if hoistable { 1.0 } else { self.inv[i] };
+                        total_bytes += 2.0 * self.array_bytes[a] * count;
+                    }
+                }
+                let mut t = total_bytes / bw_pcie;
+                for i in 0..self.n {
+                    if self.is_root_dense(bits, &cov, i) {
+                        t += kernel_nest[i];
+                        t += launch_nest[i];
+                    }
+                }
+                for i in 0..self.n {
+                    if !cov.get(i) {
+                        t += self.host_secs[i];
+                    }
+                }
+                Measurement {
+                    seconds: t,
+                    valid: bits.is_subset_of(&self.dep_free),
+                    setup_seconds: self.setup_seconds,
+                }
+            }
+            DevicePlan::Fpga { levels, budget, bw_pcie } => {
+                let cov = self.covered_dense(bits);
+                let mut fit: Option<&FpgaLevel> = None;
+                for lv in levels {
+                    let mut total = ResourceEstimate::zero();
+                    for i in 0..self.n {
+                        if self.is_root_dense(bits, &cov, i) {
+                            total = total.add(&lv.est[i]);
+                        }
+                    }
+                    if budget.fits(&total) {
+                        fit = Some(lv);
+                        break;
+                    }
+                }
+                let Some(lv) = fit else {
+                    return Measurement {
+                        seconds: f64::INFINITY,
+                        valid: false,
+                        setup_seconds: self.setup_seconds,
+                    };
+                };
+                let mut bytes = 0.0;
+                for i in 0..self.n {
+                    if !self.is_root_dense(bits, &cov, i) {
                         continue;
                     }
                     let mut rest = self.nest_amask[i];
@@ -401,7 +608,7 @@ impl MeasurementPlan {
                 }
                 let mut t = bytes / bw_pcie;
                 for i in 0..self.n {
-                    if self.is_root(bits, &cov, i) {
+                    if self.is_root_dense(bits, &cov, i) {
                         t += lv.pipe_nest[i];
                     }
                 }
@@ -425,16 +632,24 @@ impl MeasurementPlan {
 /// One offload run compiles each (app, device) pair at most once anyway;
 /// the cache is for the *batch* service (coordinator/batch.rs), where many
 /// applications flow through the six-trial schedule concurrently and the
-/// same app may appear more than once.  The map lock is held across
-/// compilation so each pair is compiled exactly once even under
-/// contention — plan compilation is O(loops × depth), far cheaper than the
-/// duplicated compile it prevents.
+/// same app may appear more than once.  The map lock only guards the
+/// key → slot association; compilation itself runs under a **per-key
+/// once-cell** (double-checked `OnceLock`), so distinct (app, device)
+/// pairs compile concurrently while each pair still compiles exactly once
+/// even under contention — `benches/batch.rs` asserts the exactly-once
+/// invariant across repeated batches.
 #[derive(Default)]
 pub struct PlanCache {
-    plans: Mutex<HashMap<(u64, DeviceKind, u64), Arc<MeasurementPlan>>>,
+    plans: Mutex<HashMap<PlanKey, PlanSlot>>,
     hits: AtomicUsize,
     compiles: AtomicUsize,
 }
+
+/// (app fingerprint, device kind, device config fingerprint).
+type PlanKey = (u64, DeviceKind, u64);
+
+/// Per-key compile cell: filled exactly once, shared by every waiter.
+type PlanSlot = Arc<OnceLock<Arc<MeasurementPlan>>>;
 
 impl PlanCache {
     pub fn new() -> Self {
@@ -444,15 +659,28 @@ impl PlanCache {
     /// The plan for (`app`, `device`), compiling on first use.
     pub fn plan(&self, app: &Application, device: &dyn DeviceModel) -> Arc<MeasurementPlan> {
         let key = (app.fingerprint(), device.kind(), device.config_fingerprint());
-        let mut map = self.plans.lock().unwrap();
-        if let Some(plan) = map.get(&key) {
+        let slot = {
+            let mut map = self.plans.lock().unwrap();
+            Arc::clone(map.entry(key).or_insert_with(|| Arc::new(OnceLock::new())))
+        };
+        // Map lock released: a slow compile of one pair no longer
+        // serializes compiles (or lookups) of every other pair.
+        if let Some(plan) = slot.get() {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Arc::clone(plan);
         }
-        self.compiles.fetch_add(1, Ordering::Relaxed);
-        let plan = Arc::new(device.compile_plan(app));
-        map.insert(key, Arc::clone(&plan));
-        plan
+        let mut compiled_here = false;
+        let plan = slot.get_or_init(|| {
+            compiled_here = true;
+            self.compiles.fetch_add(1, Ordering::Relaxed);
+            Arc::new(device.compile_plan(app))
+        });
+        if !compiled_here {
+            // Lost the init race: the lookup was still answered by another
+            // thread's compile, i.e. served from the cache.
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        Arc::clone(plan)
     }
 
     /// Lookups answered from the cache.
@@ -542,11 +770,45 @@ mod tests {
                 }
             }
             let pattern = OffloadPattern::from_packed(bits);
-            let cov = plan.covered(&bits);
+            let cov = plan.covered_bits(&bits);
+            let root_bits = plan.root_bits(&bits);
             let roots = pattern.region_roots(&app);
             for l in &app.loops {
                 assert_eq!(cov.get(l.id.0), pattern.in_region(&app, l.id));
-                assert_eq!(plan.is_root(&bits, &cov, l.id.0), roots.contains(&l.id));
+                assert_eq!(root_bits.get(l.id.0), roots.contains(&l.id));
+                // The dense reference path agrees with the mask kernel.
+                let dense_cov = plan.covered_dense(&bits);
+                assert_eq!(dense_cov, cov);
+                assert_eq!(
+                    plan.is_root_dense(&bits, &dense_cov, l.id.0),
+                    root_bits.get(l.id.0)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_measure_matches_dense_reference() {
+        let tb = Testbed::default();
+        for app in [threemm::build(300), nas_bt::build(16, 10)] {
+            let plans = [
+                tb.cpu.compile_plan(&app),
+                tb.manycore.compile_plan(&app),
+                tb.gpu.compile_plan(&app),
+                tb.fpga.compile_plan(&app),
+            ];
+            let mut rng = Rng::new(0xD15E);
+            for trial in 0..48 {
+                let density = [0.0, 0.25, 0.5, 1.0][trial % 4];
+                let mut bits = PatternBits::zeros(app.loop_count());
+                for i in 0..app.loop_count() {
+                    if rng.chance(density) {
+                        bits.set(i, true);
+                    }
+                }
+                for plan in &plans {
+                    assert_same(plan.measure_dense(&bits), plan.measure(&bits));
+                }
             }
         }
     }
@@ -587,6 +849,29 @@ mod tests {
         // own device config.
         let pattern = OffloadPattern::selecting(&app, &[app.blocks[0].loop_ids[0]]);
         assert_same(unhoisted.compile_plan(&app).measure(&pattern.bits), p2.measure(&pattern.bits));
+    }
+
+    /// The once-cell satellite's invariant: under thread contention each
+    /// (app, device) pair compiles exactly once, and every other lookup is
+    /// a hit — whether it found the slot filled or blocked on the winner's
+    /// in-flight compile.
+    #[test]
+    fn plan_cache_is_exactly_once_under_contention() {
+        let tb = Testbed::default();
+        let cache = PlanCache::new();
+        let app = threemm::build(200);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..4 {
+                        let _ = cache.plan(&app, &tb.gpu);
+                        let _ = cache.plan(&app, &tb.manycore);
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.compiles(), 2, "one compile per (app, device) pair");
+        assert_eq!(cache.hits() + cache.compiles(), 8 * 4 * 2, "every lookup accounted");
     }
 
     #[test]

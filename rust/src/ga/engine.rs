@@ -5,6 +5,10 @@
 //! four words instead of walking a `Vec<bool>`, per-generation dedup is a
 //! `HashSet` probe instead of an O(population²) linear scan, and genomes
 //! are `Copy` — nothing on the per-generation path allocates per genome.
+//! Per-generation measurement fan-out rides the persistent
+//! [`crate::util::threadpool::WorkerPool`] (via the `map_parallel` shim),
+//! so a whole search — and every trial and batch around it — reuses one
+//! set of OS threads instead of spawning per generation.
 
 use std::collections::{HashMap, HashSet};
 
@@ -144,28 +148,34 @@ impl<'a> Ga<'a> {
                 cache.insert(g, m);
             }
 
-            let measurements: Vec<Measurement> = pop.iter().map(|g| cache[g]).collect();
-            let fits: Vec<f64> =
-                measurements.iter().map(|m| fitness(m, cfg.exponent)).collect();
-
-            // Track the global best valid/non-timeout individual.
-            for (g, m) in pop.iter().zip(&measurements) {
-                if fitness(m, cfg.exponent) > 0.0 {
+            // One walk over the population: fitness (computed once per
+            // individual and reused below), validity count, fitness sum
+            // and global-best tracking together.
+            let mut fits: Vec<f64> = Vec::with_capacity(pop.len());
+            let mut fit_sum = 0.0;
+            let mut valid_count = 0usize;
+            for g in &pop {
+                let m = cache[g];
+                let f = fitness(&m, cfg.exponent);
+                if f > 0.0 {
+                    valid_count += 1;
+                    // Track the global best valid/non-timeout individual.
                     let better = match &best {
                         Some((_, bm)) => m.seconds < bm.seconds,
                         None => true,
                     };
                     if better {
-                        best = Some((*g, *m));
+                        best = Some((*g, m));
                     }
                 }
+                fit_sum += f;
+                fits.push(f);
             }
 
-            let valid_count = fits.iter().filter(|&&f| f > 0.0).count();
             history.push(GenStats {
                 generation,
                 best_seconds: best.as_ref().map(|(_, m)| m.seconds).unwrap_or(f64::INFINITY),
-                mean_fitness: fits.iter().sum::<f64>() / fits.len().max(1) as f64,
+                mean_fitness: fit_sum / fits.len().max(1) as f64,
                 valid_count,
                 new_evaluations,
             });

@@ -47,7 +47,9 @@ pub fn search_traced(
     cfg: FpgaSearchConfig,
 ) -> (LoopOffloadOutcome, FpgaTrace) {
     // Only ~4 patterns are measured, but the plan also amortizes the
-    // per-root resource/pipeline tabulation across them (devices/plan.rs).
+    // per-root resource/pipeline tabulation across them, and each
+    // measurement's per-level resource totals now walk only the root
+    // bitset's set bits instead of every loop (devices/plan.rs).
     search_traced_with_plan(app, &device.compile_plan(app), cfg)
 }
 

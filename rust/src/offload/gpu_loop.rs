@@ -16,6 +16,10 @@ use super::manycore_loop::search_on;
 use super::LoopOffloadOutcome;
 
 /// Run the GA search for the best OpenACC pattern on `device`.
+///
+/// Rides the shared GA-over-mask driver: one compiled plan (sparse
+/// word-parallel measurement kernel), generations measured on the
+/// persistent worker pool (see devices/plan.rs, util/threadpool.rs).
 pub fn search(app: &Application, device: &Gpu, config: GaConfig) -> LoopOffloadOutcome {
     search_on(app, device, config)
 }

@@ -25,8 +25,11 @@ pub fn search(app: &Application, device: &ManyCore, config: GaConfig) -> LoopOff
 /// Shared GA-over-mask driver (also used by the GPU method).
 ///
 /// The device is compiled into a [`crate::devices::MeasurementPlan`] once;
-/// every GA measurement is then table lookups + bit arithmetic instead of
-/// an IR walk (see devices/plan.rs and EXPERIMENTS.md #Perf).
+/// every GA measurement is then the sparse word-parallel mask kernel —
+/// set-bit iteration plus table lookups instead of an IR walk (see
+/// devices/plan.rs and EXPERIMENTS.md #Perf) — and generations fan out
+/// over the persistent `util::threadpool::WorkerPool`, so a whole search
+/// spawns no OS threads of its own.
 pub(crate) fn search_on(
     app: &Application,
     device: &dyn DeviceModel,

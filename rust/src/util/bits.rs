@@ -48,6 +48,17 @@ impl PatternBits {
         out
     }
 
+    /// Mask builder: a bitset of logical length `len` with exactly the
+    /// given indices set (the subtree/ancestor mask constructor used by
+    /// `devices/plan.rs`).
+    pub fn from_ones(len: usize, ones: impl IntoIterator<Item = usize>) -> Self {
+        let mut out = Self::zeros(len);
+        for i in ones {
+            out.set(i, true);
+        }
+        out
+    }
+
     pub fn to_bools(&self) -> Vec<bool> {
         (0..self.len()).map(|i| self.get(i)).collect()
     }
@@ -110,6 +121,42 @@ impl PatternBits {
     #[inline]
     pub fn intersects(&self, other: &Self) -> bool {
         self.words.iter().zip(&other.words).any(|(a, b)| a & b != 0)
+    }
+
+    /// Word-wise OR of `other` into `self` (lengths must match).  The
+    /// sparse measurement kernel unions per-root subtree masks with this —
+    /// four word ORs instead of a per-loop parent-chain walk.
+    #[inline]
+    pub fn union_with(&mut self, other: &Self) {
+        debug_assert_eq!(self.len, other.len);
+        for w in 0..WORDS {
+            self.words[w] |= other.words[w];
+        }
+    }
+
+    /// Word-wise AND (lengths must match).
+    #[inline]
+    pub fn intersection(&self, other: &Self) -> Self {
+        debug_assert_eq!(self.len, other.len);
+        let mut out = *self;
+        for w in 0..WORDS {
+            out.words[w] &= other.words[w];
+        }
+        out
+    }
+
+    /// All bits below `len` flipped.  Bits at positions >= `len` stay
+    /// zero, preserving the type invariant, so `ones()` over the
+    /// complement visits exactly the *unset* logical positions in
+    /// ascending order — the sparse iteration the measurement kernel uses
+    /// for host-residue sums.
+    #[inline]
+    pub fn complement(&self) -> Self {
+        let mut out = Self { len: self.len, words: [0; WORDS] };
+        for w in 0..WORDS {
+            out.words[w] = !self.words[w] & low_mask(self.len(), w);
+        }
+        out
     }
 
     /// Single-point crossover: bits `[0, cut)` from `self`, `[cut, len)`
@@ -253,6 +300,51 @@ mod tests {
                 assert_eq!(d.get(i), i >= cut, "cut {cut} bit {i}");
             }
         }
+    }
+
+    #[test]
+    fn union_and_intersection_are_word_wise_set_ops() {
+        let a = PatternBits::from_ones(200, [0, 63, 64, 199]);
+        let b = PatternBits::from_ones(200, [63, 65, 199]);
+        let mut u = a;
+        u.union_with(&b);
+        assert_eq!(u.ones().collect::<Vec<_>>(), vec![0, 63, 64, 65, 199]);
+        let i = a.intersection(&b);
+        assert_eq!(i.ones().collect::<Vec<_>>(), vec![63, 199]);
+        assert_eq!(i.len(), 200);
+        // Union with an empty set is the identity.
+        let mut v = a;
+        v.union_with(&PatternBits::zeros(200));
+        assert_eq!(v, a);
+    }
+
+    #[test]
+    fn complement_respects_len_invariant() {
+        for len in [0usize, 1, 63, 64, 65, 130, MAX_BITS] {
+            let src: Vec<bool> = (0..len).map(|i| i % 5 < 2).collect();
+            let b = PatternBits::from_bools(&src);
+            let c = b.complement();
+            assert_eq!(c.len(), len);
+            for i in 0..len {
+                assert_eq!(c.get(i), !b.get(i), "len {len} bit {i}");
+            }
+            // Bits above len stay zero: complement of the complement
+            // round-trips and popcounts partition the length.
+            assert_eq!(c.complement(), b);
+            assert_eq!(b.count_ones() + c.count_ones(), len);
+            // ones() over the complement visits exactly the unset
+            // positions, ascending.
+            let unset: Vec<usize> = (0..len).filter(|&i| !b.get(i)).collect();
+            assert_eq!(c.ones().collect::<Vec<_>>(), unset);
+        }
+    }
+
+    #[test]
+    fn from_ones_builds_masks() {
+        let m = PatternBits::from_ones(70, [2, 64, 69]);
+        assert_eq!(m.len(), 70);
+        assert_eq!(m.count_ones(), 3);
+        assert!(m.get(2) && m.get(64) && m.get(69) && !m.get(3));
     }
 
     #[test]

@@ -1,61 +1,247 @@
-//! Fixed-size scoped thread pool (offline substitute for tokio/rayon).
+//! Persistent worker pool (offline substitute for tokio/rayon).
 //!
 //! The coordinator measures a GA generation's individuals concurrently
-//! across the verification-machine pool; `map_parallel` preserves input
-//! order in its output, which the GA requires to keep genome/fitness
-//! alignment.
+//! across the verification-machine pool.  PR 1 spawned fresh OS threads
+//! for every generation — population × generations × trials thread
+//! creations per offload run.  [`WorkerPool`] spawns its workers **once**
+//! and feeds them jobs over a shared queue for the life of the process:
+//! `Ga::run`, the trial strategies and the batch service all fan out
+//! through [`WorkerPool::global`] (usually via the [`map_parallel`] shim),
+//! so generations, trials and whole batches reuse the same threads.
+//! `benches/hotpath.rs` emits `pool.spawned_threads` to prove the count
+//! stays at pool size however much work flows through.
+//!
+//! [`WorkerPool::map`] preserves input order in its output (the GA
+//! requires genome/fitness alignment), caps in-flight items at the given
+//! worker count, and propagates job panics to the caller after the batch
+//! settles (fail fast — a poisoned measurement must not be silently
+//! dropped) while the worker threads themselves survive.  The caller
+//! always participates in draining its own queue, so nested `map` calls
+//! cannot deadlock even when every pool thread is busy: the innermost
+//! call degenerates to sequential execution on the calling thread.
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Run `f` over `items` on up to `workers` OS threads; results come back in
-/// input order.  Panics in `f` propagate as a panic here (fail fast — a
+/// A type-erased unit of pool work.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolQueue {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    queue: Mutex<PoolQueue>,
+    ready: Condvar,
+    /// OS threads this pool has ever spawned.  Stays at pool size for the
+    /// life of the pool — the `pool.spawned_threads` bench metric.
+    spawned: AtomicUsize,
+}
+
+/// A fixed-size, long-lived pool of worker threads.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    threads: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    break job;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.ready.wait(q).unwrap();
+            }
+        };
+        // `map` jobs catch their own panics; this guard keeps the worker
+        // alive against any future job type.
+        let _ = catch_unwind(AssertUnwindSafe(job));
+    }
+}
+
+/// Erase a job's lifetime so it can ride the pool's `'static` queue.
+///
+/// # Safety
+/// Every borrow reachable through `job` must stay live until the job can
+/// no longer touch it.  [`WorkerPool::map`] guarantees this: the job owns
+/// an `Arc` of the call state (closure moved in by value, so no borrowed
+/// closure can dangle), the caller blocks until `remaining == 0`, which
+/// only happens after every item has been popped and processed, and the
+/// caller takes the results out before returning — so a straggler helper
+/// job that runs after `map` returned observes only an empty item queue
+/// and empty result slots through its own `Arc`; no value borrowed from
+/// the caller's frame survives inside the allocation.
+unsafe fn erase_job<'a>(job: Box<dyn FnOnce() + Send + 'a>) -> Job {
+    std::mem::transmute(job)
+}
+
+/// Per-`map` shared state: the item queue, the result slots, the
+/// completion latch and the mapping closure itself (owned, so stale
+/// helper jobs never hold a dangling borrow).  Helpers reach it through
+/// an `Arc`, which keeps the allocation alive for any straggler job.
+struct Call<T, R, F> {
+    /// (index, item) pairs, reversed so `pop()` hands them out in input
+    /// order.
+    queue: Mutex<Vec<(usize, T)>>,
+    results: Mutex<Vec<Option<std::thread::Result<R>>>>,
+    remaining: Mutex<usize>,
+    done: Condvar,
+    f: F,
+}
+
+impl<T: Send, R: Send, F: Fn(T) -> R + Sync> Call<T, R, F> {
+    /// Pop-compute-store until the item queue is empty.  Runs on the
+    /// caller *and* on up to `cap - 1` pool workers concurrently.
+    fn drain(&self) {
+        loop {
+            let next = self.queue.lock().unwrap().pop();
+            let Some((i, item)) = next else { return };
+            let r = catch_unwind(AssertUnwindSafe(|| (self.f)(item)));
+            self.results.lock().unwrap()[i] = Some(r);
+            let mut rem = self.remaining.lock().unwrap();
+            *rem -= 1;
+            if *rem == 0 {
+                self.done.notify_all();
+            }
+        }
+    }
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `threads` (min 1) long-lived workers.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(PoolQueue { jobs: VecDeque::new(), shutdown: false }),
+            ready: Condvar::new(),
+            spawned: AtomicUsize::new(0),
+        });
+        let handles = (0..threads)
+            .map(|k| {
+                let s = Arc::clone(&shared);
+                s.spawned.fetch_add(1, Ordering::Relaxed);
+                std::thread::Builder::new()
+                    .name(format!("mixoff-worker-{k}"))
+                    .spawn(move || worker_loop(&s))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { shared, threads, handles }
+    }
+
+    /// The process-wide shared pool (one worker per hardware thread),
+    /// created on first use and never torn down.  Everything that used to
+    /// spawn per-call threads — GA generations, batch fan-out — shares it.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+            WorkerPool::new(cores)
+        })
+    }
+
+    /// Worker threads in the pool.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// OS threads this pool has ever spawned (== `threads()`, however many
+    /// `map` calls have run — the point of persistence).
+    pub fn spawned_threads(&self) -> usize {
+        self.shared.spawned.load(Ordering::Relaxed)
+    }
+
+    fn submit(&self, job: Job) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.jobs.push_back(job);
+        drop(q);
+        self.shared.ready.notify_one();
+    }
+
+    /// Run `f` over `items` with at most `cap` in flight at once; results
+    /// come back in input order.  The caller drains alongside up to
+    /// `cap - 1` pool workers, so progress never depends on pool capacity
+    /// (nested calls are safe).  Panics in `f` propagate as a panic here
+    /// once every item has settled; the pool's threads survive.
+    pub fn map<T, R, F>(&self, items: Vec<T>, cap: usize, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Send + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let cap = cap.clamp(1, n);
+        if cap == 1 {
+            return items.into_iter().map(f).collect();
+        }
+        let call = Arc::new(Call {
+            queue: Mutex::new(items.into_iter().enumerate().rev().collect()),
+            results: Mutex::new((0..n).map(|_| None).collect()),
+            remaining: Mutex::new(n),
+            done: Condvar::new(),
+            f,
+        });
+        // Enlist cap - 1 pool workers; the caller is the cap-th runner.
+        for _ in 0..cap - 1 {
+            let c = Arc::clone(&call);
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || c.drain());
+            // SAFETY: see `erase_job` — the wait below keeps every borrow
+            // live until no job can touch it.
+            self.submit(unsafe { erase_job(job) });
+        }
+        call.drain();
+        // Items may still be in flight on pool workers.
+        let mut rem = call.remaining.lock().unwrap();
+        while *rem != 0 {
+            rem = call.done.wait(rem).unwrap();
+        }
+        drop(rem);
+        let slots = std::mem::take(&mut *call.results.lock().unwrap());
+        let mut out = Vec::with_capacity(n);
+        for slot in slots {
+            match slot.expect("worker died before producing result") {
+                Ok(r) => out.push(r),
+                Err(payload) => resume_unwind(payload),
+            }
+        }
+        out
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().shutdown = true;
+        self.shared.ready.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Run `f` over `items` on up to `workers` threads of the process-wide
+/// [`WorkerPool`]; results come back in input order.  Kept as a shim over
+/// the lazily-initialized global pool so existing call sites get thread
+/// reuse for free.  Panics in `f` propagate as a panic here (fail fast — a
 /// poisoned measurement must not be silently dropped).
 pub fn map_parallel<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
 where
     T: Send,
     R: Send,
-    F: Fn(T) -> R + Sync,
+    F: Fn(T) -> R + Send + Sync,
 {
-    let n = items.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    let workers = workers.max(1).min(n);
-    if workers == 1 {
-        return items.into_iter().map(f).collect();
-    }
-
-    let queue: Arc<Mutex<Vec<(usize, T)>>> =
-        Arc::new(Mutex::new(items.into_iter().enumerate().rev().collect()));
-    let (tx, rx) = mpsc::channel::<(usize, R)>();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let queue = Arc::clone(&queue);
-            let tx = tx.clone();
-            let f = &f;
-            scope.spawn(move || loop {
-                let job = queue.lock().unwrap().pop();
-                match job {
-                    Some((i, item)) => {
-                        // If the channel is gone the receiver panicked; stop.
-                        if tx.send((i, f(item))).is_err() {
-                            return;
-                        }
-                    }
-                    None => return,
-                }
-            });
-        }
-        drop(tx);
-        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        for (i, r) in rx {
-            out[i] = Some(r);
-        }
-        out.into_iter()
-            .map(|o| o.expect("worker died before producing result"))
-            .collect()
-    })
+    WorkerPool::global().map(items, workers, f)
 }
 
 #[cfg(test)]
@@ -71,9 +257,13 @@ mod tests {
 
     #[test]
     fn runs_concurrently() {
+        // A private pool keeps the concurrency guarantee deterministic:
+        // the global pool's workers may all be busy with other tests'
+        // jobs, in which case the caller legitimately drains alone.
+        let pool = WorkerPool::new(4);
         let peak = AtomicUsize::new(0);
         let live = AtomicUsize::new(0);
-        map_parallel((0..16).collect::<Vec<usize>>(), 4, |_| {
+        pool.map((0..16).collect::<Vec<usize>>(), 4, |_| {
             let cur = live.fetch_add(1, Ordering::SeqCst) + 1;
             peak.fetch_max(cur, Ordering::SeqCst);
             std::thread::sleep(std::time::Duration::from_millis(10));
@@ -92,5 +282,69 @@ mod tests {
     #[test]
     fn more_workers_than_items() {
         assert_eq!(map_parallel(vec![1, 2], 64, |i| i), vec![1, 2]);
+    }
+
+    /// The persistence line: once the global pool exists, arbitrarily many
+    /// maps spawn zero additional OS threads.  (Only the global pool's own
+    /// counter is sampled, so concurrently running tests that build
+    /// private pools cannot perturb this.)
+    #[test]
+    fn maps_do_not_spawn_new_threads() {
+        let _ = map_parallel(vec![1, 2, 3], 2, |x| x); // force pool init
+        let before = WorkerPool::global().spawned_threads();
+        assert!(before >= 1);
+        for _ in 0..16 {
+            let out = map_parallel((0..64).collect::<Vec<usize>>(), 8, |i| i * 2);
+            assert_eq!(out.len(), 64);
+        }
+        assert_eq!(
+            WorkerPool::global().spawned_threads(),
+            before,
+            "map calls must reuse the persistent pool"
+        );
+    }
+
+    /// Nested fan-out must not deadlock even when every pool thread is
+    /// busy with outer work: the caller drains its own queue.
+    #[test]
+    fn nested_maps_complete_without_deadlock() {
+        let out = map_parallel((0..4).collect::<Vec<usize>>(), 4, |i| {
+            map_parallel((0..8).collect::<Vec<usize>>(), 4, |j| i * 100 + j)
+                .into_iter()
+                .sum::<usize>()
+        });
+        let expect: Vec<usize> =
+            (0..4).map(|i| (0..8).map(|j| i * 100 + j).sum()).collect();
+        assert_eq!(out, expect);
+    }
+
+    /// A panicking job resurfaces on the caller, and the pool's worker
+    /// threads survive to serve the next map.
+    #[test]
+    fn propagates_panics_and_pool_survives() {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            map_parallel(vec![1usize, 2, 3], 3, |i| {
+                if i == 2 {
+                    panic!("boom in worker");
+                }
+                i
+            })
+        }));
+        let payload = result.expect_err("panic must propagate to the caller");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("boom in worker"), "unexpected payload {msg:?}");
+        assert_eq!(map_parallel(vec![1, 2], 2, |i| i * 10), vec![10, 20]);
+    }
+
+    /// Private pools work standalone and join their threads on drop.
+    #[test]
+    fn private_pool_maps_and_drops_cleanly() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.threads(), 2);
+        assert_eq!(pool.spawned_threads(), 2);
+        let out = pool.map((0..32).collect::<Vec<usize>>(), 2, |i| i + 1);
+        assert_eq!(out, (1..33).collect::<Vec<_>>());
+        assert_eq!(pool.spawned_threads(), 2, "maps add no threads");
+        drop(pool); // joins both workers; a hang here fails the test by timeout
     }
 }

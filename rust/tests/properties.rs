@@ -11,6 +11,7 @@ use mixoff::app::ir::{Access, Application, Dependence, LoopId};
 use mixoff::coordinator::{remap_pattern, MixedOffloader};
 use mixoff::devices::{DeviceModel, Testbed};
 use mixoff::offload::pattern::OffloadPattern;
+use mixoff::util::bits::PatternBits;
 use mixoff::util::prop::{forall, gen};
 use mixoff::util::rng::Rng;
 
@@ -154,6 +155,97 @@ fn plan_based_measure_is_bit_identical_to_direct() {
                     "{:?} setup",
                     plan.kind()
                 );
+            }
+        }
+    });
+}
+
+/// The sparse kernel's precomputed masks agree with the pattern algebra:
+/// for random apps and patterns, the plan's coverage bitset matches
+/// `OffloadPattern::in_region` loop-for-loop, and its root bitset (the
+/// word-wise `bits ∩ ancestor_mask = ∅` test) names exactly
+/// `OffloadPattern::region_roots`.
+#[test]
+fn plan_masks_agree_with_pattern_region_algebra() {
+    let tb = Testbed::default();
+    forall(100, |rng| {
+        let app = random_app(rng);
+        // Masks are device-independent; one plan suffices to check them.
+        let plan = tb.manycore.compile_plan(&app);
+        for _ in 0..6 {
+            let p = random_pattern(rng, &app);
+            let cov = plan.covered_bits(&p.bits);
+            let roots = plan.root_bits(&p.bits);
+            let root_ids = p.region_roots(&app);
+            for l in &app.loops {
+                assert_eq!(
+                    cov.get(l.id.0),
+                    p.in_region(&app, l.id),
+                    "coverage mismatch at {:?} for {:?}",
+                    l.id,
+                    p
+                );
+                assert_eq!(
+                    roots.get(l.id.0),
+                    root_ids.contains(&l.id),
+                    "root mismatch at {:?} for {:?}",
+                    l.id,
+                    p
+                );
+            }
+            // Roots are exactly the selected ∩ uncovered-parent subset of
+            // the coverage set.
+            assert!(roots.is_subset_of(&p.bits));
+            assert!(roots.is_subset_of(&cov));
+            assert!(p.bits.is_subset_of(&cov));
+        }
+    });
+}
+
+/// Sparse kernel ≡ dense reference ≡ direct specification, pinned at the
+/// extreme densities (0 = empty pattern, 0.25 = the GA's init density,
+/// 1 = everything selected) for all four device models.
+#[test]
+fn sparse_dense_direct_agree_at_extreme_densities() {
+    let tb = Testbed::default();
+    forall(40, |rng| {
+        let app = random_app(rng);
+        let devices: [&dyn DeviceModel; 4] = [&tb.cpu, &tb.manycore, &tb.gpu, &tb.fpga];
+        let plans = [
+            tb.cpu.compile_plan(&app),
+            tb.manycore.compile_plan(&app),
+            tb.gpu.compile_plan(&app),
+            tb.fpga.compile_plan(&app),
+        ];
+        for density in [0.0, 0.25, 1.0] {
+            let mut bits = PatternBits::zeros(app.loop_count());
+            for i in 0..app.loop_count() {
+                if rng.chance(density) {
+                    bits.set(i, true);
+                }
+            }
+            let p = OffloadPattern::from_packed(bits);
+            for (dev, plan) in devices.iter().zip(&plans) {
+                let direct = dev.measure(&app, &p);
+                let sparse = plan.measure(&bits);
+                let dense = plan.measure_dense(&bits);
+                for (label, m) in [("sparse", sparse), ("dense", dense)] {
+                    assert_eq!(
+                        direct.seconds.to_bits(),
+                        m.seconds.to_bits(),
+                        "{:?} {label} density {density}: direct {} != {}",
+                        plan.kind(),
+                        direct.seconds,
+                        m.seconds
+                    );
+                    assert_eq!(direct.valid, m.valid, "{:?} {label} validity", plan.kind());
+                    assert_eq!(
+                        direct.setup_seconds.to_bits(),
+                        m.setup_seconds.to_bits(),
+                        "{:?} {label} setup",
+                        plan.kind()
+                    );
+                }
             }
         }
     });
