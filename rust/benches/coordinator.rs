@@ -1,0 +1,108 @@
+//! Bench: trial-level concurrency in the schedule executor — sequential
+//! vs staged wall clock on a no-early-exit scenario across four devices
+//! (EXPERIMENTS.md #Perf, `BENCH_coordinator.json`).
+//!
+//! Scenario: NAS.BT (120 loops, the heaviest searches) with no user
+//! target and no price cap, so *nothing* early-exits, on a schedule that
+//! adds a single-core-CPU GA loop trial to the paper's six — four loop
+//! searches in the second stage, three of them full GAs.  The GA worker
+//! count is pinned to 1 in both modes so the measured ratio isolates the
+//! trial tier: sequential pays the sum of all trials, staged pays roughly
+//! the slowest trial per stage.
+//!
+//! The hard line: both modes must produce identical outcomes
+//! (`coordinator.vs_sequential.mismatches` = 0); the speed line is
+//! `coordinator.concurrent_speedup` ≥ 2x on a multi-core host.
+
+#[path = "support.rs"]
+mod support;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use mixoff::app::workloads;
+use mixoff::coordinator::{MixedOffloader, Schedule, TrialConcurrency, TrialKind};
+use mixoff::devices::DeviceKind;
+use mixoff::offload::pattern::Method;
+use mixoff::offload::strategy::{GaLoopStrategy, StrategyRegistry};
+use mixoff::util::threadpool::WorkerPool;
+use support::{finish, metric};
+
+/// The 4-device, 7-trial schedule: paper FB stage, then loop searches on
+/// single-core CPU (GA), many-core (GA), GPU (GA) and FPGA (narrowed).
+fn four_device_kinds() -> Vec<TrialKind> {
+    let order = TrialKind::order();
+    let mut kinds: Vec<TrialKind> = order[..3].to_vec();
+    kinds.push(TrialKind { device: DeviceKind::CpuSingle, method: Method::LoopOffload });
+    kinds.extend_from_slice(&order[3..]);
+    kinds
+}
+
+fn offloader(concurrency: TrialConcurrency) -> MixedOffloader {
+    let mut registry = StrategyRegistry::standard();
+    registry.register(DeviceKind::CpuSingle, Method::LoopOffload, Arc::new(GaLoopStrategy));
+    MixedOffloader {
+        workers: 1,
+        schedule: Schedule::from_trials(&four_device_kinds()),
+        registry,
+        concurrency,
+        ..MixedOffloader::default()
+    }
+}
+
+fn main() {
+    let app = workloads::by_name("nas_bt").unwrap();
+    let seq = offloader(TrialConcurrency::Sequential);
+    let staged = offloader(TrialConcurrency::Staged);
+
+    // Warm-up: the global pool, the fig.-4-scale searches, page cache.
+    let warm_seq = seq.run(&app);
+    let warm_staged = staged.run(&app);
+
+    // Outcome identity first — a speedup on a divergent answer is void.
+    let mut mismatches = 0usize;
+    for (a, b) in warm_seq.trials.iter().zip(&warm_staged.trials) {
+        if a.kind != b.kind
+            || a.skipped != b.skipped
+            || a.seconds.to_bits() != b.seconds.to_bits()
+            || a.detail != b.detail
+        {
+            mismatches += 1;
+        }
+    }
+    if warm_seq.chosen.as_ref().map(|c| c.kind) != warm_staged.chosen.as_ref().map(|c| c.kind)
+        || warm_seq.clock.total_seconds().to_bits()
+            != warm_staged.clock.total_seconds().to_bits()
+    {
+        mismatches += 1;
+    }
+    assert_eq!(mismatches, 0, "staged executor diverged from sequential");
+    metric("coordinator.vs_sequential.mismatches", mismatches as f64, "trials", None);
+
+    let reps = 3usize;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(seq.run(&app));
+    }
+    let seq_mean = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(staged.run(&app));
+    }
+    let staged_mean = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+    metric("coordinator.sequential.mean", seq_mean, "ms", None);
+    metric("coordinator.staged.mean", staged_mean, "ms", None);
+    metric("coordinator.concurrent_speedup", seq_mean / staged_mean, "x", None);
+
+    // All of the stage fan-out above rode the persistent pool: the spawn
+    // count stays at pool size.
+    metric(
+        "coordinator.pool.spawned_threads",
+        WorkerPool::global().spawned_threads() as f64,
+        "threads",
+        None,
+    );
+
+    finish("coordinator");
+}

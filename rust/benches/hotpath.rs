@@ -137,6 +137,22 @@ fn main() {
         None,
     );
 
+    // Dispatch amortization: a 20-genome generation pushed through the
+    // pool item-by-item costs 20 queue dispatches; through `map_chunked`
+    // it costs ~worker-count chunk dispatches (the GA's path since the
+    // sparse kernel made single measurements dispatch-dominated).
+    let pool = WorkerPool::global();
+    let generation: Vec<PatternBits> = packed[..20].to_vec();
+    let gen_plan = tb.manycore.compile_plan(&bt);
+    let before = pool.dispatched_items();
+    std::hint::black_box(pool.map(generation.clone(), 4, |b| gen_plan.measure(&b)));
+    let per_item_jobs = pool.dispatched_items() - before;
+    let before = pool.dispatched_items();
+    std::hint::black_box(pool.map_chunked(generation, 4, |b| gen_plan.measure(&b)));
+    let chunked_jobs = pool.dispatched_items() - before;
+    metric("pool.dispatch.jobs_per_generation", per_item_jobs as f64, "jobs", None);
+    metric("pool.dispatch.chunked_jobs", chunked_jobs as f64, "jobs", None);
+
     // Pattern algebra microcosts.
     bench("pattern.region_roots.512", 20, || {
         for p in &patterns {

@@ -10,6 +10,14 @@
 //! batch no matter how many concurrent runs ask for it (distinct pairs
 //! compile concurrently; the cache serializes only same-pair compiles).
 //!
+//! Batch-level parallelism composes with trial-level parallelism: each
+//! run uses the staged executor ([`TrialConcurrency::Staged`]), so a
+//! batch worker that reaches a dependency stage fans its trials out on
+//! the same pool it is itself running on.  The pool's caller-self-drain
+//! rule makes the nesting safe — when every worker is busy, the inner
+//! map degenerates to sequential execution on the calling thread, so the
+//! machine stays fully subscribed but never deadlocked or oversubscribed.
+//!
 //! Every run is independent and seeded, so a batch result is *identical*
 //! (bit-for-bit, per application) to running the same applications
 //! sequentially with the same coordinator — concurrency and plan sharing
@@ -22,7 +30,7 @@ use crate::app::ir::Application;
 use crate::devices::PlanCache;
 use crate::util::threadpool::WorkerPool;
 
-use super::{MixedOffloader, OffloadOutcome};
+use super::{MixedOffloader, OffloadOutcome, TrialConcurrency};
 
 /// Runs many applications through the mixed flow concurrently.
 pub struct BatchOffloader {
@@ -46,6 +54,11 @@ impl Default for BatchOffloader {
                 // worker count is wall-clock only — results are identical
                 // for any value.
                 workers: 1,
+                // Trial-level ∥ *does* compose with batch-level ∥: stage
+                // fan-out rides the shared pool's job queue (no extra
+                // threads), and the pool's self-drain keeps the nesting
+                // deadlock-free.  Outcomes are identical either way.
+                concurrency: TrialConcurrency::Staged,
                 ..MixedOffloader::default()
             },
             batch_workers: cores,
@@ -63,6 +76,8 @@ pub struct BatchOutcome {
     pub plan_compiles: usize,
     /// Plan lookups answered from the shared cache.
     pub plan_hits: usize,
+    /// Trial-level execution mode each run used (reporting only).
+    pub trial_concurrency: TrialConcurrency,
 }
 
 impl BatchOutcome {
@@ -105,6 +120,7 @@ impl BatchOffloader {
             wall_seconds: t0.elapsed().as_secs_f64(),
             plan_compiles: cache.compiles(),
             plan_hits: cache.hits(),
+            trial_concurrency: self.offloader.concurrency,
         }
     }
 }
@@ -119,15 +135,24 @@ mod tests {
     }
 
     /// The acceptance line: batch results are bit-identical to sequential
-    /// runs of the same coordinator on the same applications.
+    /// runs of the same coordinator on the same applications — and,
+    /// because the default batch runs use the staged trial executor, also
+    /// bit-identical to a fully sequential (both tiers) coordinator.
     #[test]
     fn batch_matches_sequential_runs_exactly() {
         let apps = apps(&["vecadd", "jacobi2d", "blocked-gemm-app"]);
         let b = BatchOffloader::default();
+        assert_eq!(b.offloader.concurrency, TrialConcurrency::Staged);
+        let seq_tier = MixedOffloader {
+            workers: 1,
+            concurrency: TrialConcurrency::Sequential,
+            ..MixedOffloader::default()
+        };
         let batch = b.run(&apps);
+        assert_eq!(batch.trial_concurrency, TrialConcurrency::Staged);
         assert_eq!(batch.outcomes.len(), apps.len());
         for (app, out) in apps.iter().zip(&batch.outcomes) {
-            let solo = b.offloader.run(app);
+            let solo = seq_tier.run(app);
             assert_eq!(out.app_name, solo.app_name);
             assert_eq!(
                 out.chosen.as_ref().map(|c| c.kind),

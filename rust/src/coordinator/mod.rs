@@ -10,6 +10,19 @@
 //! [`StrategyRegistry`], so new devices and methods plug in without
 //! touching this module.  `batch.rs` runs many applications through the
 //! same executor concurrently.
+//!
+//! The executor itself is two-tier ([`TrialConcurrency`]): the schedule's
+//! only real dependency is the `SubtractBlocks` barrier (function-block
+//! results feed the code subtraction, which feeds the loop trials), so the
+//! staged mode partitions the schedule at each barrier, runs each stage's
+//! trials *speculatively in parallel* on the persistent
+//! [`WorkerPool`](crate::util::threadpool::WorkerPool), and then **commits
+//! by sequential replay**: the schedule is walked in order applying the
+//! exact sequential skip/early-exit/price-cap/best-FB logic to the
+//! speculative results.  Committed records, skip reasons, clock charges
+//! and the final [`Chosen`] are therefore bit-identical to the sequential
+//! executor; speculative work the replay skips is discarded and never
+//! charged to the ledger.
 
 pub mod batch;
 pub mod requirements;
@@ -25,12 +38,37 @@ use crate::devices::{pricing, PlanCache, SimClock, Testbed};
 use crate::offload::fpga_loop::FpgaSearchConfig;
 use crate::offload::function_block::{BlockDb, FbOffloadOutcome};
 use crate::offload::pattern::OffloadPattern;
-use crate::offload::strategy::{StrategyRegistry, TrialCtx};
+use crate::offload::strategy::{OffloadStrategy, StrategyRegistry, TrialCtx, TrialOutcome};
+use crate::util::threadpool::WorkerPool;
 
 pub use batch::{BatchOffloader, BatchOutcome};
 pub use requirements::UserRequirements;
-pub use schedule::{remap_pattern, Schedule, ScheduleStep};
+pub use schedule::{remap_pattern, Schedule, ScheduleStage, ScheduleStep};
 pub use trial::{TrialKind, TrialRecord};
+
+/// How the schedule executor runs a stage's trials.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrialConcurrency {
+    /// One trial at a time in schedule order — the paper's literal flow.
+    /// The default for ablations and ordering experiments, where wall
+    /// clock *is* the measured quantity.
+    Sequential,
+    /// Partition the schedule into dependency stages at each
+    /// `SubtractBlocks` barrier, speculate each stage's trials in parallel
+    /// on the persistent worker pool, then commit by sequential replay.
+    /// Outcome-identical to [`TrialConcurrency::Sequential`] (property
+    /// tests hold the line); the default for `mixoff offload`/`batch`.
+    Staged,
+}
+
+impl TrialConcurrency {
+    pub fn label(&self) -> &'static str {
+        match self {
+            TrialConcurrency::Sequential => "sequential",
+            TrialConcurrency::Staged => "staged",
+        }
+    }
+}
 
 /// Final deployment decision.
 #[derive(Clone, Debug)]
@@ -74,6 +112,9 @@ pub struct MixedOffloader {
     pub schedule: Schedule,
     /// (device × method) → strategy bindings; register new pairs here.
     pub registry: StrategyRegistry,
+    /// Trial-level execution mode (wall clock only — outcomes are
+    /// identical either way; see [`TrialConcurrency`]).
+    pub concurrency: TrialConcurrency,
 }
 
 impl Default for MixedOffloader {
@@ -87,6 +128,43 @@ impl Default for MixedOffloader {
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             schedule: Schedule::paper(),
             registry: StrategyRegistry::standard(),
+            concurrency: TrialConcurrency::Sequential,
+        }
+    }
+}
+
+/// The executor's mutable state: everything the sequential walk threads
+/// from step to step.  Both execution modes drive the same state through
+/// the same commit methods — the staged mode merely sources trial outcomes
+/// from a speculation buffer instead of executing in place.
+struct ExecState<'a> {
+    baseline: f64,
+    clock: SimClock,
+    trials: Vec<TrialRecord>,
+    /// Running best (improvement, price) for the early-exit check.
+    best_so_far: Option<(f64, f64)>,
+    best_fb: Option<FbOffloadOutcome>,
+    /// The working code: `app` until a SubtractBlocks step folds the best
+    /// function-block result out of it (sec. 3.3.1).
+    cur_app: Cow<'a, Application>,
+    loop_map: Option<BTreeMap<LoopId, LoopId>>,
+    /// Library seconds of subtracted blocks, folded into later trials.
+    fb_extra_seconds: f64,
+    fb_note: String,
+}
+
+impl<'a> ExecState<'a> {
+    fn new(app: &'a Application, baseline: f64) -> Self {
+        Self {
+            baseline,
+            clock: SimClock::new(),
+            trials: Vec::new(),
+            best_so_far: None,
+            best_fb: None,
+            cur_app: Cow::Borrowed(app),
+            loop_map: None,
+            fb_extra_seconds: 0.0,
+            fb_note: String::new(),
         }
     }
 }
@@ -111,126 +189,214 @@ impl MixedOffloader {
         self.execute(app, &self.schedule, plans)
     }
 
-    /// The generic schedule executor: walk the steps, resolve each trial
-    /// through the registry, track the running best for early exit, and
-    /// subtract offloaded blocks where the schedule says to.
+    /// The generic schedule executor.  Sequential mode walks the steps one
+    /// by one; staged mode speculates each dependency stage in parallel
+    /// and commits through the *same* per-step methods in the *same*
+    /// order, so both modes produce bit-identical outcomes.
     fn execute(
         &self,
         app: &Application,
         schedule: &Schedule,
         plans: &PlanCache,
     ) -> OffloadOutcome {
-        let baseline = self.testbed.baseline_seconds(app);
-        let mut clock = SimClock::new();
-        let mut trials: Vec<TrialRecord> = Vec::new();
-        let mut best_so_far: Option<(f64, f64)> = None; // (improvement, price)
-        let mut best_fb: Option<FbOffloadOutcome> = None;
-        // The working code: `app` until a SubtractBlocks step folds the
-        // best function-block result out of it (sec. 3.3.1).
-        let mut cur_app: Cow<'_, Application> = Cow::Borrowed(app);
-        let mut loop_map: Option<BTreeMap<LoopId, LoopId>> = None;
-        // Library seconds of subtracted blocks, folded into later trials.
-        let mut fb_extra_seconds = 0.0;
-        let mut fb_note = String::new();
-
-        for step in &schedule.steps {
-            let kind = match step {
-                ScheduleStep::SubtractBlocks => {
-                    if let Some(fb) = best_fb.as_ref().filter(|fb| fb.offloaded()) {
-                        let ids: Vec<LoopId> = fb
-                            .replaced
-                            .iter()
-                            .filter_map(|r| {
-                                app.blocks
-                                    .iter()
-                                    .find(|b| b.name == r.name)
-                                    .map(|b| b.loop_ids.clone())
-                            })
-                            .flatten()
-                            .collect();
-                        let (cut, mapping) = app.without_loops(&ids);
-                        fb_extra_seconds =
-                            fb.replaced.iter().map(|r| r.library_seconds).sum();
-                        fb_note = format!(" + FB on {}", fb.device.label());
-                        cur_app = Cow::Owned(cut);
-                        loop_map = Some(mapping);
-                    }
-                    continue;
-                }
-                ScheduleStep::Trial(kind) => kind,
-            };
-
-            if let Some(reason) = self.pre_skip(kind, &best_so_far) {
-                trials.push(TrialRecord::skipped(*kind, reason, baseline));
-                continue;
-            }
-            let Some(strategy) = self.registry.get(kind.device, kind.method) else {
-                let reason = format!("no strategy registered for {}", kind.label());
-                trials.push(TrialRecord::skipped(*kind, reason, baseline));
-                continue;
-            };
-            if let Some(reason) = strategy.pre_check(&cur_app) {
-                trials.push(TrialRecord::skipped(*kind, reason, baseline));
-                continue;
-            }
-
-            let ctx = TrialCtx {
-                testbed: &self.testbed,
-                db: &self.db,
-                ga_seed: self.ga_seed,
-                ga_workers: self.workers,
-                fpga_cfg: self.fpga_cfg,
-                fb_note: &fb_note,
-                plans,
-            };
-            let out = strategy.execute(&cur_app, kind.device, &ctx);
-            clock.charge(kind.label(), out.cost_s);
-            let seconds = out.seconds + fb_extra_seconds;
-            let improvement = baseline / seconds;
-            // Patterns over a reduced app are re-expressed in the ORIGINAL
-            // app's loop ids so downstream consumers (codegen, reports)
-            // always index `app`.
-            let pattern = out.pattern.as_ref().map(|p| match &loop_map {
-                Some(mapping) => remap_pattern(app, mapping, p),
-                None => *p,
-            });
-            trials.push(TrialRecord {
-                kind: *kind,
-                skipped: None,
-                seconds,
-                improvement,
-                offloaded: out.offloaded,
-                cost_s: out.cost_s,
-                detail: out.detail,
-                pattern,
-            });
-            if out.offloaded {
-                // Only pre-subtraction FB results feed `best_fb`: once a
-                // SubtractBlocks step has reduced the working code, an FB
-                // trial measures a *different* application, so its seconds
-                // are not comparable and it must not drive a later
-                // subtraction of the original.
-                if loop_map.is_none() {
-                    if let Some(fb) = out.fb {
-                        let better =
-                            best_fb.as_ref().map(|b| fb.seconds < b.seconds).unwrap_or(true);
-                        if better {
-                            best_fb = Some(fb);
+        let mut st = ExecState::new(app, self.testbed.baseline_seconds(app));
+        match self.concurrency {
+            TrialConcurrency::Sequential => {
+                for step in &schedule.steps {
+                    match step {
+                        ScheduleStep::SubtractBlocks => self.apply_subtract(app, &mut st),
+                        ScheduleStep::Trial(kind) => {
+                            self.commit_trial(app, &mut st, kind, plans, None)
                         }
                     }
                 }
-                let price = self.testbed.device(kind.device).price_usd();
-                self.update_best(&mut best_so_far, improvement, price);
             }
+            TrialConcurrency::Staged => self.execute_staged(app, schedule, plans, &mut st),
         }
-
-        let chosen = self.select(&trials);
+        let chosen = self.select(&st.trials);
         OffloadOutcome {
             app_name: app.name.clone(),
-            baseline_seconds: baseline,
-            trials,
+            baseline_seconds: st.baseline,
+            trials: st.trials,
             chosen,
-            clock,
+            clock: st.clock,
+        }
+    }
+
+    /// Stage-partition / speculate / commit (see the module docs and
+    /// DESIGN.md).  Within a stage every trial is a pure function of
+    /// `(working app, device, ctx)` — the working code, FB note and
+    /// subtracted-seconds fold only change at `SubtractBlocks` barriers,
+    /// which are stage boundaries — so the stage is run speculatively in
+    /// parallel and then replayed sequentially through `commit_trial`.
+    /// Speculation is skipped for trials the replay is *guaranteed* to
+    /// skip: state-independent reasons (price cap, unregistered pair,
+    /// structural pre-check) and a user target already met at stage start
+    /// (monotone within the stage).  A trial whose skip only materializes
+    /// mid-stage — an earlier commit in the *same* stage meets the target
+    /// — is speculated and discarded: its record, clock charge and
+    /// best-tracking never happen, which keeps the ledger
+    /// sequential-identical.
+    fn execute_staged<'a>(
+        &self,
+        app: &'a Application,
+        schedule: &Schedule,
+        plans: &PlanCache,
+        st: &mut ExecState<'a>,
+    ) {
+        for stage in schedule.stages() {
+            for _ in 0..stage.subtracts_before {
+                self.apply_subtract(app, st);
+            }
+            let n = stage.trials.len();
+            let mut spec: Vec<Option<TrialOutcome>> = {
+                let cur: &Application = &st.cur_app;
+                let ctx = self.trial_ctx(st, plans);
+                let mut jobs: Vec<(usize, TrialKind, &dyn OffloadStrategy)> = Vec::new();
+                for (i, kind) in stage.trials.iter().enumerate() {
+                    // `pre_skip` against stage-start state is safe to
+                    // trust here: the price cap is state-independent, and
+                    // once the user target is met it stays met for the
+                    // rest of the stage (committed bests only ever grow,
+                    // and always carry a cap-passing price), so the replay
+                    // is certain to skip this trial too.
+                    if self.pre_skip(kind, &st.best_so_far).is_some() {
+                        continue;
+                    }
+                    let Some(strategy) = self.registry.get(kind.device, kind.method) else {
+                        continue;
+                    };
+                    if strategy.pre_check(cur).is_some() {
+                        continue;
+                    }
+                    jobs.push((i, *kind, strategy));
+                }
+                let results = WorkerPool::global().map(jobs, n.max(1), |(i, kind, strategy)| {
+                    (i, strategy.execute(cur, kind.device, &ctx))
+                });
+                let mut spec: Vec<Option<TrialOutcome>> = (0..n).map(|_| None).collect();
+                for (i, out) in results {
+                    spec[i] = Some(out);
+                }
+                spec
+            };
+            for (i, kind) in stage.trials.iter().enumerate() {
+                self.commit_trial(app, st, kind, plans, spec[i].take());
+            }
+        }
+    }
+
+    /// Everything a strategy may need, borrowed from the coordinator and
+    /// the executor state.  Speculation and in-place commit execution
+    /// build their contexts through this one constructor, so a trial sees
+    /// the identical ctx whichever path ran it.
+    fn trial_ctx<'s>(&'s self, st: &'s ExecState<'_>, plans: &'s PlanCache) -> TrialCtx<'s> {
+        TrialCtx {
+            testbed: &self.testbed,
+            db: &self.db,
+            ga_seed: self.ga_seed,
+            ga_workers: self.workers,
+            fpga_cfg: self.fpga_cfg,
+            fb_note: &st.fb_note,
+            plans,
+        }
+    }
+
+    /// The SubtractBlocks step (sec. 3.3.1): fold the best committed
+    /// function-block result out of the working code.
+    fn apply_subtract(&self, app: &Application, st: &mut ExecState<'_>) {
+        if let Some(fb) = st.best_fb.as_ref().filter(|fb| fb.offloaded()) {
+            let ids: Vec<LoopId> = fb
+                .replaced
+                .iter()
+                .filter_map(|r| {
+                    app.blocks
+                        .iter()
+                        .find(|b| b.name == r.name)
+                        .map(|b| b.loop_ids.clone())
+                })
+                .flatten()
+                .collect();
+            let (cut, mapping) = app.without_loops(&ids);
+            st.fb_extra_seconds = fb.replaced.iter().map(|r| r.library_seconds).sum();
+            st.fb_note = format!(" + FB on {}", fb.device.label());
+            st.cur_app = Cow::Owned(cut);
+            st.loop_map = Some(mapping);
+        }
+    }
+
+    /// Commit one trial step: apply the skip logic against the *committed*
+    /// state, then either take the speculative outcome (staged mode) or
+    /// execute in place (sequential mode), charge the clock and update the
+    /// running best.  A speculative outcome is only ever taken on the
+    /// exact `(working app, device, ctx)` it was computed for, so the two
+    /// sources are interchangeable bit-for-bit.
+    fn commit_trial(
+        &self,
+        app: &Application,
+        st: &mut ExecState<'_>,
+        kind: &TrialKind,
+        plans: &PlanCache,
+        speculated: Option<TrialOutcome>,
+    ) {
+        if let Some(reason) = self.pre_skip(kind, &st.best_so_far) {
+            st.trials.push(TrialRecord::skipped(*kind, reason, st.baseline));
+            return;
+        }
+        let Some(strategy) = self.registry.get(kind.device, kind.method) else {
+            let reason = format!("no strategy registered for {}", kind.label());
+            st.trials.push(TrialRecord::skipped(*kind, reason, st.baseline));
+            return;
+        };
+        if let Some(reason) = strategy.pre_check(&st.cur_app) {
+            st.trials.push(TrialRecord::skipped(*kind, reason, st.baseline));
+            return;
+        }
+
+        let out = match speculated {
+            Some(out) => out,
+            None => {
+                let ctx = self.trial_ctx(st, plans);
+                strategy.execute(&st.cur_app, kind.device, &ctx)
+            }
+        };
+        st.clock.charge(kind.label(), out.cost_s);
+        let seconds = out.seconds + st.fb_extra_seconds;
+        let improvement = st.baseline / seconds;
+        // Patterns over a reduced app are re-expressed in the ORIGINAL
+        // app's loop ids so downstream consumers (codegen, reports)
+        // always index `app`.
+        let pattern = out.pattern.as_ref().map(|p| match &st.loop_map {
+            Some(mapping) => remap_pattern(app, mapping, p),
+            None => *p,
+        });
+        st.trials.push(TrialRecord {
+            kind: *kind,
+            skipped: None,
+            seconds,
+            improvement,
+            offloaded: out.offloaded,
+            cost_s: out.cost_s,
+            detail: out.detail,
+            pattern,
+        });
+        if out.offloaded {
+            // Only pre-subtraction FB results feed `best_fb`: once a
+            // SubtractBlocks step has reduced the working code, an FB
+            // trial measures a *different* application, so its seconds
+            // are not comparable and it must not drive a later
+            // subtraction of the original.
+            if st.loop_map.is_none() {
+                if let Some(fb) = out.fb {
+                    let better =
+                        st.best_fb.as_ref().map(|b| fb.seconds < b.seconds).unwrap_or(true);
+                    if better {
+                        st.best_fb = Some(fb);
+                    }
+                }
+            }
+            let price = self.testbed.device(kind.device).price_usd();
+            self.update_best(&mut st.best_so_far, improvement, price);
         }
     }
 
@@ -283,7 +449,7 @@ impl MixedOffloader {
             seconds: t.seconds,
             improvement: t.improvement,
             price_usd: self.testbed.device(t.kind.device).price_usd(),
-            pattern: t.pattern.clone(),
+            pattern: t.pattern,
             detail: t.detail.clone(),
         })
     }
@@ -291,6 +457,9 @@ impl MixedOffloader {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
     use super::*;
     use crate::app::workloads::extra;
     use crate::devices::DeviceKind;
@@ -359,6 +528,133 @@ mod tests {
             .find(|t| t.kind.device == DeviceKind::Fpga && t.kind.method == Method::LoopOffload)
             .unwrap();
         assert!(fpga.skipped.is_none());
+    }
+
+    fn assert_outcomes_identical(a: &OffloadOutcome, b: &OffloadOutcome) {
+        assert_eq!(a.app_name, b.app_name);
+        assert_eq!(a.baseline_seconds.to_bits(), b.baseline_seconds.to_bits());
+        assert_eq!(a.trials.len(), b.trials.len());
+        for (x, y) in a.trials.iter().zip(&b.trials) {
+            assert_eq!(x.kind, y.kind);
+            assert_eq!(x.skipped, y.skipped);
+            assert_eq!(x.seconds.to_bits(), y.seconds.to_bits());
+            assert_eq!(x.improvement.to_bits(), y.improvement.to_bits());
+            assert_eq!(x.offloaded, y.offloaded);
+            assert_eq!(x.cost_s.to_bits(), y.cost_s.to_bits());
+            assert_eq!(x.detail, y.detail);
+            assert_eq!(x.pattern, y.pattern);
+        }
+        assert_eq!(
+            a.chosen.as_ref().map(|c| (c.kind, c.seconds.to_bits(), c.pattern)),
+            b.chosen.as_ref().map(|c| (c.kind, c.seconds.to_bits(), c.pattern))
+        );
+        assert_eq!(a.clock.events().len(), b.clock.events().len());
+        for (x, y) in a.clock.events().iter().zip(b.clock.events()) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.seconds.to_bits(), y.seconds.to_bits());
+        }
+    }
+
+    /// The staged commit must discard speculative work the sequential
+    /// semantics would skip: with a 10x target met by the very first FB
+    /// trial, the other two stage-1 trials are speculated concurrently
+    /// with it (and discarded), stage 2 is never speculated at all (the
+    /// target is already met at its stage start), and the committed
+    /// outcome — records, skip reasons, ledger — is bit-identical to the
+    /// sequential executor's.
+    #[test]
+    fn staged_early_exit_discards_speculative_work() {
+        let requirements = UserRequirements {
+            target_improvement: Some(10.0),
+            max_price_usd: None,
+        };
+        let app = extra::gemm_call_app(1024);
+        let seq = MixedOffloader { requirements, ..Default::default() }.run(&app);
+        let staged = MixedOffloader {
+            requirements,
+            concurrency: TrialConcurrency::Staged,
+            ..Default::default()
+        }
+        .run(&app);
+        assert_outcomes_identical(&seq, &staged);
+        let skipped = staged.trials.iter().filter(|t| t.skipped.is_some()).count();
+        assert_eq!(skipped, 5, "early exit must survive the staged commit");
+        assert_eq!(staged.clock.by_label().len(), 1, "discarded trials never charge the ledger");
+    }
+
+    /// Wraps a strategy and counts `execute` calls — the observable for
+    /// "this trial was (not) speculated".
+    struct CountingStrategy<S> {
+        inner: S,
+        calls: Arc<AtomicUsize>,
+    }
+
+    impl<S: OffloadStrategy> OffloadStrategy for CountingStrategy<S> {
+        fn name(&self) -> &'static str {
+            self.inner.name()
+        }
+        fn pre_check(&self, app: &Application) -> Option<String> {
+            self.inner.pre_check(app)
+        }
+        fn execute(&self, app: &Application, device: DeviceKind, ctx: &TrialCtx) -> TrialOutcome {
+            self.calls.fetch_add(1, Ordering::SeqCst);
+            self.inner.execute(app, device, ctx)
+        }
+    }
+
+    /// The speculation pre-filter: a stage whose start state already
+    /// meets the user target must not be speculated at all — discarding
+    /// results would be outcome-correct but would burn a full GA + FPGA
+    /// search per early-exited run.  The loop-trial strategies are
+    /// wrapped in call counters; after the FB trial meets the 10x target
+    /// in stage 1, stage 2 must record zero strategy executions.
+    #[test]
+    fn staged_executor_never_speculates_fully_gated_stages() {
+        use crate::offload::strategy::{FpgaLoopStrategy, GaLoopStrategy};
+        let calls = Arc::new(AtomicUsize::new(0));
+        let mut registry = StrategyRegistry::standard();
+        for device in [DeviceKind::ManyCore, DeviceKind::Gpu] {
+            registry.register(
+                device,
+                Method::LoopOffload,
+                Arc::new(CountingStrategy { inner: GaLoopStrategy, calls: Arc::clone(&calls) }),
+            );
+        }
+        registry.register(
+            DeviceKind::Fpga,
+            Method::LoopOffload,
+            Arc::new(CountingStrategy { inner: FpgaLoopStrategy, calls: Arc::clone(&calls) }),
+        );
+        let mo = MixedOffloader {
+            requirements: UserRequirements {
+                target_improvement: Some(10.0),
+                max_price_usd: None,
+            },
+            registry,
+            concurrency: TrialConcurrency::Staged,
+            ..Default::default()
+        };
+        let out = mo.run(&extra::gemm_call_app(1024));
+        assert!(out.trials[0].improvement > 10.0, "premise: first FB trial meets the target");
+        assert_eq!(
+            calls.load(Ordering::SeqCst),
+            0,
+            "loop stage speculated despite the target being met at its stage start"
+        );
+    }
+
+    /// The code-subtraction barrier: stage 2's speculation must run on the
+    /// reduced app produced by stage 1's committed FB result.
+    #[test]
+    fn staged_executor_subtracts_blocks_between_stages() {
+        let app = extra::gemm_call_app(1024);
+        let seq = MixedOffloader::default().run(&app);
+        let staged = MixedOffloader {
+            concurrency: TrialConcurrency::Staged,
+            ..Default::default()
+        }
+        .run(&app);
+        assert_outcomes_identical(&seq, &staged);
     }
 
     #[test]

@@ -81,6 +81,53 @@ impl Schedule {
             ScheduleStep::SubtractBlocks => None,
         })
     }
+
+    /// Partition the steps into dependency stages at each
+    /// [`ScheduleStep::SubtractBlocks`] barrier.  Within a stage the
+    /// working code, the FB note and the subtracted-seconds fold are all
+    /// fixed — every trial is a pure function of `(working app, device,
+    /// ctx)` — so a concurrent executor may speculate a whole stage in
+    /// parallel and commit by sequential replay (see coordinator/mod.rs).
+    /// The paper schedule partitions as 3 FB trials ∥ → subtract → 3 loop
+    /// trials ∥.  Leading/consecutive/trailing barriers are preserved as
+    /// `subtracts_before` counts so replay applies them exactly where the
+    /// sequential walk would.
+    pub fn stages(&self) -> Vec<ScheduleStage> {
+        let mut stages = Vec::new();
+        let mut cur = ScheduleStage { subtracts_before: 0, trials: Vec::new() };
+        for step in &self.steps {
+            match step {
+                ScheduleStep::Trial(k) => cur.trials.push(*k),
+                ScheduleStep::SubtractBlocks => {
+                    if cur.trials.is_empty() {
+                        cur.subtracts_before += 1;
+                    } else {
+                        let done = std::mem::replace(
+                            &mut cur,
+                            ScheduleStage { subtracts_before: 1, trials: Vec::new() },
+                        );
+                        stages.push(done);
+                    }
+                }
+            }
+        }
+        if !cur.trials.is_empty() || cur.subtracts_before > 0 {
+            stages.push(cur);
+        }
+        stages
+    }
+}
+
+/// One dependency stage of a schedule: apply `subtracts_before` code
+/// subtractions, then run `trials`, which have no barrier between them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScheduleStage {
+    /// `SubtractBlocks` steps the sequential walk executes immediately
+    /// before this stage's first trial (0 for the opening stage, 1 for
+    /// each barrier; consecutive barriers accumulate).
+    pub subtracts_before: usize,
+    /// The stage's trials, in schedule order (the commit order).
+    pub trials: Vec<TrialKind>,
 }
 
 impl Default for Schedule {
@@ -149,5 +196,47 @@ mod tests {
         let s = Schedule::from_trials(&kinds);
         assert_eq!(s.steps.len(), 2);
         assert!(s.steps.iter().all(|x| matches!(x, ScheduleStep::Trial(_))));
+    }
+
+    #[test]
+    fn paper_schedule_partitions_into_two_stages_at_the_barrier() {
+        let stages = Schedule::paper().stages();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[0].subtracts_before, 0);
+        assert_eq!(stages[0].trials, TrialKind::order()[..3].to_vec());
+        assert_eq!(stages[1].subtracts_before, 1);
+        assert_eq!(stages[1].trials, TrialKind::order()[3..].to_vec());
+    }
+
+    #[test]
+    fn stage_partition_preserves_trial_order_and_barrier_counts() {
+        // Loops-only: one stage, no barrier.
+        let kinds = [TrialKind::order()[3], TrialKind::order()[4]];
+        let stages = Schedule::from_trials(&kinds).stages();
+        assert_eq!(stages.len(), 1);
+        assert_eq!(stages[0].subtracts_before, 0);
+        assert_eq!(stages[0].trials, kinds.to_vec());
+
+        // Hand-built pathological step list: leading, doubled and trailing
+        // barriers all survive as subtract counts the replay can apply.
+        let t = TrialKind::order();
+        let s = Schedule {
+            steps: vec![
+                ScheduleStep::SubtractBlocks,
+                ScheduleStep::Trial(t[0]),
+                ScheduleStep::SubtractBlocks,
+                ScheduleStep::SubtractBlocks,
+                ScheduleStep::Trial(t[3]),
+                ScheduleStep::SubtractBlocks,
+            ],
+        };
+        let stages = s.stages();
+        assert_eq!(stages.len(), 3);
+        assert_eq!((stages[0].subtracts_before, stages[0].trials.as_slice()), (1, &t[..1]));
+        assert_eq!((stages[1].subtracts_before, stages[1].trials.as_slice()), (2, &t[3..4]));
+        assert_eq!(stages[2], ScheduleStage { subtracts_before: 1, trials: vec![] });
+        // Flattening the stages reproduces the schedule's trial order.
+        let flat: Vec<TrialKind> = stages.iter().flat_map(|st| st.trials.clone()).collect();
+        assert_eq!(flat, s.trials().collect::<Vec<_>>());
     }
 }

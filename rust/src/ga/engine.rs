@@ -6,16 +6,19 @@
 //! `HashSet` probe instead of an O(population²) linear scan, and genomes
 //! are `Copy` — nothing on the per-generation path allocates per genome.
 //! Per-generation measurement fan-out rides the persistent
-//! [`crate::util::threadpool::WorkerPool`] (via the `map_parallel` shim),
-//! so a whole search — and every trial and batch around it — reuses one
-//! set of OS threads instead of spawning per generation.
+//! [`crate::util::threadpool::WorkerPool`] through its *chunked* map
+//! (`map_parallel_chunked`): one measurement is so cheap since the sparse
+//! kernel that per-genome queue items were dispatch-dominated, so a
+//! generation now enqueues ~`workers` contiguous chunks (and runs tiny
+//! generations inline) — a whole search, and every trial and batch around
+//! it, still reuses one set of OS threads.
 
 use std::collections::{HashMap, HashSet};
 
 use crate::devices::Measurement;
 use crate::util::bits::PatternBits;
 use crate::util::rng::Rng;
-use crate::util::threadpool::map_parallel;
+use crate::util::threadpool::map_parallel_chunked;
 
 use super::fitness::fitness;
 use super::population::{crossover, mutate, random_genome};
@@ -140,7 +143,7 @@ impl<'a> Ga<'a> {
                 }
             }
             let new_evaluations = fresh.len();
-            let results = map_parallel(fresh, cfg.workers, |g| (g, (self.evaluate)(&g)));
+            let results = map_parallel_chunked(fresh, cfg.workers, |g| (g, (self.evaluate)(&g)));
             for (g, m) in results {
                 // Simulated verification wall: compile/synthesis + the run
                 // itself, capped by the measurement timeout.

@@ -32,7 +32,8 @@ pub mod util;
 
 pub use app::ir::{Application, FunctionBlockKind, Loop, LoopId};
 pub use coordinator::{
-    BatchOffloader, BatchOutcome, MixedOffloader, OffloadOutcome, Schedule, UserRequirements,
+    BatchOffloader, BatchOutcome, MixedOffloader, OffloadOutcome, Schedule, TrialConcurrency,
+    UserRequirements,
 };
 pub use devices::{DeviceKind, PlanCache, Testbed};
 pub use offload::pattern::OffloadPattern;

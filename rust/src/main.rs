@@ -17,7 +17,7 @@ use anyhow::{anyhow, bail, Result};
 use mixoff::analysis::{intensity, Profile};
 use mixoff::app::workloads;
 use mixoff::codegen;
-use mixoff::coordinator::{BatchOffloader, MixedOffloader, UserRequirements};
+use mixoff::coordinator::{BatchOffloader, MixedOffloader, TrialConcurrency, UserRequirements};
 use mixoff::devices::{DeviceModel, Testbed};
 use mixoff::offload::function_block::BlockDb;
 use mixoff::report;
@@ -40,6 +40,14 @@ fn offloader_from(args: &Args) -> Result<MixedOffloader> {
     if let Some(seed) = args.get_u64("seed")? {
         mo.ga_seed = seed;
     }
+    // The CLI defaults to the staged concurrent executor (outcomes are
+    // identical to sequential; only wall clock changes — DESIGN.md).
+    // `--trial-concurrency sequential` restores the paper's literal walk.
+    mo.concurrency = match args.get("trial-concurrency") {
+        None | Some("staged") => TrialConcurrency::Staged,
+        Some("sequential") => TrialConcurrency::Sequential,
+        Some(other) => bail!("--trial-concurrency: expected staged|sequential, got {other:?}"),
+    };
     Ok(mo)
 }
 
@@ -79,6 +87,8 @@ usage: mixoff <command> [options]
   sizing <workload>     resource-amount sweep for the chosen destination
 options: --target <x> --max-price <usd> --seed <n> --json --timing
         --workers <n> (batch: applications in flight at once)
+        --trial-concurrency <staged|sequential> (default staged: each
+          dependency stage's trials run in parallel; outcomes identical)
 "#;
 
 fn cmd_offload(args: &Args) -> Result<()> {
@@ -113,13 +123,15 @@ fn cmd_batch(args: &Args) -> Result<()> {
         .iter()
         .map(|n| workloads::by_name(n))
         .collect::<Result<Vec<_>>>()?;
-    // Take only requirements + seed from the args: BatchOffloader::default()
-    // deliberately sets the per-run GA workers to 1 (batch-level concurrency
-    // replaces per-run fan-out) and that guard must survive configuration.
+    // Take only requirements, seed and trial concurrency from the args:
+    // BatchOffloader::default() deliberately sets the per-run GA workers
+    // to 1 (batch-level concurrency replaces per-run fan-out) and that
+    // guard must survive configuration.
     let configured = offloader_from(args)?;
     let mut batcher = BatchOffloader::default();
     batcher.offloader.requirements = configured.requirements;
     batcher.offloader.ga_seed = configured.ga_seed;
+    batcher.offloader.concurrency = configured.concurrency;
     if let Some(w) = args.get_usize("workers")? {
         batcher.batch_workers = w.max(1);
     }
@@ -244,7 +256,6 @@ fn cmd_codegen(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("nothing was offloaded; no code to generate"))?;
     let pattern = chosen
         .pattern
-        .clone()
         .ok_or_else(|| anyhow!("chosen trial was a function-block replacement"))?;
     print!("{}", codegen::emit(&app, &pattern, chosen.kind.device));
     Ok(())
@@ -264,7 +275,6 @@ fn cmd_sizing(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("nothing was offloaded; nothing to size"))?;
     let pattern = chosen
         .pattern
-        .clone()
         .unwrap_or_else(|| mixoff::OffloadPattern::none(&app));
     let min = args.get_f64("target")?.unwrap_or(1.0);
     let sweep = mixoff::coordinator::sizing::sweep(&app, chosen.kind.device, &pattern, min);

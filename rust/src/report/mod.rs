@@ -183,10 +183,11 @@ pub fn render_batch(batch: &BatchOutcome) -> String {
     }
     let _ = writeln!(
         s,
-        "batch: {} apps in {:.2} s wall ({:.2} apps/s); plan cache {} compiles, {} hits ({:.0}% hit rate); simulated verification {:.1} h total",
+        "batch: {} apps in {:.2} s wall ({:.2} apps/s, {} trials); plan cache {} compiles, {} hits ({:.0}% hit rate); simulated verification {:.1} h total",
         batch.outcomes.len(),
         batch.wall_seconds,
         batch.throughput(),
+        batch.trial_concurrency.label(),
         batch.plan_compiles,
         batch.plan_hits,
         batch.plan_hit_rate() * 100.0,
@@ -205,6 +206,10 @@ pub fn batch_to_json(batch: &BatchOutcome) -> Json {
     );
     root.insert("wall_seconds".into(), Json::Num(batch.wall_seconds));
     root.insert("throughput_apps_per_s".into(), Json::Num(batch.throughput()));
+    root.insert(
+        "trial_concurrency".into(),
+        Json::Str(batch.trial_concurrency.label().to_string()),
+    );
     root.insert("plan_compiles".into(), Json::Num(batch.plan_compiles as f64));
     root.insert("plan_hits".into(), Json::Num(batch.plan_hits as f64));
     root.insert("plan_hit_rate".into(), Json::Num(batch.plan_hit_rate()));
@@ -292,9 +297,14 @@ mod tests {
         let table = render_batch(&batch);
         assert!(table.contains("vecadd"));
         assert!(table.contains("plan cache"));
+        assert!(table.contains("staged trials"), "{table}");
         let j = batch_to_json(&batch);
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
         assert_eq!(j.req("apps").unwrap().as_arr().unwrap().len(), 2);
         assert!(j.get("plan_hit_rate").is_some());
+        assert_eq!(
+            j.req("trial_concurrency").unwrap().as_str().unwrap(),
+            "staged"
+        );
     }
 }

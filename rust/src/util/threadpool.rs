@@ -19,6 +19,12 @@
 //! always participates in draining its own queue, so nested `map` calls
 //! cannot deadlock even when every pool thread is busy: the innermost
 //! call degenerates to sequential execution on the calling thread.
+//!
+//! [`WorkerPool::map_chunked`] is the dispatch-amortized variant for
+//! batches of *cheap* items: it enqueues ~`workers` contiguous chunks
+//! instead of one queue item per input item (and runs small batches
+//! inline), so a 20-genome GA generation costs ~`workers` queue
+//! operations instead of 20.  Same order and panic contract as `map`.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -39,6 +45,12 @@ struct PoolShared {
     /// OS threads this pool has ever spawned.  Stays at pool size for the
     /// life of the pool — the `pool.spawned_threads` bench metric.
     spawned: AtomicUsize,
+    /// Work items ever pushed through a `map` call's shared item queue —
+    /// each one costs a handful of mutex round-trips to hand out and
+    /// settle.  [`WorkerPool::map_chunked`] exists to keep this near the
+    /// worker count instead of the item count; `benches/hotpath.rs` emits
+    /// the two as `pool.dispatch.{jobs_per_generation,chunked_jobs}`.
+    dispatched: AtomicUsize,
 }
 
 /// A fixed-size, long-lived pool of worker threads.
@@ -124,6 +136,7 @@ impl WorkerPool {
             queue: Mutex::new(PoolQueue { jobs: VecDeque::new(), shutdown: false }),
             ready: Condvar::new(),
             spawned: AtomicUsize::new(0),
+            dispatched: AtomicUsize::new(0),
         });
         let handles = (0..threads)
             .map(|k| {
@@ -160,6 +173,14 @@ impl WorkerPool {
         self.shared.spawned.load(Ordering::Relaxed)
     }
 
+    /// Work items ever dispatched through `map` item queues (the inline
+    /// fast paths of [`WorkerPool::map`] and [`WorkerPool::map_chunked`]
+    /// dispatch nothing).  A per-item `map` of n items adds n; a chunked
+    /// map adds only its chunk count — the dispatch-amortization metric.
+    pub fn dispatched_items(&self) -> usize {
+        self.shared.dispatched.load(Ordering::Relaxed)
+    }
+
     fn submit(&self, job: Job) {
         let mut q = self.shared.queue.lock().unwrap();
         q.jobs.push_back(job);
@@ -186,6 +207,7 @@ impl WorkerPool {
         if cap == 1 {
             return items.into_iter().map(f).collect();
         }
+        self.shared.dispatched.fetch_add(n, Ordering::Relaxed);
         let call = Arc::new(Call {
             queue: Mutex::new(items.into_iter().enumerate().rev().collect()),
             results: Mutex::new((0..n).map(|_| None).collect()),
@@ -218,6 +240,46 @@ impl WorkerPool {
         }
         out
     }
+
+    /// Batches where one measurement is cheap (a GA generation after the
+    /// sparse-kernel rewrite) are dominated by *dispatch*: per-item `map`
+    /// pays a few mutex round-trips per item.  Below this size the queue
+    /// machinery costs more than it buys — run inline on the caller.
+    pub const CHUNK_INLINE_THRESHOLD: usize = 4;
+
+    /// Like [`WorkerPool::map`], but dispatches ~`cap` contiguous chunks
+    /// instead of one queue item per input item, so an n-item batch costs
+    /// ~`cap` queue operations instead of n.  Results still come back in
+    /// input order and panics in `f` still propagate after the batch
+    /// settles.  Batches of [`WorkerPool::CHUNK_INLINE_THRESHOLD`] or
+    /// fewer items (and `cap <= 1` calls) run inline on the caller and
+    /// never touch the queue at all.
+    pub fn map_chunked<T, R, F>(&self, items: Vec<T>, cap: usize, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Send + Sync,
+    {
+        let n = items.len();
+        if n <= Self::CHUNK_INLINE_THRESHOLD || cap <= 1 {
+            return items.into_iter().map(f).collect();
+        }
+        let cap = cap.min(n);
+        let chunk_size = n.div_ceil(cap);
+        let mut chunks: Vec<Vec<T>> = Vec::with_capacity(cap);
+        let mut it = items.into_iter();
+        loop {
+            let chunk: Vec<T> = it.by_ref().take(chunk_size).collect();
+            if chunk.is_empty() {
+                break;
+            }
+            chunks.push(chunk);
+        }
+        self.map(chunks, cap, |chunk| chunk.into_iter().map(&f).collect::<Vec<R>>())
+            .into_iter()
+            .flatten()
+            .collect()
+    }
 }
 
 impl Drop for WorkerPool {
@@ -242,6 +304,19 @@ where
     F: Fn(T) -> R + Send + Sync,
 {
     WorkerPool::global().map(items, workers, f)
+}
+
+/// [`WorkerPool::map_chunked`] on the process-wide pool: same order and
+/// panic contract as [`map_parallel`], but an n-item batch costs ~`workers`
+/// queue operations instead of n.  The right shim for fan-outs whose items
+/// are cheap (GA generations over the sparse measurement kernel).
+pub fn map_parallel_chunked<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Send + Sync,
+{
+    WorkerPool::global().map_chunked(items, workers, f)
 }
 
 #[cfg(test)]
@@ -334,6 +409,62 @@ mod tests {
         let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
         assert!(msg.contains("boom in worker"), "unexpected payload {msg:?}");
         assert_eq!(map_parallel(vec![1, 2], 2, |i| i * 10), vec![10, 20]);
+    }
+
+    /// Chunked dispatch returns the same thing as per-item dispatch, in
+    /// input order, for sizes around and past the chunk boundaries.
+    #[test]
+    fn chunked_preserves_order_and_matches_map() {
+        let pool = WorkerPool::new(4);
+        for n in [0usize, 1, 4, 5, 16, 97, 256] {
+            let items: Vec<usize> = (0..n).collect();
+            let expect: Vec<usize> = items.iter().map(|i| i * 3 + 1).collect();
+            assert_eq!(pool.map_chunked(items, 4, |i| i * 3 + 1), expect, "n = {n}");
+        }
+        assert_eq!(
+            map_parallel_chunked((0..100).collect(), 8, |i: usize| i * 2),
+            (0..100).map(|i| i * 2).collect::<Vec<_>>()
+        );
+    }
+
+    /// At or below the inline threshold (and for cap <= 1) chunked maps
+    /// run on the caller and push nothing through the queue; above it they
+    /// dispatch chunk-count items, not item-count items.
+    #[test]
+    fn chunked_inline_threshold_and_dispatch_counts() {
+        let pool = WorkerPool::new(4);
+        let before = pool.dispatched_items();
+        let small: Vec<usize> = (0..WorkerPool::CHUNK_INLINE_THRESHOLD).collect();
+        assert_eq!(pool.map_chunked(small.clone(), 4, |i| i + 1).len(), small.len());
+        assert_eq!(pool.dispatched_items(), before, "small batches stay inline");
+        assert_eq!(pool.map_chunked((0..64).collect::<Vec<usize>>(), 1, |i| i).len(), 64);
+        assert_eq!(pool.dispatched_items(), before, "cap 1 stays inline");
+
+        assert_eq!(pool.map_chunked((0..20).collect::<Vec<usize>>(), 4, |i| i).len(), 20);
+        let chunked = pool.dispatched_items() - before;
+        assert_eq!(chunked, 4, "20 items on 4 workers = 4 chunk dispatches");
+        let before = pool.dispatched_items();
+        assert_eq!(pool.map((0..20).collect::<Vec<usize>>(), 4, |i| i).len(), 20);
+        assert_eq!(pool.dispatched_items() - before, 20, "per-item map dispatches n");
+    }
+
+    /// A panic inside a chunk propagates to the chunked caller and the
+    /// pool survives for the next call.
+    #[test]
+    fn chunked_propagates_panics_and_pool_survives() {
+        let pool = WorkerPool::new(3);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.map_chunked((0..60usize).collect(), 3, |i| {
+                if i == 41 {
+                    panic!("boom in chunk");
+                }
+                i
+            })
+        }));
+        let payload = result.expect_err("panic must propagate through chunks");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("boom in chunk"), "unexpected payload {msg:?}");
+        assert_eq!(pool.map_chunked((0..10usize).collect(), 3, |i| i * 2).len(), 10);
     }
 
     /// Private pools work standalone and join their threads on drop.

@@ -7,7 +7,9 @@
 
 use mixoff::app::{parse, workloads};
 use mixoff::codegen;
-use mixoff::coordinator::{MixedOffloader, Schedule, TrialKind, UserRequirements};
+use mixoff::coordinator::{
+    MixedOffloader, Schedule, TrialConcurrency, TrialKind, UserRequirements,
+};
 use mixoff::devices::DeviceKind;
 use mixoff::offload::pattern::Method;
 use mixoff::report;
@@ -332,6 +334,43 @@ fn price_ascending_schedule_runs_and_agrees_on_3mm() {
         paper.chosen.as_ref().map(|c| c.kind),
         cheap.chosen.as_ref().map(|c| c.kind)
     );
+}
+
+/// The staged concurrent executor reproduces the sequential executor
+/// record-for-record on the real (fig. 4) workloads — including the code
+/// subtraction barrier on blocked-gemm-app and the all-run 3mm/NAS.BT
+/// flows.  Random-app coverage lives in tests/properties.rs; this pins
+/// the named scenarios the paper reports.
+#[test]
+fn staged_executor_matches_sequential_on_named_workloads() {
+    for name in ["3mm", "nas_bt", "blocked-gemm-app", "vecadd", "jacobi2d"] {
+        let app = workloads::by_name(name).unwrap();
+        let seq = MixedOffloader::default().run(&app);
+        let staged = MixedOffloader {
+            concurrency: TrialConcurrency::Staged,
+            ..MixedOffloader::default()
+        }
+        .run(&app);
+        assert_eq!(seq.trials.len(), staged.trials.len(), "{name}");
+        for (a, b) in seq.trials.iter().zip(&staged.trials) {
+            assert_eq!(a.kind, b.kind, "{name}");
+            assert_eq!(a.skipped, b.skipped, "{name}");
+            assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "{name}");
+            assert_eq!(a.cost_s.to_bits(), b.cost_s.to_bits(), "{name}");
+            assert_eq!(a.detail, b.detail, "{name}");
+            assert_eq!(a.pattern, b.pattern, "{name}");
+        }
+        assert_eq!(
+            seq.chosen.as_ref().map(|c| (c.kind, c.seconds.to_bits())),
+            staged.chosen.as_ref().map(|c| (c.kind, c.seconds.to_bits())),
+            "{name}"
+        );
+        assert_eq!(
+            seq.clock.total_seconds().to_bits(),
+            staged.clock.total_seconds().to_bits(),
+            "{name}"
+        );
+    }
 }
 
 /// Determinism: identical seeds give identical outcomes.

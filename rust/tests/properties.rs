@@ -8,7 +8,9 @@
 use mixoff::analysis::dependence::{expand_genome, genome_mask};
 use mixoff::app::builder::AppBuilder;
 use mixoff::app::ir::{Access, Application, Dependence, LoopId};
-use mixoff::coordinator::{remap_pattern, MixedOffloader};
+use mixoff::coordinator::{
+    remap_pattern, MixedOffloader, Schedule, TrialConcurrency, TrialKind, UserRequirements,
+};
 use mixoff::devices::{DeviceModel, Testbed};
 use mixoff::offload::pattern::OffloadPattern;
 use mixoff::util::bits::PatternBits;
@@ -335,6 +337,94 @@ fn remapped_patterns_preserve_popcount_and_original_ids() {
         // Every surviving loop's bit round-trips old <- new.
         for (old, new) in &mapping {
             assert_eq!(r.get(old.0), p.get(new.0));
+        }
+    });
+}
+
+/// The staged-concurrent executor's acceptance line: for random apps,
+/// random user requirements and all three schedule families (paper,
+/// price-ascending, random custom order), the staged executor produces an
+/// `OffloadOutcome` *identical* to the sequential executor — same trial
+/// records, same skip reasons, same clock ledger, same chosen
+/// destination.  Speculation and parallel execution may only ever change
+/// wall clock.
+#[test]
+fn staged_concurrent_executor_matches_sequential() {
+    forall(6, |rng| {
+        let app = random_app(rng);
+        let requirements = UserRequirements {
+            // ~Half the cases can early-exit; targets low enough that
+            // random apps sometimes meet them mid-schedule.
+            target_improvement: if rng.chance(0.5) { Some(1.0 + rng.f64() * 20.0) } else { None },
+            // Caps straddling the testbed's price bands, so some cases
+            // skip the FPGA band and some skip everything.
+            max_price_usd: match rng.below(4) {
+                0 => None,
+                1 => Some(2_000.0),
+                2 => Some(9_000.0),
+                _ => Some(50_000.0),
+            },
+        };
+        // Random custom order: a shuffle of the paper's six trials.
+        let mut kinds = TrialKind::order().to_vec();
+        for i in (1..kinds.len()).rev() {
+            kinds.swap(i, rng.below(i + 1));
+        }
+        let seed = rng.next_u64();
+        let schedules =
+            [Schedule::paper(), Schedule::price_ascending(), Schedule::from_trials(&kinds)];
+        for schedule in schedules {
+            let run = |concurrency: TrialConcurrency| {
+                MixedOffloader {
+                    requirements,
+                    ga_seed: seed,
+                    schedule: schedule.clone(),
+                    concurrency,
+                    ..MixedOffloader::default()
+                }
+                .run(&app)
+            };
+            let seq = run(TrialConcurrency::Sequential);
+            let staged = run(TrialConcurrency::Staged);
+
+            assert_eq!(seq.app_name, staged.app_name);
+            assert_eq!(seq.baseline_seconds.to_bits(), staged.baseline_seconds.to_bits());
+            assert_eq!(seq.trials.len(), staged.trials.len());
+            for (a, b) in seq.trials.iter().zip(&staged.trials) {
+                assert_eq!(a.kind, b.kind);
+                assert_eq!(a.skipped, b.skipped, "{:?}", a.kind.label());
+                assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "{:?}", a.kind.label());
+                assert_eq!(a.improvement.to_bits(), b.improvement.to_bits());
+                assert_eq!(a.offloaded, b.offloaded);
+                assert_eq!(a.cost_s.to_bits(), b.cost_s.to_bits());
+                assert_eq!(a.detail, b.detail);
+                assert_eq!(a.pattern, b.pattern);
+            }
+            assert_eq!(
+                seq.chosen.as_ref().map(|c| (
+                    c.kind,
+                    c.seconds.to_bits(),
+                    c.improvement.to_bits(),
+                    c.price_usd.to_bits(),
+                    c.pattern,
+                    c.detail.clone(),
+                )),
+                staged.chosen.as_ref().map(|c| (
+                    c.kind,
+                    c.seconds.to_bits(),
+                    c.improvement.to_bits(),
+                    c.price_usd.to_bits(),
+                    c.pattern,
+                    c.detail.clone(),
+                ))
+            );
+            // The simulated-cost ledger is sequential-identical, event
+            // for event: discarded speculation never charges it.
+            assert_eq!(seq.clock.events().len(), staged.clock.events().len());
+            for (a, b) in seq.clock.events().iter().zip(staged.clock.events()) {
+                assert_eq!(a.label, b.label);
+                assert_eq!(a.seconds.to_bits(), b.seconds.to_bits());
+            }
         }
     });
 }
