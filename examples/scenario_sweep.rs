@@ -1,0 +1,71 @@
+//! SCENARIO SWEEP DEMO: deployment environments as data — three JSON
+//! scenario specs (a GPU-absent fleet, a price-capped full fleet, a
+//! discounted FPGA pair) run through the sweep machinery behind
+//! `mixoff sweep <dir>` (DESIGN.md, "Scenario subsystem").
+//!
+//! The committed corpus lives in `scenarios/` at the repo root and is
+//! pinned by the golden-replay harness (`rust/tests/golden.rs`); this
+//! demo builds its specs inline so it runs from any directory.
+//!
+//! ```bash
+//! cargo run --release --example scenario_sweep
+//! ```
+
+use mixoff::coordinator::TrialConcurrency;
+use mixoff::report;
+use mixoff::scenario::{ScenarioSpec, SweepOutcome};
+
+const SPECS: [(&str, &str); 3] = [
+    (
+        "gpu-absent",
+        r#"{
+            "description": "many-core vs FPGA with the usual winner removed",
+            "seed": 20,
+            "devices": {"manycore": {}, "fpga": {}},
+            "applications": [{"workload": "3mm-small", "n": 256}]
+        }"#,
+    ),
+    (
+        "price-capped",
+        r#"{
+            "description": "full fleet, but the cap excludes the FPGA band",
+            "seed": 55,
+            "requirements": {"max_price_usd": 5000},
+            "devices": {"manycore": {}, "gpu": {}, "fpga": {}},
+            "applications": [{"workload": "vecadd", "n": 16777216}]
+        }"#,
+    ),
+    (
+        "dual-fpga-discount",
+        r#"{
+            "description": "two discounted FPGA nodes next to one GPU",
+            "seed": 2026,
+            "requirements": {"max_price_usd": 9000},
+            "devices": {"gpu": {}, "fpga": {"count": 2, "price_usd": 8500}},
+            "applications": [{"workload": "atax", "n": 4000}]
+        }"#,
+    ),
+];
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let mut outcomes = Vec::new();
+    for (name, src) in SPECS {
+        let spec = ScenarioSpec::from_str(src, name)?;
+        // The golden-harness guarantee, demonstrated live: staged
+        // concurrent execution commits the exact sequential outcome.
+        let staged = spec.run_with(TrialConcurrency::Staged)?;
+        let sequential = spec.run_with(TrialConcurrency::Sequential)?;
+        assert_eq!(
+            report::scenario_to_json(&staged).to_string(),
+            report::scenario_to_json(&sequential).to_string(),
+            "{name}: staged and sequential outcomes must be bit-identical"
+        );
+        outcomes.push(staged);
+    }
+    let sweep = SweepOutcome { scenarios: outcomes, wall_seconds: t0.elapsed().as_secs_f64() };
+    print!("{}", report::render_sweep(&sweep));
+    println!("verified: {} scenarios identical across both executors", sweep.scenarios.len());
+    println!("scenario_sweep OK");
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Environment-sweep throughput over the committed scenario corpus
+//! (`scenarios/*.json`) — the `mixoff sweep` path end to end: spec
+//! parsing, spec-built testbeds/schedules, and every scenario's
+//! application batch on the shared worker pool.
+//!
+//! Emits `BENCH_sweep.json` (see EXPERIMENTS.md #Perf):
+//!   * `sweep.scenarios_per_sec` — corpus scenarios per wall second;
+//!   * `sweep.pool.spawned_threads` — stays at pool size: repeated whole
+//!     sweeps spawn zero new OS threads.
+
+mod support;
+
+use std::path::Path;
+
+use mixoff::scenario;
+use mixoff::util::threadpool::WorkerPool;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios");
+    let scenarios = scenario::load_dir(&dir).expect("scenario corpus loads");
+    support::metric("sweep.scenarios", scenarios.len() as f64, "scenarios", None);
+
+    // One full sweep up front: warms the pool and fixes the app count the
+    // timed runs are checked against.
+    let warm = scenario::run_scenarios(&scenarios).expect("sweep runs");
+    support::metric("sweep.apps", warm.apps() as f64, "apps", None);
+
+    support::bench("sweep.full_corpus", 3, || {
+        let s = scenario::run_scenarios(&scenarios).expect("sweep runs");
+        assert_eq!(s.apps(), warm.apps(), "sweep outcome shape must be stable");
+    });
+
+    let timed = scenario::run_scenarios(&scenarios).expect("sweep runs");
+    support::metric(
+        "sweep.scenarios_per_sec",
+        timed.scenarios_per_sec(),
+        "scenarios/s",
+        None,
+    );
+    support::metric("sweep.verify_total_hours", timed.total_verify_hours(), "h", None);
+    support::metric(
+        "sweep.pool.spawned_threads",
+        WorkerPool::global().spawned_threads() as f64,
+        "threads",
+        None,
+    );
+    support::finish("sweep");
+}

@@ -14,28 +14,96 @@ use anyhow::{bail, Result};
 
 use super::ir::Application;
 
-/// Look up a workload by CLI name.
+/// Look up a workload by CLI name at its default size.
 pub fn by_name(name: &str) -> Result<Application> {
+    sized(name, None, None)
+}
+
+/// Look up a workload by name with an optional problem size `n` and — for
+/// the iterated workloads (`nas_bt`, `jacobi2d` and their aliases) — an
+/// optional iteration/time-step count.  `None` keeps the generator's
+/// default, so `sized(name, None, None)` is exactly [`by_name`].  This is
+/// the scenario specs' application surface (scenario/spec.rs).
+pub fn sized(name: &str, n: Option<u64>, iters: Option<u64>) -> Result<Application> {
+    // The name gate comes first so a typo always gets the name-listing
+    // error, never a misleading complaint about its parameters.
+    let iterated = matches!(name, "nas_bt" | "bt" | "bt-small" | "jacobi2d");
+    let known = iterated
+        || matches!(
+            name,
+            "3mm" | "threemm" | "3mm-small" | "blocked-gemm-app" | "vecadd" | "2mm" | "atax"
+                | "gemver"
+        );
+    if !known {
+        bail!("unknown workload {name:?}; available: {}", ALL.join(", "));
+    }
+    if iters.is_some() && !iterated {
+        bail!("workload {name:?} takes no \"iters\" parameter");
+    }
     Ok(match name {
-        "3mm" | "threemm" => threemm::build(1000),
-        "3mm-small" => threemm::build(128),
-        "nas_bt" | "bt" => nas_bt::build(64, 200),
-        "bt-small" => nas_bt::build(8, 5),
-        "jacobi2d" => extra::jacobi2d(4096, 1000),
-        "blocked-gemm-app" => extra::gemm_call_app(1024),
-        "vecadd" => extra::vecadd(1 << 24),
-        "2mm" => polybench::two_mm(1000),
-        "atax" => polybench::atax(4000),
-        "gemver" => polybench::gemver(4000),
-        other => bail!(
-            "unknown workload {other:?} (want 3mm | nas_bt | jacobi2d | \
-             blocked-gemm-app | vecadd | 2mm | atax | gemver)"
-        ),
+        "3mm" | "threemm" => threemm::build(n.unwrap_or(1000)),
+        "3mm-small" => threemm::build(n.unwrap_or(128)),
+        "nas_bt" | "bt" => nas_bt::build(n.unwrap_or(64), iters.unwrap_or(200)),
+        "bt-small" => nas_bt::build(n.unwrap_or(8), iters.unwrap_or(5)),
+        "jacobi2d" => extra::jacobi2d(n.unwrap_or(4096), iters.unwrap_or(1000)),
+        "blocked-gemm-app" => extra::gemm_call_app(n.unwrap_or(1024)),
+        "vecadd" => extra::vecadd(n.unwrap_or(1 << 24)),
+        "2mm" => polybench::two_mm(n.unwrap_or(1000)),
+        "atax" => polybench::atax(n.unwrap_or(4000)),
+        "gemver" => polybench::gemver(n.unwrap_or(4000)),
+        other => unreachable!("{other:?} passed the known-name gate"),
     })
 }
 
-/// All workload names (for `mixoff inspect --all` and tests).
+/// All workload names (for `mixoff inspect --all`, unknown-name errors and
+/// tests).
 pub const ALL: &[&str] = &[
     "3mm", "nas_bt", "jacobi2d", "blocked-gemm-app", "vecadd", "2mm", "atax",
     "gemver",
 ];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sized_defaults_match_by_name() {
+        for name in ALL {
+            let a = by_name(name).unwrap();
+            let b = sized(name, None, None).unwrap();
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.loop_count(), b.loop_count());
+            assert_eq!(a.total_flops().to_bits(), b.total_flops().to_bits(), "{name}");
+        }
+    }
+
+    #[test]
+    fn sized_overrides_change_the_problem() {
+        let small = sized("3mm", Some(128), None).unwrap();
+        let big = sized("3mm", Some(1000), None).unwrap();
+        assert!(small.total_flops() < big.total_flops());
+        let short = sized("nas_bt", Some(8), Some(5)).unwrap();
+        let long = sized("nas_bt", Some(8), Some(50)).unwrap();
+        assert!(short.total_flops() < long.total_flops());
+    }
+
+    #[test]
+    fn unknown_name_error_lists_available_workloads() {
+        let e = by_name("does-not-exist").unwrap_err().to_string();
+        assert!(e.contains("unknown workload \"does-not-exist\""), "{e}");
+        for name in ALL {
+            assert!(e.contains(name), "error must list {name}: {e}");
+        }
+    }
+
+    #[test]
+    fn iters_on_a_non_iterated_workload_is_rejected() {
+        let e = sized("3mm", None, Some(10)).unwrap_err().to_string();
+        assert!(e.contains("takes no \"iters\""), "{e}");
+        assert!(sized("jacobi2d", Some(1024), Some(100)).is_ok());
+        // A typo'd name gets the name-listing error even with iters set.
+        let e = sized("jacobi2", Some(1024), Some(100)).unwrap_err().to_string();
+        assert!(e.contains("unknown workload \"jacobi2\""), "{e}");
+        assert!(e.contains("available: 3mm"), "{e}");
+    }
+}

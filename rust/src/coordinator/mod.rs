@@ -43,7 +43,7 @@ use crate::util::threadpool::WorkerPool;
 
 pub use batch::{BatchOffloader, BatchOutcome};
 pub use requirements::UserRequirements;
-pub use schedule::{remap_pattern, Schedule, ScheduleStage, ScheduleStep};
+pub use schedule::{remap_pattern, Schedule, SchedulePolicy, ScheduleStage, ScheduleStep};
 pub use trial::{TrialKind, TrialRecord};
 
 /// How the schedule executor runs a stage's trials.

@@ -5,7 +5,7 @@
 //! are skipped.
 
 /// What the user asked for.  All-None = exhaustive search (run all six).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct UserRequirements {
     /// Stop as soon as a trial reaches this improvement factor.
     pub target_improvement: Option<f64>,

@@ -10,12 +10,59 @@
 
 use std::collections::BTreeMap;
 
+use anyhow::{bail, Result};
+
 use crate::app::ir::{Application, LoopId};
 use crate::devices::pricing::price_band;
+use crate::devices::DeviceKind;
 use crate::offload::pattern::{Method, OffloadPattern};
 use crate::util::bits::PatternBits;
 
 use super::trial::TrialKind;
+
+/// A named ordering policy, as scenario specs state it (scenario/spec.rs).
+/// Building a schedule from a policy takes the *fleet* into account: a
+/// destination the environment does not offer contributes no trials.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    /// The paper's proposed order (sec. 3.3.1).
+    #[default]
+    Paper,
+    /// Cheapest price band first, paper order within a band.
+    PriceAscending,
+}
+
+impl SchedulePolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedulePolicy::Paper => "paper",
+            SchedulePolicy::PriceAscending => "price_ascending",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Result<Self> {
+        match s {
+            "paper" => Ok(SchedulePolicy::Paper),
+            "price_ascending" => Ok(SchedulePolicy::PriceAscending),
+            other => bail!("unknown schedule {other:?} (want paper | price_ascending)"),
+        }
+    }
+
+    /// Build this policy's schedule over the destinations a fleet offers.
+    /// `price_of` supplies each destination's *actual* node price (specs
+    /// can override prices per device), so "price ascending" orders by
+    /// the scenario's own economics, not the paper's static bands.
+    pub fn schedule_for(
+        &self,
+        destinations: &[DeviceKind],
+        price_of: impl Fn(DeviceKind) -> f64,
+    ) -> Schedule {
+        match self {
+            SchedulePolicy::Paper => Schedule::for_devices(destinations),
+            SchedulePolicy::PriceAscending => Schedule::price_ascending_by(destinations, price_of),
+        }
+    }
+}
 
 /// One step of the verification flow.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -52,6 +99,38 @@ impl Schedule {
     pub fn price_ascending() -> Self {
         let mut kinds = TrialKind::order().to_vec();
         kinds.sort_by_key(|k| price_band(k.device));
+        Self::from_trials(&kinds)
+    }
+
+    /// The paper order restricted to the destinations a fleet offers: a
+    /// scenario that omits a device simply has no trials for it (the
+    /// records, skips and selection all see a shorter schedule).
+    pub fn for_devices(destinations: &[DeviceKind]) -> Self {
+        let kinds: Vec<TrialKind> = TrialKind::order()
+            .into_iter()
+            .filter(|k| destinations.contains(&k.device))
+            .collect();
+        Self::from_trials(&kinds)
+    }
+
+    /// [`Schedule::price_ascending`] restricted to the given destinations
+    /// and ordered by *actual* node prices (ties fall back to the paper's
+    /// band, then to paper order — so with default prices this reproduces
+    /// the band ordering exactly).
+    pub fn price_ascending_by(
+        destinations: &[DeviceKind],
+        price_of: impl Fn(DeviceKind) -> f64,
+    ) -> Self {
+        let mut kinds: Vec<TrialKind> = TrialKind::order()
+            .into_iter()
+            .filter(|k| destinations.contains(&k.device))
+            .collect();
+        kinds.sort_by(|a, b| {
+            price_of(a.device)
+                .partial_cmp(&price_of(b.device))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(price_band(a.device).cmp(&price_band(b.device)))
+        });
         Self::from_trials(&kinds)
     }
 
@@ -188,6 +267,53 @@ mod tests {
             .position(|x| matches!(x, ScheduleStep::Trial(k) if k.method == Method::LoopOffload))
             .unwrap();
         assert!(sub < first_loop);
+    }
+
+    #[test]
+    fn for_devices_drops_absent_destinations() {
+        let s = Schedule::for_devices(&[DeviceKind::ManyCore, DeviceKind::Fpga]);
+        let kinds: Vec<TrialKind> = s.trials().collect();
+        assert_eq!(kinds.len(), 4, "two devices x two methods");
+        assert!(kinds.iter().all(|k| k.device != DeviceKind::Gpu));
+        // Subtraction still sits between the FB and loop phases.
+        assert_eq!(s.steps[2], ScheduleStep::SubtractBlocks);
+        // The full fleet at default prices reproduces the paper schedules.
+        let all = [DeviceKind::ManyCore, DeviceKind::Gpu, DeviceKind::Fpga];
+        assert_eq!(Schedule::for_devices(&all), Schedule::paper());
+        let tb = crate::devices::Testbed::default();
+        let default_prices = |k: DeviceKind| tb.device(k).price_usd();
+        assert_eq!(Schedule::price_ascending_by(&all, default_prices), Schedule::price_ascending());
+        // Empty fleet: an empty schedule that still executes cleanly.
+        assert!(Schedule::for_devices(&[]).steps.is_empty());
+    }
+
+    #[test]
+    fn schedule_policy_labels_roundtrip() {
+        for p in [SchedulePolicy::Paper, SchedulePolicy::PriceAscending] {
+            assert_eq!(SchedulePolicy::from_label(p.label()).unwrap(), p);
+        }
+        assert!(SchedulePolicy::from_label("fastest").is_err());
+        let tb = crate::devices::Testbed::default();
+        let default_prices = |k: DeviceKind| tb.device(k).price_usd();
+        let s = SchedulePolicy::PriceAscending
+            .schedule_for(&[DeviceKind::Gpu, DeviceKind::Fpga], default_prices);
+        let kinds: Vec<TrialKind> = s.trials().collect();
+        assert!(kinds[..2].iter().all(|k| k.device == DeviceKind::Gpu));
+        assert!(kinds[2..].iter().all(|k| k.device == DeviceKind::Fpga));
+    }
+
+    /// Price-ascending ordering follows the *scenario's* prices, not the
+    /// static band table: a discounted FPGA trials before a marked-up GPU.
+    #[test]
+    fn price_ascending_respects_overridden_prices() {
+        let dests = [DeviceKind::Gpu, DeviceKind::Fpga];
+        let s = Schedule::price_ascending_by(&dests, |k| match k {
+            DeviceKind::Gpu => 12_000.0,
+            _ => 3_000.0,
+        });
+        let kinds: Vec<TrialKind> = s.trials().collect();
+        assert!(kinds[..2].iter().all(|k| k.device == DeviceKind::Fpga), "{kinds:?}");
+        assert!(kinds[2..].iter().all(|k| k.device == DeviceKind::Gpu), "{kinds:?}");
     }
 
     #[test]

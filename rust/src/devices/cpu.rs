@@ -22,6 +22,8 @@ pub struct CpuSingle {
     pub bw_random: f64,
     /// Compile cost charged per measured pattern.
     pub compile_s: f64,
+    /// Node price in USD (spec-overridable; see devices/spec.rs).
+    pub price_usd: f64,
 }
 
 impl Default for CpuSingle {
@@ -32,6 +34,7 @@ impl Default for CpuSingle {
             bw_strided: 1.4e9,
             bw_random: 0.8e9,
             compile_s: 20.0,
+            price_usd: 1_500.0,
         }
     }
 }
@@ -66,7 +69,7 @@ impl DeviceModel for CpuSingle {
     }
 
     fn price_usd(&self) -> f64 {
-        1_500.0
+        self.price_usd
     }
 
     fn measure(&self, app: &Application, _pattern: &OffloadPattern) -> Measurement {

@@ -36,6 +36,9 @@ pub struct Fpga {
     /// Circuit synthesis per measured pattern (paper: ~3 h).
     pub synthesis_s: f64,
     pub budget: FpgaResources,
+    /// Node price in USD (paper: the FPGA band costs more;
+    /// spec-overridable — see devices/spec.rs).
+    pub price_usd: f64,
 }
 
 impl Default for Fpga {
@@ -49,6 +52,7 @@ impl Default for Fpga {
             bw_pcie: 8.0e9,
             synthesis_s: 3.0 * 3600.0,
             budget: FpgaResources::default(),
+            price_usd: 10_000.0,
         }
     }
 }
@@ -129,7 +133,7 @@ impl DeviceModel for Fpga {
     }
 
     fn price_usd(&self) -> f64 {
-        10_000.0 // paper: FPGA nodes sit in a higher price band
+        self.price_usd
     }
 
     fn measure(&self, app: &Application, pattern: &OffloadPattern) -> Measurement {

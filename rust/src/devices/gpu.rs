@@ -36,6 +36,8 @@ pub struct Gpu {
     pub compile_s: f64,
     /// Apply the transfer-reduction pass from [42]?
     pub hoist_transfers: bool,
+    /// Node price in USD (spec-overridable; see devices/spec.rs).
+    pub price_usd: f64,
 }
 
 impl Default for Gpu {
@@ -48,6 +50,7 @@ impl Default for Gpu {
             launch_s: 20.0e-6,
             compile_s: 45.0,
             hoist_transfers: true,
+            price_usd: 4_000.0,
         }
     }
 }
@@ -148,7 +151,7 @@ impl DeviceModel for Gpu {
     }
 
     fn price_usd(&self) -> f64 {
-        4_000.0
+        self.price_usd
     }
 
     fn measure(&self, app: &Application, pattern: &OffloadPattern) -> Measurement {

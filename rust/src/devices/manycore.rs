@@ -29,6 +29,9 @@ pub struct ManyCore {
     pub omp_overhead_s: f64,
     /// gcc -fopenmp compile per pattern.
     pub compile_s: f64,
+    /// Node price in USD (paper: many-core ~= GPU < FPGA;
+    /// spec-overridable — see devices/spec.rs).
+    pub price_usd: f64,
 }
 
 impl Default for ManyCore {
@@ -41,6 +44,7 @@ impl Default for ManyCore {
             bw_par_random: 3.0e9,
             omp_overhead_s: 8.0e-6,
             compile_s: 30.0,
+            price_usd: 4_000.0,
         }
     }
 }
@@ -102,7 +106,7 @@ impl DeviceModel for ManyCore {
     }
 
     fn price_usd(&self) -> f64 {
-        4_000.0 // paper: many-core ~= GPU < FPGA node price
+        self.price_usd
     }
 
     fn measure(&self, app: &Application, pattern: &OffloadPattern) -> Measurement {

@@ -16,6 +16,7 @@ pub mod gpu;
 pub mod manycore;
 pub mod plan;
 pub mod pricing;
+pub mod spec;
 
 use crate::app::ir::Application;
 use crate::offload::pattern::OffloadPattern;
@@ -26,6 +27,7 @@ pub use fpga::Fpga;
 pub use gpu::Gpu;
 pub use manycore::ManyCore;
 pub use plan::{MeasurementPlan, PlanCache};
+pub use spec::{DeviceSpec, EnvSpec};
 
 /// The three offload destinations plus the single-core baseline.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]

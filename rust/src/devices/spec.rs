@@ -1,0 +1,385 @@
+//! Declarative environment specs: the device fleet as *data*.
+//!
+//! The paper evaluates one fixed verification environment (fig. 3); the
+//! companion proposal (arXiv 2011.12431) and the power-saving follow-up
+//! (arXiv 2110.11520) vary the environment across device mixes and
+//! cost/power axes.  [`EnvSpec`] captures a fleet declaratively — which
+//! of the four device models are present, how many nodes of each, and
+//! any calibration/price overrides — so a deployment environment is a
+//! JSON object, not Rust code.  [`Testbed::from_spec`] materializes the
+//! models; an empty spec reproduces [`Testbed::default`] bit-for-bit
+//! (pinned by `tests/properties.rs::testbed_from_default_spec_is_bit_identical`).
+//!
+//! Parameter overrides are a flat `name -> f64` map per device, checked
+//! against the model's known field list when the testbed is built, so a
+//! typo in a scenario file fails loudly instead of silently calibrating
+//! nothing.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+use super::{CpuSingle, DeviceKind, Fpga, Gpu, ManyCore, Testbed};
+
+/// One device entry of a fleet: node count plus calibration overrides.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceSpec {
+    /// Nodes of this device in the fleet (fleet bookkeeping — the
+    /// verification trial measures one node; reports show the count).
+    pub count: usize,
+    /// Calibration/price overrides, by model field name.  Empty = the
+    /// model's `Default` (the fig. 3 calibration).
+    pub params: BTreeMap<String, f64>,
+}
+
+impl Default for DeviceSpec {
+    fn default() -> Self {
+        Self { count: 1, params: BTreeMap::new() }
+    }
+}
+
+impl DeviceSpec {
+    fn parse(key: &str, j: &Json) -> Result<Self> {
+        let Json::Obj(m) = j else {
+            bail!("device {key:?}: expected an object of parameter overrides");
+        };
+        let mut spec = DeviceSpec::default();
+        for (k, v) in m {
+            if k == "count" {
+                let n = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("device {key:?}: count must be a number"))?;
+                if n < 1.0 || n.fract() != 0.0 {
+                    bail!(
+                        "device {key:?}: count must be a positive integer \
+                         (omit the device entirely for an absent device)"
+                    );
+                }
+                spec.count = n as usize;
+            } else {
+                let num = match v {
+                    Json::Num(n) => *n,
+                    Json::Bool(true) => 1.0,
+                    Json::Bool(false) => 0.0,
+                    _ => bail!("device {key:?}: parameter {k:?} must be a number"),
+                };
+                spec.params.insert(k.clone(), num);
+            }
+        }
+        Ok(spec)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m: BTreeMap<String, Json> =
+            self.params.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect();
+        if self.count != 1 {
+            m.insert("count".into(), Json::Num(self.count as f64));
+        }
+        Json::Obj(m)
+    }
+}
+
+/// The device fleet of one deployment environment.  The baseline CPU is
+/// always present (every flow needs its single-core reference); each
+/// offload destination is present iff its entry exists.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EnvSpec {
+    pub cpu: DeviceSpec,
+    pub manycore: Option<DeviceSpec>,
+    pub gpu: Option<DeviceSpec>,
+    pub fpga: Option<DeviceSpec>,
+}
+
+impl Default for EnvSpec {
+    /// The paper's full fig. 3 fleet at default calibration.
+    fn default() -> Self {
+        Self {
+            cpu: DeviceSpec::default(),
+            manycore: Some(DeviceSpec::default()),
+            gpu: Some(DeviceSpec::default()),
+            fpga: Some(DeviceSpec::default()),
+        }
+    }
+}
+
+impl EnvSpec {
+    /// Parse the `"devices"` object of a scenario spec.  Listing a device
+    /// makes it present; `{}` is a baseline-CPU-only environment.
+    pub fn parse(j: &Json) -> Result<Self> {
+        let Json::Obj(m) = j else {
+            bail!("devices: expected an object mapping device names to overrides");
+        };
+        let mut env = Self { cpu: DeviceSpec::default(), manycore: None, gpu: None, fpga: None };
+        for (k, v) in m {
+            match k.as_str() {
+                "cpu" => env.cpu = DeviceSpec::parse("cpu", v)?,
+                "manycore" => env.manycore = Some(DeviceSpec::parse("manycore", v)?),
+                "gpu" => env.gpu = Some(DeviceSpec::parse("gpu", v)?),
+                "fpga" => env.fpga = Some(DeviceSpec::parse("fpga", v)?),
+                other => bail!("unknown device {other:?} (known: cpu, manycore, gpu, fpga)"),
+            }
+        }
+        Ok(env)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        if self.cpu != DeviceSpec::default() {
+            m.insert("cpu".into(), self.cpu.to_json());
+        }
+        if let Some(d) = &self.manycore {
+            m.insert("manycore".into(), d.to_json());
+        }
+        if let Some(d) = &self.gpu {
+            m.insert("gpu".into(), d.to_json());
+        }
+        if let Some(d) = &self.fpga {
+            m.insert("fpga".into(), d.to_json());
+        }
+        Json::Obj(m)
+    }
+
+    /// The offload destinations this fleet offers, in the paper's device
+    /// order (the baseline CPU is not a destination).
+    pub fn destinations(&self) -> Vec<DeviceKind> {
+        let mut out = Vec::new();
+        if self.manycore.is_some() {
+            out.push(DeviceKind::ManyCore);
+        }
+        if self.gpu.is_some() {
+            out.push(DeviceKind::Gpu);
+        }
+        if self.fpga.is_some() {
+            out.push(DeviceKind::Fpga);
+        }
+        out
+    }
+
+    /// Human-readable fleet summary for tables, e.g. `cpu + manycore + 2xfpga`.
+    pub fn fleet_label(&self) -> String {
+        let mut parts = vec![entry_label("cpu", Some(&self.cpu))];
+        for (name, d) in [
+            ("manycore", self.manycore.as_ref()),
+            ("gpu", self.gpu.as_ref()),
+            ("fpga", self.fpga.as_ref()),
+        ] {
+            if d.is_some() {
+                parts.push(entry_label(name, d));
+            }
+        }
+        parts.join(" + ")
+    }
+}
+
+fn entry_label(name: &str, d: Option<&DeviceSpec>) -> String {
+    match d {
+        Some(d) if d.count > 1 => format!("{}x{name}", d.count),
+        _ => name.to_string(),
+    }
+}
+
+/// Apply `params` to the fields `set` knows about, rejecting unknown keys.
+fn apply_params(
+    device: &str,
+    params: &BTreeMap<String, f64>,
+    known: &[&str],
+    mut set: impl FnMut(&str, f64),
+) -> Result<()> {
+    for (k, &v) in params {
+        if !known.contains(&k.as_str()) {
+            bail!("unknown {device} parameter {k:?} (known: {})", known.join(", "));
+        }
+        set(k.as_str(), v);
+    }
+    Ok(())
+}
+
+fn apply_cpu(c: &mut CpuSingle, params: &BTreeMap<String, f64>) -> Result<()> {
+    apply_params(
+        "cpu",
+        params,
+        &["flops", "bw_stream", "bw_strided", "bw_random", "compile_s", "price_usd"],
+        |k, v| match k {
+            "flops" => c.flops = v,
+            "bw_stream" => c.bw_stream = v,
+            "bw_strided" => c.bw_strided = v,
+            "bw_random" => c.bw_random = v,
+            "compile_s" => c.compile_s = v,
+            _ => c.price_usd = v,
+        },
+    )
+}
+
+fn apply_manycore(mc: &mut ManyCore, params: &BTreeMap<String, f64>) -> Result<()> {
+    apply_params(
+        "manycore",
+        params,
+        &[
+            "threads_eff",
+            "bw_par_stream",
+            "bw_par_strided",
+            "bw_par_random",
+            "omp_overhead_s",
+            "compile_s",
+            "price_usd",
+        ],
+        |k, v| match k {
+            "threads_eff" => mc.threads_eff = v,
+            "bw_par_stream" => mc.bw_par_stream = v,
+            "bw_par_strided" => mc.bw_par_strided = v,
+            "bw_par_random" => mc.bw_par_random = v,
+            "omp_overhead_s" => mc.omp_overhead_s = v,
+            "compile_s" => mc.compile_s = v,
+            _ => mc.price_usd = v,
+        },
+    )
+}
+
+fn apply_gpu(g: &mut Gpu, params: &BTreeMap<String, f64>) -> Result<()> {
+    apply_params(
+        "gpu",
+        params,
+        &["flops", "bw_dev", "bw_pcie", "launch_s", "compile_s", "hoist_transfers", "price_usd"],
+        |k, v| match k {
+            "flops" => g.flops = v,
+            "bw_dev" => g.bw_dev = v,
+            "bw_pcie" => g.bw_pcie = v,
+            "launch_s" => g.launch_s = v,
+            "compile_s" => g.compile_s = v,
+            "hoist_transfers" => g.hoist_transfers = v != 0.0,
+            _ => g.price_usd = v,
+        },
+    )
+}
+
+fn apply_fpga(f: &mut Fpga, params: &BTreeMap<String, f64>) -> Result<()> {
+    apply_params(
+        "fpga",
+        params,
+        &[
+            "clock_hz",
+            "flops_per_cycle_per_unit",
+            "unroll",
+            "bw_mem",
+            "bw_pcie",
+            "synthesis_s",
+            "budget_dsps",
+            "budget_alms",
+            "budget_bram_kb",
+            "price_usd",
+        ],
+        |k, v| match k {
+            "clock_hz" => f.clock_hz = v,
+            "flops_per_cycle_per_unit" => f.flops_per_cycle_per_unit = v,
+            "unroll" => f.unroll = v,
+            "bw_mem" => f.bw_mem = v,
+            "bw_pcie" => f.bw_pcie = v,
+            "synthesis_s" => f.synthesis_s = v,
+            "budget_dsps" => f.budget.dsps = v,
+            "budget_alms" => f.budget.alms = v,
+            "budget_bram_kb" => f.budget.bram_kb = v,
+            _ => f.price_usd = v,
+        },
+    )
+}
+
+impl Testbed {
+    /// Materialize the verification environment a spec describes.  Absent
+    /// destinations keep their default models (they are never scheduled —
+    /// `Schedule::for_devices` drops their trials); the baseline CPU's
+    /// overrides propagate into every device's embedded host model so
+    /// host-residue times and baselines stay consistent.  An all-default
+    /// spec reproduces `Testbed::default()` bit-for-bit.
+    pub fn from_spec(spec: &EnvSpec) -> Result<Self> {
+        let mut tb = Testbed::default();
+        apply_cpu(&mut tb.cpu, &spec.cpu.params)?;
+        tb.manycore.single = tb.cpu;
+        tb.gpu.host = tb.cpu;
+        tb.fpga.host = tb.cpu;
+        if let Some(d) = &spec.manycore {
+            apply_manycore(&mut tb.manycore, &d.params)?;
+        }
+        if let Some(d) = &spec.gpu {
+            apply_gpu(&mut tb.gpu, &d.params)?;
+        }
+        if let Some(d) = &spec.fpga {
+            apply_fpga(&mut tb.fpga, &d.params)?;
+        }
+        Ok(tb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_devices_object_is_cpu_only() {
+        let env = EnvSpec::parse(&Json::parse("{}").unwrap()).unwrap();
+        assert!(env.destinations().is_empty());
+        assert_eq!(env.fleet_label(), "cpu");
+    }
+
+    #[test]
+    fn default_spec_reproduces_default_testbed() {
+        let tb = Testbed::from_spec(&EnvSpec::default()).unwrap();
+        let d = Testbed::default();
+        assert_eq!(tb.cpu.flops.to_bits(), d.cpu.flops.to_bits());
+        assert_eq!(tb.manycore.threads_eff.to_bits(), d.manycore.threads_eff.to_bits());
+        assert_eq!(tb.gpu.price_usd.to_bits(), d.gpu.price_usd.to_bits());
+        assert_eq!(tb.fpga.synthesis_s.to_bits(), d.fpga.synthesis_s.to_bits());
+    }
+
+    #[test]
+    fn overrides_apply_and_cpu_propagates_to_hosts() {
+        let j = Json::parse(
+            r#"{"cpu": {"flops": 2e9}, "gpu": {"hoist_transfers": false, "price_usd": 3000},
+                "fpga": {"count": 2, "budget_dsps": 100}}"#,
+        )
+        .unwrap();
+        let env = EnvSpec::parse(&j).unwrap();
+        let tb = Testbed::from_spec(&env).unwrap();
+        assert_eq!(tb.cpu.flops, 2e9);
+        assert_eq!(tb.gpu.host.flops, 2e9, "cpu override reaches the GPU host model");
+        assert_eq!(tb.manycore.single.flops, 2e9);
+        assert!(!tb.gpu.hoist_transfers);
+        assert_eq!(tb.gpu.price_usd, 3_000.0);
+        assert_eq!(tb.fpga.budget.dsps, 100.0);
+        assert_eq!(env.fpga.as_ref().unwrap().count, 2);
+        assert_eq!(env.destinations(), vec![DeviceKind::Gpu, DeviceKind::Fpga]);
+        assert_eq!(env.fleet_label(), "cpu + gpu + 2xfpga");
+    }
+
+    #[test]
+    fn unknown_device_and_parameter_are_rejected() {
+        let bad_dev = Json::parse(r#"{"tpu": {}}"#).unwrap();
+        let e = EnvSpec::parse(&bad_dev).unwrap_err().to_string();
+        assert!(e.contains("unknown device \"tpu\""), "{e}");
+
+        let bad_param = Json::parse(r#"{"gpu": {"flopz": 1}}"#).unwrap();
+        let env = EnvSpec::parse(&bad_param).unwrap();
+        let e = Testbed::from_spec(&env).unwrap_err().to_string();
+        assert!(e.contains("unknown gpu parameter \"flopz\""), "{e}");
+        assert!(e.contains("hoist_transfers"), "error lists the known keys: {e}");
+    }
+
+    #[test]
+    fn zero_count_is_rejected() {
+        let j = Json::parse(r#"{"gpu": {"count": 0}}"#).unwrap();
+        let e = EnvSpec::parse(&j).unwrap_err().to_string();
+        assert!(e.contains("positive integer"), "{e}");
+    }
+
+    #[test]
+    fn spec_roundtrips_through_json() {
+        let j = Json::parse(
+            r#"{"cpu": {"flops": 2e9}, "manycore": {"count": 3}, "fpga": {"price_usd": 8000}}"#,
+        )
+        .unwrap();
+        let env = EnvSpec::parse(&j).unwrap();
+        let back = EnvSpec::parse(&Json::parse(&env.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(env, back);
+    }
+}

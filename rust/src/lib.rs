@@ -28,13 +28,15 @@ pub mod ga;
 pub mod offload;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod util;
 
 pub use app::ir::{Application, FunctionBlockKind, Loop, LoopId};
 pub use coordinator::{
-    BatchOffloader, BatchOutcome, MixedOffloader, OffloadOutcome, Schedule, TrialConcurrency,
-    UserRequirements,
+    BatchOffloader, BatchOutcome, MixedOffloader, OffloadOutcome, Schedule, SchedulePolicy,
+    TrialConcurrency, UserRequirements,
 };
-pub use devices::{DeviceKind, PlanCache, Testbed};
+pub use devices::{DeviceKind, EnvSpec, PlanCache, Testbed};
+pub use scenario::{Scenario, ScenarioOutcome, ScenarioSpec, SweepOutcome};
 pub use offload::pattern::OffloadPattern;
 pub use offload::strategy::{OffloadStrategy, StrategyRegistry, TrialCtx, TrialOutcome};

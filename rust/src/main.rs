@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   offload <workload>   run the full mixed flow on one workload
 //!   batch [workloads…]   run many workloads through the flow concurrently
+//!   sweep <dir>          run a directory of JSON scenario specs
 //!   figure4              reproduce the paper's fig. 4 (3mm + NAS.BT)
 //!   inspect <workload>   loop structure, profile, FB detection
 //!   devices              the simulated verification environment (fig. 3)
@@ -56,6 +57,7 @@ fn run() -> Result<()> {
     match args.subcommand() {
         Some("offload") => cmd_offload(&args),
         Some("batch") => cmd_batch(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("figure4") => cmd_figure4(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("devices") => cmd_devices(),
@@ -79,6 +81,10 @@ usage: mixoff <command> [options]
   batch [workloads…]    run many workloads through the flow concurrently,
                         sharing compiled measurement plans (default: all
                         five named workloads)
+  sweep <dir>           run every *.json scenario spec in <dir> (device
+                        fleet, apps, requirements, schedule, seed as
+                        data; see scenarios/ and DESIGN.md) and render
+                        the per-scenario comparison table
   figure4 [--timing]    reproduce the paper's fig. 4 table
   inspect <workload>    loop table, hot spots, FB detection
   devices               simulated verification environment (fig. 3)
@@ -144,6 +150,28 @@ fn cmd_batch(args: &Args) -> Result<()> {
             for o in &out.outcomes {
                 println!("--- {} ---", o.app_name);
                 print!("{}", report::render_timing(o));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let dir = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: mixoff sweep <dir>"))?;
+    let sweep = mixoff::scenario::run_dir(std::path::Path::new(dir))?;
+    if args.flag("json") {
+        println!("{}", report::sweep_to_json(&sweep));
+    } else {
+        print!("{}", report::render_sweep(&sweep));
+        if args.flag("timing") {
+            for sc in &sweep.scenarios {
+                for out in &sc.batch.outcomes {
+                    println!("--- {} / {} ---", sc.name, out.app_name);
+                    print!("{}", report::render_timing(out));
+                }
             }
         }
     }

@@ -1,12 +1,25 @@
 //! Report rendering: fig. 4-style result tables, trial breakdowns, the
-//! sec. 4.2 timing ledger, and machine-readable JSON.
+//! sec. 4.2 timing ledger, machine-readable JSON, and the sweep/golden
+//! serializations behind `mixoff sweep` and `tests/golden.rs`.
 
 use std::fmt::Write as _;
 
 use crate::coordinator::{BatchOutcome, OffloadOutcome, TrialKind};
 use crate::devices::DeviceKind;
 use crate::offload::pattern::Method;
+use crate::scenario::{ScenarioOutcome, SweepOutcome};
 use crate::util::json::Json;
+
+/// JSON-safe number: non-finite values have no JSON literal, so they
+/// serialize as `null` (a timed-out FPGA synthesis reports infinite
+/// seconds, for example).
+fn num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
 
 /// One row of the paper's fig. 4 table.
 #[derive(Clone, Debug)]
@@ -263,6 +276,160 @@ pub fn to_json(out: &OffloadOutcome) -> Json {
     Json::Obj(root)
 }
 
+fn pattern_json(p: &Option<crate::offload::pattern::OffloadPattern>) -> Json {
+    match p {
+        Some(p) => Json::Arr(p.selected().map(|id| Json::Num(id.0 as f64)).collect()),
+        None => Json::Null,
+    }
+}
+
+/// The *full* outcome: every `TrialRecord` field, the chosen destination
+/// with its pattern, and the clock ledger event by event.  This is the
+/// golden-replay serialization (`tests/golden.rs`) — everything in it is
+/// deterministic for a fixed scenario spec, and bit-identical across
+/// `Sequential` and `Staged` trial concurrency.
+pub fn to_json_full(out: &OffloadOutcome) -> Json {
+    use std::collections::BTreeMap;
+    let mut root = BTreeMap::new();
+    root.insert("app".into(), Json::Str(out.app_name.clone()));
+    root.insert("baseline_seconds".into(), num(out.baseline_seconds));
+    let trials: Vec<Json> = out
+        .trials
+        .iter()
+        .map(|t| {
+            let mut m = BTreeMap::new();
+            m.insert("trial".into(), Json::Str(t.kind.label()));
+            match &t.skipped {
+                Some(r) => {
+                    m.insert("skipped".into(), Json::Str(r.clone()));
+                }
+                None => {
+                    m.insert("seconds".into(), num(t.seconds));
+                    m.insert("improvement".into(), num(t.improvement));
+                    m.insert("offloaded".into(), Json::Bool(t.offloaded));
+                    m.insert("verify_seconds".into(), num(t.cost_s));
+                    m.insert("detail".into(), Json::Str(t.detail.clone()));
+                    m.insert("pattern".into(), pattern_json(&t.pattern));
+                }
+            }
+            Json::Obj(m)
+        })
+        .collect();
+    root.insert("trials".into(), Json::Arr(trials));
+    match &out.chosen {
+        Some(c) => {
+            let mut m = BTreeMap::new();
+            m.insert("trial".into(), Json::Str(c.kind.label()));
+            m.insert("seconds".into(), num(c.seconds));
+            m.insert("improvement".into(), num(c.improvement));
+            m.insert("price_usd".into(), num(c.price_usd));
+            m.insert("detail".into(), Json::Str(c.detail.clone()));
+            m.insert("pattern".into(), pattern_json(&c.pattern));
+            root.insert("chosen".into(), Json::Obj(m));
+        }
+        None => {
+            root.insert("chosen".into(), Json::Null);
+        }
+    }
+    let clock: Vec<Json> = out
+        .clock
+        .events()
+        .iter()
+        .map(|e| {
+            let mut m = BTreeMap::new();
+            m.insert("label".into(), Json::Str(e.label.clone()));
+            m.insert("seconds".into(), num(e.seconds));
+            Json::Obj(m)
+        })
+        .collect();
+    root.insert("clock".into(), Json::Arr(clock));
+    Json::Obj(root)
+}
+
+/// Golden serialization of one scenario run: the scenario identity plus
+/// the full outcome of every application.  Deliberately excludes
+/// wall-clock seconds and plan-cache counters — the golden corpus pins
+/// *outcomes*, not timing.
+pub fn scenario_to_json(s: &ScenarioOutcome) -> Json {
+    use std::collections::BTreeMap;
+    let mut root = BTreeMap::new();
+    root.insert("scenario".into(), Json::Str(s.name.clone()));
+    root.insert("fleet".into(), Json::Str(s.fleet.clone()));
+    root.insert("schedule".into(), Json::Str(s.schedule.label().to_string()));
+    root.insert(
+        "apps".into(),
+        Json::Arr(s.batch.outcomes.iter().map(to_json_full).collect()),
+    );
+    Json::Obj(root)
+}
+
+/// The per-scenario comparison table behind `mixoff sweep <dir>`: one row
+/// per (scenario, application) plus sweep totals.
+pub fn render_sweep(sweep: &SweepOutcome) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:<22} {:<28} {:<16} {:>12} | {:<30} {:>12} {:>8} | {:>10}",
+        "scenario", "fleet", "app", "1-core [s]", "chosen destination", "time [s]",
+        "improve", "verify [h]"
+    );
+    let _ = writeln!(s, "{}", "-".repeat(150));
+    for sc in &sweep.scenarios {
+        for out in &sc.batch.outcomes {
+            let (label, secs, imp) = match &out.chosen {
+                Some(c) => (c.kind.label(), c.seconds, format!("{:.1}x", c.improvement)),
+                None => ("none (stay on CPU)".to_string(), out.baseline_seconds, "1.0x".into()),
+            };
+            let _ = writeln!(
+                s,
+                "{:<22} {:<28} {:<16} {:>12.3} | {:<30} {:>12.4} {:>8} | {:>10.1}",
+                sc.name,
+                sc.fleet,
+                out.app_name,
+                out.baseline_seconds,
+                label,
+                secs,
+                imp,
+                out.clock.total_hours()
+            );
+        }
+    }
+    let _ = writeln!(
+        s,
+        "sweep: {} scenarios / {} apps in {:.2} s wall ({:.2} scenarios/s); simulated verification {:.1} h total",
+        sweep.scenarios.len(),
+        sweep.apps(),
+        sweep.wall_seconds,
+        sweep.scenarios_per_sec(),
+        sweep.total_verify_hours(),
+    );
+    s
+}
+
+/// Machine-readable sweep outcome: per-scenario batch JSON plus totals.
+pub fn sweep_to_json(sweep: &SweepOutcome) -> Json {
+    use std::collections::BTreeMap;
+    let mut root = BTreeMap::new();
+    let scenarios: Vec<Json> = sweep
+        .scenarios
+        .iter()
+        .map(|sc| {
+            let mut m = BTreeMap::new();
+            m.insert("scenario".into(), Json::Str(sc.name.clone()));
+            m.insert("fleet".into(), Json::Str(sc.fleet.clone()));
+            m.insert("schedule".into(), Json::Str(sc.schedule.label().to_string()));
+            m.insert("batch".into(), batch_to_json(&sc.batch));
+            Json::Obj(m)
+        })
+        .collect();
+    root.insert("scenarios".into(), Json::Arr(scenarios));
+    root.insert("wall_seconds".into(), num(sweep.wall_seconds));
+    root.insert("scenarios_per_sec".into(), num(sweep.scenarios_per_sec()));
+    root.insert("apps".into(), Json::Num(sweep.apps() as f64));
+    root.insert("verify_total_hours".into(), num(sweep.total_verify_hours()));
+    Json::Obj(root)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -306,5 +473,105 @@ mod tests {
             j.req("trial_concurrency").unwrap().as_str().unwrap(),
             "staged"
         );
+    }
+
+    /// Schema shape: every key a `batch --json` consumer may rely on is
+    /// present, and each per-app entry carries the outcome keys.
+    #[test]
+    fn batch_json_schema_shape() {
+        use crate::coordinator::BatchOffloader;
+        let apps = vec![crate::app::workloads::extra::vecadd(1 << 20)];
+        let batch = BatchOffloader::default().run(&apps);
+        let j = batch_to_json(&batch);
+        for key in [
+            "apps",
+            "wall_seconds",
+            "throughput_apps_per_s",
+            "trial_concurrency",
+            "plan_compiles",
+            "plan_hits",
+            "plan_hit_rate",
+            "verify_total_hours",
+        ] {
+            assert!(j.req(key).is_ok(), "batch JSON must carry {key:?}");
+        }
+        let app = &j.req("apps").unwrap().as_arr().unwrap()[0];
+        for key in ["app", "baseline_seconds", "trials", "verify_total_hours"] {
+            assert!(app.req(key).is_ok(), "per-app JSON must carry {key:?}");
+        }
+        let trial = &app.req("trials").unwrap().as_arr().unwrap()[0];
+        assert!(trial.req("trial").is_ok());
+        // render_batch carries every column header + the totals line.
+        let table = render_batch(&batch);
+        for needle in ["app", "chosen destination", "improve", "verify [h]", "batch:"] {
+            assert!(table.contains(needle), "{needle:?} missing from:\n{table}");
+        }
+    }
+
+    #[test]
+    fn full_json_carries_patterns_skips_and_clock_ledger() {
+        let mut mo = MixedOffloader::default();
+        mo.requirements = crate::coordinator::UserRequirements {
+            target_improvement: Some(1e9), // unreachable: nothing skipped early
+            max_price_usd: Some(5_000.0),  // FPGA skipped by price
+        };
+        let app = crate::app::workloads::extra::vecadd(1 << 22);
+        let out = mo.run(&app);
+        let j = to_json_full(&out);
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j, "round-trips");
+        let trials = j.req("trials").unwrap().as_arr().unwrap();
+        assert_eq!(trials.len(), out.trials.len());
+        assert!(
+            trials.iter().any(|t| t.get("skipped").is_some()),
+            "price-capped FPGA trials appear as skips"
+        );
+        assert!(
+            trials
+                .iter()
+                .any(|t| matches!(t.get("pattern"), Some(Json::Arr(a)) if !a.is_empty())),
+            "executed loop trials carry their pattern"
+        );
+        let clock = j.req("clock").unwrap().as_arr().unwrap();
+        let executed = out.trials.iter().filter(|t| t.skipped.is_none()).count();
+        assert_eq!(clock.len(), executed, "one ledger event per executed trial");
+        assert!(j.req("chosen").unwrap().get("pattern").is_some());
+    }
+
+    #[test]
+    fn sweep_render_and_json_cover_all_scenarios() {
+        use crate::scenario::ScenarioSpec;
+        let mk = |name: &str, devices: &str| {
+            ScenarioSpec::from_str(
+                &format!(
+                    r#"{{"devices": {devices},
+                         "applications": [{{"workload": "vecadd", "n": 1048576}}]}}"#
+                ),
+                name,
+            )
+            .unwrap()
+            .run()
+            .unwrap()
+        };
+        let sweep = SweepOutcome {
+            scenarios: vec![mk("mc-only", r#"{"manycore": {}}"#), mk("none", "{}")],
+            wall_seconds: 2.0,
+        };
+        assert_eq!(sweep.apps(), 2);
+        assert_eq!(sweep.scenarios_per_sec(), 1.0);
+        let table = render_sweep(&sweep);
+        assert!(table.contains("mc-only"), "{table}");
+        assert!(table.contains("cpu + manycore"), "{table}");
+        assert!(table.contains("none (stay on CPU)"), "{table}");
+        assert!(table.contains("sweep: 2 scenarios / 2 apps"), "{table}");
+        let j = sweep_to_json(&sweep);
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        assert_eq!(j.req("scenarios").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.req("apps").unwrap().as_usize(), Some(2));
+        // Golden shape: scenario identity + full per-app outcomes.
+        let g = scenario_to_json(&sweep.scenarios[0]);
+        for key in ["scenario", "fleet", "schedule", "apps"] {
+            assert!(g.req(key).is_ok(), "golden JSON must carry {key:?}");
+        }
+        assert!(g.to_string().contains("clock"));
     }
 }

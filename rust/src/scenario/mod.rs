@@ -1,0 +1,70 @@
+//! Scenario subsystem: environments and workload mixes as *data*.
+//!
+//! The paper evaluates one fixed environment (fig. 3) on two
+//! applications; its companion proposal (arXiv 2011.12431) sweeps device
+//! mixes and the power-saving follow-up (arXiv 2110.11520) sweeps
+//! cost/power axes.  This module makes every such experiment a JSON file:
+//!
+//! * [`ScenarioSpec`] (spec.rs) — the declarative scenario: device fleet
+//!   (presence, counts, calibration and price overrides —
+//!   `devices/spec.rs`), applications (named workloads with sizes, or
+//!   inline MiniC), user requirements, schedule policy, seed and trial
+//!   concurrency;
+//! * [`sweep`] — the `mixoff sweep <dir>` runner over a scenario corpus
+//!   (the committed one lives in `scenarios/` at the repo root);
+//! * `tests/golden.rs` — the golden-replay regression harness: every
+//!   corpus scenario replays bit-identically against
+//!   `scenarios/golden/*.json`, under both trial-concurrency modes.
+//!
+//! Adding a new deployment experiment means writing a JSON file, not
+//! Rust: the spec builds its [`Testbed`](crate::devices::Testbed) via
+//! `Testbed::from_spec` and its [`Schedule`](crate::coordinator::Schedule)
+//! via `SchedulePolicy::schedule_for`, so a fleet that omits a device
+//! simply never schedules its trials.
+
+pub mod spec;
+pub mod sweep;
+
+use crate::coordinator::{BatchOutcome, SchedulePolicy};
+
+pub use spec::{AppSpec, ScenarioSpec};
+pub use sweep::{load_dir, load_file, run_dir, run_scenarios, Scenario};
+
+/// What one scenario produced: its applications' outcomes (in spec order)
+/// plus the fleet/schedule labels the reports show.
+pub struct ScenarioOutcome {
+    pub name: String,
+    /// Human-readable fleet summary, e.g. `cpu + manycore + 2xfpga`.
+    pub fleet: String,
+    pub schedule: SchedulePolicy,
+    pub batch: BatchOutcome,
+}
+
+/// What a whole sweep produced.
+pub struct SweepOutcome {
+    /// Per-scenario outcomes, in file-name order.
+    pub scenarios: Vec<ScenarioOutcome>,
+    /// Real wall-clock seconds for the whole sweep.
+    pub wall_seconds: f64,
+}
+
+impl SweepOutcome {
+    /// Total applications offloaded across the sweep.
+    pub fn apps(&self) -> usize {
+        self.scenarios.iter().map(|s| s.batch.outcomes.len()).sum()
+    }
+
+    /// Scenarios processed per wall-clock second.
+    pub fn scenarios_per_sec(&self) -> f64 {
+        if self.wall_seconds == 0.0 {
+            0.0
+        } else {
+            self.scenarios.len() as f64 / self.wall_seconds
+        }
+    }
+
+    /// Total simulated verification hours across every scenario.
+    pub fn total_verify_hours(&self) -> f64 {
+        self.scenarios.iter().map(|s| s.batch.total_verify_hours()).sum()
+    }
+}

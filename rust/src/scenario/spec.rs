@@ -1,0 +1,421 @@
+//! The declarative scenario spec: one JSON object describing *everything*
+//! a mixed-destination offload run needs — the device fleet, the
+//! applications, the user requirements, the schedule policy, the GA seed
+//! and the trial concurrency.
+//!
+//! ```json
+//! {
+//!   "name": "gpu-absent",
+//!   "description": "mid-band fleet without a GPU",
+//!   "seed": 12648430,
+//!   "trial_concurrency": "staged",
+//!   "schedule": "paper",
+//!   "requirements": {"target_improvement": 10.0, "max_price_usd": 5000.0},
+//!   "devices": {"manycore": {}, "fpga": {"count": 2, "price_usd": 8000.0}},
+//!   "applications": [
+//!     {"workload": "3mm", "n": 500},
+//!     {"source": "app \"inline\" { ... }"}
+//!   ]
+//! }
+//! ```
+//!
+//! Every field except `applications` is optional: the defaults reproduce
+//! the paper's environment (full fleet, paper schedule, exhaustive
+//! requirements, seed 0xC0FFEE).  Specs round-trip through
+//! [`ScenarioSpec::to_json`] / [`ScenarioSpec::parse`] — pinned by
+//! `tests/properties.rs::scenario_spec_roundtrips_through_json`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::app::ir::Application;
+use crate::app::{parser, workloads};
+use crate::coordinator::{
+    BatchOffloader, MixedOffloader, SchedulePolicy, TrialConcurrency, UserRequirements,
+};
+use crate::devices::{EnvSpec, Testbed};
+use crate::util::json::Json;
+
+use super::ScenarioOutcome;
+
+/// One application of a scenario: a named workload generator (optionally
+/// resized) or an inline MiniC source (app/parser.rs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum AppSpec {
+    Named { workload: String, n: Option<u64>, iters: Option<u64> },
+    Inline { source: String },
+}
+
+fn opt_u64(v: Option<&Json>, key: &str) -> Result<Option<u64>> {
+    match v {
+        None => Ok(None),
+        Some(j) => {
+            let n = j.as_f64().ok_or_else(|| anyhow!("{key:?} must be a number"))?;
+            if n < 0.0 || n.fract() != 0.0 {
+                bail!("{key:?} must be a non-negative integer, got {n}");
+            }
+            // JSON numbers are f64: integers above 2^53 would silently
+            // round, and a rounded seed breaks exact golden replays.
+            if n > (1u64 << 53) as f64 {
+                bail!("{key:?} must fit in 2^53 (JSON number precision), got {n}");
+            }
+            Ok(Some(n as u64))
+        }
+    }
+}
+
+impl AppSpec {
+    fn parse(j: &Json) -> Result<Self> {
+        let Json::Obj(m) = j else {
+            bail!("each applications entry must be an object");
+        };
+        for k in m.keys() {
+            if !matches!(k.as_str(), "workload" | "n" | "iters" | "source") {
+                bail!("unknown application key {k:?} (known: workload, n, iters, source)");
+            }
+        }
+        match (m.get("workload"), m.get("source")) {
+            (Some(w), None) => Ok(AppSpec::Named {
+                workload: w
+                    .as_str()
+                    .ok_or_else(|| anyhow!("\"workload\" must be a string"))?
+                    .to_string(),
+                n: opt_u64(m.get("n"), "n")?,
+                iters: opt_u64(m.get("iters"), "iters")?,
+            }),
+            (None, Some(s)) => {
+                if m.contains_key("n") || m.contains_key("iters") {
+                    bail!("inline \"source\" applications take no \"n\"/\"iters\"");
+                }
+                Ok(AppSpec::Inline {
+                    source: s
+                        .as_str()
+                        .ok_or_else(|| anyhow!("\"source\" must be a string"))?
+                        .to_string(),
+                })
+            }
+            _ => bail!("each application needs exactly one of \"workload\" or \"source\""),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        match self {
+            AppSpec::Named { workload, n, iters } => {
+                m.insert("workload".into(), Json::Str(workload.clone()));
+                if let Some(n) = n {
+                    m.insert("n".into(), Json::Num(*n as f64));
+                }
+                if let Some(i) = iters {
+                    m.insert("iters".into(), Json::Num(*i as f64));
+                }
+            }
+            AppSpec::Inline { source } => {
+                m.insert("source".into(), Json::Str(source.clone()));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    /// Materialize the application (workload generator or MiniC parse).
+    pub fn build(&self) -> Result<Application> {
+        match self {
+            AppSpec::Named { workload, n, iters } => workloads::sized(workload, *n, *iters),
+            AppSpec::Inline { source } => parser::parse(source),
+        }
+    }
+
+    fn label(&self) -> String {
+        match self {
+            AppSpec::Named { workload, .. } => format!("workload {workload:?}"),
+            AppSpec::Inline { .. } => "inline application".to_string(),
+        }
+    }
+}
+
+/// A whole scenario: environment x applications x run configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub description: String,
+    /// GA seed (recorded so golden replays are exact).
+    pub seed: u64,
+    pub concurrency: TrialConcurrency,
+    pub schedule: SchedulePolicy,
+    pub requirements: UserRequirements,
+    pub devices: EnvSpec,
+    pub apps: Vec<AppSpec>,
+}
+
+fn concurrency_from_label(s: &str) -> Result<TrialConcurrency> {
+    match s {
+        "staged" => Ok(TrialConcurrency::Staged),
+        "sequential" => Ok(TrialConcurrency::Sequential),
+        other => bail!("unknown trial_concurrency {other:?} (want staged | sequential)"),
+    }
+}
+
+fn get_str<'a>(m: &'a BTreeMap<String, Json>, key: &str) -> Result<Option<&'a str>> {
+    m.get(key)
+        .map(|v| v.as_str().ok_or_else(|| anyhow!("{key:?} must be a string")))
+        .transpose()
+}
+
+fn parse_requirements(j: &Json) -> Result<UserRequirements> {
+    let Json::Obj(m) = j else {
+        bail!("requirements: expected an object");
+    };
+    for k in m.keys() {
+        if !matches!(k.as_str(), "target_improvement" | "max_price_usd") {
+            bail!(
+                "unknown requirements key {k:?} (known: target_improvement, max_price_usd)"
+            );
+        }
+    }
+    let num = |key: &str| -> Result<Option<f64>> {
+        m.get(key)
+            .map(|v| v.as_f64().ok_or_else(|| anyhow!("{key:?} must be a number")))
+            .transpose()
+    };
+    Ok(UserRequirements {
+        target_improvement: num("target_improvement")?,
+        max_price_usd: num("max_price_usd")?,
+    })
+}
+
+impl ScenarioSpec {
+    /// Parse a scenario object; `fallback_name` names the scenario when
+    /// the JSON has no `"name"` (the loader passes the file stem).
+    pub fn parse(j: &Json, fallback_name: &str) -> Result<Self> {
+        let Json::Obj(m) = j else {
+            bail!("scenario: expected a JSON object");
+        };
+        const KNOWN: &[&str] = &[
+            "name",
+            "description",
+            "seed",
+            "trial_concurrency",
+            "schedule",
+            "requirements",
+            "devices",
+            "applications",
+        ];
+        for k in m.keys() {
+            if !KNOWN.contains(&k.as_str()) {
+                bail!("unknown scenario key {k:?} (known: {})", KNOWN.join(", "));
+            }
+        }
+        let apps_json = m
+            .get("applications")
+            .ok_or_else(|| anyhow!("scenario needs an \"applications\" array"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("\"applications\" must be an array"))?;
+        if apps_json.is_empty() {
+            bail!("\"applications\" must not be empty");
+        }
+        let apps = apps_json.iter().map(AppSpec::parse).collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            name: get_str(m, "name")?.unwrap_or(fallback_name).to_string(),
+            description: get_str(m, "description")?.unwrap_or("").to_string(),
+            seed: opt_u64(m.get("seed"), "seed")?.unwrap_or(0xC0FFEE),
+            concurrency: match get_str(m, "trial_concurrency")? {
+                Some(s) => concurrency_from_label(s)?,
+                None => TrialConcurrency::Staged,
+            },
+            schedule: match get_str(m, "schedule")? {
+                Some(s) => SchedulePolicy::from_label(s)?,
+                None => SchedulePolicy::Paper,
+            },
+            requirements: match m.get("requirements") {
+                Some(r) => parse_requirements(r)?,
+                None => UserRequirements::default(),
+            },
+            devices: match m.get("devices") {
+                Some(d) => EnvSpec::parse(d)?,
+                None => EnvSpec::default(),
+            },
+            apps,
+        })
+    }
+
+    /// Parse from JSON source text (e.g. one `scenarios/*.json` file).
+    pub fn from_str(src: &str, fallback_name: &str) -> Result<Self> {
+        Self::parse(&Json::parse(src)?, fallback_name)
+    }
+
+    /// Canonical JSON form; `parse(to_json(spec)) == spec`.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        if !self.description.is_empty() {
+            m.insert("description".into(), Json::Str(self.description.clone()));
+        }
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        m.insert(
+            "trial_concurrency".into(),
+            Json::Str(self.concurrency.label().to_string()),
+        );
+        m.insert("schedule".into(), Json::Str(self.schedule.label().to_string()));
+        if self.requirements != UserRequirements::default() {
+            let mut r = BTreeMap::new();
+            if let Some(t) = self.requirements.target_improvement {
+                r.insert("target_improvement".into(), Json::Num(t));
+            }
+            if let Some(p) = self.requirements.max_price_usd {
+                r.insert("max_price_usd".into(), Json::Num(p));
+            }
+            m.insert("requirements".into(), Json::Obj(r));
+        }
+        m.insert("devices".into(), self.devices.to_json());
+        m.insert(
+            "applications".into(),
+            Json::Arr(self.apps.iter().map(AppSpec::to_json).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    /// Materialize every application, naming the offending entry on error.
+    pub fn applications(&self) -> Result<Vec<Application>> {
+        self.apps
+            .iter()
+            .map(|a| a.build().map_err(|e| anyhow!("{}: {e}", a.label())))
+            .collect()
+    }
+
+    /// The coordinator this scenario describes: spec-built testbed, the
+    /// schedule restricted to the fleet's destinations (price-ascending
+    /// orders by the *spec's* prices, overrides included), the scenario's
+    /// requirements, seed and concurrency.
+    pub fn offloader(&self) -> Result<MixedOffloader> {
+        let testbed = Testbed::from_spec(&self.devices)?;
+        let schedule = self
+            .schedule
+            .schedule_for(&self.devices.destinations(), |k| testbed.device(k).price_usd());
+        Ok(MixedOffloader {
+            testbed,
+            requirements: self.requirements,
+            ga_seed: self.seed,
+            schedule,
+            concurrency: self.concurrency,
+            ..MixedOffloader::default()
+        })
+    }
+
+    /// Run the scenario's applications through the batch service.
+    pub fn run(&self) -> Result<ScenarioOutcome> {
+        self.run_with(self.concurrency)
+    }
+
+    /// Run with an explicit trial concurrency (the golden harness replays
+    /// every scenario under both modes and asserts identical outcomes).
+    pub fn run_with(&self, concurrency: TrialConcurrency) -> Result<ScenarioOutcome> {
+        let apps = self.applications()?;
+        let mut batcher = BatchOffloader::default();
+        batcher.offloader = self.offloader()?;
+        // Batch-level concurrency replaces per-run GA fan-out (the
+        // BatchOffloader::default() guard — outcomes are identical for
+        // any worker count).
+        batcher.offloader.workers = 1;
+        batcher.offloader.concurrency = concurrency;
+        let batch = batcher.run(&apps);
+        Ok(ScenarioOutcome {
+            name: self.name.clone(),
+            fleet: self.devices.fleet_label(),
+            schedule: self.schedule,
+            batch,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::DeviceKind;
+
+    const SRC: &str = r#"{
+        "description": "two-device fleet, capped price",
+        "seed": 7,
+        "trial_concurrency": "sequential",
+        "schedule": "price_ascending",
+        "requirements": {"max_price_usd": 5000},
+        "devices": {"manycore": {}, "gpu": {"hoist_transfers": false}},
+        "applications": [
+            {"workload": "vecadd", "n": 1048576},
+            {"source": "app \"tiny\" { array X 1000000; for i 1000 par { stmt flops 2 read 16 write 8 uses X ; } }"}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_and_builds() {
+        let spec = ScenarioSpec::from_str(SRC, "two-device").unwrap();
+        assert_eq!(spec.name, "two-device", "falls back to the file stem");
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.concurrency, TrialConcurrency::Sequential);
+        assert_eq!(spec.schedule, SchedulePolicy::PriceAscending);
+        assert_eq!(spec.requirements.max_price_usd, Some(5_000.0));
+        assert_eq!(
+            spec.devices.destinations(),
+            vec![DeviceKind::ManyCore, DeviceKind::Gpu]
+        );
+        let apps = spec.applications().unwrap();
+        assert_eq!(apps.len(), 2);
+        assert_eq!(apps[0].name, "vecadd");
+        assert_eq!(apps[1].name, "tiny");
+        let mo = spec.offloader().unwrap();
+        assert_eq!(mo.ga_seed, 7);
+        assert!(!mo.testbed.gpu.hoist_transfers);
+        assert_eq!(mo.schedule.trials().count(), 4, "two devices x two methods");
+    }
+
+    #[test]
+    fn defaults_reproduce_the_paper_environment() {
+        let spec = ScenarioSpec::from_str(r#"{"applications": [{"workload": "vecadd"}]}"#, "d")
+            .unwrap();
+        assert_eq!(spec.seed, 0xC0FFEE);
+        assert_eq!(spec.concurrency, TrialConcurrency::Staged);
+        assert_eq!(spec.schedule, SchedulePolicy::Paper);
+        assert_eq!(spec.requirements, UserRequirements::default());
+        assert_eq!(spec.devices, EnvSpec::default());
+        let mo = spec.offloader().unwrap();
+        assert_eq!(mo.schedule, crate::coordinator::Schedule::paper());
+    }
+
+    #[test]
+    fn rejects_malformed_scenarios() {
+        let cases = [
+            (r#"{"applications": []}"#, "must not be empty"),
+            (r#"{"applications": [{"workload": "3mm", "source": "x"}]}"#, "exactly one"),
+            (r#"{"applications": [{"n": 5}]}"#, "exactly one"),
+            (r#"{"applications": [{"workload": "3mm", "trip": 5}]}"#, "unknown application key"),
+            (
+                r#"{"applications": [{"workload": "3mm"}], "sched": "paper"}"#,
+                "unknown scenario key",
+            ),
+            (
+                r#"{"applications": [{"workload": "3mm"}], "trial_concurrency": "parallel"}"#,
+                "unknown trial_concurrency",
+            ),
+            (
+                r#"{"applications": [{"workload": "3mm"}], "requirements": {"target": 2}}"#,
+                "unknown requirements key",
+            ),
+        ];
+        for (src, needle) in cases {
+            let e = ScenarioSpec::from_str(src, "bad").unwrap_err().to_string();
+            assert!(e.contains(needle), "{src}: {e}");
+        }
+    }
+
+    #[test]
+    fn unknown_workload_error_lists_available_names() {
+        let spec = ScenarioSpec::from_str(
+            r#"{"applications": [{"workload": "warp-drive"}]}"#,
+            "bad-workload",
+        )
+        .unwrap();
+        let e = spec.applications().unwrap_err().to_string();
+        assert!(e.contains("workload \"warp-drive\""), "{e}");
+        assert!(e.contains("available: 3mm"), "{e}");
+    }
+}

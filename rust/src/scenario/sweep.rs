@@ -1,0 +1,142 @@
+//! The environment-sweep runner behind `mixoff sweep <dir>`.
+//!
+//! A sweep directory is a corpus of `*.json` scenario files (see
+//! scenario/spec.rs; the committed corpus lives under `scenarios/` at the
+//! repo root, with its golden replays in `scenarios/golden/`).  Loading is
+//! eager and strict — every spec is parsed, its testbed built and its
+//! applications materialized up front, so a broken file fails naming the
+//! file before anything runs.  Running executes each scenario's
+//! environment x application cross-product on the existing
+//! [`BatchOffloader`](crate::coordinator::BatchOffloader)/worker-pool
+//! machinery, in file-name order (deterministic reports).
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::spec::ScenarioSpec;
+use super::{ScenarioOutcome, SweepOutcome};
+
+/// One loaded, validated scenario file.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub path: PathBuf,
+    pub spec: ScenarioSpec,
+}
+
+/// Load and validate a single scenario file.  Every error — JSON syntax,
+/// unknown keys, unknown devices/workloads — names the offending file.
+pub fn load_file(path: &Path) -> Result<Scenario> {
+    let in_file = |e: anyhow::Error| anyhow!("{}: {e}", path.display());
+    let src = std::fs::read_to_string(path).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("scenario");
+    let spec = ScenarioSpec::from_str(&src, stem).map_err(in_file)?;
+    // Validate the whole pipeline eagerly: device overrides and every
+    // application must materialize.
+    spec.offloader().map_err(in_file)?;
+    spec.applications().map_err(in_file)?;
+    Ok(Scenario { path: path.to_path_buf(), spec })
+}
+
+/// Load every `*.json` scenario directly inside `dir` (the `golden/`
+/// subdirectory is not descended into), sorted by file name.
+pub fn load_dir(dir: &Path) -> Result<Vec<Scenario>> {
+    let entries = std::fs::read_dir(dir).map_err(|e| anyhow!("{}: {e}", dir.display()))?;
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.is_file() && p.extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        bail!("{}: no *.json scenario files found", dir.display());
+    }
+    paths.iter().map(|p| load_file(p)).collect()
+}
+
+/// Run every scenario, in order.  Each scenario is internally concurrent
+/// (its applications fan out on the shared worker pool); scenarios run
+/// one after another so reports and the pool stay deterministic.
+pub fn run_scenarios(scenarios: &[Scenario]) -> Result<SweepOutcome> {
+    let t0 = Instant::now();
+    let outcomes = scenarios
+        .iter()
+        .map(|s| s.spec.run().map_err(|e| anyhow!("{}: {e}", s.path.display())))
+        .collect::<Result<Vec<ScenarioOutcome>>>()?;
+    Ok(SweepOutcome { scenarios: outcomes, wall_seconds: t0.elapsed().as_secs_f64() })
+}
+
+/// `mixoff sweep <dir>`: load the corpus, run the sweep.
+pub fn run_dir(dir: &Path) -> Result<SweepOutcome> {
+    run_scenarios(&load_dir(dir)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("mixoff-sweep-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn loads_runs_and_reports_in_file_order() {
+        let dir = tmp_dir("ok");
+        std::fs::write(
+            dir.join("b-cpu-only.json"),
+            r#"{"devices": {}, "applications": [{"workload": "vecadd", "n": 1048576}]}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("a-manycore.json"),
+            r#"{"devices": {"manycore": {}},
+                "applications": [{"workload": "vecadd", "n": 1048576}]}"#,
+        )
+        .unwrap();
+        let sweep = run_dir(&dir).unwrap();
+        assert_eq!(sweep.scenarios.len(), 2);
+        assert_eq!(sweep.scenarios[0].name, "a-manycore", "file-name order");
+        assert_eq!(sweep.scenarios[1].name, "b-cpu-only");
+        // The cpu-only fleet schedules zero trials; the manycore fleet two.
+        assert_eq!(sweep.scenarios[1].batch.outcomes[0].trials.len(), 0);
+        assert_eq!(sweep.scenarios[0].batch.outcomes[0].trials.len(), 2);
+        assert_eq!(sweep.apps(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn broken_file_errors_name_the_file() {
+        let dir = tmp_dir("bad");
+        std::fs::write(dir.join("broken.json"), r#"{"applications": ["#).unwrap();
+        let e = load_dir(&dir).unwrap_err().to_string();
+        assert!(e.contains("broken.json"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_workload_error_names_file_and_lists_workloads() {
+        let dir = tmp_dir("unknown-workload");
+        std::fs::write(
+            dir.join("typo.json"),
+            r#"{"applications": [{"workload": "3mn"}]}"#,
+        )
+        .unwrap();
+        let e = load_dir(&dir).unwrap_err().to_string();
+        assert!(e.contains("typo.json"), "error must name the file: {e}");
+        assert!(e.contains("unknown workload \"3mn\""), "{e}");
+        assert!(e.contains("available: 3mm"), "error must list the known names: {e}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_dir_is_an_error() {
+        let dir = tmp_dir("empty");
+        let e = load_dir(&dir).unwrap_err().to_string();
+        assert!(e.contains("no *.json scenario files"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

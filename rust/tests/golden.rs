@@ -1,0 +1,135 @@
+//! Golden-replay regression harness over the committed scenario corpus.
+//!
+//! Every `scenarios/*.json` spec is replayed with its fixed seed under
+//! BOTH trial-concurrency modes; the full `OffloadOutcome` serialization
+//! (trial records, skip reasons, patterns, clock ledger, chosen — see
+//! `report::scenario_to_json`) must be
+//!
+//! 1. identical between `Sequential` and `Staged` execution, and
+//! 2. identical to the committed `scenarios/golden/<name>.json`.
+//!
+//! `UPDATE_GOLDEN=1 cargo test --test golden` regenerates the golden
+//! files after an intentional outcome change.  A missing golden file is
+//! bootstrapped (written + reported) so a fresh corpus entry — or a fresh
+//! checkout — can establish its baseline; CI's `golden` job fails if the
+//! regenerated files differ from the committed tree.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use mixoff::coordinator::TrialConcurrency;
+use mixoff::report;
+use mixoff::scenario;
+
+fn scenarios_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios")
+}
+
+fn update_golden() -> bool {
+    std::env::var("UPDATE_GOLDEN").map(|v| v == "1").unwrap_or(false)
+}
+
+#[test]
+fn corpus_loads_and_stays_at_least_ten_scenarios() {
+    let scenarios = scenario::load_dir(&scenarios_dir()).expect("scenario corpus loads");
+    assert!(
+        scenarios.len() >= 10,
+        "the committed corpus must keep >= 10 scenarios, found {}",
+        scenarios.len()
+    );
+    // The corpus must keep exercising the mixes the paper never ran.
+    fn has(scenarios: &[scenario::Scenario], what: &str, f: impl Fn(&scenario::Scenario) -> bool) {
+        assert!(scenarios.iter().any(f), "corpus lost its {what} scenario");
+    }
+    has(&scenarios, "GPU-absent", |s| {
+        s.spec.devices.gpu.is_none() && s.spec.devices.manycore.is_some()
+    });
+    has(&scenarios, "FPGA-only", |s| {
+        s.spec.devices.fpga.is_some()
+            && s.spec.devices.gpu.is_none()
+            && s.spec.devices.manycore.is_none()
+    });
+    has(&scenarios, "price-capped", |s| s.spec.requirements.max_price_usd.is_some());
+    has(&scenarios, "two-device fleet", |s| s.spec.devices.destinations().len() == 2);
+    has(&scenarios, "cpu-only", |s| s.spec.devices.destinations().is_empty());
+    has(&scenarios, "inline-MiniC", |s| {
+        s.spec.apps.iter().any(|a| matches!(a, scenario::AppSpec::Inline { .. }))
+    });
+    has(&scenarios, "multi-node", |s| {
+        s.spec.devices.fpga.as_ref().map(|d| d.count > 1).unwrap_or(false)
+    });
+}
+
+#[test]
+fn golden_replay_corpus() {
+    let dir = scenarios_dir();
+    let scenarios = scenario::load_dir(&dir).expect("scenario corpus loads");
+    let golden_dir = dir.join("golden");
+    fs::create_dir_all(&golden_dir).expect("golden dir");
+    let update = update_golden();
+    let mut diffs: Vec<String> = Vec::new();
+
+    for sc in &scenarios {
+        let file = sc.path.file_name().unwrap().to_string_lossy().into_owned();
+
+        // Replay under both executors: the staged concurrent commit must
+        // be bit-identical to the paper's literal sequential walk.
+        let seq = sc.spec.run_with(TrialConcurrency::Sequential).expect(&file);
+        let staged = sc.spec.run_with(TrialConcurrency::Staged).expect(&file);
+        let rendered = format!("{}\n", report::scenario_to_json(&seq));
+        let staged_rendered = format!("{}\n", report::scenario_to_json(&staged));
+        assert_eq!(
+            rendered, staged_rendered,
+            "{file}: staged outcome diverged from sequential"
+        );
+
+        let gpath = golden_dir.join(&file);
+        if update {
+            fs::write(&gpath, &rendered).expect("write golden");
+            continue;
+        }
+        match fs::read_to_string(&gpath) {
+            Ok(committed) => {
+                if committed != rendered {
+                    diffs.push(file);
+                }
+            }
+            Err(_) => {
+                // Bootstrap: no golden yet for this scenario.  Write the
+                // baseline so the next run (and `git status`) sees it.
+                fs::write(&gpath, &rendered).expect("write golden");
+                eprintln!(
+                    "golden: bootstrapped {} (commit it to pin this scenario)",
+                    gpath.display()
+                );
+            }
+        }
+    }
+
+    // The golden set must mirror the corpus exactly: a deleted or renamed
+    // scenario may not leave its stale golden behind (in update mode the
+    // orphan is pruned; otherwise it is a failure like any other diff).
+    let expected: Vec<String> = scenarios
+        .iter()
+        .map(|sc| sc.path.file_name().unwrap().to_string_lossy().into_owned())
+        .collect();
+    for entry in fs::read_dir(&golden_dir).expect("golden dir listing").flatten() {
+        let path = entry.path();
+        if path.extension().map(|x| x == "json").unwrap_or(false) {
+            let name = path.file_name().unwrap().to_string_lossy().into_owned();
+            if !expected.contains(&name) {
+                if update {
+                    fs::remove_file(&path).expect("prune orphaned golden");
+                } else {
+                    diffs.push(format!("{name} (orphaned: no such scenario)"));
+                }
+            }
+        }
+    }
+
+    assert!(
+        diffs.is_empty(),
+        "golden mismatch for {diffs:?}: outcomes changed.  If intentional, regenerate \
+         with `UPDATE_GOLDEN=1 cargo test --test golden` and commit the diff."
+    );
+}

@@ -9,11 +9,14 @@ use mixoff::analysis::dependence::{expand_genome, genome_mask};
 use mixoff::app::builder::AppBuilder;
 use mixoff::app::ir::{Access, Application, Dependence, LoopId};
 use mixoff::coordinator::{
-    remap_pattern, MixedOffloader, Schedule, TrialConcurrency, TrialKind, UserRequirements,
+    remap_pattern, MixedOffloader, Schedule, SchedulePolicy, TrialConcurrency, TrialKind,
+    UserRequirements,
 };
-use mixoff::devices::{DeviceModel, Testbed};
+use mixoff::devices::{DeviceKind, DeviceModel, DeviceSpec, EnvSpec, Testbed};
 use mixoff::offload::pattern::OffloadPattern;
+use mixoff::scenario::{AppSpec, ScenarioSpec};
 use mixoff::util::bits::PatternBits;
+use mixoff::util::json::Json;
 use mixoff::util::prop::{forall, gen};
 use mixoff::util::rng::Rng;
 
@@ -424,6 +427,125 @@ fn staged_concurrent_executor_matches_sequential() {
             for (a, b) in seq.clock.events().iter().zip(staged.clock.events()) {
                 assert_eq!(a.label, b.label);
                 assert_eq!(a.seconds.to_bits(), b.seconds.to_bits());
+            }
+        }
+    });
+}
+
+/// Random but well-formed scenario spec: random fleet subsets, counts and
+/// calibration overrides, random requirements/schedule/concurrency, and a
+/// random mix of named (sized) and inline applications.
+fn random_scenario_spec(rng: &mut Rng) -> ScenarioSpec {
+    fn device(rng: &mut Rng, keys: &[&str]) -> DeviceSpec {
+        let mut d = DeviceSpec::default();
+        if rng.chance(0.3) {
+            d.count = 1 + rng.below(3);
+        }
+        for k in keys {
+            if rng.chance(0.3) {
+                d.params.insert(k.to_string(), rng.f64() * 1e10);
+            }
+        }
+        d
+    }
+    let apps: Vec<AppSpec> = (0..1 + rng.below(3))
+        .map(|_| {
+            if rng.chance(0.2) {
+                AppSpec::Inline {
+                    source: "app \"inline\" { array X 1000000; \
+                             for i 1024 par { stmt flops 2 read 16 write 8 uses X ; } }"
+                        .to_string(),
+                }
+            } else {
+                let names = ["3mm", "nas_bt", "jacobi2d", "vecadd", "atax", "gemver", "2mm"];
+                let workload = names[rng.below(names.len())];
+                let iterated = matches!(workload, "nas_bt" | "jacobi2d");
+                AppSpec::Named {
+                    workload: workload.to_string(),
+                    n: rng.chance(0.5).then(|| 16 + rng.below(4096) as u64),
+                    iters: (iterated && rng.chance(0.5)).then(|| 1 + rng.below(500) as u64),
+                }
+            }
+        })
+        .collect();
+    ScenarioSpec {
+        name: format!("prop-{}", rng.below(1 << 20)),
+        description: if rng.chance(0.5) { "property case".to_string() } else { String::new() },
+        seed: rng.next_u64() >> 12, // JSON numbers: keep below 2^53
+        concurrency: if rng.chance(0.5) {
+            TrialConcurrency::Staged
+        } else {
+            TrialConcurrency::Sequential
+        },
+        schedule: if rng.chance(0.5) {
+            SchedulePolicy::Paper
+        } else {
+            SchedulePolicy::PriceAscending
+        },
+        requirements: UserRequirements {
+            target_improvement: rng.chance(0.5).then(|| rng.f64() * 50.0),
+            max_price_usd: rng.chance(0.5).then(|| rng.f64() * 20_000.0),
+        },
+        devices: EnvSpec {
+            cpu: device(rng, &["flops", "bw_stream", "bw_strided", "bw_random", "price_usd"]),
+            manycore: rng
+                .chance(0.75)
+                .then(|| device(rng, &["threads_eff", "bw_par_stream", "price_usd"])),
+            gpu: rng
+                .chance(0.75)
+                .then(|| device(rng, &["flops", "bw_pcie", "hoist_transfers", "price_usd"])),
+            fpga: rng
+                .chance(0.75)
+                .then(|| device(rng, &["unroll", "synthesis_s", "budget_dsps", "price_usd"])),
+        },
+        apps,
+    }
+}
+
+/// Scenario specs survive `spec -> JSON -> text -> JSON -> spec` exactly:
+/// every field — fleet subsets, counts, f64 calibration overrides, sizes,
+/// requirements, seed, schedule, concurrency — round-trips through the
+/// in-tree JSON layer with full equality.
+#[test]
+fn scenario_spec_roundtrips_through_json() {
+    forall(150, |rng| {
+        let spec = random_scenario_spec(rng);
+        let text = spec.to_json().to_string();
+        let parsed = ScenarioSpec::parse(&Json::parse(&text).unwrap(), "fallback")
+            .unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(parsed, spec, "{text}");
+    });
+}
+
+/// The spec-built testbed is the legacy hardcoded testbed, bit for bit:
+/// with the all-default `EnvSpec`, every device model's `measure` output
+/// (seconds, validity, setup) and price are identical to
+/// `Testbed::default()` on random apps and random patterns.
+#[test]
+fn testbed_from_default_spec_is_bit_identical_to_legacy() {
+    let legacy = Testbed::default();
+    let from_spec = Testbed::from_spec(&EnvSpec::default()).expect("default spec builds");
+    forall(60, |rng| {
+        let app = random_app(rng);
+        for _ in 0..4 {
+            let p = random_pattern(rng, &app);
+            for kind in
+                [DeviceKind::CpuSingle, DeviceKind::ManyCore, DeviceKind::Gpu, DeviceKind::Fpga]
+            {
+                let a = legacy.device(kind).measure(&app, &p);
+                let b = from_spec.device(kind).measure(&app, &p);
+                assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "{kind:?} seconds");
+                assert_eq!(a.valid, b.valid, "{kind:?} validity");
+                assert_eq!(
+                    a.setup_seconds.to_bits(),
+                    b.setup_seconds.to_bits(),
+                    "{kind:?} setup"
+                );
+                assert_eq!(
+                    legacy.device(kind).price_usd().to_bits(),
+                    from_spec.device(kind).price_usd().to_bits(),
+                    "{kind:?} price"
+                );
             }
         }
     });
