@@ -1,0 +1,128 @@
+//! Bench: the PR-6 perf layers — delta measurement kernel, cross-search
+//! eval cache, island-parallel GA (EXPERIMENTS.md #Perf).
+//!
+//! * `measure.<dev>.delta_speedup` — throughput of
+//!   [`MeasurementPlan::measure_delta`] on ≤4-bit offspring deltas vs the
+//!   full sparse kernel, per device, on NAS.BT.  The delta path re-sums
+//!   only the chunks the flips dirtied (devices/plan.rs), so small deltas
+//!   must be several times cheaper (acceptance: GPU ≥ 3x).
+//! * `ga.cache.{hits,misses,hit_rate}` — the shared [`EvalCache`] across
+//!   two identical batch runs: the second replays the same seeded GA
+//!   trajectories, so it is answered entirely from the cache.
+//! * `ga.islands.speedup` — evaluation throughput of the island-model GA
+//!   (4 sub-populations on the worker pool) over the single-population
+//!   search on the same budget.
+
+#[path = "support.rs"]
+mod support;
+
+use mixoff::app::workloads;
+use mixoff::coordinator::BatchOffloader;
+use mixoff::devices::{DeviceModel, EvalCache, PlanCache, Testbed};
+use mixoff::ga::GaConfig;
+use mixoff::offload::manycore_loop;
+use mixoff::util::bits::PatternBits;
+use mixoff::util::rng::Rng;
+use support::metric;
+
+fn main() {
+    let tb = Testbed::default();
+    let bt = workloads::by_name("nas_bt").unwrap();
+    let n = bt.loop_count();
+
+    // Parents at GA seeding density (0.25) and their ≤4-bit offspring
+    // deltas — the shape `ga::engine` hands the delta evaluator every
+    // mutation/crossover offspring.
+    let mut rng = Rng::new(7);
+    let parents: Vec<PatternBits> = (0..512)
+        .map(|_| {
+            let mut b = PatternBits::zeros(n);
+            for i in 0..n {
+                if rng.chance(0.25) {
+                    b.set(i, true);
+                }
+            }
+            b
+        })
+        .collect();
+    let flips: Vec<PatternBits> = parents
+        .iter()
+        .map(|_| {
+            let mut f = PatternBits::zeros(n);
+            for _ in 0..(1 + rng.below(4)) {
+                f.set(rng.below(n), true);
+            }
+            f
+        })
+        .collect();
+
+    for (name, dev) in [
+        ("cpu", &tb.cpu as &dyn DeviceModel),
+        ("manycore", &tb.manycore as &dyn DeviceModel),
+        ("gpu", &tb.gpu as &dyn DeviceModel),
+        ("fpga", &tb.fpga as &dyn DeviceModel),
+    ] {
+        let plan = dev.compile_plan(&bt);
+        let states: Vec<_> = parents.iter().map(|p| plan.measure_with_state(p)).collect();
+        let children: Vec<PatternBits> =
+            parents.iter().zip(&flips).map(|(p, f)| p.xor(f)).collect();
+        let reps = 50usize;
+
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            for c in &children {
+                std::hint::black_box(plan.measure(c));
+            }
+        }
+        let full_tput = (reps * children.len()) as f64 / t0.elapsed().as_secs_f64();
+
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            for ((p, (m, st)), f) in parents.iter().zip(&states).zip(&flips) {
+                std::hint::black_box(plan.measure_delta(p, m, st, f));
+            }
+        }
+        let delta_tput = (reps * children.len()) as f64 / t0.elapsed().as_secs_f64();
+
+        metric(&format!("measure.{name}.full.throughput"), full_tput, "patterns/s", None);
+        metric(&format!("measure.{name}.delta.throughput"), delta_tput, "patterns/s", None);
+        metric(&format!("measure.{name}.delta_speedup"), delta_tput / full_tput, "x", None);
+    }
+
+    // Cross-search eval cache: a second identical batch replays the same
+    // seeded GA trajectories, so the shared cache answers every lookup.
+    let apps: Vec<_> =
+        ["vecadd", "jacobi2d"].iter().map(|w| workloads::by_name(w).unwrap()).collect();
+    let batcher = BatchOffloader::default();
+    let plans = PlanCache::new();
+    let evals = EvalCache::new();
+    let cold = batcher.run_with_caches(&apps, &plans, &evals);
+    let warm = batcher.run_with_caches(&apps, &plans, &evals);
+    metric("ga.cache.cold.misses", cold.eval_misses as f64, "lookups", None);
+    metric("ga.cache.hits", evals.hits() as f64, "lookups", None);
+    metric("ga.cache.misses", evals.misses() as f64, "lookups", None);
+    metric("ga.cache.hit_rate", evals.hit_rate(), "fraction", None);
+    metric("ga.cache.warm.hit_rate", warm.eval_hit_rate(), "fraction", None);
+
+    // Island-parallel GA: 4 sub-populations fan out on the worker pool.
+    // Islands explore more genomes per generation, so the honest number
+    // is evaluation *throughput* (measurements per wall-clock second),
+    // not wall time for a (different-sized) search.
+    let single = GaConfig { population: 20, generations: 20, seed: 5, ..Default::default() };
+    let islands = GaConfig { islands: 4, ..single };
+    let time = |cfg: GaConfig| {
+        let t0 = std::time::Instant::now();
+        let mut evs = 0usize;
+        for _ in 0..3 {
+            evs += manycore_loop::search(&bt, &tb.manycore, cfg).evaluations;
+        }
+        evs as f64 / t0.elapsed().as_secs_f64()
+    };
+    let single_tput = time(single);
+    let island_tput = time(islands);
+    metric("ga.single.throughput", single_tput, "evals/s", None);
+    metric("ga.islands.throughput", island_tput, "evals/s", None);
+    metric("ga.islands.speedup", island_tput / single_tput, "x", None);
+
+    support::finish("delta");
+}

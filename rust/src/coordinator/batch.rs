@@ -27,7 +27,7 @@
 use std::time::Instant;
 
 use crate::app::ir::Application;
-use crate::devices::PlanCache;
+use crate::devices::{EvalCache, PlanCache};
 use crate::util::threadpool::WorkerPool;
 
 use super::{MixedOffloader, OffloadOutcome, TrialConcurrency};
@@ -76,6 +76,14 @@ pub struct BatchOutcome {
     pub plan_compiles: usize,
     /// Plan lookups answered from the shared cache.
     pub plan_hits: usize,
+    /// Pattern measurements answered from the shared cross-search
+    /// [`EvalCache`] (repeated applications re-walk identical GA
+    /// trajectories, so their measurements are already filed).  Wall-clock
+    /// telemetry only: the exact hit/miss split under concurrency depends
+    /// on timing, the outcomes never do.
+    pub eval_hits: usize,
+    /// Pattern measurements the shared [`EvalCache`] could not answer.
+    pub eval_misses: usize,
     /// Trial-level execution mode each run used (reporting only).
     pub trial_concurrency: TrialConcurrency,
 }
@@ -88,6 +96,17 @@ impl BatchOutcome {
             0.0
         } else {
             self.plan_hits as f64 / total
+        }
+    }
+
+    /// Fraction of measurement lookups answered from the shared
+    /// [`EvalCache`] (0.0 when nothing was looked up).
+    pub fn eval_hit_rate(&self) -> f64 {
+        let total = (self.eval_hits + self.eval_misses) as f64;
+        if total == 0.0 {
+            0.0
+        } else {
+            self.eval_hits as f64 / total
         }
     }
 
@@ -110,16 +129,33 @@ impl BatchOffloader {
     /// Offload every application, up to `batch_workers` concurrently, on
     /// the persistent process-wide worker pool.
     pub fn run(&self, apps: &[Application]) -> BatchOutcome {
-        let cache = PlanCache::new();
+        self.run_with_caches(apps, &PlanCache::new(), &EvalCache::new())
+    }
+
+    /// [`Self::run`] through caller-owned caches, so successive batches —
+    /// or a whole environment sweep (coordinator/spec.rs) — keep reusing
+    /// compiled plans and filed measurements.  The returned cache metrics
+    /// are deltas over this call, so a fresh-cache `run` reads the same
+    /// either way.
+    pub fn run_with_caches(
+        &self,
+        apps: &[Application],
+        plans: &PlanCache,
+        evals: &EvalCache,
+    ) -> BatchOutcome {
+        let (pc0, ph0) = (plans.compiles(), plans.hits());
+        let (eh0, em0) = (evals.hits(), evals.misses());
         let t0 = Instant::now();
         let outcomes = WorkerPool::global().map(apps.iter().collect(), self.batch_workers, |app| {
-            self.offloader.run_with_cache(app, &cache)
+            self.offloader.run_with_caches(app, plans, evals)
         });
         BatchOutcome {
             outcomes,
             wall_seconds: t0.elapsed().as_secs_f64(),
-            plan_compiles: cache.compiles(),
-            plan_hits: cache.hits(),
+            plan_compiles: plans.compiles() - pc0,
+            plan_hits: plans.hits() - ph0,
+            eval_hits: evals.hits() - eh0,
+            eval_misses: evals.misses() - em0,
             trial_concurrency: self.offloader.concurrency,
         }
     }
@@ -205,6 +241,33 @@ mod tests {
         assert!(batch.outcomes.is_empty());
         assert_eq!(batch.plan_compiles, 0);
         assert_eq!(batch.plan_hit_rate(), 0.0);
+        assert_eq!(batch.eval_hit_rate(), 0.0, "zero lookups must not divide by zero");
         assert_eq!(batch.throughput(), 0.0);
+    }
+
+    /// A second batch through the same caches replays identical GA
+    /// trajectories, so every measurement is answered from the shared
+    /// eval cache — and the outcomes stay bit-identical to the cold run.
+    #[test]
+    fn shared_eval_cache_answers_repeat_batches() {
+        let apps = apps(&["vecadd"]);
+        let b = BatchOffloader::default();
+        let plans = PlanCache::new();
+        let evals = EvalCache::new();
+        let first = b.run_with_caches(&apps, &plans, &evals);
+        let second = b.run_with_caches(&apps, &plans, &evals);
+        assert!(first.eval_misses > 0, "cold caches must miss");
+        assert_eq!(second.eval_misses, 0, "warm caches must answer everything");
+        assert!(second.eval_hits > 0);
+        assert_eq!(second.eval_hit_rate(), 1.0);
+        assert_eq!(second.plan_compiles, 0, "metrics are per-batch deltas");
+        assert_eq!(
+            first.outcomes[0].chosen.as_ref().map(|c| (c.kind, c.seconds.to_bits())),
+            second.outcomes[0].chosen.as_ref().map(|c| (c.kind, c.seconds.to_bits()))
+        );
+        for (a, s) in first.outcomes[0].trials.iter().zip(&second.outcomes[0].trials) {
+            assert_eq!(a.seconds.to_bits(), s.seconds.to_bits());
+            assert_eq!(a.cost_s.to_bits(), s.cost_s.to_bits(), "hits still charge full cost");
+        }
     }
 }

@@ -34,7 +34,7 @@ use std::borrow::Cow;
 use std::collections::BTreeMap;
 
 use crate::app::ir::{Application, LoopId};
-use crate::devices::{pricing, PlanCache, SimClock, Testbed};
+use crate::devices::{pricing, EvalCache, PlanCache, SimClock, Testbed};
 use crate::offload::fpga_loop::FpgaSearchConfig;
 use crate::offload::function_block::{BlockDb, FbOffloadOutcome};
 use crate::offload::pattern::OffloadPattern;
@@ -108,6 +108,9 @@ pub struct MixedOffloader {
     pub fpga_cfg: FpgaSearchConfig,
     /// Concurrent measurements per GA generation (wall clock only).
     pub workers: usize,
+    /// Island-model sub-populations per GA search (1 = the paper's
+    /// single-population GA; see `GaConfig::islands`).
+    pub ga_islands: usize,
     /// Trial order (paper order by default; see [`Schedule`]).
     pub schedule: Schedule,
     /// (device × method) → strategy bindings; register new pairs here.
@@ -126,6 +129,7 @@ impl Default for MixedOffloader {
             ga_seed: 0xC0FFEE,
             fpga_cfg: FpgaSearchConfig::default(),
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            ga_islands: 1,
             schedule: Schedule::paper(),
             registry: StrategyRegistry::standard(),
             concurrency: TrialConcurrency::Sequential,
@@ -171,7 +175,7 @@ impl<'a> ExecState<'a> {
 
 impl MixedOffloader {
     /// Run the full mixed-destination flow on `app` (the configured
-    /// schedule, a private plan cache).
+    /// schedule, private caches).
     pub fn run(&self, app: &Application) -> OffloadOutcome {
         self.run_with_cache(app, &PlanCache::new())
     }
@@ -179,14 +183,28 @@ impl MixedOffloader {
     /// Run the flow with an explicit schedule (ordering experiments,
     /// custom deployments).
     pub fn run_scheduled(&self, app: &Application, schedule: &Schedule) -> OffloadOutcome {
-        self.execute(app, schedule, &PlanCache::new())
+        self.execute(app, schedule, &PlanCache::new(), &EvalCache::new())
     }
 
-    /// Run the configured schedule measuring through a shared plan cache —
-    /// the batch service entry point (each (app, device) pair compiles
-    /// once across all concurrent runs sharing `plans`).
+    /// Run the configured schedule measuring through a shared plan cache
+    /// (each (app, device) pair compiles once across all runs sharing
+    /// `plans`); the cross-search measurement cache stays private.
     pub fn run_with_cache(&self, app: &Application, plans: &PlanCache) -> OffloadOutcome {
-        self.execute(app, &self.schedule, plans)
+        self.run_with_caches(app, plans, &EvalCache::new())
+    }
+
+    /// Run the configured schedule sharing both caches — the batch/sweep
+    /// entry point: plans compile once per (app, device) pair, and
+    /// genomes any run already measured under the same scope are answered
+    /// from `evals`.  Both are wall-clock-only: outcomes stay bit-identical
+    /// to private-cache runs.
+    pub fn run_with_caches(
+        &self,
+        app: &Application,
+        plans: &PlanCache,
+        evals: &EvalCache,
+    ) -> OffloadOutcome {
+        self.execute(app, &self.schedule, plans, evals)
     }
 
     /// The generic schedule executor.  Sequential mode walks the steps one
@@ -198,6 +216,7 @@ impl MixedOffloader {
         app: &Application,
         schedule: &Schedule,
         plans: &PlanCache,
+        evals: &EvalCache,
     ) -> OffloadOutcome {
         let mut st = ExecState::new(app, self.testbed.baseline_seconds(app));
         match self.concurrency {
@@ -206,12 +225,12 @@ impl MixedOffloader {
                     match step {
                         ScheduleStep::SubtractBlocks => self.apply_subtract(app, &mut st),
                         ScheduleStep::Trial(kind) => {
-                            self.commit_trial(app, &mut st, kind, plans, None)
+                            self.commit_trial(app, &mut st, kind, plans, evals, None)
                         }
                     }
                 }
             }
-            TrialConcurrency::Staged => self.execute_staged(app, schedule, plans, &mut st),
+            TrialConcurrency::Staged => self.execute_staged(app, schedule, plans, evals, &mut st),
         }
         let chosen = self.select(&st.trials);
         OffloadOutcome {
@@ -242,6 +261,7 @@ impl MixedOffloader {
         app: &'a Application,
         schedule: &Schedule,
         plans: &PlanCache,
+        evals: &EvalCache,
         st: &mut ExecState<'a>,
     ) {
         for stage in schedule.stages() {
@@ -251,7 +271,7 @@ impl MixedOffloader {
             let n = stage.trials.len();
             let mut spec: Vec<Option<TrialOutcome>> = {
                 let cur: &Application = &st.cur_app;
-                let ctx = self.trial_ctx(st, plans);
+                let ctx = self.trial_ctx(st, plans, evals);
                 let mut jobs: Vec<(usize, TrialKind, &dyn OffloadStrategy)> = Vec::new();
                 for (i, kind) in stage.trials.iter().enumerate() {
                     // `pre_skip` against stage-start state is safe to
@@ -281,7 +301,7 @@ impl MixedOffloader {
                 spec
             };
             for (i, kind) in stage.trials.iter().enumerate() {
-                self.commit_trial(app, st, kind, plans, spec[i].take());
+                self.commit_trial(app, st, kind, plans, evals, spec[i].take());
             }
         }
     }
@@ -290,15 +310,22 @@ impl MixedOffloader {
     /// the executor state.  Speculation and in-place commit execution
     /// build their contexts through this one constructor, so a trial sees
     /// the identical ctx whichever path ran it.
-    fn trial_ctx<'s>(&'s self, st: &'s ExecState<'_>, plans: &'s PlanCache) -> TrialCtx<'s> {
+    fn trial_ctx<'s>(
+        &'s self,
+        st: &'s ExecState<'_>,
+        plans: &'s PlanCache,
+        evals: &'s EvalCache,
+    ) -> TrialCtx<'s> {
         TrialCtx {
             testbed: &self.testbed,
             db: &self.db,
             ga_seed: self.ga_seed,
             ga_workers: self.workers,
+            ga_islands: self.ga_islands,
             fpga_cfg: self.fpga_cfg,
             fb_note: &st.fb_note,
             plans,
+            evals,
         }
     }
 
@@ -337,6 +364,7 @@ impl MixedOffloader {
         st: &mut ExecState<'_>,
         kind: &TrialKind,
         plans: &PlanCache,
+        evals: &EvalCache,
         speculated: Option<TrialOutcome>,
     ) {
         if let Some(reason) = self.pre_skip(kind, &st.best_so_far) {
@@ -356,7 +384,7 @@ impl MixedOffloader {
         let out = match speculated {
             Some(out) => out,
             None => {
-                let ctx = self.trial_ctx(st, plans);
+                let ctx = self.trial_ctx(st, plans, evals);
                 strategy.execute(&st.cur_app, kind.device, &ctx)
             }
         };

@@ -19,6 +19,7 @@ use crate::app::ir::{Access, Application, LoopId};
 use crate::offload::pattern::OffloadPattern;
 
 use super::cpu::CpuSingle;
+use super::plan::{combine_chunks, CHUNK_SHIFT, NCHUNKS};
 use super::{DeviceKind, DeviceModel, Measurement};
 
 #[derive(Clone, Copy, Debug)]
@@ -86,6 +87,11 @@ impl Gpu {
     /// crosses once per invocation of r, unless r runs once, or the
     /// transfer-reduction pass proves a stays device-resident (no loop
     /// outside any offloaded region touches it).
+    ///
+    /// Bytes accumulate per root in ascending id order into the fixed
+    /// chunk decomposition shared with devices/plan.rs (`CHUNK_BITS`),
+    /// so the plan's sparse and delta paths reproduce this sum
+    /// bit-for-bit.
     pub fn transfer_seconds(&self, app: &Application, pattern: &OffloadPattern) -> f64 {
         let roots = pattern.region_roots(app);
         if roots.is_empty() {
@@ -105,7 +111,7 @@ impl Gpu {
                 }
             }
         }
-        let mut total_bytes = 0.0;
+        let mut bytes = [0.0; NCHUNKS];
         for &root in &roots {
             let inv = app.get(root).invocations as f64;
             let mut touched: u64 = 0;
@@ -123,25 +129,32 @@ impl Gpu {
                 let count = if hoistable { 1.0 } else { inv };
                 // In + out (we do not track read-only vs written per array
                 // finely enough to skip one direction reliably).
-                total_bytes += 2.0 * info.bytes * count;
+                bytes[root.0 >> CHUNK_SHIFT] += 2.0 * info.bytes * count;
             }
         }
-        total_bytes / self.bw_pcie
+        combine_chunks(&bytes) / self.bw_pcie
     }
 
+    /// App run time under `pattern`: PCIe transfers, then kernel + launch
+    /// per region root, then host residue — each class accumulated in
+    /// ascending id order into the fixed chunk decomposition and combined
+    /// by the fixed chunk fold (see devices/plan.rs), the executable
+    /// specification the sparse and delta kernels reproduce bit-for-bit.
     pub fn app_seconds(&self, app: &Application, pattern: &OffloadPattern) -> f64 {
         let roots = pattern.region_roots(app);
-        let mut t = self.transfer_seconds(app, pattern);
+        let mut kl = [0.0; NCHUNKS];
+        let mut host = [0.0; NCHUNKS];
         for &root in &roots {
-            t += self.kernel_seconds(app, root);
-            t += app.get(root).invocations as f64 * self.launch_s;
+            let c = root.0 >> CHUNK_SHIFT;
+            kl[c] += self.kernel_seconds(app, root);
+            kl[c] += app.get(root).invocations as f64 * self.launch_s;
         }
         for l in &app.loops {
             if !pattern.in_region(app, l.id) {
-                t += l.total_iters() * self.host.body_time_per_iter(l);
+                host[l.id.0 >> CHUNK_SHIFT] += l.total_iters() * self.host.body_time_per_iter(l);
             }
         }
-        t
+        self.transfer_seconds(app, pattern) + combine_chunks(&kl) + combine_chunks(&host)
     }
 }
 

@@ -16,6 +16,7 @@ use crate::app::ir::{Access, Application};
 use crate::offload::pattern::OffloadPattern;
 
 use super::cpu::CpuSingle;
+use super::plan::{combine_chunks, CHUNK_SHIFT, NCHUNKS};
 use super::{DeviceKind, DeviceModel, Measurement};
 
 #[derive(Clone, Copy, Debug)]
@@ -76,27 +77,30 @@ impl ManyCore {
     ///
     /// The accumulation order is part of the executable specification the
     /// sparse measurement plan reproduces bit-for-bit (devices/plan.rs):
-    /// covered-loop parallel seconds in ascending id order, then host
-    /// residue in ascending id order, then fork/join overhead per region
-    /// root in ascending id order — three separate class-pure sums, so
-    /// the plan can walk set bits of the coverage bitset / its complement
-    /// without changing any floating-point result.
+    /// three class-pure sums — covered-loop parallel seconds, host
+    /// residue, fork/join overhead per region root — each accumulated in
+    /// ascending id order into fixed per-chunk partials and combined by
+    /// the fixed chunk fold (see `plan::CHUNK_BITS`).  The chunk
+    /// decomposition is what lets the delta path re-sum only the chunks a
+    /// bit flip dirties without changing any floating-point result.
     pub fn app_seconds(&self, app: &Application, pattern: &OffloadPattern) -> f64 {
-        let mut t = 0.0;
+        let mut par = [0.0; NCHUNKS];
+        let mut host = [0.0; NCHUNKS];
+        let mut omp = [0.0; NCHUNKS];
         for l in &app.loops {
             if pattern.in_region(app, l.id) {
-                t += self.par_body_secs(l);
+                par[l.id.0 >> CHUNK_SHIFT] += self.par_body_secs(l);
             }
         }
         for l in &app.loops {
             if !pattern.in_region(app, l.id) {
-                t += l.total_iters() * self.single.body_time_per_iter(l);
+                host[l.id.0 >> CHUNK_SHIFT] += l.total_iters() * self.single.body_time_per_iter(l);
             }
         }
         for root in pattern.region_roots(app) {
-            t += app.get(root).invocations as f64 * self.omp_overhead_s;
+            omp[root.0 >> CHUNK_SHIFT] += app.get(root).invocations as f64 * self.omp_overhead_s;
         }
-        t
+        combine_chunks(&par) + combine_chunks(&host) + combine_chunks(&omp)
     }
 }
 

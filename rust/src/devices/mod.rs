@@ -26,7 +26,7 @@ pub use cpu::CpuSingle;
 pub use fpga::Fpga;
 pub use gpu::Gpu;
 pub use manycore::ManyCore;
-pub use plan::{MeasurementPlan, PlanCache};
+pub use plan::{EvalCache, EvalScope, MeasureState, MeasurementPlan, PlanCache};
 pub use spec::{DeviceSpec, EnvSpec};
 
 /// The three offload destinations plus the single-core baseline.

@@ -34,7 +34,7 @@
 //! `tests/properties.rs` asserts bit-for-bit equality between all three
 //! paths on random apps and patterns for all four device models.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -88,10 +88,80 @@ enum DevicePlan {
     },
 }
 
+/// Chunk decomposition of the class-pure sums.  Every floating-point
+/// class total is the sequential ascending fold of [`NCHUNKS`] per-chunk
+/// partials, where chunk `c` covers loop ids `[c * CHUNK_BITS, (c + 1) *
+/// CHUNK_BITS)`.  All four measurement paths — the direct device models,
+/// [`MeasurementPlan::measure_dense`], the sparse kernel, and
+/// [`MeasurementPlan::measure_delta`] — accumulate in this exact order,
+/// so they stay bit-identical while the delta path recomputes only the
+/// chunks an edit dirties and reuses the parent's partials for the rest
+/// (loop ids are assigned in preorder, so a nest's subtree is a
+/// contiguous id range and a mutation-level edit dirties few chunks).
+pub(crate) const CHUNK_SHIFT: u32 = 4;
+pub(crate) const CHUNK_BITS: usize = 1 << CHUNK_SHIFT;
+pub(crate) const NCHUNKS: usize = crate::util::bits::MAX_BITS / CHUNK_BITS;
+
+/// Sequential ascending fold of the chunk partials — the fixed combine
+/// step shared by every measurement path.  Empty chunks hold +0.0, which
+/// adds exactly (all partials here are non-negative), so folding all
+/// [`NCHUNKS`] slots is bit-identical to folding only the occupied ones.
+#[inline]
+pub(crate) fn combine_chunks(parts: &[f64; NCHUNKS]) -> f64 {
+    let mut t = 0.0;
+    for &p in parts {
+        t += p;
+    }
+    t
+}
+
+/// Reusable intermediates of one measurement: the root/coverage bitsets
+/// plus the per-chunk partial sums of every device class.  A GA offspring
+/// differs from its parent by a few flipped bits; handing the parent's
+/// state to [`MeasurementPlan::measure_delta`] lets it reuse every
+/// partial outside the flip's affected region.
+#[derive(Clone)]
+pub struct MeasureState {
+    roots: PatternBits,
+    cov: PatternBits,
+    detail: StateDetail,
+}
+
+#[derive(Clone)]
+enum StateDetail {
+    /// CPU baseline and FPGA carry no partials: the CPU measurement is a
+    /// constant, and FPGA level fitting is global in the root set, so a
+    /// non-free delta re-measures from scratch (free flips still reuse
+    /// the parent measurement verbatim).
+    Simple,
+    ManyCore {
+        par: [f64; NCHUNKS],
+        host: [f64; NCHUNKS],
+        omp: [f64; NCHUNKS],
+    },
+    Gpu {
+        /// Per-chunk OR of `self_amask` over uncovered loops; their OR is
+        /// the global `cpu_touched` mask (order-independent).
+        touched: [u64; NCHUNKS],
+        cpu_touched: u64,
+        bytes: [f64; NCHUNKS],
+        /// Kernel + launch seconds per chunk (kernel then launch, per
+        /// root, in ascending root order — the direct spec's order).
+        kl: [f64; NCHUNKS],
+        host: [f64; NCHUNKS],
+    },
+}
+
 /// An `(Application, DeviceModel)` pair compiled for fast measurement.
 pub struct MeasurementPlan {
     kind: DeviceKind,
     n: usize,
+    /// Fingerprint of the application the plan was compiled over — with
+    /// `kind` and `config_fp`, the scope key the cross-search
+    /// [`EvalCache`] files measurements under.
+    app_fp: u64,
+    /// `DeviceModel::config_fingerprint` of the compiled device.
+    config_fp: u64,
     /// Constant preparation cost this device charges per measurement.
     setup_seconds: f64,
     /// Parent loop index, `NO_PARENT` at top level.  The builder assigns
@@ -215,12 +285,19 @@ fn tables(app: &Application, host: &CpuSingle) -> Tables {
     }
 }
 
+/// (app fingerprint, device config fingerprint) — the plan-independent
+/// halves of the [`EvalCache`] scope key.
+fn scope_fps(app: &Application, device: &dyn DeviceModel) -> (u64, u64) {
+    (app.fingerprint(), device.config_fingerprint())
+}
+
 impl MeasurementPlan {
     pub fn for_cpu(cpu: &CpuSingle, app: &Application) -> Self {
         let t = tables(app, cpu);
         Self::assemble(
             DeviceKind::CpuSingle,
             cpu.compile_s,
+            scope_fps(app, cpu),
             t,
             DevicePlan::Cpu { total_secs: cpu.app_seconds(app) },
         )
@@ -237,6 +314,7 @@ impl MeasurementPlan {
         Self::assemble(
             DeviceKind::ManyCore,
             mc.compile_s,
+            scope_fps(app, mc),
             t,
             DevicePlan::ManyCore { par_secs, omp_secs },
         )
@@ -253,6 +331,7 @@ impl MeasurementPlan {
         Self::assemble(
             DeviceKind::Gpu,
             gpu.compile_s,
+            scope_fps(app, gpu),
             t,
             DevicePlan::Gpu {
                 kernel_nest,
@@ -280,15 +359,24 @@ impl MeasurementPlan {
         Self::assemble(
             DeviceKind::Fpga,
             fpga.synthesis_s,
+            scope_fps(app, fpga),
             t,
             DevicePlan::Fpga { levels, budget: fpga.budget, bw_pcie: fpga.bw_pcie },
         )
     }
 
-    fn assemble(kind: DeviceKind, setup_seconds: f64, t: Tables, device: DevicePlan) -> Self {
+    fn assemble(
+        kind: DeviceKind,
+        setup_seconds: f64,
+        (app_fp, config_fp): (u64, u64),
+        t: Tables,
+        device: DevicePlan,
+    ) -> Self {
         Self {
             kind,
             n: t.n,
+            app_fp,
+            config_fp,
             setup_seconds,
             parent: t.parent,
             inv: t.inv,
@@ -310,6 +398,14 @@ impl MeasurementPlan {
     /// Number of loops the plan was compiled over.
     pub fn loop_count(&self) -> usize {
         self.n
+    }
+
+    /// The cross-search cache scope of this plan: (application
+    /// fingerprint, device kind, device config fingerprint).  Genomes
+    /// filed under the same scope are guaranteed to mean the same
+    /// pattern on the same simulated device.
+    pub fn eval_scope(&self) -> EvalScope {
+        (self.app_fp, self.kind, self.config_fp)
     }
 
     /// The sparse region kernel: effective roots and region coverage in
@@ -379,39 +475,58 @@ impl MeasurementPlan {
     /// Simulated run time + validity of the pattern — table lookups and
     /// bit arithmetic only, no heap allocation.  Sparse and word-parallel:
     /// all sums iterate set bits of the coverage bitset / its complement /
-    /// the root bitset in ascending order, which visits the same indices
-    /// in the same order as the direct IR walk, so the result is
-    /// bit-identical to the direct `DeviceModel::measure` path (and to
-    /// [`Self::measure_dense`]).
+    /// the root bitset in ascending order, accumulating into the fixed
+    /// chunk decomposition (see [`CHUNK_BITS`]), so the result is
+    /// bit-identical to the direct `DeviceModel::measure` path, to
+    /// [`Self::measure_dense`], and to [`Self::measure_delta`].
     pub fn measure(&self, bits: &PatternBits) -> Measurement {
+        self.measure_with_state(bits).0
+    }
+
+    /// [`Self::measure`] plus the reusable [`MeasureState`] the delta
+    /// path needs: the root/coverage bitsets and the per-chunk partial
+    /// sums of every device class.
+    pub fn measure_with_state(&self, bits: &PatternBits) -> (Measurement, MeasureState) {
         // Hard assert: a pattern for the wrong app (e.g. the original app
         // vs the function-block-subtracted one) would otherwise yield a
         // plausible-but-wrong Measurement in release builds.
         assert_eq!(bits.len(), self.n, "pattern length != plan loop count");
         match &self.device {
-            DevicePlan::Cpu { total_secs } => Measurement {
-                seconds: *total_secs,
-                valid: true,
-                setup_seconds: self.setup_seconds,
-            },
+            DevicePlan::Cpu { total_secs } => (
+                Measurement {
+                    seconds: *total_secs,
+                    valid: true,
+                    setup_seconds: self.setup_seconds,
+                },
+                MeasureState {
+                    roots: PatternBits::zeros(self.n),
+                    cov: PatternBits::zeros(self.n),
+                    detail: StateDetail::Simple,
+                },
+            ),
             DevicePlan::ManyCore { par_secs, omp_secs } => {
                 let (roots, cov) = self.roots_cov(bits);
-                let ncov = cov.complement();
-                let mut t = 0.0;
+                let mut par = [0.0; NCHUNKS];
+                let mut host = [0.0; NCHUNKS];
+                let mut omp = [0.0; NCHUNKS];
                 for i in cov.ones() {
-                    t += par_secs[i];
+                    par[i >> CHUNK_SHIFT] += par_secs[i];
                 }
-                for i in ncov.ones() {
-                    t += self.host_secs[i];
+                for i in cov.complement().ones() {
+                    host[i >> CHUNK_SHIFT] += self.host_secs[i];
                 }
                 for i in roots.ones() {
-                    t += omp_secs[i];
+                    omp[i >> CHUNK_SHIFT] += omp_secs[i];
                 }
-                Measurement {
-                    seconds: t,
-                    valid: bits.is_subset_of(&self.dep_free),
-                    setup_seconds: self.setup_seconds,
-                }
+                let t = combine_chunks(&par) + combine_chunks(&host) + combine_chunks(&omp);
+                (
+                    Measurement {
+                        seconds: t,
+                        valid: bits.is_subset_of(&self.dep_free),
+                        setup_seconds: self.setup_seconds,
+                    },
+                    MeasureState { roots, cov, detail: StateDetail::ManyCore { par, host, omp } },
+                )
             }
             DevicePlan::Gpu { kernel_nest, launch_nest, hoist, bw_pcie } => {
                 let (roots, cov) = self.roots_cov(bits);
@@ -419,34 +534,47 @@ impl MeasurementPlan {
                 // PCIe transfers: per region root, each array touched in
                 // the nest crosses once per invocation unless the
                 // transfer-reduction pass keeps it device-resident.
-                let mut cpu_touched = 0u64;
+                let mut touched = [0u64; NCHUNKS];
                 for i in ncov.ones() {
-                    cpu_touched |= self.self_amask[i];
+                    touched[i >> CHUNK_SHIFT] |= self.self_amask[i];
                 }
-                let mut total_bytes = 0.0;
+                let mut cpu_touched = 0u64;
+                for m in touched {
+                    cpu_touched |= m;
+                }
+                let mut bytes = [0.0; NCHUNKS];
+                let mut kl = [0.0; NCHUNKS];
+                let mut host = [0.0; NCHUNKS];
                 for i in roots.ones() {
+                    let c = i >> CHUNK_SHIFT;
                     let mut rest = self.nest_amask[i];
                     while rest != 0 {
                         let a = rest.trailing_zeros() as usize;
                         rest &= rest - 1;
                         let hoistable = *hoist && cpu_touched & (1u64 << a) == 0;
                         let count = if hoistable { 1.0 } else { self.inv[i] };
-                        total_bytes += 2.0 * self.array_bytes[a] * count;
+                        bytes[c] += 2.0 * self.array_bytes[a] * count;
                     }
-                }
-                let mut t = total_bytes / bw_pcie;
-                for i in roots.ones() {
-                    t += kernel_nest[i];
-                    t += launch_nest[i];
+                    kl[c] += kernel_nest[i];
+                    kl[c] += launch_nest[i];
                 }
                 for i in ncov.ones() {
-                    t += self.host_secs[i];
+                    host[i >> CHUNK_SHIFT] += self.host_secs[i];
                 }
-                Measurement {
-                    seconds: t,
-                    valid: bits.is_subset_of(&self.dep_free),
-                    setup_seconds: self.setup_seconds,
-                }
+                let t =
+                    combine_chunks(&bytes) / bw_pcie + combine_chunks(&kl) + combine_chunks(&host);
+                (
+                    Measurement {
+                        seconds: t,
+                        valid: bits.is_subset_of(&self.dep_free),
+                        setup_seconds: self.setup_seconds,
+                    },
+                    MeasureState {
+                        roots,
+                        cov,
+                        detail: StateDetail::Gpu { touched, cpu_touched, bytes, kl, host },
+                    },
+                )
             }
             DevicePlan::Fpga { levels, budget, bw_pcie } => {
                 let (roots, cov) = self.roots_cov(bits);
@@ -463,14 +591,18 @@ impl MeasurementPlan {
                         break;
                     }
                 }
+                let state = MeasureState { roots, cov, detail: StateDetail::Simple };
                 let Some(lv) = fit else {
                     // Does not fit even at unroll 1: synthesis fails after
                     // burning its hours (same as the direct path).
-                    return Measurement {
-                        seconds: f64::INFINITY,
-                        valid: false,
-                        setup_seconds: self.setup_seconds,
-                    };
+                    return (
+                        Measurement {
+                            seconds: f64::INFINITY,
+                            valid: false,
+                            setup_seconds: self.setup_seconds,
+                        },
+                        state,
+                    );
                 };
                 let mut bytes = 0.0;
                 for i in roots.ones() {
@@ -488,8 +620,213 @@ impl MeasurementPlan {
                 for i in cov.complement().ones() {
                     t += self.host_secs[i];
                 }
-                Measurement { seconds: t, valid: true, setup_seconds: self.setup_seconds }
+                (
+                    Measurement { seconds: t, valid: true, setup_seconds: self.setup_seconds },
+                    state,
+                )
             }
+        }
+    }
+
+    /// Incremental measurement of `parent_bits ^ flips`, reusing the
+    /// parent's [`MeasureState`].  Bit-identical to running the full
+    /// sparse path on the child (property-tested in
+    /// `tests/properties.rs`), because:
+    ///
+    /// * a flip whose loop has a *selected ancestor on both sides* is
+    ///   "free" — it is not a root on either side and its subtree stays
+    ///   covered through that ancestor, so roots and coverage (and hence
+    ///   every class total, a pure function of them) are unchanged;
+    /// * otherwise the flip can only perturb roots/coverage inside its
+    ///   own subtree (any loop outside every mattering flip's subtree
+    ///   keeps its coverage and root status — see DESIGN.md), so the
+    ///   affected region is the union of the mattering flips' subtree
+    ///   masks and only chunk partials overlapping it are recomputed,
+    ///   with the fixed combine fold re-run over all chunks.
+    ///
+    /// Falls back to the full sparse path when locality is lost: FPGA
+    /// level fitting is global in the root set, and an affected region
+    /// past half the app re-sums more than it reuses.
+    pub fn measure_delta(
+        &self,
+        parent_bits: &PatternBits,
+        parent_measurement: &Measurement,
+        parent_state: &MeasureState,
+        flips: &PatternBits,
+    ) -> (Measurement, MeasureState) {
+        assert_eq!(parent_bits.len(), self.n, "pattern length != plan loop count");
+        assert_eq!(flips.len(), self.n, "flip set length != plan loop count");
+        let child = parent_bits.xor(flips);
+        if flips.none_set() {
+            return (*parent_measurement, parent_state.clone());
+        }
+        // Classify the flips: collect the dirty subtrees of the ones
+        // that can matter.
+        let mut affected = PatternBits::zeros(self.n);
+        for f in flips.ones() {
+            let free = parent_bits.intersects(&self.ancestors[f])
+                && child.intersects(&self.ancestors[f]);
+            if !free {
+                affected.union_with(&self.subtree[f]);
+            }
+        }
+        if affected.none_set() {
+            // Every flip is free: the parent's seconds carries over
+            // verbatim; only validity reads the raw bits.
+            let valid = match &self.device {
+                DevicePlan::Cpu { .. } => true,
+                DevicePlan::ManyCore { .. } | DevicePlan::Gpu { .. } => {
+                    child.is_subset_of(&self.dep_free)
+                }
+                // Feasibility is a function of the (unchanged) root set.
+                DevicePlan::Fpga { .. } => parent_measurement.valid,
+            };
+            return (
+                Measurement {
+                    seconds: parent_measurement.seconds,
+                    valid,
+                    setup_seconds: self.setup_seconds,
+                },
+                parent_state.clone(),
+            );
+        }
+        let simple = matches!(
+            self.device,
+            DevicePlan::Cpu { .. } | DevicePlan::Fpga { .. }
+        );
+        if simple || affected.count_ones() * 2 > self.n {
+            return self.measure_with_state(&child);
+        }
+        // Incremental roots/coverage: everything outside the affected
+        // region survives; inside it, redo the sparse root scan against
+        // the child bits.
+        let keep = affected.complement();
+        let mut roots = parent_state.roots.intersection(&keep);
+        let mut cov = parent_state.cov.intersection(&keep);
+        for i in child.intersection(&affected).ones() {
+            if !child.intersects(&self.ancestors[i]) {
+                roots.set(i, true);
+                // Preorder ids make subtree[i] ⊆ affected here, so this
+                // only writes inside the region being rebuilt.
+                cov.union_with(&self.subtree[i]);
+            }
+        }
+        let mut dirty = [false; NCHUNKS];
+        for i in affected.ones() {
+            dirty[i >> CHUNK_SHIFT] = true;
+        }
+        match (&self.device, &parent_state.detail) {
+            (
+                DevicePlan::ManyCore { par_secs, omp_secs },
+                StateDetail::ManyCore { par, host, omp },
+            ) => {
+                let (mut par, mut host, mut omp) = (*par, *host, *omp);
+                for (c, d) in dirty.iter().enumerate() {
+                    if !*d {
+                        continue;
+                    }
+                    let (mut p, mut h, mut o) = (0.0, 0.0, 0.0);
+                    for i in (c << CHUNK_SHIFT)..((c + 1) << CHUNK_SHIFT).min(self.n) {
+                        if cov.get(i) {
+                            p += par_secs[i];
+                        } else {
+                            h += self.host_secs[i];
+                        }
+                        if roots.get(i) {
+                            o += omp_secs[i];
+                        }
+                    }
+                    par[c] = p;
+                    host[c] = h;
+                    omp[c] = o;
+                }
+                let t = combine_chunks(&par) + combine_chunks(&host) + combine_chunks(&omp);
+                (
+                    Measurement {
+                        seconds: t,
+                        valid: child.is_subset_of(&self.dep_free),
+                        setup_seconds: self.setup_seconds,
+                    },
+                    MeasureState { roots, cov, detail: StateDetail::ManyCore { par, host, omp } },
+                )
+            }
+            (
+                DevicePlan::Gpu { kernel_nest, launch_nest, hoist, bw_pcie },
+                StateDetail::Gpu { touched, cpu_touched, bytes, kl, host },
+            ) => {
+                let (mut touched, mut kl, mut host) = (*touched, *kl, *host);
+                for (c, d) in dirty.iter().enumerate() {
+                    if !*d {
+                        continue;
+                    }
+                    let (mut tm, mut k, mut h) = (0u64, 0.0, 0.0);
+                    for i in (c << CHUNK_SHIFT)..((c + 1) << CHUNK_SHIFT).min(self.n) {
+                        if !cov.get(i) {
+                            tm |= self.self_amask[i];
+                            h += self.host_secs[i];
+                        }
+                        if roots.get(i) {
+                            k += kernel_nest[i];
+                            k += launch_nest[i];
+                        }
+                    }
+                    touched[c] = tm;
+                    kl[c] = k;
+                    host[c] = h;
+                }
+                let mut new_cpu_touched = 0u64;
+                for m in touched {
+                    new_cpu_touched |= m;
+                }
+                // The hoist decision reads the *global* touched mask: if
+                // it changed, every bytes partial is stale, not just the
+                // dirty chunks.
+                let all_bytes_stale = new_cpu_touched != *cpu_touched;
+                let mut bytes = *bytes;
+                for (c, slot) in bytes.iter_mut().enumerate() {
+                    if !(all_bytes_stale || dirty[c]) {
+                        continue;
+                    }
+                    let mut b = 0.0;
+                    for i in (c << CHUNK_SHIFT)..((c + 1) << CHUNK_SHIFT).min(self.n) {
+                        if !roots.get(i) {
+                            continue;
+                        }
+                        let mut rest = self.nest_amask[i];
+                        while rest != 0 {
+                            let a = rest.trailing_zeros() as usize;
+                            rest &= rest - 1;
+                            let hoistable = *hoist && new_cpu_touched & (1u64 << a) == 0;
+                            let count = if hoistable { 1.0 } else { self.inv[i] };
+                            b += 2.0 * self.array_bytes[a] * count;
+                        }
+                    }
+                    *slot = b;
+                }
+                let t =
+                    combine_chunks(&bytes) / bw_pcie + combine_chunks(&kl) + combine_chunks(&host);
+                (
+                    Measurement {
+                        seconds: t,
+                        valid: child.is_subset_of(&self.dep_free),
+                        setup_seconds: self.setup_seconds,
+                    },
+                    MeasureState {
+                        roots,
+                        cov,
+                        detail: StateDetail::Gpu {
+                            touched,
+                            cpu_touched: new_cpu_touched,
+                            bytes,
+                            kl,
+                            host,
+                        },
+                    },
+                )
+            }
+            // Device/state mismatch cannot happen for states produced by
+            // this plan; re-measure from scratch rather than guess.
+            _ => self.measure_with_state(&child),
         }
     }
 
@@ -510,24 +847,26 @@ impl MeasurementPlan {
             },
             DevicePlan::ManyCore { par_secs, omp_secs } => {
                 let cov = self.covered_dense(bits);
-                let mut t = 0.0;
+                let mut par = [0.0; NCHUNKS];
+                let mut host = [0.0; NCHUNKS];
+                let mut omp = [0.0; NCHUNKS];
                 for i in 0..self.n {
                     if cov.get(i) {
-                        t += par_secs[i];
+                        par[i >> CHUNK_SHIFT] += par_secs[i];
                     }
                 }
                 for i in 0..self.n {
                     if !cov.get(i) {
-                        t += self.host_secs[i];
+                        host[i >> CHUNK_SHIFT] += self.host_secs[i];
                     }
                 }
                 for i in 0..self.n {
                     if self.is_root_dense(bits, &cov, i) {
-                        t += omp_secs[i];
+                        omp[i >> CHUNK_SHIFT] += omp_secs[i];
                     }
                 }
                 Measurement {
-                    seconds: t,
+                    seconds: combine_chunks(&par) + combine_chunks(&host) + combine_chunks(&omp),
                     valid: bits.is_subset_of(&self.dep_free),
                     setup_seconds: self.setup_seconds,
                 }
@@ -540,7 +879,9 @@ impl MeasurementPlan {
                         cpu_touched |= self.self_amask[i];
                     }
                 }
-                let mut total_bytes = 0.0;
+                let mut bytes = [0.0; NCHUNKS];
+                let mut kl = [0.0; NCHUNKS];
+                let mut host = [0.0; NCHUNKS];
                 for i in 0..self.n {
                     if !self.is_root_dense(bits, &cov, i) {
                         continue;
@@ -551,23 +892,24 @@ impl MeasurementPlan {
                         rest &= rest - 1;
                         let hoistable = *hoist && cpu_touched & (1u64 << a) == 0;
                         let count = if hoistable { 1.0 } else { self.inv[i] };
-                        total_bytes += 2.0 * self.array_bytes[a] * count;
+                        bytes[i >> CHUNK_SHIFT] += 2.0 * self.array_bytes[a] * count;
                     }
                 }
-                let mut t = total_bytes / bw_pcie;
                 for i in 0..self.n {
                     if self.is_root_dense(bits, &cov, i) {
-                        t += kernel_nest[i];
-                        t += launch_nest[i];
+                        kl[i >> CHUNK_SHIFT] += kernel_nest[i];
+                        kl[i >> CHUNK_SHIFT] += launch_nest[i];
                     }
                 }
                 for i in 0..self.n {
                     if !cov.get(i) {
-                        t += self.host_secs[i];
+                        host[i >> CHUNK_SHIFT] += self.host_secs[i];
                     }
                 }
                 Measurement {
-                    seconds: t,
+                    seconds: combine_chunks(&bytes) / bw_pcie
+                        + combine_chunks(&kl)
+                        + combine_chunks(&host),
                     valid: bits.is_subset_of(&self.dep_free),
                     setup_seconds: self.setup_seconds,
                 }
@@ -697,6 +1039,130 @@ impl PlanCache {
     pub fn hit_rate(&self) -> f64 {
         let hits = self.hits() as f64;
         let total = hits + self.compiles() as f64;
+        if total == 0.0 {
+            0.0
+        } else {
+            hits / total
+        }
+    }
+}
+
+/// Scope half of an [`EvalCache`] key: (application fingerprint, device
+/// kind, device config fingerprint) — see [`MeasurementPlan::eval_scope`].
+pub type EvalScope = (u64, DeviceKind, u64);
+
+/// Cross-search measurement cache: genome → [`Measurement`], keyed under
+/// an [`EvalScope`] so distinct applications and device configurations
+/// never alias.  Where [`PlanCache`] deduplicates plan *compiles*, this
+/// deduplicates individual pattern *measurements* across GA searches —
+/// a repeated environment in a batch or sweep skips whole generations of
+/// arithmetic.
+///
+/// Hits return a `Measurement` bit-identical to recomputation (the plan
+/// kernel is deterministic), so results never depend on cache contents;
+/// and callers keep charging simulated verification cost per evaluated
+/// genome regardless of hits, so the paper-facing cost ledger and the
+/// batch-vs-sequential equivalence are unaffected.  Only wall-clock work
+/// (and the hit/miss counters) change.
+///
+/// Capacity-bounded: insertion-order (FIFO) eviction once `capacity`
+/// entries are resident, so a long sweep cannot grow without bound.
+pub struct EvalCache {
+    map: Mutex<EvalMap>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    capacity: usize,
+}
+
+#[derive(Default)]
+struct EvalMap {
+    entries: HashMap<EvalKey, Measurement>,
+    order: VecDeque<EvalKey>,
+}
+
+type EvalKey = (EvalScope, PatternBits);
+
+/// Default capacity: 64k entries ≈ a few MB — roomy for every sweep in
+/// the corpus while still bounded.
+const EVAL_CACHE_CAPACITY: usize = 1 << 16;
+
+impl Default for EvalCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EvalCache {
+    pub fn new() -> Self {
+        Self::with_capacity(EVAL_CACHE_CAPACITY)
+    }
+
+    /// Cache bounded to `capacity` resident entries (min 1).
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            map: Mutex::new(EvalMap::default()),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// The cached measurement of `genome` under `scope`, counting a hit
+    /// or miss.
+    pub fn lookup(&self, scope: EvalScope, genome: &PatternBits) -> Option<Measurement> {
+        let map = self.map.lock().unwrap();
+        let found = map.entries.get(&(scope, *genome)).copied();
+        drop(map);
+        if found.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        found
+    }
+
+    /// File `genome`'s measurement under `scope`, evicting the oldest
+    /// entry at capacity.  Re-inserting an existing key is a no-op (the
+    /// kernel is deterministic, so the value cannot differ).
+    pub fn store(&self, scope: EvalScope, genome: &PatternBits, m: Measurement) {
+        let key = (scope, *genome);
+        let mut map = self.map.lock().unwrap();
+        if map.entries.contains_key(&key) {
+            return;
+        }
+        if map.entries.len() >= self.capacity {
+            if let Some(old) = map.order.pop_front() {
+                map.entries.remove(&old);
+            }
+        }
+        map.entries.insert(key, m);
+        map.order.push_back(key);
+    }
+
+    /// Resident entries.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups answered from the cache.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that missed.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of lookups answered from the cache — 0.0 (not NaN) when
+    /// nothing has been looked up yet.
+    pub fn hit_rate(&self) -> f64 {
+        let hits = self.hits() as f64;
+        let total = hits + self.misses() as f64;
         if total == 0.0 {
             0.0
         } else {
@@ -872,6 +1338,106 @@ mod tests {
         });
         assert_eq!(cache.compiles(), 2, "one compile per (app, device) pair");
         assert_eq!(cache.hits() + cache.compiles(), 8 * 4 * 2, "every lookup accounted");
+    }
+
+    /// Satellite: rates must be 0.0 — never NaN — before any lookup.
+    #[test]
+    fn empty_caches_report_zero_rates() {
+        let plans = PlanCache::new();
+        assert_eq!(plans.hit_rate(), 0.0);
+        assert!(!plans.hit_rate().is_nan());
+        let evals = EvalCache::new();
+        assert_eq!(evals.hit_rate(), 0.0);
+        assert!(!evals.hit_rate().is_nan());
+        assert_eq!(evals.hits(), 0);
+        assert_eq!(evals.misses(), 0);
+        assert!(evals.is_empty());
+    }
+
+    #[test]
+    fn eval_cache_round_trips_and_scopes_do_not_alias() {
+        let tb = Testbed::default();
+        let app = threemm::build(100);
+        let gpu_plan = tb.gpu.compile_plan(&app);
+        let mc_plan = tb.manycore.compile_plan(&app);
+        let cache = EvalCache::new();
+        let bits = PatternBits::from_ones(app.loop_count(), [0]);
+        assert_eq!(cache.lookup(gpu_plan.eval_scope(), &bits), None);
+        let m = gpu_plan.measure(&bits);
+        cache.store(gpu_plan.eval_scope(), &bits, m);
+        let back = cache.lookup(gpu_plan.eval_scope(), &bits).expect("stored");
+        assert_same(m, back);
+        // Same genome, different device: distinct scope, no aliasing.
+        assert_eq!(cache.lookup(mc_plan.eval_scope(), &bits), None);
+        // Differently-configured same-kind devices stay distinct too.
+        let unhoisted = Gpu { hoist_transfers: false, ..Gpu::default() };
+        let alt_plan = unhoisted.compile_plan(&app);
+        assert_ne!(gpu_plan.eval_scope(), alt_plan.eval_scope());
+        assert_eq!(cache.lookup(alt_plan.eval_scope(), &bits), None);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 3);
+        assert!((cache.hit_rate() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eval_cache_evicts_oldest_at_capacity() {
+        let tb = Testbed::default();
+        let app = threemm::build(100);
+        let plan = tb.gpu.compile_plan(&app);
+        let scope = plan.eval_scope();
+        let cache = EvalCache::with_capacity(2);
+        let pats: Vec<PatternBits> = (0..3)
+            .map(|i| PatternBits::from_ones(app.loop_count(), [i]))
+            .collect();
+        for p in &pats {
+            cache.store(scope, p, plan.measure(p));
+        }
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.lookup(scope, &pats[0]), None, "oldest evicted");
+        assert!(cache.lookup(scope, &pats[1]).is_some());
+        assert!(cache.lookup(scope, &pats[2]).is_some());
+        // Re-inserting a resident key neither grows nor reorders.
+        cache.store(scope, &pats[2], plan.measure(&pats[2]));
+        assert_eq!(cache.len(), 2);
+    }
+
+    /// Smoke test of the delta kernel on flip chains; the exhaustive
+    /// randomized version lives in `tests/properties.rs`.
+    #[test]
+    fn delta_measure_matches_full_path_on_chains() {
+        let tb = Testbed::default();
+        let app = nas_bt::build(16, 10);
+        let n = app.loop_count();
+        let plans = [
+            tb.cpu.compile_plan(&app),
+            tb.manycore.compile_plan(&app),
+            tb.gpu.compile_plan(&app),
+            tb.fpga.compile_plan(&app),
+        ];
+        for plan in &plans {
+            let mut rng = Rng::new(0xDE17A);
+            let mut bits = PatternBits::zeros(n);
+            for i in 0..n {
+                if rng.chance(0.25) {
+                    bits.set(i, true);
+                }
+            }
+            let (mut m, mut state) = plan.measure_with_state(&bits);
+            assert_same(plan.measure(&bits), m);
+            for step in 0..64 {
+                let k = 1 + step % 4;
+                let mut flips = PatternBits::zeros(n);
+                for _ in 0..k {
+                    flips.set(rng.below(n), true);
+                }
+                let child = bits.xor(&flips);
+                let (dm, dstate) = plan.measure_delta(&bits, &m, &state, &flips);
+                assert_same(plan.measure(&child), dm);
+                bits = child;
+                m = dm;
+                state = dstate;
+            }
+        }
     }
 
     #[test]

@@ -18,7 +18,7 @@ use std::collections::{HashMap, HashSet};
 use crate::devices::Measurement;
 use crate::util::bits::PatternBits;
 use crate::util::rng::Rng;
-use crate::util::threadpool::map_parallel_chunked;
+use crate::util::threadpool::{map_parallel_chunked, WorkerPool};
 
 use super::fitness::fitness;
 use super::population::{crossover, mutate, random_genome};
@@ -54,6 +54,18 @@ pub struct GaConfig {
     /// Verification machines measuring concurrently (wall-clock only;
     /// the simulated ledger charges every measurement).
     pub workers: usize,
+    /// Island-model sub-populations evolving concurrently (extension,
+    /// not in the paper).  1 = the paper's single-population GA; the
+    /// default, so islands stay ablatable.  Each island runs a full
+    /// `population`-sized sub-population from a deterministic per-island
+    /// seed (island 0 uses `seed` itself), with ring migration every
+    /// [`Self::migration_interval`] generations.
+    pub islands: usize,
+    /// Generations between migration barriers when `islands > 1`.  With
+    /// a single island the value is inert: epochs carry the full search
+    /// state across barriers, so any interval reproduces the
+    /// single-population trajectory exactly (tested).
+    pub migration_interval: usize,
 }
 
 impl Default for GaConfig {
@@ -69,6 +81,8 @@ impl Default for GaConfig {
             stagnation_stop: None,
             seed: 0xC0FFEE,
             workers: 4,
+            islands: 1,
+            migration_interval: 4,
         }
     }
 }
@@ -98,15 +112,399 @@ pub struct GaResult {
     /// fitness — the paper's NAS.BT-on-GPU outcome).
     pub best: Option<(Genome, Measurement)>,
     pub history: Vec<GenStats>,
-    /// Distinct genomes measured.
+    /// Distinct genomes measured (summed across islands; a genome two
+    /// islands both reach is charged on each, like the real verification
+    /// environment would).
     pub evaluations: usize,
     /// Simulated verification cost: setup + capped run per measurement.
+    /// Charged per evaluated genome even when the cross-search cache
+    /// answered it — the cache saves wall-clock, not simulated cost.
     pub simulated_cost_s: f64,
+    /// Measurements answered by the cross-search [`Evaluator`] cache
+    /// (0 for plain closure evaluators).
+    pub cache_hits: usize,
 }
 
 impl GaResult {
     pub fn best_seconds(&self) -> Option<f64> {
         self.best.as_ref().map(|(_, m)| m.seconds)
+    }
+}
+
+/// How the engine measures genomes.  Beyond the plain closure form, an
+/// evaluator can carry per-genome measurement *state* from a parent to
+/// its offspring (the delta kernel's chunk partials) and consult a
+/// cross-search cache — both pure wall-clock optimizations:
+/// `measure_delta` MUST return bit-identical results to `measure` on the
+/// child (property-tested for the plan-backed evaluator), so the search
+/// trajectory never depends on which path ran.
+pub trait Evaluator: Sync {
+    /// Reusable measurement state threaded from parent to offspring
+    /// (e.g. `devices::MeasureState`); `()` when delta is unsupported.
+    type State: Clone + Send + Sync;
+
+    /// Measure one genome from scratch.
+    fn measure(&self, genome: &Genome) -> (Measurement, Self::State);
+
+    /// Measure `child` given its breeding parent's genome, measurement
+    /// and state.  Must agree bit-for-bit with `measure(child)`.
+    fn measure_delta(
+        &self,
+        parent: &Genome,
+        parent_m: &Measurement,
+        parent_state: &Self::State,
+        child: &Genome,
+    ) -> (Measurement, Self::State);
+
+    /// Running count of measurements this evaluator answered from a
+    /// cross-search cache (surfaced per search in [`GaResult`]).
+    fn cache_hits(&self) -> usize {
+        0
+    }
+}
+
+/// Adapter: a plain measurement closure as an [`Evaluator`] with no
+/// delta state and no cache.
+struct FnEvaluator<'a>(&'a (dyn Fn(&Genome) -> Measurement + Sync));
+
+impl Evaluator for FnEvaluator<'_> {
+    type State = ();
+
+    fn measure(&self, genome: &Genome) -> (Measurement, ()) {
+        ((self.0)(genome), ())
+    }
+
+    fn measure_delta(
+        &self,
+        _parent: &Genome,
+        _parent_m: &Measurement,
+        _parent_state: &(),
+        child: &Genome,
+    ) -> (Measurement, ()) {
+        self.measure(child)
+    }
+}
+
+/// Per-island seed: island 0 keeps the user's seed (so `islands = 1` is
+/// the historical stream), higher islands get a SplitMix64-style mix —
+/// deterministic, decorrelated, recorded via (seed, index).
+fn island_seed(seed: u64, island: usize) -> u64 {
+    if island == 0 {
+        return seed;
+    }
+    let mut z = seed ^ (island as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// One sub-population's full search state.  The generation loop lives
+/// here so the island model can run it in epochs: state (RNG included)
+/// carries across epoch boundaries, which is what makes epoch
+/// partitioning invisible when `islands = 1`.
+struct Island<S> {
+    rng: Rng,
+    pop: Vec<Genome>,
+    /// Breeding parent of each `pop` member (the hamming-nearer of the
+    /// two roulette picks) — the delta kernel's anchor.  None for the
+    /// initial population, elites, restarts and migrants.
+    parents: Vec<Option<Genome>>,
+    cache: HashMap<Genome, (Measurement, S)>,
+    cost: f64,
+    history: Vec<GenStats>,
+    best: Option<(Genome, Measurement)>,
+    stagnant: usize,
+    last_best: f64,
+    generation: usize,
+    done: bool,
+}
+
+impl<S: Clone + Send + Sync> Island<S> {
+    fn new(seed: u64, cfg: &GaConfig, genome_len: usize) -> Self {
+        let mut rng = Rng::new(seed);
+        let pop: Vec<Genome> = (0..cfg.population)
+            .map(|_| random_genome(&mut rng, genome_len, cfg.init_density))
+            .collect();
+        let parents = vec![None; pop.len()];
+        Self {
+            rng,
+            pop,
+            parents,
+            cache: HashMap::new(),
+            cost: 0.0,
+            history: Vec::with_capacity(cfg.generations),
+            best: None,
+            stagnant: 0,
+            last_best: f64::INFINITY,
+            generation: 0,
+            done: false,
+        }
+    }
+
+    /// Run up to `gens` generations (fewer if the search finishes).
+    fn epoch<E: Evaluator<State = S>>(
+        &mut self,
+        cfg: &GaConfig,
+        ev: &E,
+        genome_len: usize,
+        gens: usize,
+    ) {
+        for _ in 0..gens {
+            if self.done {
+                return;
+            }
+            self.advance(cfg, ev, genome_len);
+        }
+    }
+
+    /// One generation: evaluate -> stats -> (stop?) -> breed.
+    fn advance<E: Evaluator<State = S>>(&mut self, cfg: &GaConfig, ev: &E, genome_len: usize) {
+        // Measure genomes not yet in the cache, concurrently.  Dedup is
+        // one HashSet probe per individual (genomes hash word-wise); the
+        // seen-set probe runs first so duplicates never pay a second
+        // cache probe.
+        let mut seen: HashSet<Genome> = HashSet::with_capacity(self.pop.len());
+        let mut fresh: Vec<(Genome, Option<Genome>)> = Vec::with_capacity(self.pop.len());
+        for (g, p) in self.pop.iter().zip(&self.parents) {
+            if seen.insert(*g) && !self.cache.contains_key(g) {
+                fresh.push((*g, *p));
+            }
+        }
+        let new_evaluations = fresh.len();
+        let cache = &self.cache;
+        let results = map_parallel_chunked(fresh, cfg.workers, |(g, p)| {
+            // Offspring route through the delta kernel when the parent's
+            // measurement state is on hand; identical results either way.
+            let out = match p.and_then(|pg| cache.get(&pg).map(|e| (pg, e))) {
+                Some((pg, (pm, ps))) => ev.measure_delta(&pg, pm, ps, &g),
+                None => ev.measure(&g),
+            };
+            (g, out)
+        });
+        for (g, (m, s)) in results {
+            // Simulated verification wall: compile/synthesis + the run
+            // itself, capped by the measurement timeout.  Charged even on
+            // cross-search cache hits — the cache saves wall-clock only.
+            self.cost += m.setup_seconds + m.seconds.min(Measurement::TIMEOUT_S);
+            self.cache.insert(g, (m, s));
+        }
+
+        // One walk over the population: fitness (computed once per
+        // individual and reused below), validity count, fitness sum
+        // and global-best tracking together.
+        let mut fits: Vec<f64> = Vec::with_capacity(self.pop.len());
+        let mut fit_sum = 0.0;
+        let mut valid_count = 0usize;
+        for g in &self.pop {
+            let m = self.cache[g].0;
+            let f = fitness(&m, cfg.exponent);
+            if f > 0.0 {
+                valid_count += 1;
+                // Track the global best valid/non-timeout individual.
+                let better = match &self.best {
+                    Some((_, bm)) => m.seconds < bm.seconds,
+                    None => true,
+                };
+                if better {
+                    self.best = Some((*g, m));
+                }
+            }
+            fit_sum += f;
+            fits.push(f);
+        }
+
+        let generation = self.generation;
+        self.history.push(GenStats {
+            generation,
+            best_seconds: self.best.as_ref().map(|(_, m)| m.seconds).unwrap_or(f64::INFINITY),
+            mean_fitness: fit_sum / fits.len().max(1) as f64,
+            valid_count,
+            new_evaluations,
+        });
+        self.generation += 1;
+
+        if self.generation == cfg.generations {
+            self.done = true;
+            return;
+        }
+        let cur_best = self.best.as_ref().map(|(_, m)| m.seconds).unwrap_or(f64::INFINITY);
+        if cur_best < self.last_best {
+            self.last_best = cur_best;
+            self.stagnant = 0;
+        } else {
+            self.stagnant += 1;
+            if let Some(cap) = cfg.stagnation_stop {
+                if self.stagnant >= cap {
+                    self.done = true;
+                    return;
+                }
+            }
+        }
+
+        // ---- next generation ----
+        let mut next: Vec<Genome> = Vec::with_capacity(cfg.population);
+        let mut nparents: Vec<Option<Genome>> = Vec::with_capacity(cfg.population);
+        // Elite preservation: the generation's best (by fitness) is
+        // copied unchanged (sec. 4.1.2).
+        if cfg.elite {
+            if let Some(ei) = fits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+            {
+                if fits[ei] > 0.0 {
+                    next.push(self.pop[ei]);
+                    nparents.push(None);
+                }
+            }
+        }
+        while next.len() < cfg.population {
+            let (pa, pb) = match (self.rng.roulette(&fits), self.rng.roulette(&fits)) {
+                (Some(a), Some(b)) => (a, b),
+                // Degenerate generation (all fitness 0): random restart
+                // material keeps the search alive.
+                _ => {
+                    next.push(random_genome(&mut self.rng, genome_len, cfg.init_density));
+                    nparents.push(None);
+                    continue;
+                }
+            };
+            let (mut c, mut d) = if self.rng.chance(cfg.pc) {
+                crossover(&mut self.rng, &self.pop[pa], &self.pop[pb])
+            } else {
+                (self.pop[pa], self.pop[pb])
+            };
+            mutate(&mut self.rng, &mut c, cfg.pm);
+            mutate(&mut self.rng, &mut d, cfg.pm);
+            // Anchor each offspring to the hamming-nearer parent so the
+            // delta kernel sees the fewest flipped bits (no RNG draws, so
+            // the trajectory is untouched).
+            let nearer = |child: &Genome| {
+                let (ga, gb) = (self.pop[pa], self.pop[pb]);
+                if ga.hamming(child) <= gb.hamming(child) {
+                    ga
+                } else {
+                    gb
+                }
+            };
+            nparents.push(Some(nearer(&c)));
+            next.push(c);
+            if next.len() < cfg.population {
+                nparents.push(Some(nearer(&d)));
+                next.push(d);
+            }
+        }
+        self.pop = next;
+        self.parents = nparents;
+    }
+}
+
+/// Ring migration at an epoch barrier: island i's best-so-far genome
+/// replaces the lowest-fitness member of island (i+1) mod k.  All
+/// immigrants are chosen from the pre-barrier bests (simultaneous ring),
+/// ties break on the lowest index, unevaluated members rank as fitness
+/// 0 — fully deterministic, and no RNG is consumed.
+fn migrate<S>(islands: &mut [Island<S>], cfg: &GaConfig) {
+    let k = islands.len();
+    let bests: Vec<Option<Genome>> = islands
+        .iter()
+        .map(|isl| isl.best.as_ref().map(|(g, _)| *g))
+        .collect();
+    for (i, isl) in islands.iter_mut().enumerate() {
+        let from = (i + k - 1) % k;
+        if from == i {
+            continue;
+        }
+        let Some(migrant) = bests[from] else { continue };
+        if isl.pop.contains(&migrant) {
+            continue;
+        }
+        let mut worst = 0usize;
+        let mut worst_fit = f64::INFINITY;
+        for (j, g) in isl.pop.iter().enumerate() {
+            let f = isl
+                .cache
+                .get(g)
+                .map(|(m, _)| fitness(m, cfg.exponent))
+                .unwrap_or(0.0);
+            if f < worst_fit {
+                worst_fit = f;
+                worst = j;
+            }
+        }
+        isl.pop[worst] = migrant;
+        isl.parents[worst] = None;
+    }
+}
+
+/// Merge island outcomes: best across islands (ties to the lowest
+/// island index), evaluations and simulated cost summed, history
+/// aggregated per generation (min best, mean of means, summed counts).
+fn merged_result<S>(islands: Vec<Island<S>>, cache_hits: usize) -> GaResult {
+    let gens = islands.iter().map(|isl| isl.history.len()).max().unwrap_or(0);
+    let mut history = Vec::with_capacity(gens);
+    for g in 0..gens {
+        let entries: Vec<&GenStats> =
+            islands.iter().filter_map(|isl| isl.history.get(g)).collect();
+        history.push(GenStats {
+            generation: g,
+            best_seconds: entries.iter().map(|e| e.best_seconds).fold(f64::INFINITY, f64::min),
+            mean_fitness: entries.iter().map(|e| e.mean_fitness).sum::<f64>()
+                / entries.len().max(1) as f64,
+            valid_count: entries.iter().map(|e| e.valid_count).sum(),
+            new_evaluations: entries.iter().map(|e| e.new_evaluations).sum(),
+        });
+    }
+    let mut best: Option<(Genome, Measurement)> = None;
+    let mut evaluations = 0usize;
+    let mut cost = 0.0;
+    for isl in islands {
+        evaluations += isl.cache.len();
+        cost += isl.cost;
+        if let Some((g, m)) = isl.best {
+            let better = match &best {
+                Some((_, bm)) => m.seconds < bm.seconds,
+                None => true,
+            };
+            if better {
+                best = Some((g, m));
+            }
+        }
+    }
+    GaResult { best, history, evaluations, simulated_cost_s: cost, cache_hits }
+}
+
+impl GaConfig {
+    /// Run the search with an arbitrary [`Evaluator`] — the single entry
+    /// point behind [`Ga::run`], the delta-threaded plan searches and
+    /// the island model.
+    pub fn search<E: Evaluator>(&self, ev: &E, genome_len: usize) -> GaResult {
+        let hits_before = ev.cache_hits();
+        let k = self.islands.max(1);
+        let mut islands: Vec<Island<E::State>> = (0..k)
+            .map(|i| Island::new(island_seed(self.seed, i), self, genome_len))
+            .collect();
+        if k == 1 {
+            // Single population: one epoch covering the whole budget —
+            // identical to the paper's GA loop.
+            islands[0].epoch(self, ev, genome_len, self.generations);
+        } else {
+            let interval = self.migration_interval.max(1);
+            loop {
+                // Epochs run concurrently on the shared worker pool; each
+                // island's state (RNG included) carries across barriers.
+                islands = WorkerPool::global().map(islands, k, |mut isl| {
+                    isl.epoch(self, ev, genome_len, interval);
+                    isl
+                });
+                if islands.iter().all(|isl| isl.done) {
+                    break;
+                }
+                migrate(&mut islands, self);
+            }
+        }
+        merged_result(islands, ev.cache_hits() - hits_before)
     }
 }
 
@@ -117,135 +515,9 @@ pub struct Ga<'a> {
     pub evaluate: &'a (dyn Fn(&Genome) -> Measurement + Sync),
 }
 
-impl<'a> Ga<'a> {
+impl Ga<'_> {
     pub fn run(&self, genome_len: usize) -> GaResult {
-        let cfg = self.config;
-        let mut rng = Rng::new(cfg.seed);
-        let mut cache: HashMap<Genome, Measurement> = HashMap::new();
-        let mut cost = 0.0;
-        let mut history = Vec::with_capacity(cfg.generations);
-        let mut best: Option<(Genome, Measurement)> = None;
-
-        let mut stagnant = 0usize;
-        let mut last_best = f64::INFINITY;
-        let mut pop: Vec<Genome> = (0..cfg.population)
-            .map(|_| random_genome(&mut rng, genome_len, cfg.init_density))
-            .collect();
-
-        for generation in 0..cfg.generations {
-            // Measure genomes not yet in the cache, concurrently.  Dedup is
-            // one HashSet probe per individual (genomes hash word-wise).
-            let mut seen: HashSet<Genome> = HashSet::with_capacity(pop.len());
-            let mut fresh: Vec<Genome> = Vec::with_capacity(pop.len());
-            for g in &pop {
-                if !cache.contains_key(g) && seen.insert(*g) {
-                    fresh.push(*g);
-                }
-            }
-            let new_evaluations = fresh.len();
-            let results = map_parallel_chunked(fresh, cfg.workers, |g| (g, (self.evaluate)(&g)));
-            for (g, m) in results {
-                // Simulated verification wall: compile/synthesis + the run
-                // itself, capped by the measurement timeout.
-                cost += m.setup_seconds + m.seconds.min(Measurement::TIMEOUT_S);
-                cache.insert(g, m);
-            }
-
-            // One walk over the population: fitness (computed once per
-            // individual and reused below), validity count, fitness sum
-            // and global-best tracking together.
-            let mut fits: Vec<f64> = Vec::with_capacity(pop.len());
-            let mut fit_sum = 0.0;
-            let mut valid_count = 0usize;
-            for g in &pop {
-                let m = cache[g];
-                let f = fitness(&m, cfg.exponent);
-                if f > 0.0 {
-                    valid_count += 1;
-                    // Track the global best valid/non-timeout individual.
-                    let better = match &best {
-                        Some((_, bm)) => m.seconds < bm.seconds,
-                        None => true,
-                    };
-                    if better {
-                        best = Some((*g, m));
-                    }
-                }
-                fit_sum += f;
-                fits.push(f);
-            }
-
-            history.push(GenStats {
-                generation,
-                best_seconds: best.as_ref().map(|(_, m)| m.seconds).unwrap_or(f64::INFINITY),
-                mean_fitness: fit_sum / fits.len().max(1) as f64,
-                valid_count,
-                new_evaluations,
-            });
-
-            if generation + 1 == cfg.generations {
-                break;
-            }
-            let cur_best = best.as_ref().map(|(_, m)| m.seconds).unwrap_or(f64::INFINITY);
-            if cur_best < last_best {
-                last_best = cur_best;
-                stagnant = 0;
-            } else {
-                stagnant += 1;
-                if let Some(cap) = cfg.stagnation_stop {
-                    if stagnant >= cap {
-                        break;
-                    }
-                }
-            }
-
-            // ---- next generation ----
-            let mut next: Vec<Genome> = Vec::with_capacity(cfg.population);
-            // Elite preservation: the generation's best (by fitness) is
-            // copied unchanged (sec. 4.1.2).
-            if cfg.elite {
-                if let Some(ei) = fits
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i)
-                {
-                    if fits[ei] > 0.0 {
-                        next.push(pop[ei]);
-                    }
-                }
-            }
-            while next.len() < cfg.population {
-                let (pa, pb) = match (rng.roulette(&fits), rng.roulette(&fits)) {
-                    (Some(a), Some(b)) => (a, b),
-                    // Degenerate generation (all fitness 0): random restart
-                    // material keeps the search alive.
-                    _ => {
-                        next.push(random_genome(&mut rng, genome_len, cfg.init_density));
-                        continue;
-                    }
-                };
-                let (mut c, mut d) = if rng.chance(cfg.pc) {
-                    crossover(&mut rng, &pop[pa], &pop[pb])
-                } else {
-                    (pop[pa], pop[pb])
-                };
-                mutate(&mut rng, &mut c, cfg.pm);
-                mutate(&mut rng, &mut d, cfg.pm);
-                next.push(c);
-                if next.len() < cfg.population {
-                    next.push(d);
-                }
-            }
-            pop = next;
-        }
-
-        GaResult {
-            best,
-            history,
-            evaluations: cache.len(),
-            simulated_cost_s: cost,
-        }
+        self.config.search(&FnEvaluator(self.evaluate), genome_len)
     }
 }
 
@@ -268,7 +540,8 @@ mod tests {
 
     #[test]
     fn converges_on_toy_landscape() {
-        let ga = Ga { config: GaConfig { seed: 42, ..GaConfig::sized_for(16) }, evaluate: &toy_eval };
+        let cfg = GaConfig { seed: 42, ..GaConfig::sized_for(16) };
+        let ga = Ga { config: cfg, evaluate: &toy_eval };
         let r = ga.run(16);
         let (g, m) = r.best.expect("found something");
         assert!(!g.get(7), "elite must be valid");
@@ -303,7 +576,8 @@ mod tests {
     fn timeouts_never_win() {
         let eval = |g: &Genome| {
             let on = g.count_ones() as f64;
-            Measurement { seconds: if on > 0.0 { 1.0 } else { 1000.0 }, valid: true, setup_seconds: 0.0 }
+            let seconds = if on > 0.0 { 1.0 } else { 1000.0 };
+            Measurement { seconds, valid: true, setup_seconds: 0.0 }
         };
         let ga = Ga { config: GaConfig::sized_for(10), evaluate: &eval };
         let r = ga.run(10);
@@ -319,5 +593,87 @@ mod tests {
         assert!(r.evaluations <= 64);
         let total_presented: usize = r.history.iter().map(|h| h.new_evaluations).sum();
         assert_eq!(total_presented, r.evaluations);
+    }
+
+    /// Closure evaluators have no cross-search cache to hit.
+    #[test]
+    fn closure_evaluator_reports_zero_cache_hits() {
+        let r = Ga { config: GaConfig::sized_for(10), evaluate: &toy_eval }.run(10);
+        assert_eq!(r.cache_hits, 0);
+    }
+
+    /// With a single island the migration interval must be inert: every
+    /// value reproduces the plain single-population search exactly.
+    #[test]
+    fn single_island_ignores_migration_interval() {
+        let base = GaConfig { seed: 99, ..GaConfig::sized_for(14) };
+        let reference = Ga { config: base, evaluate: &toy_eval }.run(14);
+        for interval in [1, 2, 4, 1000] {
+            let cfg = GaConfig { islands: 1, migration_interval: interval, ..base };
+            let r = Ga { config: cfg, evaluate: &toy_eval }.run(14);
+            assert_eq!(
+                r.best.as_ref().map(|(g, _)| *g),
+                reference.best.as_ref().map(|(g, _)| *g)
+            );
+            assert_eq!(r.evaluations, reference.evaluations);
+            assert_eq!(r.simulated_cost_s, reference.simulated_cost_s);
+            assert_eq!(r.history.len(), reference.history.len());
+        }
+    }
+
+    /// Epoch partitioning is invisible: an island stepped in small epochs
+    /// lands in exactly the state of one stepped in a single epoch (the
+    /// property that makes the island loop safe to barrier anywhere).
+    #[test]
+    fn epoch_partitioning_carries_full_state() {
+        let cfg = GaConfig { seed: 11, ..GaConfig::sized_for(12) };
+        let ev = FnEvaluator(&toy_eval);
+        let mut whole = Island::<()>::new(cfg.seed, &cfg, 12);
+        whole.epoch(&cfg, &ev, 12, cfg.generations);
+        let mut stepped = Island::<()>::new(cfg.seed, &cfg, 12);
+        while !stepped.done {
+            stepped.epoch(&cfg, &ev, 12, 3);
+        }
+        assert_eq!(stepped.pop, whole.pop);
+        assert_eq!(stepped.best, whole.best);
+        assert_eq!(stepped.cost, whole.cost);
+        assert_eq!(stepped.generation, whole.generation);
+        assert_eq!(stepped.history.len(), whole.history.len());
+    }
+
+    /// Multi-island runs are deterministic, keep the cost/evaluation
+    /// bookkeeping invariants, and keep the merged best-so-far monotone.
+    #[test]
+    fn multi_island_deterministic_with_summed_bookkeeping() {
+        let cfg =
+            GaConfig { islands: 3, migration_interval: 2, seed: 5, ..GaConfig::sized_for(12) };
+        let a = Ga { config: cfg, evaluate: &toy_eval }.run(12);
+        let b = Ga { config: cfg, evaluate: &toy_eval }.run(12);
+        assert_eq!(a.best.as_ref().map(|(g, _)| *g), b.best.as_ref().map(|(g, _)| *g));
+        assert_eq!(a.evaluations, b.evaluations);
+        assert_eq!(a.simulated_cost_s, b.simulated_cost_s);
+
+        let (g, m) = a.best.expect("toy landscape has valid genomes");
+        assert!(!g.get(7), "best must be valid");
+        assert!(m.seconds <= 10.0);
+        let total_presented: usize = a.history.iter().map(|h| h.new_evaluations).sum();
+        assert_eq!(total_presented, a.evaluations, "island sums must reconcile");
+        for w in a.history.windows(2) {
+            assert!(w[1].best_seconds <= w[0].best_seconds + 1e-12);
+        }
+    }
+
+    /// Distinct islands get distinct deterministic seeds; island 0 keeps
+    /// the caller's seed so `islands = 1` is the historical stream.
+    #[test]
+    fn island_seeds_are_stable_and_distinct() {
+        assert_eq!(island_seed(42, 0), 42);
+        let seeds: Vec<u64> = (0..8).map(|i| island_seed(42, i)).collect();
+        for i in 0..seeds.len() {
+            for j in i + 1..seeds.len() {
+                assert_ne!(seeds[i], seeds[j], "islands {i} and {j} collide");
+            }
+        }
+        assert_eq!(seeds, (0..8).map(|i| island_seed(42, i)).collect::<Vec<u64>>());
     }
 }

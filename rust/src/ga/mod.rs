@@ -10,5 +10,5 @@ pub mod engine;
 pub mod fitness;
 pub mod population;
 
-pub use engine::{Ga, GaConfig, GaResult, GenStats, Genome};
+pub use engine::{Evaluator, Ga, GaConfig, GaResult, GenStats, Genome};
 pub use fitness::fitness;

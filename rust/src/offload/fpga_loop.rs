@@ -11,7 +11,7 @@
 use crate::analysis::intensity::rank_by_intensity;
 use crate::analysis::resources::rank_by_efficiency;
 use crate::app::ir::{Application, LoopId};
-use crate::devices::{DeviceModel, Fpga, Measurement, MeasurementPlan};
+use crate::devices::{DeviceModel, EvalCache, Fpga, Measurement, MeasurementPlan};
 
 use super::pattern::OffloadPattern;
 use super::LoopOffloadOutcome;
@@ -60,7 +60,22 @@ pub(crate) fn search_with_plan(
     plan: &MeasurementPlan,
     cfg: FpgaSearchConfig,
 ) -> LoopOffloadOutcome {
-    let (out, _) = search_traced_with_plan(app, plan, cfg);
+    let (out, _) = search_traced_with_plan_cached(app, plan, cfg, None);
+    out
+}
+
+/// [`search_with_plan`] consulting an optional cross-search
+/// [`EvalCache`]: a re-synthesized pattern an earlier run already
+/// measured is answered from the cache (full synthesis cost still
+/// charged — the cache models skipping the *simulator's* work, not the
+/// verification environment's).
+pub(crate) fn search_with_plan_cached(
+    app: &Application,
+    plan: &MeasurementPlan,
+    cfg: FpgaSearchConfig,
+    evals: Option<&EvalCache>,
+) -> LoopOffloadOutcome {
+    let (out, _) = search_traced_with_plan_cached(app, plan, cfg, evals);
     out
 }
 
@@ -69,13 +84,40 @@ pub(crate) fn search_traced_with_plan(
     plan: &MeasurementPlan,
     cfg: FpgaSearchConfig,
 ) -> (LoopOffloadOutcome, FpgaTrace) {
+    search_traced_with_plan_cached(app, plan, cfg, None)
+}
+
+pub(crate) fn search_traced_with_plan_cached(
+    app: &Application,
+    plan: &MeasurementPlan,
+    cfg: FpgaSearchConfig,
+    evals: Option<&EvalCache>,
+) -> (LoopOffloadOutcome, FpgaTrace) {
     let top_intensity = rank_by_intensity(app, cfg.intensity_keep);
     let candidates = rank_by_efficiency(app, &top_intensity, cfg.efficiency_keep);
 
+    // The FPGA method keys the shared cache on *full* pattern bits (it
+    // has no compact genome); the scope's device kind keeps these from
+    // aliasing GA entries, which live under ManyCore/Gpu scopes.
+    let scope = plan.eval_scope();
+    let mut hits = 0usize;
     let mut measured: Vec<(Vec<LoopId>, Measurement)> = Vec::new();
     let mut cost = 0.0;
     let mut measure = |ids: &[LoopId]| -> Measurement {
-        let m = plan.measure(&OffloadPattern::selecting(app, ids).bits);
+        let bits = OffloadPattern::selecting(app, ids).bits;
+        let m = match evals.and_then(|c| c.lookup(scope, &bits)) {
+            Some(m) => {
+                hits += 1;
+                m
+            }
+            None => {
+                let m = plan.measure(&bits);
+                if let Some(c) = evals {
+                    c.store(scope, &bits, m);
+                }
+                m
+            }
+        };
         cost += m.setup_seconds + m.seconds.min(Measurement::TIMEOUT_S);
         measured.push((ids.to_vec(), m));
         m
@@ -113,6 +155,7 @@ pub(crate) fn search_traced_with_plan(
             simulated_cost_s: cost,
             history: Vec::new(),
             evaluations,
+            cache_hits: hits,
         },
         FpgaTrace { candidates, measured },
     )

@@ -8,10 +8,14 @@
 //! compile a racing reduction, so wrong-answer patterns are caught here
 //! and scored 0.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use crate::analysis::dependence::eligible;
-use crate::app::ir::Application;
-use crate::devices::{DeviceModel, ManyCore, MeasurementPlan};
-use crate::ga::{Ga, GaConfig, Genome};
+use crate::app::ir::{Application, LoopId};
+use crate::devices::{
+    DeviceModel, EvalCache, EvalScope, ManyCore, MeasureState, Measurement, MeasurementPlan,
+};
+use crate::ga::{Evaluator, GaConfig, Genome};
 use crate::util::bits::PatternBits;
 
 use super::pattern::OffloadPattern;
@@ -52,6 +56,96 @@ fn empty_search(device: crate::devices::DeviceKind, app: &Application) -> LoopOf
         simulated_cost_s: 0.0,
         history: Vec::new(),
         evaluations: 0,
+        cache_hits: 0,
+    }
+}
+
+/// The plan-backed [`Evaluator`]: compact genome -> full pattern bits ->
+/// sparse kernel, with two wall-clock-only accelerations layered on top:
+///
+/// * **delta kernel** — offspring measurements reuse the breeding
+///   parent's [`MeasureState`] via [`MeasurementPlan::measure_delta`]
+///   (bit-identical to the full path, property-tested);
+/// * **cross-search cache** — an optional shared [`EvalCache`] answers
+///   genomes any earlier search under the same scope already measured.
+///   Cache hits carry no [`MeasureState`], so children of a hit take the
+///   full path once and rebuild delta state from there.
+///
+/// Neither layer changes any Measurement, the GA trajectory, or the
+/// simulated cost ledger.
+struct PlanEvaluator<'a> {
+    plan: &'a MeasurementPlan,
+    eligible: &'a [LoopId],
+    loop_count: usize,
+    scope: EvalScope,
+    cache: Option<&'a EvalCache>,
+    hits: AtomicUsize,
+}
+
+impl PlanEvaluator<'_> {
+    /// Expand a compact genome (one bit per eligible loop) to full pattern
+    /// bits.  PatternBits is Copy — no allocation on the hot path.
+    fn expand(&self, genome: &Genome) -> PatternBits {
+        let mut bits = PatternBits::zeros(self.loop_count);
+        for gi in genome.ones() {
+            bits.set(self.eligible[gi].0, true);
+        }
+        bits
+    }
+
+    /// One shared-cache probe (compact genomes key the cache; the scope's
+    /// app fingerprint pins the eligible-loop mapping).
+    fn cached(
+        &self,
+        genome: &Genome,
+    ) -> Option<(Measurement, Option<(PatternBits, MeasureState)>)> {
+        let m = self.cache?.lookup(self.scope, genome)?;
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some((m, None))
+    }
+
+    /// Full sparse measurement + publish to the shared cache.
+    fn full(&self, genome: &Genome) -> (Measurement, Option<(PatternBits, MeasureState)>) {
+        let bits = self.expand(genome);
+        let (m, state) = self.plan.measure_with_state(&bits);
+        if let Some(cache) = self.cache {
+            cache.store(self.scope, genome, m);
+        }
+        (m, Some((bits, state)))
+    }
+}
+
+impl Evaluator for PlanEvaluator<'_> {
+    /// Expanded bits + chunk partials; None when the measurement came
+    /// from the shared cache (no state to hand to offspring).
+    type State = Option<(PatternBits, MeasureState)>;
+
+    fn measure(&self, genome: &Genome) -> (Measurement, Self::State) {
+        self.cached(genome).unwrap_or_else(|| self.full(genome))
+    }
+
+    fn measure_delta(
+        &self,
+        _parent: &Genome,
+        parent_m: &Measurement,
+        parent_state: &Self::State,
+        child: &Genome,
+    ) -> (Measurement, Self::State) {
+        if let Some(hit) = self.cached(child) {
+            return hit;
+        }
+        let Some((pbits, pstate)) = parent_state else { return self.full(child) };
+        let cbits = self.expand(child);
+        let flips = pbits.xor(&cbits);
+        let (m, state) = self.plan.measure_delta(pbits, parent_m, pstate, &flips);
+        if let Some(cache) = self.cache {
+            cache.store(self.scope, child, m);
+        }
+        (m, Some((cbits, state)))
+    }
+
+    fn cache_hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
     }
 }
 
@@ -63,6 +157,19 @@ pub(crate) fn search_with_plan(
     plan: &MeasurementPlan,
     config: GaConfig,
 ) -> LoopOffloadOutcome {
+    search_with_plan_cached(app, plan, config, None)
+}
+
+/// [`search_with_plan`] consulting an optional cross-search [`EvalCache`]:
+/// genomes already measured by any earlier search under the same
+/// (app, device, config) scope are answered from the cache — bit-identical
+/// measurements, full simulated cost still charged.
+pub(crate) fn search_with_plan_cached(
+    app: &Application,
+    plan: &MeasurementPlan,
+    config: GaConfig,
+    evals: Option<&EvalCache>,
+) -> LoopOffloadOutcome {
     let eligible = eligible(app);
     let genome_len = eligible.len();
     if genome_len == 0 {
@@ -70,21 +177,19 @@ pub(crate) fn search_with_plan(
     }
     let baseline_seconds = crate::devices::CpuSingle::default().app_seconds(app);
 
-    // Expand a compact genome (one bit per eligible loop) to full pattern
-    // bits.  PatternBits is Copy — no allocation on the hot path.
-    let expand = |genome: &Genome| -> PatternBits {
-        let mut bits = PatternBits::zeros(app.loop_count());
-        for gi in genome.ones() {
-            bits.set(eligible[gi].0, true);
-        }
-        bits
+    let evaluator = PlanEvaluator {
+        plan,
+        eligible: &eligible,
+        loop_count: app.loop_count(),
+        scope: plan.eval_scope(),
+        cache: evals,
+        hits: AtomicUsize::new(0),
     };
-    let evaluate = |genome: &Genome| plan.measure(&expand(genome));
-    let result = Ga { config, evaluate: &evaluate }.run(genome_len);
+    let result = config.search(&evaluator, genome_len);
 
     let best = result
         .best
-        .map(|(genome, m)| (OffloadPattern::from_packed(expand(&genome)), m));
+        .map(|(genome, m)| (OffloadPattern::from_packed(evaluator.expand(&genome)), m));
     // Keep the best only if it actually beats running untouched.
     let best = best.filter(|(_, m)| m.seconds < baseline_seconds);
     LoopOffloadOutcome {
@@ -94,6 +199,7 @@ pub(crate) fn search_with_plan(
         simulated_cost_s: result.simulated_cost_s,
         history: result.history,
         evaluations: result.evaluations,
+        cache_hits: result.cache_hits,
     }
 }
 

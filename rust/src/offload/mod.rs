@@ -24,6 +24,10 @@ pub struct LoopOffloadOutcome {
     pub simulated_cost_s: f64,
     pub history: Vec<GenStats>,
     pub evaluations: usize,
+    /// Measurements answered by the cross-search [`crate::devices::EvalCache`]
+    /// (0 when the search ran without one).  Hits still pay full simulated
+    /// cost — the cache saves wall-clock only.
+    pub cache_hits: usize,
 }
 
 impl LoopOffloadOutcome {

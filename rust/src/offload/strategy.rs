@@ -20,7 +20,7 @@ use std::sync::Arc;
 
 use crate::analysis::dependence;
 use crate::app::ir::Application;
-use crate::devices::{DeviceKind, PlanCache, Testbed};
+use crate::devices::{DeviceKind, EvalCache, PlanCache, Testbed};
 use crate::ga::GaConfig;
 
 use super::fpga_loop::{self, FpgaSearchConfig};
@@ -40,6 +40,9 @@ pub struct TrialCtx<'a> {
     pub ga_seed: u64,
     /// Concurrent measurements per GA generation (wall clock only).
     pub ga_workers: usize,
+    /// Island-model sub-populations per GA search (1 = the paper's
+    /// single-population GA; see `GaConfig::islands`).
+    pub ga_islands: usize,
     /// Narrowing parameters for the FPGA loop search.
     pub fpga_cfg: FpgaSearchConfig,
     /// Suffix for loop-trial details when function-block library time is
@@ -48,6 +51,11 @@ pub struct TrialCtx<'a> {
     /// Shared measurement-plan cache: one compile per (app, device) pair
     /// across the whole run — or the whole batch (see coordinator/batch.rs).
     pub plans: &'a PlanCache,
+    /// Shared cross-search measurement cache: genomes any earlier search
+    /// measured under the same (app, device, config) scope are answered
+    /// without re-running the kernel.  Wall-clock only — measurements are
+    /// bit-identical and the simulated ledger still charges every one.
+    pub evals: &'a EvalCache,
 }
 
 /// What one trial produced, device- and method-agnostic.  `seconds` is the
@@ -69,6 +77,11 @@ pub struct TrialOutcome {
     pub pattern: Option<OffloadPattern>,
     /// Distinct patterns measured.
     pub evaluations: usize,
+    /// Measurements answered by the shared [`EvalCache`].  Wall-clock
+    /// telemetry only: NOT serialized into golden trial records, because
+    /// under concurrent runs the hit split depends on timing (the
+    /// measurements themselves never do).
+    pub cache_hits: usize,
     /// Function-block outcome, when the method is a block replacement (the
     /// executor tracks the best one for the code-subtraction step).
     pub fb: Option<FbOffloadOutcome>,
@@ -94,6 +107,7 @@ impl TrialOutcome {
             detail,
             pattern: out.best.as_ref().map(|(p, _)| *p),
             evaluations: out.evaluations,
+            cache_hits: out.cache_hits,
             fb: None,
         }
     }
@@ -141,6 +155,7 @@ impl OffloadStrategy for FunctionBlockStrategy {
             detail,
             pattern: None,
             evaluations: out.replaced.len(),
+            cache_hits: 0,
             fb: Some(out),
         }
     }
@@ -173,10 +188,11 @@ impl OffloadStrategy for GaLoopStrategy {
         let cfg = GaConfig {
             seed: ctx.ga_seed,
             workers: ctx.ga_workers,
+            islands: ctx.ga_islands,
             ..GaConfig::sized_for(eligible)
         };
         let plan = ctx.plans.plan(app, ctx.testbed.device(device));
-        let out = manycore_loop::search_with_plan(app, &plan, cfg);
+        let out = manycore_loop::search_with_plan_cached(app, &plan, cfg, Some(ctx.evals));
         TrialOutcome::from_loop_search(out, ctx.fb_note)
     }
 }
@@ -202,7 +218,7 @@ impl OffloadStrategy for FpgaLoopStrategy {
 
     fn execute(&self, app: &Application, device: DeviceKind, ctx: &TrialCtx) -> TrialOutcome {
         let plan = ctx.plans.plan(app, ctx.testbed.device(device));
-        let out = fpga_loop::search_with_plan(app, &plan, ctx.fpga_cfg);
+        let out = fpga_loop::search_with_plan_cached(app, &plan, ctx.fpga_cfg, Some(ctx.evals));
         TrialOutcome::from_loop_search(out, ctx.fb_note)
     }
 }
@@ -274,15 +290,22 @@ mod tests {
     use crate::app::ir::Dependence;
     use crate::app::workloads::extra;
 
-    fn ctx<'a>(tb: &'a Testbed, db: &'a BlockDb, plans: &'a PlanCache) -> TrialCtx<'a> {
+    fn ctx<'a>(
+        tb: &'a Testbed,
+        db: &'a BlockDb,
+        plans: &'a PlanCache,
+        evals: &'a EvalCache,
+    ) -> TrialCtx<'a> {
         TrialCtx {
             testbed: tb,
             db,
             ga_seed: 0xC0FFEE,
             ga_workers: 2,
+            ga_islands: 1,
             fpga_cfg: FpgaSearchConfig::default(),
             fb_note: "",
             plans,
+            evals,
         }
     }
 
@@ -311,8 +334,10 @@ mod tests {
         let tb = Testbed::default();
         let db = BlockDb::default();
         let plans = PlanCache::new();
+        let evals = EvalCache::new();
         let app = extra::gemm_call_app(1024);
-        let out = FunctionBlockStrategy.execute(&app, DeviceKind::ManyCore, &ctx(&tb, &db, &plans));
+        let out = FunctionBlockStrategy
+            .execute(&app, DeviceKind::ManyCore, &ctx(&tb, &db, &plans, &evals));
         let direct = function_block::offload(&app, &tb.manycore, &db);
         assert!(out.offloaded);
         assert_eq!(out.seconds.to_bits(), direct.seconds.to_bits());
@@ -326,11 +351,13 @@ mod tests {
         let tb = Testbed::default();
         let db = BlockDb::default();
         let plans = PlanCache::new();
+        let evals = EvalCache::new();
         let app = extra::vecadd(1 << 22);
-        let c = ctx(&tb, &db, &plans);
+        let c = ctx(&tb, &db, &plans, &evals);
         let out = GaLoopStrategy.execute(&app, DeviceKind::ManyCore, &c);
         let eligible = dependence::eligible(&app).len();
-        let cfg = GaConfig { seed: c.ga_seed, workers: c.ga_workers, ..GaConfig::sized_for(eligible) };
+        let cfg =
+            GaConfig { seed: c.ga_seed, workers: c.ga_workers, ..GaConfig::sized_for(eligible) };
         let direct = manycore_loop::search(&app, &tb.manycore, cfg);
         assert_eq!(out.seconds.to_bits(), direct.seconds().to_bits());
         assert_eq!(out.evaluations, direct.evaluations);

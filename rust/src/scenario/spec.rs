@@ -34,7 +34,7 @@ use crate::app::{parser, workloads};
 use crate::coordinator::{
     BatchOffloader, MixedOffloader, SchedulePolicy, TrialConcurrency, UserRequirements,
 };
-use crate::devices::{EnvSpec, Testbed};
+use crate::devices::{EnvSpec, EvalCache, PlanCache, Testbed};
 use crate::util::json::Json;
 
 use super::ScenarioOutcome;
@@ -310,6 +310,22 @@ impl ScenarioSpec {
     /// Run with an explicit trial concurrency (the golden harness replays
     /// every scenario under both modes and asserts identical outcomes).
     pub fn run_with(&self, concurrency: TrialConcurrency) -> Result<ScenarioOutcome> {
+        self.run_with_caches(concurrency, &PlanCache::new(), &EvalCache::new())
+    }
+
+    /// [`Self::run_with`] through caller-owned caches.  The sweep runner
+    /// shares one [`PlanCache`] and one [`EvalCache`] across every
+    /// scenario, so fleets that reuse an (application, device) pair skip
+    /// recompiling its plan, and scenarios replaying an identical search
+    /// (same app, device and GA config fingerprint) answer measurements
+    /// from the cache.  Wall-clock only: outcomes are bit-identical to a
+    /// fresh-cache run.
+    pub fn run_with_caches(
+        &self,
+        concurrency: TrialConcurrency,
+        plans: &PlanCache,
+        evals: &EvalCache,
+    ) -> Result<ScenarioOutcome> {
         let apps = self.applications()?;
         let mut batcher = BatchOffloader::default();
         batcher.offloader = self.offloader()?;
@@ -318,7 +334,7 @@ impl ScenarioSpec {
         // any worker count).
         batcher.offloader.workers = 1;
         batcher.offloader.concurrency = concurrency;
-        let batch = batcher.run(&apps);
+        let batch = batcher.run_with_caches(&apps, plans, evals);
         Ok(ScenarioOutcome {
             name: self.name.clone(),
             fleet: self.devices.fleet_label(),

@@ -15,6 +15,8 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::devices::{EvalCache, PlanCache};
+
 use super::spec::ScenarioSpec;
 use super::{ScenarioOutcome, SweepOutcome};
 
@@ -56,12 +58,23 @@ pub fn load_dir(dir: &Path) -> Result<Vec<Scenario>> {
 
 /// Run every scenario, in order.  Each scenario is internally concurrent
 /// (its applications fan out on the shared worker pool); scenarios run
-/// one after another so reports and the pool stay deterministic.
+/// one after another so reports and the pool stay deterministic.  One
+/// [`PlanCache`] and one [`EvalCache`] are shared across the whole sweep:
+/// scenarios exercising the same (application, device) pair reuse its
+/// compiled plan, and scenarios replaying an identical search answer
+/// measurements from the cache — wall-clock only, every outcome stays
+/// bit-identical to an isolated run.
 pub fn run_scenarios(scenarios: &[Scenario]) -> Result<SweepOutcome> {
     let t0 = Instant::now();
+    let plans = PlanCache::new();
+    let evals = EvalCache::new();
     let outcomes = scenarios
         .iter()
-        .map(|s| s.spec.run().map_err(|e| anyhow!("{}: {e}", s.path.display())))
+        .map(|s| {
+            s.spec
+                .run_with_caches(s.spec.concurrency, &plans, &evals)
+                .map_err(|e| anyhow!("{}: {e}", s.path.display()))
+        })
         .collect::<Result<Vec<ScenarioOutcome>>>()?;
     Ok(SweepOutcome { scenarios: outcomes, wall_seconds: t0.elapsed().as_secs_f64() })
 }
@@ -105,6 +118,30 @@ mod tests {
         assert_eq!(sweep.scenarios[1].batch.outcomes[0].trials.len(), 0);
         assert_eq!(sweep.scenarios[0].batch.outcomes[0].trials.len(), 2);
         assert_eq!(sweep.apps(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Two scenarios with the same fleet, app and seed: the second replays
+    /// the first's GA trajectories, so the shared sweep-wide caches answer
+    /// every plan compile and every measurement — and the outcomes are
+    /// bit-identical anyway.
+    #[test]
+    fn sweep_shares_caches_across_scenarios() {
+        let dir = tmp_dir("shared");
+        let body = r#"{"devices": {"manycore": {}},
+            "applications": [{"workload": "vecadd", "n": 1048576}]}"#;
+        std::fs::write(dir.join("a-first.json"), body).unwrap();
+        std::fs::write(dir.join("b-second.json"), body).unwrap();
+        let sweep = run_dir(&dir).unwrap();
+        let (a, b) = (&sweep.scenarios[0].batch, &sweep.scenarios[1].batch);
+        assert!(a.eval_misses > 0, "cold sweep caches must miss");
+        assert_eq!(b.eval_misses, 0, "second scenario must be answered entirely from cache");
+        assert!(b.eval_hits > 0);
+        assert_eq!(b.plan_compiles, 0, "plans are shared sweep-wide");
+        let chosen = |o: &crate::coordinator::BatchOutcome| {
+            o.outcomes[0].chosen.as_ref().map(|c| (c.kind, c.seconds.to_bits()))
+        };
+        assert_eq!(chosen(a), chosen(b), "cache reuse must not change outcomes");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

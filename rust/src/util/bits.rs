@@ -172,6 +172,30 @@ impl PatternBits {
         out
     }
 
+    /// Word-wise XOR (lengths must match).  The delta measurement path
+    /// uses this to recover the flipped-bit set between a GA parent and
+    /// its offspring — four word XORs, no per-bit walk.
+    #[inline]
+    pub fn xor(&self, other: &Self) -> Self {
+        debug_assert_eq!(self.len, other.len);
+        let mut out = *self;
+        for w in 0..WORDS {
+            out.words[w] ^= other.words[w];
+        }
+        out
+    }
+
+    /// Hamming distance: number of positions where the two bitsets differ.
+    #[inline]
+    pub fn hamming(&self, other: &Self) -> usize {
+        debug_assert_eq!(self.len, other.len);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a ^ b).count_ones() as usize)
+            .sum()
+    }
+
     /// Indices of set bits, ascending.
     pub fn ones(&self) -> Ones<'_> {
         Ones { bits: self, w: 0, cur: self.words[0] }
@@ -337,6 +361,20 @@ mod tests {
             let unset: Vec<usize> = (0..len).filter(|&i| !b.get(i)).collect();
             assert_eq!(c.ones().collect::<Vec<_>>(), unset);
         }
+    }
+
+    #[test]
+    fn xor_and_hamming_report_flipped_bits() {
+        let a = PatternBits::from_ones(200, [0, 63, 64, 199]);
+        let b = PatternBits::from_ones(200, [63, 65, 199]);
+        let d = a.xor(&b);
+        assert_eq!(d.ones().collect::<Vec<_>>(), vec![0, 64, 65]);
+        assert_eq!(d.len(), 200);
+        assert_eq!(a.hamming(&b), 3);
+        assert_eq!(a.hamming(&a), 0);
+        assert!(a.xor(&a).none_set());
+        // xor is its own inverse: a ^ (a ^ b) == b.
+        assert_eq!(a.xor(&d), b);
     }
 
     #[test]

@@ -12,7 +12,11 @@ use mixoff::coordinator::{
     remap_pattern, MixedOffloader, Schedule, SchedulePolicy, TrialConcurrency, TrialKind,
     UserRequirements,
 };
-use mixoff::devices::{DeviceKind, DeviceModel, DeviceSpec, EnvSpec, Testbed};
+use mixoff::devices::{
+    DeviceKind, DeviceModel, DeviceSpec, EnvSpec, EvalCache, PlanCache, Testbed,
+};
+use mixoff::ga::GaConfig;
+use mixoff::offload::manycore_loop;
 use mixoff::offload::pattern::OffloadPattern;
 use mixoff::scenario::{AppSpec, ScenarioSpec};
 use mixoff::util::bits::PatternBits;
@@ -252,6 +256,162 @@ fn sparse_dense_direct_agree_at_extreme_densities() {
                     );
                 }
             }
+        }
+    });
+}
+
+/// The delta kernel's contract: walking a random flip chain (1-bit,
+/// 2-bit and many-bit steps, each reusing the previous step's
+/// [`MeasureState`]) returns `Measurement`s *bit-identical* to both the
+/// full sparse kernel and the direct `DeviceModel::measure`
+/// specification, for random apps, across all four device models.  This
+/// is exactly the shape `ga::engine` produces: offspring chains where
+/// every measurement's state seeds the next delta.
+#[test]
+fn delta_measure_is_bit_identical_to_sparse_and_direct() {
+    let tb = Testbed::default();
+    forall(50, |rng| {
+        let app = random_app(rng);
+        let n = app.loop_count();
+        let devices: [&dyn DeviceModel; 4] = [&tb.cpu, &tb.manycore, &tb.gpu, &tb.fpga];
+        let plans = [
+            tb.cpu.compile_plan(&app),
+            tb.manycore.compile_plan(&app),
+            tb.gpu.compile_plan(&app),
+            tb.fpga.compile_plan(&app),
+        ];
+        for (dev, plan) in devices.iter().zip(&plans) {
+            let mut bits = PatternBits::zeros(n);
+            for i in 0..n {
+                if rng.chance(0.25) {
+                    bits.set(i, true);
+                }
+            }
+            let (mut m, mut state) = plan.measure_with_state(&bits);
+            for step in 0..8 {
+                // Steps cycle through small GA-like deltas and the
+                // occasional large one (a crossover far from its parent).
+                let flip_count = match step % 3 {
+                    0 => 1,
+                    1 => 1 + rng.below(2),
+                    _ => 1 + rng.below(n),
+                };
+                let mut flips = PatternBits::zeros(n);
+                for _ in 0..flip_count {
+                    flips.set(rng.below(n), true);
+                }
+                let child = bits.xor(&flips);
+                let (dm, dstate) = plan.measure_delta(&bits, &m, &state, &flips);
+                let sparse = plan.measure(&child);
+                let direct = dev.measure(&app, &OffloadPattern::from_packed(child));
+                for (label, r) in [("sparse", sparse), ("direct", direct)] {
+                    assert_eq!(
+                        dm.seconds.to_bits(),
+                        r.seconds.to_bits(),
+                        "{:?} step {step}: delta {} != {label} {}",
+                        plan.kind(),
+                        dm.seconds,
+                        r.seconds
+                    );
+                    assert_eq!(dm.valid, r.valid, "{:?} {label} validity", plan.kind());
+                    assert_eq!(
+                        dm.setup_seconds.to_bits(),
+                        r.setup_seconds.to_bits(),
+                        "{:?} {label} setup",
+                        plan.kind()
+                    );
+                }
+                bits = child;
+                m = dm;
+                state = dstate;
+            }
+        }
+    });
+}
+
+/// With a single island the migration interval is inert: the island-model
+/// machinery must reproduce the single-population search *exactly* —
+/// same best pattern and measurement, same evaluation count, same cost
+/// ledger, same per-generation history — for any interval, on random
+/// apps under a fixed seed.  Multi-island searches must be deterministic
+/// and keep the bookkeeping invariant `evaluations == Σ new_evaluations`.
+#[test]
+fn island_ga_single_island_matches_and_multi_island_is_deterministic() {
+    let tb = Testbed::default();
+    forall(5, |rng| {
+        let app = random_app(rng);
+        let seed = rng.next_u64();
+        let base = GaConfig { population: 8, generations: 6, seed, ..Default::default() };
+        let digest = |o: &mixoff::offload::LoopOffloadOutcome| {
+            (
+                o.best.as_ref().map(|(p, m)| (p.bits, m.seconds.to_bits(), m.valid)),
+                o.evaluations,
+                o.simulated_cost_s.to_bits(),
+                o.history
+                    .iter()
+                    .map(|g| (g.best_seconds.to_bits(), g.new_evaluations))
+                    .collect::<Vec<_>>(),
+            )
+        };
+        let reference = manycore_loop::search(&app, &tb.manycore, base);
+        for interval in [1, 3, 1000] {
+            let cfg = GaConfig { migration_interval: interval, ..base };
+            let out = manycore_loop::search(&app, &tb.manycore, cfg);
+            assert_eq!(
+                digest(&out),
+                digest(&reference),
+                "islands=1 must ignore migration_interval={interval}"
+            );
+        }
+        for islands in [2, 3] {
+            let cfg = GaConfig { islands, migration_interval: 2, ..base };
+            let a = manycore_loop::search(&app, &tb.manycore, cfg);
+            let b = manycore_loop::search(&app, &tb.manycore, cfg);
+            assert_eq!(digest(&a), digest(&b), "islands={islands} must be deterministic");
+            let summed: usize = a.history.iter().map(|g| g.new_evaluations).sum();
+            assert_eq!(a.evaluations, summed, "islands={islands} bookkeeping");
+            if let Some((p, m)) = &a.best {
+                assert!(m.valid);
+                assert!(p.valid(&app), "islands={islands} best must be a valid pattern");
+            }
+        }
+    });
+}
+
+/// Cross-search eval-cache transparency: running the full mixed flow
+/// through shared caches — cold, then fully warm — yields outcomes
+/// bit-identical to a fresh-cache run.  The cache may only ever change
+/// wall clock, never a trial record, the ledger or the choice.
+#[test]
+fn shared_eval_cache_preserves_outcomes_bit_for_bit() {
+    forall(4, |rng| {
+        let app = random_app(rng);
+        let mo = MixedOffloader { ga_seed: rng.next_u64(), ..MixedOffloader::default() };
+        let fresh = mo.run(&app);
+        let plans = PlanCache::new();
+        let evals = EvalCache::new();
+        let cold = mo.run_with_caches(&app, &plans, &evals);
+        let warm = mo.run_with_caches(&app, &plans, &evals);
+        for (label, out) in [("cold", &cold), ("warm", &warm)] {
+            assert_eq!(out.trials.len(), fresh.trials.len(), "{label}");
+            for (a, b) in fresh.trials.iter().zip(&out.trials) {
+                assert_eq!(a.kind, b.kind, "{label}");
+                assert_eq!(a.skipped, b.skipped, "{label} {:?}", a.kind.label());
+                assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "{label}");
+                assert_eq!(a.cost_s.to_bits(), b.cost_s.to_bits(), "{label} cost");
+                assert_eq!(a.pattern, b.pattern, "{label}");
+                assert_eq!(a.detail, b.detail, "{label}");
+            }
+            assert_eq!(
+                fresh.chosen.as_ref().map(|c| (c.kind, c.seconds.to_bits())),
+                out.chosen.as_ref().map(|c| (c.kind, c.seconds.to_bits())),
+                "{label} choice"
+            );
+            assert_eq!(
+                fresh.clock.total_seconds().to_bits(),
+                out.clock.total_seconds().to_bits(),
+                "{label} ledger"
+            );
         }
     });
 }
