@@ -1,0 +1,120 @@
+//! Streaming record pipeline vs the buffered sweep, on one in-code grid
+//! (many-core fleet, vecadd, 24 seeds) — proves streaming is free:
+//! throughput within noise of the buffered path while the resident
+//! record count stays at the bounded window, plus the warden ablation.
+//!
+//! Emits `BENCH_stream.json` (see EXPERIMENTS.md #Perf):
+//!   * `sweep.scenarios_per_sec.{buffered,streamed}` and their ratio
+//!     (`stream.throughput_ratio`, target >= 0.95);
+//!   * `stream.total_records` vs `stream.peak_records_resident` — the
+//!     O(window) memory claim, measured;
+//!   * `stream.warden.evaluations_saved_pct` — `FirstSatisfying` vs a
+//!     wardenless run of the same satisfied grid (target >= 30%).
+
+mod support;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use mixoff::coordinator::{SchedulePolicy, TrialConcurrency, UserRequirements};
+use mixoff::devices::{DeviceSpec, EnvSpec};
+use mixoff::record::{
+    JsonlSink, MemorySink, NullSink, RecordSink, SharedBuffer, TeeSink, Warden, WardenSet,
+};
+use mixoff::scenario::grid::Calibration;
+use mixoff::scenario::{self, AppSpec, GridSpec, Scenario};
+
+fn grid(seeds: u64, target: Option<f64>) -> GridSpec {
+    GridSpec {
+        name: "streambench".into(),
+        description: String::new(),
+        concurrency: TrialConcurrency::Sequential,
+        requirements: UserRequirements { target_improvement: target, max_price_usd: None },
+        fleets: vec![EnvSpec {
+            cpu: DeviceSpec::default(),
+            manycore: Some(DeviceSpec::default()),
+            gpu: None,
+            fpga: None,
+        }],
+        calibrations: vec![Calibration::new()],
+        price_scales: vec![1.0],
+        workloads: vec![vec![AppSpec::Named {
+            workload: "vecadd".into(),
+            n: Some(1 << 20),
+            iters: None,
+        }]],
+        seeds: (0..seeds).collect(),
+        schedules: vec![SchedulePolicy::Paper],
+    }
+}
+
+fn main() {
+    let g = grid(24, None);
+    let cells: Vec<Scenario> = g
+        .scenarios()
+        .map(|c| Scenario { path: PathBuf::from(format!("{}.json", c.spec.name)), spec: c.spec })
+        .collect();
+    support::metric("stream.grid_cells", g.len() as f64, "scenarios", None);
+
+    support::bench("stream.buffered_sweep", 3, || {
+        let s = scenario::run_scenarios(&cells).expect("buffered sweep runs");
+        assert_eq!(s.scenarios.len(), cells.len());
+    });
+    support::bench("stream.streamed_sweep", 3, || {
+        let buf = SharedBuffer::new();
+        let sink: Arc<dyn RecordSink> = Arc::new(JsonlSink::to_buffer(&buf));
+        let s = scenario::run_grid(&g, &sink, &WardenSet::default()).expect("streamed sweep runs");
+        sink.close().expect("sink closes clean");
+        assert_eq!(s.scenarios_run, cells.len());
+    });
+
+    let buffered = scenario::run_scenarios(&cells).expect("buffered sweep runs");
+    support::metric(
+        "sweep.scenarios_per_sec.buffered",
+        buffered.scenarios_per_sec(),
+        "scenarios/s",
+        None,
+    );
+
+    let buf = SharedBuffer::new();
+    let mem = Arc::new(MemorySink::bounded(64));
+    let tee: Arc<dyn RecordSink> = Arc::new(TeeSink::new(vec![
+        Arc::new(JsonlSink::to_buffer(&buf)),
+        Arc::clone(&mem) as Arc<dyn RecordSink>,
+    ]));
+    let streamed = scenario::run_grid(&g, &tee, &WardenSet::default()).expect("streamed sweep runs");
+    tee.close().expect("sinks close clean");
+    support::metric(
+        "sweep.scenarios_per_sec.streamed",
+        streamed.scenarios_per_sec(),
+        "scenarios/s",
+        None,
+    );
+    support::metric(
+        "stream.throughput_ratio",
+        streamed.scenarios_per_sec() / buffered.scenarios_per_sec(),
+        "x",
+        None,
+    );
+    support::metric("stream.total_records", mem.total_seen() as f64, "records", None);
+    support::metric("stream.peak_records_resident", mem.peak_resident() as f64, "records", None);
+    support::metric("stream.jsonl_lines", buf.lines().len() as f64, "lines", None);
+
+    // Warden ablation: same grid with a reachable 1.2x target; every
+    // seed's cell satisfies it, so `FirstSatisfying` commits one cell.
+    let satisfied = grid(24, Some(1.2));
+    let null: Arc<dyn RecordSink> = Arc::new(NullSink);
+    let full = scenario::run_grid(&satisfied, &null, &WardenSet::default()).expect("full run");
+    let wardens = WardenSet::new(vec![Warden::FirstSatisfying]);
+    let warded = scenario::run_grid(&satisfied, &null, &wardens).expect("warded run");
+    assert!(warded.stopped.is_some(), "warden must trip on a satisfied grid");
+    support::metric("stream.warden.scenarios_run", warded.scenarios_run as f64, "scenarios", None);
+    support::metric(
+        "stream.warden.evaluations_saved_pct",
+        100.0 * (full.evaluations - warded.evaluations) as f64 / full.evaluations as f64,
+        "%",
+        None,
+    );
+
+    support::finish("stream");
+}

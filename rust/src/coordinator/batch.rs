@@ -123,6 +123,12 @@ impl BatchOutcome {
     pub fn total_verify_hours(&self) -> f64 {
         self.outcomes.iter().map(|o| o.clock.total_hours()).sum()
     }
+
+    /// Distinct patterns measured across the batch (deterministic — the
+    /// warden evaluation budget counts these).
+    pub fn evaluations(&self) -> usize {
+        self.outcomes.iter().map(|o| o.evaluations()).sum()
+    }
 }
 
 impl BatchOffloader {

@@ -32,6 +32,7 @@ pub mod trial;
 
 use std::borrow::Cow;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::app::ir::{Application, LoopId};
 use crate::devices::{pricing, EvalCache, PlanCache, SimClock, Testbed};
@@ -39,6 +40,7 @@ use crate::offload::fpga_loop::FpgaSearchConfig;
 use crate::offload::function_block::{BlockDb, FbOffloadOutcome};
 use crate::offload::pattern::OffloadPattern;
 use crate::offload::strategy::{OffloadStrategy, StrategyRegistry, TrialCtx, TrialOutcome};
+use crate::record::{NullSink, RecordEvent, RecordSink};
 use crate::util::threadpool::WorkerPool;
 
 pub use batch::{BatchOffloader, BatchOutcome};
@@ -95,6 +97,12 @@ impl OffloadOutcome {
     pub fn trial(&self, kind: TrialKind) -> Option<&TrialRecord> {
         self.trials.iter().find(|t| t.kind == kind)
     }
+
+    /// Distinct patterns measured across every trial (deterministic —
+    /// the warden evaluation budget counts these).
+    pub fn evaluations(&self) -> usize {
+        self.trials.iter().map(|t| t.evaluations).sum()
+    }
 }
 
 /// The coordinator.  Owns the simulated verification environment, the
@@ -118,6 +126,12 @@ pub struct MixedOffloader {
     /// Trial-level execution mode (wall clock only — outcomes are
     /// identical either way; see [`TrialConcurrency`]).
     pub concurrency: TrialConcurrency,
+    /// Streaming record sink.  Committed trials and clock charges are
+    /// emitted here *as they commit* (see `record/`); the default
+    /// [`NullSink`] is disabled, so non-streaming runs pay nothing.
+    /// Emission never changes outcomes — records mirror `trials`/`clock`
+    /// exactly, in commit order.
+    pub sink: Arc<dyn RecordSink>,
 }
 
 impl Default for MixedOffloader {
@@ -133,6 +147,7 @@ impl Default for MixedOffloader {
             schedule: Schedule::paper(),
             registry: StrategyRegistry::standard(),
             concurrency: TrialConcurrency::Sequential,
+            sink: Arc::new(NullSink),
         }
     }
 }
@@ -352,6 +367,30 @@ impl MixedOffloader {
         }
     }
 
+    /// Append one committed record to the executor state, mirroring it
+    /// into the streaming sink (commit order == emission order; skipped
+    /// trials emit a Trial event only, executed trials also emit their
+    /// Clock charge).  The sink is checked for `enabled` first, so the
+    /// default [`NullSink`] costs nothing.
+    fn record_trial(&self, app: &Application, st: &mut ExecState<'_>, rec: TrialRecord) {
+        if self.sink.enabled() {
+            self.sink.emit(&RecordEvent::Trial {
+                scenario: String::new(),
+                app: app.name.clone(),
+                record: rec.clone(),
+            });
+            if rec.skipped.is_none() {
+                self.sink.emit(&RecordEvent::Clock {
+                    scenario: String::new(),
+                    app: app.name.clone(),
+                    label: rec.kind.label(),
+                    seconds: rec.cost_s,
+                });
+            }
+        }
+        st.trials.push(rec);
+    }
+
     /// Commit one trial step: apply the skip logic against the *committed*
     /// state, then either take the speculative outcome (staged mode) or
     /// execute in place (sequential mode), charge the clock and update the
@@ -368,16 +407,16 @@ impl MixedOffloader {
         speculated: Option<TrialOutcome>,
     ) {
         if let Some(reason) = self.pre_skip(kind, &st.best_so_far) {
-            st.trials.push(TrialRecord::skipped(*kind, reason, st.baseline));
+            self.record_trial(app, st, TrialRecord::skipped(*kind, reason, st.baseline));
             return;
         }
         let Some(strategy) = self.registry.get(kind.device, kind.method) else {
             let reason = format!("no strategy registered for {}", kind.label());
-            st.trials.push(TrialRecord::skipped(*kind, reason, st.baseline));
+            self.record_trial(app, st, TrialRecord::skipped(*kind, reason, st.baseline));
             return;
         };
         if let Some(reason) = strategy.pre_check(&st.cur_app) {
-            st.trials.push(TrialRecord::skipped(*kind, reason, st.baseline));
+            self.record_trial(app, st, TrialRecord::skipped(*kind, reason, st.baseline));
             return;
         }
 
@@ -398,16 +437,21 @@ impl MixedOffloader {
             Some(mapping) => remap_pattern(app, mapping, p),
             None => *p,
         });
-        st.trials.push(TrialRecord {
-            kind: *kind,
-            skipped: None,
-            seconds,
-            improvement,
-            offloaded: out.offloaded,
-            cost_s: out.cost_s,
-            detail: out.detail,
-            pattern,
-        });
+        self.record_trial(
+            app,
+            st,
+            TrialRecord {
+                kind: *kind,
+                skipped: None,
+                seconds,
+                improvement,
+                offloaded: out.offloaded,
+                cost_s: out.cost_s,
+                evaluations: out.evaluations,
+                detail: out.detail.clone(),
+                pattern,
+            },
+        );
         if out.offloaded {
             // Only pre-subtraction FB results feed `best_fb`: once a
             // SubtractBlocks step has reduced the working code, an FB

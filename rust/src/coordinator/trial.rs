@@ -51,6 +51,12 @@ pub struct TrialRecord {
     pub offloaded: bool,
     /// Simulated verification cost of this trial.
     pub cost_s: f64,
+    /// Distinct patterns this trial measured (0 for skips and
+    /// non-searching methods).  Deterministic for a fixed scenario —
+    /// cache hits and misses count the same — so warden evaluation
+    /// budgets reproduce exactly; deliberately NOT part of the golden
+    /// serialization, which predates it.
+    pub evaluations: usize,
     /// Human-readable outcome summary.
     pub detail: String,
     /// Winning loop pattern, when the method produces one.
@@ -69,6 +75,7 @@ impl TrialRecord {
             improvement: 1.0,
             offloaded: false,
             cost_s: 0.0,
+            evaluations: 0,
             detail: reason,
             pattern: None,
         }

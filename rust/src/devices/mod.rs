@@ -27,7 +27,7 @@ pub use fpga::Fpga;
 pub use gpu::Gpu;
 pub use manycore::ManyCore;
 pub use plan::{EvalCache, EvalScope, MeasureState, MeasurementPlan, PlanCache};
-pub use spec::{DeviceSpec, EnvSpec};
+pub use spec::{default_param, known_params, DeviceSpec, EnvSpec};
 
 /// The three offload destinations plus the single-core baseline.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]

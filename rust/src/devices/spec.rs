@@ -180,6 +180,104 @@ fn entry_label(name: &str, d: Option<&DeviceSpec>) -> String {
     }
 }
 
+const CPU_PARAMS: &[&str] =
+    &["flops", "bw_stream", "bw_strided", "bw_random", "compile_s", "price_usd"];
+const MANYCORE_PARAMS: &[&str] = &[
+    "threads_eff",
+    "bw_par_stream",
+    "bw_par_strided",
+    "bw_par_random",
+    "omp_overhead_s",
+    "compile_s",
+    "price_usd",
+];
+const GPU_PARAMS: &[&str] =
+    &["flops", "bw_dev", "bw_pcie", "launch_s", "compile_s", "hoist_transfers", "price_usd"];
+const FPGA_PARAMS: &[&str] = &[
+    "clock_hz",
+    "flops_per_cycle_per_unit",
+    "unroll",
+    "bw_mem",
+    "bw_pcie",
+    "synthesis_s",
+    "budget_dsps",
+    "budget_alms",
+    "budget_bram_kb",
+    "price_usd",
+];
+
+/// The override keys one device accepts (`"cpu"`, `"manycore"`, `"gpu"`
+/// or `"fpga"`); `None` for unknown device names.  Grid calibration
+/// axes validate against this at parse time.
+pub fn known_params(device: &str) -> Option<&'static [&'static str]> {
+    match device {
+        "cpu" => Some(CPU_PARAMS),
+        "manycore" => Some(MANYCORE_PARAMS),
+        "gpu" => Some(GPU_PARAMS),
+        "fpga" => Some(FPGA_PARAMS),
+        _ => None,
+    }
+}
+
+/// The default-calibration (fig. 3) value of one device parameter —
+/// what a grid calibration multiplier scales when the fleet carries no
+/// explicit override.  Booleans read as 1.0/0.0.
+pub fn default_param(device: &str, key: &str) -> Option<f64> {
+    let tb = Testbed::default();
+    let v = match device {
+        "cpu" => match key {
+            "flops" => tb.cpu.flops,
+            "bw_stream" => tb.cpu.bw_stream,
+            "bw_strided" => tb.cpu.bw_strided,
+            "bw_random" => tb.cpu.bw_random,
+            "compile_s" => tb.cpu.compile_s,
+            "price_usd" => tb.cpu.price_usd,
+            _ => return None,
+        },
+        "manycore" => match key {
+            "threads_eff" => tb.manycore.threads_eff,
+            "bw_par_stream" => tb.manycore.bw_par_stream,
+            "bw_par_strided" => tb.manycore.bw_par_strided,
+            "bw_par_random" => tb.manycore.bw_par_random,
+            "omp_overhead_s" => tb.manycore.omp_overhead_s,
+            "compile_s" => tb.manycore.compile_s,
+            "price_usd" => tb.manycore.price_usd,
+            _ => return None,
+        },
+        "gpu" => match key {
+            "flops" => tb.gpu.flops,
+            "bw_dev" => tb.gpu.bw_dev,
+            "bw_pcie" => tb.gpu.bw_pcie,
+            "launch_s" => tb.gpu.launch_s,
+            "compile_s" => tb.gpu.compile_s,
+            "hoist_transfers" => {
+                if tb.gpu.hoist_transfers {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            "price_usd" => tb.gpu.price_usd,
+            _ => return None,
+        },
+        "fpga" => match key {
+            "clock_hz" => tb.fpga.clock_hz,
+            "flops_per_cycle_per_unit" => tb.fpga.flops_per_cycle_per_unit,
+            "unroll" => tb.fpga.unroll,
+            "bw_mem" => tb.fpga.bw_mem,
+            "bw_pcie" => tb.fpga.bw_pcie,
+            "synthesis_s" => tb.fpga.synthesis_s,
+            "budget_dsps" => tb.fpga.budget.dsps,
+            "budget_alms" => tb.fpga.budget.alms,
+            "budget_bram_kb" => tb.fpga.budget.bram_kb,
+            "price_usd" => tb.fpga.price_usd,
+            _ => return None,
+        },
+        _ => return None,
+    };
+    Some(v)
+}
+
 /// Apply `params` to the fields `set` knows about, rejecting unknown keys.
 fn apply_params(
     device: &str,
@@ -197,92 +295,53 @@ fn apply_params(
 }
 
 fn apply_cpu(c: &mut CpuSingle, params: &BTreeMap<String, f64>) -> Result<()> {
-    apply_params(
-        "cpu",
-        params,
-        &["flops", "bw_stream", "bw_strided", "bw_random", "compile_s", "price_usd"],
-        |k, v| match k {
-            "flops" => c.flops = v,
-            "bw_stream" => c.bw_stream = v,
-            "bw_strided" => c.bw_strided = v,
-            "bw_random" => c.bw_random = v,
-            "compile_s" => c.compile_s = v,
-            _ => c.price_usd = v,
-        },
-    )
+    apply_params("cpu", params, CPU_PARAMS, |k, v| match k {
+        "flops" => c.flops = v,
+        "bw_stream" => c.bw_stream = v,
+        "bw_strided" => c.bw_strided = v,
+        "bw_random" => c.bw_random = v,
+        "compile_s" => c.compile_s = v,
+        _ => c.price_usd = v,
+    })
 }
 
 fn apply_manycore(mc: &mut ManyCore, params: &BTreeMap<String, f64>) -> Result<()> {
-    apply_params(
-        "manycore",
-        params,
-        &[
-            "threads_eff",
-            "bw_par_stream",
-            "bw_par_strided",
-            "bw_par_random",
-            "omp_overhead_s",
-            "compile_s",
-            "price_usd",
-        ],
-        |k, v| match k {
-            "threads_eff" => mc.threads_eff = v,
-            "bw_par_stream" => mc.bw_par_stream = v,
-            "bw_par_strided" => mc.bw_par_strided = v,
-            "bw_par_random" => mc.bw_par_random = v,
-            "omp_overhead_s" => mc.omp_overhead_s = v,
-            "compile_s" => mc.compile_s = v,
-            _ => mc.price_usd = v,
-        },
-    )
+    apply_params("manycore", params, MANYCORE_PARAMS, |k, v| match k {
+        "threads_eff" => mc.threads_eff = v,
+        "bw_par_stream" => mc.bw_par_stream = v,
+        "bw_par_strided" => mc.bw_par_strided = v,
+        "bw_par_random" => mc.bw_par_random = v,
+        "omp_overhead_s" => mc.omp_overhead_s = v,
+        "compile_s" => mc.compile_s = v,
+        _ => mc.price_usd = v,
+    })
 }
 
 fn apply_gpu(g: &mut Gpu, params: &BTreeMap<String, f64>) -> Result<()> {
-    apply_params(
-        "gpu",
-        params,
-        &["flops", "bw_dev", "bw_pcie", "launch_s", "compile_s", "hoist_transfers", "price_usd"],
-        |k, v| match k {
-            "flops" => g.flops = v,
-            "bw_dev" => g.bw_dev = v,
-            "bw_pcie" => g.bw_pcie = v,
-            "launch_s" => g.launch_s = v,
-            "compile_s" => g.compile_s = v,
-            "hoist_transfers" => g.hoist_transfers = v != 0.0,
-            _ => g.price_usd = v,
-        },
-    )
+    apply_params("gpu", params, GPU_PARAMS, |k, v| match k {
+        "flops" => g.flops = v,
+        "bw_dev" => g.bw_dev = v,
+        "bw_pcie" => g.bw_pcie = v,
+        "launch_s" => g.launch_s = v,
+        "compile_s" => g.compile_s = v,
+        "hoist_transfers" => g.hoist_transfers = v != 0.0,
+        _ => g.price_usd = v,
+    })
 }
 
 fn apply_fpga(f: &mut Fpga, params: &BTreeMap<String, f64>) -> Result<()> {
-    apply_params(
-        "fpga",
-        params,
-        &[
-            "clock_hz",
-            "flops_per_cycle_per_unit",
-            "unroll",
-            "bw_mem",
-            "bw_pcie",
-            "synthesis_s",
-            "budget_dsps",
-            "budget_alms",
-            "budget_bram_kb",
-            "price_usd",
-        ],
-        |k, v| match k {
-            "clock_hz" => f.clock_hz = v,
-            "flops_per_cycle_per_unit" => f.flops_per_cycle_per_unit = v,
-            "unroll" => f.unroll = v,
-            "bw_mem" => f.bw_mem = v,
-            "bw_pcie" => f.bw_pcie = v,
-            "synthesis_s" => f.synthesis_s = v,
-            "budget_dsps" => f.budget.dsps = v,
-            "budget_alms" => f.budget.alms = v,
-            "budget_bram_kb" => f.budget.bram_kb = v,
-            _ => f.price_usd = v,
-        },
-    )
+    apply_params("fpga", params, FPGA_PARAMS, |k, v| match k {
+        "clock_hz" => f.clock_hz = v,
+        "flops_per_cycle_per_unit" => f.flops_per_cycle_per_unit = v,
+        "unroll" => f.unroll = v,
+        "bw_mem" => f.bw_mem = v,
+        "bw_pcie" => f.bw_pcie = v,
+        "synthesis_s" => f.synthesis_s = v,
+        "budget_dsps" => f.budget.dsps = v,
+        "budget_alms" => f.budget.alms = v,
+        "budget_bram_kb" => f.budget.bram_kb = v,
+        _ => f.price_usd = v,
+    })
 }
 
 impl Testbed {
@@ -370,6 +429,24 @@ mod tests {
         let j = Json::parse(r#"{"gpu": {"count": 0}}"#).unwrap();
         let e = EnvSpec::parse(&j).unwrap_err().to_string();
         assert!(e.contains("positive integer"), "{e}");
+    }
+
+    /// Every advertised override key must have a readable default — the
+    /// grid calibration axis multiplies `default_param` values, so a key
+    /// in `known_params` without a default would silently no-op.
+    #[test]
+    fn every_known_param_has_a_default_value() {
+        for device in ["cpu", "manycore", "gpu", "fpga"] {
+            for key in known_params(device).unwrap() {
+                assert!(
+                    default_param(device, key).is_some(),
+                    "{device}.{key} has no default value"
+                );
+            }
+        }
+        assert!(known_params("tpu").is_none());
+        assert!(default_param("gpu", "flopz").is_none());
+        assert_eq!(default_param("gpu", "price_usd"), Some(Testbed::default().gpu.price_usd));
     }
 
     #[test]

@@ -26,6 +26,7 @@ pub mod coordinator;
 pub mod devices;
 pub mod ga;
 pub mod offload;
+pub mod record;
 pub mod report;
 pub mod runtime;
 pub mod scenario;
@@ -37,6 +38,12 @@ pub use coordinator::{
     TrialConcurrency, UserRequirements,
 };
 pub use devices::{DeviceKind, EnvSpec, PlanCache, Testbed};
-pub use scenario::{Scenario, ScenarioOutcome, ScenarioSpec, SweepOutcome};
+pub use record::{
+    CsvSink, JsonlSink, MemorySink, NullSink, RecordEvent, RecordSink, SharedBuffer, StdoutSink,
+    TeeSink, Warden, WardenSet,
+};
+pub use scenario::{
+    GridSpec, Scenario, ScenarioOutcome, ScenarioSpec, StreamOutcome, SweepOutcome,
+};
 pub use offload::pattern::OffloadPattern;
 pub use offload::strategy::{OffloadStrategy, StrategyRegistry, TrialCtx, TrialOutcome};

@@ -13,6 +13,9 @@
 //! Common options: --target <improvement>, --max-price <usd>, --seed <n>,
 //! --json, --timing.
 
+use std::path::Path;
+use std::sync::Arc;
+
 use anyhow::{anyhow, bail, Result};
 
 use mixoff::analysis::{intensity, Profile};
@@ -21,8 +24,10 @@ use mixoff::codegen;
 use mixoff::coordinator::{BatchOffloader, MixedOffloader, TrialConcurrency, UserRequirements};
 use mixoff::devices::{DeviceModel, Testbed};
 use mixoff::offload::function_block::BlockDb;
+use mixoff::record::{CsvSink, JsonlSink, NullSink, RecordSink, StdoutSink, Warden, WardenSet};
 use mixoff::report;
 use mixoff::runtime::{ResultChecker, Runtime};
+use mixoff::scenario::StreamOutcome;
 use mixoff::util::cli::Args;
 
 fn main() {
@@ -85,6 +90,11 @@ usage: mixoff <command> [options]
                         fleet, apps, requirements, schedule, seed as
                         data; see scenarios/ and DESIGN.md) and render
                         the per-scenario comparison table
+  sweep --grid <file>   lazily expand a grid spec's axis cross-product
+                        (fleets x calibrations x price_scales x
+                        workloads x seeds x schedules; see
+                        scenarios/grids/) through the constant-memory
+                        streaming runner
   figure4 [--timing]    reproduce the paper's fig. 4 table
   inspect <workload>    loop table, hot spots, FB detection
   devices               simulated verification environment (fig. 3)
@@ -95,6 +105,13 @@ options: --target <x> --max-price <usd> --seed <n> --json --timing
         --workers <n> (batch: applications in flight at once)
         --trial-concurrency <staged|sequential> (default staged: each
           dependency stage's trials run in parallel; outcomes identical)
+sweep streaming options:
+        --sink <path>  stream typed records as the sweep runs: `-` for
+          stdout, `*.csv` for fixed-column CSV, else JSONL (a sink or
+          any warden also switches `sweep <dir>` to the streaming runner)
+        wardens (early exit, checked between scenarios): --max-scenarios
+          <n> --max-evals <n> --max-wall <s> --stop-on-satisfying
+          --converge-window <n>
 "#;
 
 fn cmd_offload(args: &Args) -> Result<()> {
@@ -156,12 +173,84 @@ fn cmd_batch(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The record sink `--sink <path>` names: `-` streams event JSON to
+/// stdout, `*.csv` writes the fixed-column CSV, anything else JSONL.
+fn sweep_sink(args: &Args) -> Result<Option<Arc<dyn RecordSink>>> {
+    let Some(path) = args.get("sink") else {
+        return Ok(None);
+    };
+    let sink: Arc<dyn RecordSink> = if path == "-" {
+        Arc::new(StdoutSink)
+    } else if path.ends_with(".csv") {
+        Arc::new(CsvSink::create(Path::new(path))?)
+    } else {
+        Arc::new(JsonlSink::create(Path::new(path))?)
+    };
+    Ok(Some(sink))
+}
+
+/// Wardens from the early-exit flags (record/ward.rs).
+fn sweep_wardens(args: &Args) -> Result<WardenSet> {
+    let mut set = WardenSet::default();
+    if let Some(n) = args.get_usize("max-scenarios")? {
+        set.push(Warden::MaxScenarios(n));
+    }
+    if let Some(n) = args.get_usize("max-evals")? {
+        set.push(Warden::MaxEvaluations(n));
+    }
+    if let Some(s) = args.get_f64("max-wall")? {
+        set.push(Warden::MaxWallSeconds(s));
+    }
+    if args.flag("stop-on-satisfying") {
+        set.push(Warden::FirstSatisfying);
+    }
+    if let Some(w) = args.get_usize("converge-window")? {
+        set.push(Warden::Convergence { window: w });
+    }
+    Ok(set)
+}
+
+fn print_stream(args: &Args, out: &StreamOutcome) {
+    if args.flag("json") {
+        println!("{}", report::stream_to_json(out));
+    } else {
+        print!("{}", report::render_stream(out));
+    }
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
+    let sink = sweep_sink(args)?;
+    let wardens = sweep_wardens(args)?;
+
+    // Grid mode: lazily expand the cross-product through the streaming
+    // runner (constant memory no matter how many cells).
+    if let Some(grid_path) = args.get("grid") {
+        let grid = mixoff::scenario::load_grid(Path::new(grid_path))?;
+        let sink = sink.unwrap_or_else(|| Arc::new(NullSink) as Arc<dyn RecordSink>);
+        let out = mixoff::scenario::run_grid(&grid, &sink, &wardens)?;
+        sink.close()?;
+        print_stream(args, &out);
+        return Ok(());
+    }
+
     let dir = args
         .positional
         .get(1)
-        .ok_or_else(|| anyhow!("usage: mixoff sweep <dir>"))?;
-    let sweep = mixoff::scenario::run_dir(std::path::Path::new(dir))?;
+        .ok_or_else(|| anyhow!("usage: mixoff sweep <dir> | mixoff sweep --grid <file>"))?;
+    let dir = Path::new(dir);
+
+    // A sink or warden switches the directory sweep to the streaming
+    // runner too; otherwise keep the buffered table (golden replays and
+    // `--timing` need the outcomes resident).
+    if sink.is_some() || !wardens.is_empty() {
+        let sink = sink.unwrap_or_else(|| Arc::new(NullSink) as Arc<dyn RecordSink>);
+        let out = mixoff::scenario::stream_dir(dir, &sink, &wardens)?;
+        sink.close()?;
+        print_stream(args, &out);
+        return Ok(());
+    }
+
+    let sweep = mixoff::scenario::run_dir(dir)?;
     if args.flag("json") {
         println!("{}", report::sweep_to_json(&sweep));
     } else {

@@ -1,0 +1,333 @@
+//! Streaming record pipeline: typed run events + pluggable sinks.
+//!
+//! Every artifact the coordinator and the sweep runner used to
+//! accumulate in `Vec`s — trial records, clock charges, per-scenario
+//! outcomes, sweep rows — is also expressible as a [`RecordEvent`]
+//! pushed into a [`RecordSink`] *while the run is in flight*.  A
+//! thousand-scenario grid sweep therefore holds O(1) records in memory:
+//! each scenario's events stream out (JSONL file, CSV, stdout, bounded
+//! ring) and the outcome is dropped before the next scenario starts.
+//!
+//! Contract (see DESIGN.md "Streaming record pipeline"):
+//! * Emission is **fire-and-forget**: `emit` cannot fail; file sinks
+//!   capture the first I/O error internally and surface it from
+//!   [`RecordSink::close`].
+//! * Within one application the Trial/Clock event subsequence is exactly
+//!   the committed trial order — identical under both
+//!   [`TrialConcurrency`](crate::coordinator::TrialConcurrency) modes.
+//!   Across concurrently-running applications of one scenario the
+//!   interleaving is scheduling-dependent; consumers that need a total
+//!   order use the per-scenario [`RecordEvent::Scenario`] event, whose
+//!   payload is byte-identical to the golden serialization
+//!   (`report::scenario_to_json`).
+//! * A disabled sink ([`NullSink`]) short-circuits: the coordinator
+//!   checks [`RecordSink::enabled`] before cloning anything, so the
+//!   non-streaming paths pay nothing.
+//!
+//! The `ward` submodule adds [`Warden`](ward::Warden) predicates — budget
+//! and convergence early exits checked at scenario-commit boundaries.
+
+pub mod sinks;
+pub mod ward;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::coordinator::TrialRecord;
+use crate::offload::pattern::OffloadPattern;
+use crate::util::json::Json;
+
+pub use sinks::{CsvSink, JsonlSink, MemorySink, SharedBuffer, StdoutSink, TeeSink};
+pub use ward::{WardProgress, Warden, WardenSet};
+
+/// JSON-safe number (non-finite values have no JSON literal).
+fn num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn pattern_json(p: &Option<OffloadPattern>) -> Json {
+    match p {
+        Some(p) => Json::Arr(p.selected().map(|id| Json::Num(id.0 as f64)).collect()),
+        None => Json::Null,
+    }
+}
+
+/// The chosen-destination summary a sweep row carries.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChosenRow {
+    pub trial: String,
+    pub seconds: f64,
+    pub improvement: f64,
+    pub price_usd: f64,
+}
+
+/// One (scenario, application) row of a streaming sweep.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepRow {
+    pub scenario: String,
+    pub fleet: String,
+    pub app: String,
+    pub baseline_seconds: f64,
+    pub chosen: Option<ChosenRow>,
+    pub verify_hours: f64,
+    /// Distinct patterns measured across the app's trials (deterministic;
+    /// the warden evaluation budget counts these).
+    pub evaluations: usize,
+}
+
+/// One point of the price-vs-time Pareto frontier a grid sweep streams
+/// at the end: no other chosen destination in the sweep was both cheaper
+/// and faster.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParetoPoint {
+    pub scenario: String,
+    pub app: String,
+    pub price_usd: f64,
+    pub seconds: f64,
+    pub improvement: f64,
+}
+
+/// Aggregate statistics for one grid-axis value (e.g. every scenario
+/// whose fleet axis was `cpu + gpu`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AxisStat {
+    pub axis: String,
+    pub label: String,
+    pub scenarios: usize,
+    pub mean_improvement: f64,
+    pub best_improvement: f64,
+}
+
+/// One typed event of the streaming record pipeline.
+#[derive(Clone, Debug)]
+pub enum RecordEvent {
+    /// One committed trial (including skips), in commit order per app.
+    /// `scenario` is filled by the enclosing [`ScopedSink`]; a bare
+    /// coordinator emits it empty.
+    Trial { scenario: String, app: String, record: TrialRecord },
+    /// One verification-clock charge (executed trials only).
+    Clock { scenario: String, app: String, label: String, seconds: f64 },
+    /// One finished scenario.  `outcome` is exactly
+    /// `report::scenario_to_json` — the golden-replay serialization, so
+    /// a JSONL sink doubles as a golden stream.
+    Scenario { name: String, outcome: Json },
+    /// One (scenario, application) summary row.
+    SweepRow(SweepRow),
+    /// One final price-vs-time Pareto frontier point.
+    Pareto(ParetoPoint),
+    /// One final per-axis aggregate.
+    AxisStat(AxisStat),
+}
+
+impl RecordEvent {
+    /// Stable event-type tag (the `"type"` field of the JSON form).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            RecordEvent::Trial { .. } => "trial",
+            RecordEvent::Clock { .. } => "clock",
+            RecordEvent::Scenario { .. } => "scenario",
+            RecordEvent::SweepRow(_) => "sweep_row",
+            RecordEvent::Pareto(_) => "pareto",
+            RecordEvent::AxisStat(_) => "axis_stat",
+        }
+    }
+
+    /// The same event re-labelled with its scenario name (Trial/Clock
+    /// events are emitted scenario-blind by the coordinator).
+    pub fn with_scenario(&self, name: &str) -> RecordEvent {
+        let mut ev = self.clone();
+        match &mut ev {
+            RecordEvent::Trial { scenario, .. } | RecordEvent::Clock { scenario, .. } => {
+                *scenario = name.to_string();
+            }
+            _ => {}
+        }
+        ev
+    }
+
+    /// One self-describing JSON object (one JSONL line).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("type".into(), Json::Str(self.kind().to_string()));
+        match self {
+            RecordEvent::Trial { scenario, app, record } => {
+                m.insert("scenario".into(), Json::Str(scenario.clone()));
+                m.insert("app".into(), Json::Str(app.clone()));
+                m.insert("trial".into(), Json::Str(record.kind.label()));
+                match &record.skipped {
+                    Some(r) => {
+                        m.insert("skipped".into(), Json::Str(r.clone()));
+                    }
+                    None => {
+                        m.insert("seconds".into(), num(record.seconds));
+                        m.insert("improvement".into(), num(record.improvement));
+                        m.insert("offloaded".into(), Json::Bool(record.offloaded));
+                        m.insert("verify_seconds".into(), num(record.cost_s));
+                        m.insert("evaluations".into(), Json::Num(record.evaluations as f64));
+                        m.insert("detail".into(), Json::Str(record.detail.clone()));
+                        m.insert("pattern".into(), pattern_json(&record.pattern));
+                    }
+                }
+            }
+            RecordEvent::Clock { scenario, app, label, seconds } => {
+                m.insert("scenario".into(), Json::Str(scenario.clone()));
+                m.insert("app".into(), Json::Str(app.clone()));
+                m.insert("label".into(), Json::Str(label.clone()));
+                m.insert("seconds".into(), num(*seconds));
+            }
+            RecordEvent::Scenario { name, outcome } => {
+                m.insert("scenario".into(), Json::Str(name.clone()));
+                m.insert("outcome".into(), outcome.clone());
+            }
+            RecordEvent::SweepRow(r) => {
+                m.insert("scenario".into(), Json::Str(r.scenario.clone()));
+                m.insert("fleet".into(), Json::Str(r.fleet.clone()));
+                m.insert("app".into(), Json::Str(r.app.clone()));
+                m.insert("baseline_seconds".into(), num(r.baseline_seconds));
+                m.insert(
+                    "chosen".into(),
+                    match &r.chosen {
+                        Some(c) => {
+                            let mut cm = BTreeMap::new();
+                            cm.insert("trial".into(), Json::Str(c.trial.clone()));
+                            cm.insert("seconds".into(), num(c.seconds));
+                            cm.insert("improvement".into(), num(c.improvement));
+                            cm.insert("price_usd".into(), num(c.price_usd));
+                            Json::Obj(cm)
+                        }
+                        None => Json::Null,
+                    },
+                );
+                m.insert("verify_hours".into(), num(r.verify_hours));
+                m.insert("evaluations".into(), Json::Num(r.evaluations as f64));
+            }
+            RecordEvent::Pareto(p) => {
+                m.insert("scenario".into(), Json::Str(p.scenario.clone()));
+                m.insert("app".into(), Json::Str(p.app.clone()));
+                m.insert("price_usd".into(), num(p.price_usd));
+                m.insert("seconds".into(), num(p.seconds));
+                m.insert("improvement".into(), num(p.improvement));
+            }
+            RecordEvent::AxisStat(a) => {
+                m.insert("axis".into(), Json::Str(a.axis.clone()));
+                m.insert("label".into(), Json::Str(a.label.clone()));
+                m.insert("scenarios".into(), Json::Num(a.scenarios as f64));
+                m.insert("mean_improvement".into(), num(a.mean_improvement));
+                m.insert("best_improvement".into(), num(a.best_improvement));
+            }
+        }
+        Json::Obj(m)
+    }
+}
+
+/// Where records go.  Implementations are shared across the worker pool
+/// (`Send + Sync`) and must serialize internally.
+pub trait RecordSink: Send + Sync {
+    /// Push one event.  Fire-and-forget: file sinks capture the first
+    /// I/O error and report it from [`RecordSink::close`].
+    fn emit(&self, ev: &RecordEvent);
+
+    /// `false` means emission is a no-op and producers may skip building
+    /// events entirely (the coordinator checks this before cloning
+    /// records).
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    /// Flush buffers and surface any I/O error captured during `emit`.
+    fn close(&self) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+/// The no-op sink every non-streaming run uses: `enabled()` is `false`,
+/// so producers never even build events.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullSink;
+
+impl RecordSink for NullSink {
+    fn emit(&self, _ev: &RecordEvent) {}
+
+    fn enabled(&self) -> bool {
+        false
+    }
+}
+
+/// Re-labels Trial/Clock events with the scenario they belong to before
+/// forwarding.  The coordinator knows applications, not scenarios; the
+/// scenario runner wraps its sink in one of these per scenario.
+pub struct ScopedSink {
+    scenario: String,
+    inner: Arc<dyn RecordSink>,
+}
+
+impl ScopedSink {
+    pub fn new(scenario: impl Into<String>, inner: Arc<dyn RecordSink>) -> Self {
+        Self { scenario: scenario.into(), inner }
+    }
+}
+
+impl RecordSink for ScopedSink {
+    fn emit(&self, ev: &RecordEvent) {
+        self.inner.emit(&ev.with_scenario(&self.scenario));
+    }
+
+    fn enabled(&self) -> bool {
+        self.inner.enabled()
+    }
+
+    fn close(&self) -> anyhow::Result<()> {
+        self.inner.close()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::TrialKind;
+
+    fn trial_event() -> RecordEvent {
+        RecordEvent::Trial {
+            scenario: String::new(),
+            app: "vecadd".into(),
+            record: TrialRecord::skipped(TrialKind::order()[0], "price cap", 10.0),
+        }
+    }
+
+    #[test]
+    fn event_json_is_self_describing_and_parses() {
+        let ev = trial_event();
+        let j = ev.to_json();
+        assert_eq!(j.req("type").unwrap().as_str(), Some("trial"));
+        assert_eq!(j.req("skipped").unwrap().as_str(), Some("price cap"));
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn scoped_sink_fills_the_scenario_label() {
+        let mem = Arc::new(MemorySink::unbounded());
+        let scoped = ScopedSink::new("grid-00007", Arc::clone(&mem) as Arc<dyn RecordSink>);
+        scoped.emit(&trial_event());
+        scoped.emit(&RecordEvent::Clock {
+            scenario: String::new(),
+            app: "vecadd".into(),
+            label: "x".into(),
+            seconds: 1.0,
+        });
+        for ev in mem.events() {
+            assert_eq!(ev.to_json().req("scenario").unwrap().as_str(), Some("grid-00007"));
+        }
+        assert_eq!(mem.total_seen(), 2);
+    }
+
+    #[test]
+    fn null_sink_is_disabled() {
+        assert!(!NullSink.enabled());
+        NullSink.emit(&trial_event());
+        NullSink.close().unwrap();
+    }
+}

@@ -1,0 +1,435 @@
+//! Concrete [`RecordSink`] implementations: JSONL (file, buffer or
+//! stdout), CSV, and a bounded in-memory ring for tests and tails.
+//!
+//! All sinks serialize internally behind a `Mutex` — events arrive from
+//! every worker-pool thread.  File-backed sinks never fail `emit`: the
+//! first I/O error is captured and re-surfaced by
+//! [`RecordSink::close`], so a full disk aborts the sweep at the next
+//! commit boundary instead of panicking a worker mid-trial.
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use super::{RecordEvent, RecordSink};
+
+/// A cloneable in-memory `io::Write` target, for pointing a
+/// [`JsonlSink`]/[`CsvSink`] at a buffer (the golden harness and the
+/// bounded-memory tests read it back).
+#[derive(Clone, Default)]
+pub struct SharedBuffer {
+    buf: Arc<Mutex<Vec<u8>>>,
+}
+
+impl SharedBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Everything written so far, as UTF-8.
+    pub fn contents(&self) -> String {
+        String::from_utf8_lossy(&self.buf.lock().unwrap()).into_owned()
+    }
+
+    /// Complete lines written so far.
+    pub fn lines(&self) -> Vec<String> {
+        self.contents().lines().map(str::to_string).collect()
+    }
+}
+
+impl io::Write for SharedBuffer {
+    fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+        self.buf.lock().unwrap().extend_from_slice(data);
+        Ok(data.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Shared state of a writer-backed sink.
+struct WriterState {
+    out: Box<dyn Write + Send>,
+    /// First I/O error seen; every later emit is dropped.
+    error: Option<String>,
+}
+
+impl WriterState {
+    fn write_line(&mut self, line: &str) {
+        if self.error.is_some() {
+            return;
+        }
+        if let Err(e) = self.out.write_all(line.as_bytes()).and_then(|()| self.out.write_all(b"\n"))
+        {
+            self.error = Some(e.to_string());
+        }
+    }
+
+    fn close(&mut self, what: &str) -> Result<()> {
+        if self.error.is_none() {
+            if let Err(e) = self.out.flush() {
+                self.error = Some(e.to_string());
+            }
+        }
+        match &self.error {
+            Some(e) => Err(anyhow!("{what}: {e}")),
+            None => Ok(()),
+        }
+    }
+}
+
+/// One JSON object per line — the machine-readable stream behind
+/// `mixoff sweep --sink out.jsonl` (and, pointed at a [`SharedBuffer`],
+/// the golden-replay capture path).
+pub struct JsonlSink {
+    state: Mutex<WriterState>,
+}
+
+impl JsonlSink {
+    pub fn to_writer(out: Box<dyn Write + Send>) -> Self {
+        Self { state: Mutex::new(WriterState { out, error: None }) }
+    }
+
+    /// Stream to a file (buffered; created or truncated).
+    pub fn create(path: &Path) -> Result<Self> {
+        let f = File::create(path).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Ok(Self::to_writer(Box::new(BufWriter::new(f))))
+    }
+
+    /// Stream into a cloneable in-memory buffer.
+    pub fn to_buffer(buf: &SharedBuffer) -> Self {
+        Self::to_writer(Box::new(buf.clone()))
+    }
+}
+
+impl RecordSink for JsonlSink {
+    fn emit(&self, ev: &RecordEvent) {
+        self.state.lock().unwrap().write_line(&ev.to_json().to_string());
+    }
+
+    fn close(&self) -> Result<()> {
+        self.state.lock().unwrap().close("jsonl sink")
+    }
+}
+
+/// The fixed CSV column superset every event type maps onto.
+const CSV_HEADER: &str =
+    "type,scenario,app,trial,axis,label,seconds,improvement,price_usd,evaluations,detail";
+
+fn csv_escape(s: &str) -> String {
+    if s.contains([',', '"', '\n']) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+fn csv_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        String::new()
+    }
+}
+
+/// One event as a CSV row over the fixed column superset; fields a
+/// variant has no value for stay empty.
+fn csv_row(ev: &RecordEvent) -> String {
+    let mut f: [String; 11] = std::array::from_fn(|_| String::new());
+    f[0] = ev.kind().to_string();
+    match ev {
+        RecordEvent::Trial { scenario, app, record } => {
+            f[1] = scenario.clone();
+            f[2] = app.clone();
+            f[3] = record.kind.label();
+            match &record.skipped {
+                Some(r) => f[10] = format!("skipped: {r}"),
+                None => {
+                    f[6] = csv_num(record.seconds);
+                    f[7] = csv_num(record.improvement);
+                    f[9] = format!("{}", record.evaluations);
+                    f[10] = record.detail.clone();
+                }
+            }
+        }
+        RecordEvent::Clock { scenario, app, label, seconds } => {
+            f[1] = scenario.clone();
+            f[2] = app.clone();
+            f[5] = label.clone();
+            f[6] = csv_num(*seconds);
+        }
+        RecordEvent::Scenario { name, outcome } => {
+            f[1] = name.clone();
+            let apps = outcome.get("apps").and_then(|a| a.as_arr()).map(|a| a.len()).unwrap_or(0);
+            f[10] = format!("{apps} apps");
+        }
+        RecordEvent::SweepRow(r) => {
+            f[1] = r.scenario.clone();
+            f[2] = r.app.clone();
+            f[9] = format!("{}", r.evaluations);
+            match &r.chosen {
+                Some(c) => {
+                    f[3] = c.trial.clone();
+                    f[6] = csv_num(c.seconds);
+                    f[7] = csv_num(c.improvement);
+                    f[8] = csv_num(c.price_usd);
+                }
+                None => f[10] = "none (stay on CPU)".to_string(),
+            }
+        }
+        RecordEvent::Pareto(p) => {
+            f[1] = p.scenario.clone();
+            f[2] = p.app.clone();
+            f[6] = csv_num(p.seconds);
+            f[7] = csv_num(p.improvement);
+            f[8] = csv_num(p.price_usd);
+        }
+        RecordEvent::AxisStat(a) => {
+            f[4] = a.axis.clone();
+            f[5] = a.label.clone();
+            f[7] = csv_num(a.mean_improvement);
+            f[10] = format!("{} scenarios, best {:.2}x", a.scenarios, a.best_improvement);
+        }
+    }
+    f.iter().map(|s| csv_escape(s)).collect::<Vec<_>>().join(",")
+}
+
+/// CSV stream over the fixed column superset (header written lazily on
+/// the first event).
+pub struct CsvSink {
+    state: Mutex<WriterState>,
+    header_written: Mutex<bool>,
+}
+
+impl CsvSink {
+    pub fn to_writer(out: Box<dyn Write + Send>) -> Self {
+        Self {
+            state: Mutex::new(WriterState { out, error: None }),
+            header_written: Mutex::new(false),
+        }
+    }
+
+    pub fn create(path: &Path) -> Result<Self> {
+        let f = File::create(path).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Ok(Self::to_writer(Box::new(BufWriter::new(f))))
+    }
+
+    pub fn to_buffer(buf: &SharedBuffer) -> Self {
+        Self::to_writer(Box::new(buf.clone()))
+    }
+}
+
+impl RecordSink for CsvSink {
+    fn emit(&self, ev: &RecordEvent) {
+        let mut hdr = self.header_written.lock().unwrap();
+        let mut state = self.state.lock().unwrap();
+        if !*hdr {
+            state.write_line(CSV_HEADER);
+            *hdr = true;
+        }
+        state.write_line(&csv_row(ev));
+    }
+
+    fn close(&self) -> Result<()> {
+        self.state.lock().unwrap().close("csv sink")
+    }
+}
+
+/// JSONL to stdout — `mixoff sweep --sink -`.
+#[derive(Default)]
+pub struct StdoutSink;
+
+impl RecordSink for StdoutSink {
+    fn emit(&self, ev: &RecordEvent) {
+        println!("{}", ev.to_json());
+    }
+}
+
+struct MemoryState {
+    window: VecDeque<RecordEvent>,
+    total_seen: usize,
+    peak_resident: usize,
+}
+
+/// Bounded in-memory sink: keeps the last `cap` events (a tail window),
+/// counts everything, and tracks the peak resident count — the
+/// observable behind the O(1)-memory acceptance test.
+pub struct MemorySink {
+    cap: usize,
+    state: Mutex<MemoryState>,
+}
+
+impl MemorySink {
+    /// Keep at most `cap` events resident (older events are dropped).
+    pub fn bounded(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            state: Mutex::new(MemoryState {
+                window: VecDeque::new(),
+                total_seen: 0,
+                peak_resident: 0,
+            }),
+        }
+    }
+
+    /// Keep every event (tests that inspect full streams).
+    pub fn unbounded() -> Self {
+        Self::bounded(usize::MAX)
+    }
+
+    /// Events currently resident (the tail window), oldest first.
+    pub fn events(&self) -> Vec<RecordEvent> {
+        self.state.lock().unwrap().window.iter().cloned().collect()
+    }
+
+    /// Total events ever emitted into this sink.
+    pub fn total_seen(&self) -> usize {
+        self.state.lock().unwrap().total_seen
+    }
+
+    /// Maximum events resident at any point — never exceeds the cap.
+    pub fn peak_resident(&self) -> usize {
+        self.state.lock().unwrap().peak_resident
+    }
+}
+
+impl RecordSink for MemorySink {
+    fn emit(&self, ev: &RecordEvent) {
+        let mut st = self.state.lock().unwrap();
+        st.total_seen += 1;
+        if st.window.len() == self.cap {
+            st.window.pop_front();
+        }
+        st.window.push_back(ev.clone());
+        st.peak_resident = st.peak_resident.max(st.window.len());
+    }
+}
+
+/// Fans every event out to several sinks (e.g. a JSONL file plus a
+/// bounded tail for the end-of-run summary).
+pub struct TeeSink {
+    sinks: Vec<Arc<dyn RecordSink>>,
+}
+
+impl TeeSink {
+    pub fn new(sinks: Vec<Arc<dyn RecordSink>>) -> Self {
+        Self { sinks }
+    }
+}
+
+impl RecordSink for TeeSink {
+    fn emit(&self, ev: &RecordEvent) {
+        for s in &self.sinks {
+            if s.enabled() {
+                s.emit(ev);
+            }
+        }
+    }
+
+    fn enabled(&self) -> bool {
+        self.sinks.iter().any(|s| s.enabled())
+    }
+
+    fn close(&self) -> Result<()> {
+        for s in &self.sinks {
+            s.close()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ChosenRow, SweepRow};
+    use super::*;
+    use crate::coordinator::{TrialKind, TrialRecord};
+    use crate::util::json::Json;
+
+    fn trial(scenario: &str) -> RecordEvent {
+        RecordEvent::Trial {
+            scenario: scenario.into(),
+            app: "vecadd".into(),
+            record: TrialRecord::skipped(TrialKind::order()[0], "why, exactly", 10.0),
+        }
+    }
+
+    #[test]
+    fn jsonl_buffer_lines_parse_back() {
+        let buf = SharedBuffer::new();
+        let sink = JsonlSink::to_buffer(&buf);
+        sink.emit(&trial("a"));
+        sink.emit(&trial("b"));
+        sink.close().unwrap();
+        let lines = buf.lines();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.req("type").unwrap().as_str(), Some("trial"));
+        }
+    }
+
+    #[test]
+    fn csv_has_header_fixed_columns_and_escaping() {
+        let buf = SharedBuffer::new();
+        let sink = CsvSink::to_buffer(&buf);
+        sink.emit(&RecordEvent::SweepRow(SweepRow {
+            scenario: "s".into(),
+            fleet: "cpu + gpu".into(),
+            app: "a,pp".into(),
+            baseline_seconds: 1.0,
+            chosen: Some(ChosenRow {
+                trial: "GPU loop offload".into(),
+                seconds: 0.5,
+                improvement: 2.0,
+                price_usd: 10_000.0,
+            }),
+            verify_hours: 0.1,
+            evaluations: 3,
+        }));
+        sink.emit(&trial("s"));
+        sink.close().unwrap();
+        let lines = buf.lines();
+        assert_eq!(lines[0], CSV_HEADER);
+        assert_eq!(lines.len(), 3, "header + two rows");
+        let cols = CSV_HEADER.split(',').count();
+        assert!(lines[1].contains("\"a,pp\""), "comma-bearing field is quoted: {}", lines[1]);
+        assert_eq!(lines[2].split(',').count(), cols, "skip reason row keeps the column count");
+    }
+
+    #[test]
+    fn memory_sink_bounds_residency_but_counts_everything() {
+        let sink = MemorySink::bounded(4);
+        for i in 0..100 {
+            sink.emit(&trial(&format!("s{i}")));
+        }
+        assert_eq!(sink.total_seen(), 100);
+        assert_eq!(sink.peak_resident(), 4);
+        let tail = sink.events();
+        assert_eq!(tail.len(), 4);
+        match &tail[3] {
+            RecordEvent::Trial { scenario, .. } => assert_eq!(scenario, "s99"),
+            other => panic!("unexpected tail event {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tee_fans_out_and_reports_errors_on_close() {
+        let a = Arc::new(MemorySink::unbounded());
+        let b = Arc::new(MemorySink::bounded(1));
+        let tee = TeeSink::new(vec![
+            Arc::clone(&a) as Arc<dyn RecordSink>,
+            Arc::clone(&b) as Arc<dyn RecordSink>,
+        ]);
+        tee.emit(&trial("x"));
+        tee.emit(&trial("y"));
+        tee.close().unwrap();
+        assert_eq!(a.total_seen(), 2);
+        assert_eq!(b.total_seen(), 2);
+        assert_eq!(b.peak_resident(), 1);
+    }
+}

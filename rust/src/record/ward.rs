@@ -1,0 +1,142 @@
+//! Wardens: early-exit predicates over a streaming sweep.
+//!
+//! A grid sweep can expand into thousands of scenarios whose answer is
+//! decided long before the cross-product is exhausted — the first fleet
+//! that satisfies the user requirements, a wall/evaluation budget, or a
+//! frontier that has stopped moving.  A [`Warden`] is a predicate over
+//! the sweep's running [`WardProgress`]; the runner checks the whole
+//! [`WardenSet`] at each scenario-commit boundary and stops paying for
+//! further scenarios once any warden trips.
+//!
+//! Wardens never change committed outcomes: every scenario that *did*
+//! run is bit-identical to an unwarded run (the golden invariant), the
+//! sweep just ends early with the tripping warden's reason recorded.
+
+/// The sweep's running totals, updated after each committed scenario.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WardProgress {
+    /// Scenarios committed so far.
+    pub scenarios: usize,
+    /// Distinct patterns measured so far (deterministic — cache hits and
+    /// misses count the same; see `TrialRecord::evaluations`).
+    pub evaluations: usize,
+    /// Real wall-clock seconds since the sweep started.
+    pub wall_seconds: f64,
+    /// Did the last committed scenario satisfy the user requirements on
+    /// every application?  (`false` whenever no target is set.)
+    pub satisfied: bool,
+    /// Scenarios committed since the sweep-best improvement last grew.
+    pub since_improvement: usize,
+}
+
+/// One early-exit predicate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Warden {
+    /// Stop after this many scenarios.
+    MaxScenarios(usize),
+    /// Stop once this many pattern evaluations have been spent.
+    MaxEvaluations(usize),
+    /// Stop once the sweep has run this long (real wall clock).
+    MaxWallSeconds(f64),
+    /// Stop at the first scenario whose every application meets the user
+    /// requirements — "find me *a* deployment", not "rank them all".
+    /// Never trips when the scenario specs carry no target improvement.
+    FirstSatisfying,
+    /// Stop after `window` consecutive scenarios without a new sweep-best
+    /// improvement.
+    Convergence { window: usize },
+}
+
+impl Warden {
+    /// Some(reason) when the predicate says stop.
+    pub fn check(&self, p: &WardProgress) -> Option<String> {
+        match self {
+            Warden::MaxScenarios(n) if p.scenarios >= *n => {
+                Some(format!("scenario budget reached ({n})"))
+            }
+            Warden::MaxEvaluations(n) if p.evaluations >= *n => {
+                Some(format!("evaluation budget reached ({} >= {n})", p.evaluations))
+            }
+            Warden::MaxWallSeconds(s) if p.wall_seconds >= *s => {
+                Some(format!("wall-clock budget reached ({s} s)"))
+            }
+            Warden::FirstSatisfying if p.satisfied => Some(format!(
+                "first satisfying scenario found (after {})",
+                p.scenarios
+            )),
+            Warden::Convergence { window } if p.since_improvement >= *window => Some(format!(
+                "converged ({window} scenarios without improvement)"
+            )),
+            _ => None,
+        }
+    }
+}
+
+/// All active wardens; empty = never stop early (the default).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WardenSet {
+    wardens: Vec<Warden>,
+}
+
+impl WardenSet {
+    pub fn new(wardens: Vec<Warden>) -> Self {
+        Self { wardens }
+    }
+
+    pub fn push(&mut self, w: Warden) {
+        self.wardens.push(w);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.wardens.is_empty()
+    }
+
+    /// First tripping warden's reason, if any.
+    pub fn check(&self, p: &WardProgress) -> Option<String> {
+        self.wardens.iter().find_map(|w| w.check(p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budgets_trip_at_their_thresholds() {
+        let p = WardProgress {
+            scenarios: 10,
+            evaluations: 500,
+            wall_seconds: 3.0,
+            ..Default::default()
+        };
+        assert!(Warden::MaxScenarios(10).check(&p).is_some());
+        assert!(Warden::MaxScenarios(11).check(&p).is_none());
+        assert!(Warden::MaxEvaluations(500).check(&p).is_some());
+        assert!(Warden::MaxEvaluations(501).check(&p).is_none());
+        assert!(Warden::MaxWallSeconds(2.5).check(&p).is_some());
+        assert!(Warden::MaxWallSeconds(3.5).check(&p).is_none());
+    }
+
+    #[test]
+    fn satisfaction_and_convergence() {
+        let mut p = WardProgress { scenarios: 3, ..Default::default() };
+        assert!(Warden::FirstSatisfying.check(&p).is_none());
+        p.satisfied = true;
+        let reason = Warden::FirstSatisfying.check(&p).unwrap();
+        assert!(reason.contains("satisfying"), "{reason}");
+
+        p.since_improvement = 4;
+        assert!(Warden::Convergence { window: 5 }.check(&p).is_none());
+        p.since_improvement = 5;
+        assert!(Warden::Convergence { window: 5 }.check(&p).is_some());
+    }
+
+    #[test]
+    fn set_reports_first_tripping_reason_and_empty_never_trips() {
+        let p = WardProgress { scenarios: 7, ..Default::default() };
+        assert_eq!(WardenSet::default().check(&p), None);
+        let set = WardenSet::new(vec![Warden::MaxScenarios(100), Warden::MaxScenarios(5)]);
+        let reason = set.check(&p).unwrap();
+        assert!(reason.contains('5'), "{reason}");
+    }
+}

@@ -2,12 +2,12 @@
 //! sec. 4.2 timing ledger, machine-readable JSON, and the sweep/golden
 //! serializations behind `mixoff sweep` and `tests/golden.rs`.
 
-use std::fmt::Write as _;
+use std::fmt::{self, Write};
 
 use crate::coordinator::{BatchOutcome, OffloadOutcome, TrialKind};
 use crate::devices::DeviceKind;
 use crate::offload::pattern::Method;
-use crate::scenario::{ScenarioOutcome, SweepOutcome};
+use crate::scenario::{ScenarioOutcome, StreamOutcome, SweepOutcome};
 use crate::util::json::Json;
 
 /// JSON-safe number: non-finite values have no JSON literal, so they
@@ -157,16 +157,16 @@ pub fn render_timing(out: &OffloadOutcome) -> String {
     format!("{}", out.clock)
 }
 
-/// Batch-service aggregation: one row per application plus the batch
-/// totals (throughput, plan-cache behaviour, simulated verification).
-pub fn render_batch(batch: &BatchOutcome) -> String {
-    let mut s = String::new();
-    let _ = writeln!(
-        s,
+/// Batch-service aggregation streamed into any [`fmt::Write`] sink: one
+/// row per application plus the batch totals (throughput, plan-cache
+/// behaviour, simulated verification).
+pub fn write_batch<W: Write>(w: &mut W, batch: &BatchOutcome) -> fmt::Result {
+    writeln!(
+        w,
         "{:<18} {:>12} | {:<30} {:>12} {:>8} {:>10} | {:>10}",
         "app", "1-core [s]", "chosen destination", "time [s]", "improve", "price", "verify [h]"
-    );
-    let _ = writeln!(s, "{}", "-".repeat(112));
+    )?;
+    writeln!(w, "{}", "-".repeat(112))?;
     for out in &batch.outcomes {
         let (label, secs, imp, price) = match &out.chosen {
             Some(c) => (
@@ -182,8 +182,8 @@ pub fn render_batch(batch: &BatchOutcome) -> String {
                 "-".to_string(),
             ),
         };
-        let _ = writeln!(
-            s,
+        writeln!(
+            w,
             "{:<18} {:>12.3} | {:<30} {:>12.4} {:>8} {:>10} | {:>10.1}",
             out.app_name,
             out.baseline_seconds,
@@ -192,10 +192,10 @@ pub fn render_batch(batch: &BatchOutcome) -> String {
             imp,
             price,
             out.clock.total_hours()
-        );
+        )?;
     }
-    let _ = writeln!(
-        s,
+    writeln!(
+        w,
         "batch: {} apps in {:.2} s wall ({:.2} apps/s, {} trials); plan cache {} compiles, {} hits ({:.0}% hit rate); simulated verification {:.1} h total",
         batch.outcomes.len(),
         batch.wall_seconds,
@@ -205,7 +205,15 @@ pub fn render_batch(batch: &BatchOutcome) -> String {
         batch.plan_hits,
         batch.plan_hit_rate() * 100.0,
         batch.total_verify_hours(),
-    );
+    )
+}
+
+/// [`write_batch`] into a string pre-sized for the row count (one
+/// ~120-byte row per application plus header/footer), so rendering a
+/// large batch does one allocation, not O(rows) regrows.
+pub fn render_batch(batch: &BatchOutcome) -> String {
+    let mut s = String::with_capacity(128 * (batch.outcomes.len() + 3));
+    let _ = write_batch(&mut s, batch);
     s
 }
 
@@ -363,25 +371,25 @@ pub fn scenario_to_json(s: &ScenarioOutcome) -> Json {
     Json::Obj(root)
 }
 
-/// The per-scenario comparison table behind `mixoff sweep <dir>`: one row
-/// per (scenario, application) plus sweep totals.
-pub fn render_sweep(sweep: &SweepOutcome) -> String {
-    let mut s = String::new();
-    let _ = writeln!(
-        s,
+/// The per-scenario comparison table behind `mixoff sweep <dir>`,
+/// streamed into any [`fmt::Write`] sink: one row per (scenario,
+/// application) plus sweep totals.
+pub fn write_sweep<W: Write>(w: &mut W, sweep: &SweepOutcome) -> fmt::Result {
+    writeln!(
+        w,
         "{:<22} {:<28} {:<16} {:>12} | {:<30} {:>12} {:>8} | {:>10}",
         "scenario", "fleet", "app", "1-core [s]", "chosen destination", "time [s]",
         "improve", "verify [h]"
-    );
-    let _ = writeln!(s, "{}", "-".repeat(150));
+    )?;
+    writeln!(w, "{}", "-".repeat(150))?;
     for sc in &sweep.scenarios {
         for out in &sc.batch.outcomes {
             let (label, secs, imp) = match &out.chosen {
                 Some(c) => (c.kind.label(), c.seconds, format!("{:.1}x", c.improvement)),
                 None => ("none (stay on CPU)".to_string(), out.baseline_seconds, "1.0x".into()),
             };
-            let _ = writeln!(
-                s,
+            writeln!(
+                w,
                 "{:<22} {:<28} {:<16} {:>12.3} | {:<30} {:>12.4} {:>8} | {:>10.1}",
                 sc.name,
                 sc.fleet,
@@ -391,19 +399,137 @@ pub fn render_sweep(sweep: &SweepOutcome) -> String {
                 secs,
                 imp,
                 out.clock.total_hours()
-            );
+            )?;
         }
     }
-    let _ = writeln!(
-        s,
+    writeln!(
+        w,
         "sweep: {} scenarios / {} apps in {:.2} s wall ({:.2} scenarios/s); simulated verification {:.1} h total",
         sweep.scenarios.len(),
         sweep.apps(),
         sweep.wall_seconds,
         sweep.scenarios_per_sec(),
         sweep.total_verify_hours(),
-    );
+    )
+}
+
+/// [`write_sweep`] into a string pre-sized for the row count (one
+/// ~160-byte row per (scenario, application) pair).
+pub fn render_sweep(sweep: &SweepOutcome) -> String {
+    let mut s = String::with_capacity(168 * (sweep.apps() + 3));
+    let _ = write_sweep(&mut s, sweep);
     s
+}
+
+/// Summary of a *streaming* sweep, into any [`fmt::Write`] sink.  The
+/// per-scenario rows already left through the record sink; this renders
+/// only what stayed resident — totals, the early-exit reason, the best
+/// deployment, the Pareto frontier and the per-axis aggregates.
+pub fn write_stream<W: Write>(w: &mut W, out: &StreamOutcome) -> fmt::Result {
+    writeln!(
+        w,
+        "stream: {}/{} scenarios / {} apps in {:.2} s wall ({:.2} scenarios/s); {} evaluations; simulated verification {:.1} h total",
+        out.scenarios_run,
+        out.scenarios_total,
+        out.apps,
+        out.wall_seconds,
+        out.scenarios_per_sec(),
+        out.evaluations,
+        out.total_verify_hours,
+    )?;
+    if let Some(reason) = &out.stopped {
+        writeln!(w, "stopped early: {reason}")?;
+    }
+    if let Some(b) = &out.best {
+        writeln!(
+            w,
+            "best: {}/{} — {:.4} s, {:.1}x, {} USD",
+            b.scenario, b.app, b.seconds, b.improvement, b.price_usd
+        )?;
+    }
+    if !out.pareto.is_empty() {
+        writeln!(w, "price-vs-time pareto frontier:")?;
+        for p in &out.pareto {
+            writeln!(
+                w,
+                "  {:>8} USD  {:>12.4} s  {:>6.1}x  ({}/{})",
+                p.price_usd, p.seconds, p.improvement, p.scenario, p.app
+            )?;
+        }
+    }
+    if !out.axes.is_empty() {
+        writeln!(w, "axis aggregates:")?;
+        for a in &out.axes {
+            writeln!(
+                w,
+                "  {:<12} {:<32} {:>5} scenarios  mean {:>6.2}x  best {:>6.2}x",
+                a.axis, a.label, a.scenarios, a.mean_improvement, a.best_improvement
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// [`write_stream`] into a pre-sized string.
+pub fn render_stream(out: &StreamOutcome) -> String {
+    let mut s = String::with_capacity(96 * (out.pareto.len() + out.axes.len() + 4));
+    let _ = write_stream(&mut s, out);
+    s
+}
+
+/// Machine-readable streaming-sweep summary.
+pub fn stream_to_json(out: &StreamOutcome) -> Json {
+    use std::collections::BTreeMap;
+    let pareto_json = |p: &crate::record::ParetoPoint| {
+        let mut m = BTreeMap::new();
+        m.insert("scenario".into(), Json::Str(p.scenario.clone()));
+        m.insert("app".into(), Json::Str(p.app.clone()));
+        m.insert("price_usd".into(), num(p.price_usd));
+        m.insert("seconds".into(), num(p.seconds));
+        m.insert("improvement".into(), num(p.improvement));
+        Json::Obj(m)
+    };
+    let mut root = BTreeMap::new();
+    root.insert("scenarios_total".into(), Json::Num(out.scenarios_total as f64));
+    root.insert("scenarios_run".into(), Json::Num(out.scenarios_run as f64));
+    root.insert("apps".into(), Json::Num(out.apps as f64));
+    root.insert("evaluations".into(), Json::Num(out.evaluations as f64));
+    root.insert("verify_total_hours".into(), num(out.total_verify_hours));
+    root.insert("wall_seconds".into(), num(out.wall_seconds));
+    root.insert("scenarios_per_sec".into(), num(out.scenarios_per_sec()));
+    root.insert(
+        "stopped".into(),
+        match &out.stopped {
+            Some(r) => Json::Str(r.clone()),
+            None => Json::Null,
+        },
+    );
+    root.insert(
+        "best".into(),
+        match &out.best {
+            Some(b) => pareto_json(b),
+            None => Json::Null,
+        },
+    );
+    root.insert("pareto".into(), Json::Arr(out.pareto.iter().map(pareto_json).collect()));
+    root.insert(
+        "axes".into(),
+        Json::Arr(
+            out.axes
+                .iter()
+                .map(|a| {
+                    let mut m = BTreeMap::new();
+                    m.insert("axis".into(), Json::Str(a.axis.clone()));
+                    m.insert("label".into(), Json::Str(a.label.clone()));
+                    m.insert("scenarios".into(), Json::Num(a.scenarios as f64));
+                    m.insert("mean_improvement".into(), num(a.mean_improvement));
+                    m.insert("best_improvement".into(), num(a.best_improvement));
+                    Json::Obj(m)
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(root)
 }
 
 /// Machine-readable sweep outcome: per-scenario batch JSON plus totals.
@@ -573,5 +699,51 @@ mod tests {
             assert!(g.req(key).is_ok(), "golden JSON must carry {key:?}");
         }
         assert!(g.to_string().contains("clock"));
+    }
+
+    /// The streaming summary carries the early-exit reason, the frontier
+    /// and the axis aggregates, in both table and JSON forms.
+    #[test]
+    fn stream_summary_renders_and_serializes() {
+        use crate::record::{AxisStat, ParetoPoint};
+        use crate::scenario::StreamOutcome;
+        let p = ParetoPoint {
+            scenario: "g-00001".into(),
+            app: "vecadd".into(),
+            price_usd: 4_000.0,
+            seconds: 0.5,
+            improvement: 8.0,
+        };
+        let out = StreamOutcome {
+            scenarios_total: 10,
+            scenarios_run: 4,
+            apps: 4,
+            evaluations: 120,
+            total_verify_hours: 3.5,
+            wall_seconds: 2.0,
+            stopped: Some("scenario budget reached (4)".into()),
+            best: Some(p.clone()),
+            pareto: vec![p],
+            axes: vec![AxisStat {
+                axis: "seed".into(),
+                label: "seed 1".into(),
+                scenarios: 2,
+                mean_improvement: 5.0,
+                best_improvement: 8.0,
+            }],
+        };
+        let table = render_stream(&out);
+        assert!(table.contains("stream: 4/10 scenarios"), "{table}");
+        assert!(table.contains("stopped early: scenario budget reached (4)"), "{table}");
+        assert!(table.contains("pareto frontier"), "{table}");
+        assert!(table.contains("seed 1"), "{table}");
+        assert!(table.contains("best: g-00001/vecadd"), "{table}");
+        let j = stream_to_json(&out);
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        assert_eq!(j.req("scenarios_run").unwrap().as_usize(), Some(4));
+        assert_eq!(j.req("stopped").unwrap().as_str(), Some("scenario budget reached (4)"));
+        assert_eq!(j.req("pareto").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.req("axes").unwrap().as_arr().unwrap().len(), 1);
+        assert!(j.req("best").unwrap().get("price_usd").is_some());
     }
 }

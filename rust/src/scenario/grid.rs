@@ -1,0 +1,661 @@
+//! Grid-expanded scenario sweeps: a cross-product of environment axes as
+//! *one* JSON file.
+//!
+//! The paper evaluates one fixed environment; its companion proposals
+//! sweep device mixes and cost axes.  Writing every cell of such a sweep
+//! as its own scenario file does not scale — a 6-axis study is thousands
+//! of files.  [`GridSpec`] states each axis once and expands the
+//! cross-product *lazily*: [`GridSpec::scenario`] builds the i-th
+//! [`ScenarioSpec`] on demand, so a million-cell grid costs one spec
+//! clone per cell actually run, never a materialized list.  The streaming
+//! runner (sweep.rs) walks [`GridSpec::scenarios`], pushes each outcome
+//! into a [`RecordSink`](crate::record::RecordSink) and drops it — memory
+//! stays O(1) in the grid size.
+//!
+//! ```json
+//! {
+//!   "name": "price-study",
+//!   "axes": {
+//!     "fleets": [{"manycore": {}, "gpu": {}}, {"manycore": {}}],
+//!     "calibrations": [{}, {"gpu": {"flops": 2.0}}],
+//!     "price_scales": [1, 1.5],
+//!     "workloads": [{"workload": "vecadd", "n": 1048576}],
+//!     "seeds": [1, 2, 3],
+//!     "schedules": ["paper", "price_ascending"]
+//!   }
+//! }
+//! ```
+//!
+//! Axis semantics:
+//!
+//! * `fleets` — [`EnvSpec`] objects (same grammar as a scenario's
+//!   `"devices"`); omitted = the paper's full fleet.
+//! * `calibrations` — `{device: {param: multiplier}}` maps.  Each
+//!   multiplier scales the fleet's own override for that parameter, or
+//!   the fig. 3 default when the fleet has none
+//!   ([`default_param`](crate::devices::default_param)).  A device the
+//!   fleet does not carry is skipped — the cell is still run, the
+//!   calibration is simply inapplicable there.  `{}` = baseline.
+//! * `price_scales` — multiplies every present destination's node price
+//!   (the cost axis of the companion studies).
+//! * `workloads` — each entry is one application set: a single
+//!   application object or an array of them.  Required.
+//! * `seeds` — GA seeds; omitted = the default 0xC0FFEE.
+//! * `schedules` — schedule policy labels; omitted = `"paper"`.
+//!
+//! Validation is eager and total: device names, parameter names,
+//! multipliers and every workload are checked (and built once) at parse
+//! time, so expansion is infallible and a sweep cannot die at cell
+//! 40,000 on a typo that was visible up front.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{SchedulePolicy, TrialConcurrency, UserRequirements};
+use crate::devices::{default_param, known_params, DeviceSpec, EnvSpec, Testbed};
+use crate::util::json::Json;
+
+use super::spec::{
+    concurrency_from_label, get_str, opt_u64, parse_requirements, AppSpec, ScenarioSpec,
+};
+
+/// Per-device parameter multipliers of one calibration-axis entry.
+pub type Calibration = BTreeMap<String, BTreeMap<String, f64>>;
+
+/// A declarative scenario grid: shared run configuration plus one list
+/// per axis.  The cross-product (axis order: fleets, calibrations,
+/// price_scales, workloads, seeds, schedules — last axis fastest)
+/// expands lazily into [`ScenarioSpec`]s.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GridSpec {
+    pub name: String,
+    pub description: String,
+    /// Trial concurrency every expanded scenario runs with.
+    pub concurrency: TrialConcurrency,
+    /// User requirements every expanded scenario carries (these also
+    /// feed the `FirstSatisfying` warden — record/ward.rs).
+    pub requirements: UserRequirements,
+    pub fleets: Vec<EnvSpec>,
+    pub calibrations: Vec<Calibration>,
+    pub price_scales: Vec<f64>,
+    pub workloads: Vec<Vec<AppSpec>>,
+    pub seeds: Vec<u64>,
+    pub schedules: Vec<SchedulePolicy>,
+}
+
+/// One expanded grid cell: its flat index, the materialized spec, and
+/// the (axis, label) coordinates of every axis with more than one value
+/// — the keys the streaming runner aggregates per-axis stats under.
+#[derive(Clone, Debug)]
+pub struct GridScenario {
+    pub index: usize,
+    pub spec: ScenarioSpec,
+    pub coords: Vec<(String, String)>,
+}
+
+fn calibration_label(cal: &Calibration) -> String {
+    if cal.is_empty() {
+        return "baseline".to_string();
+    }
+    let mut parts = Vec::new();
+    for (device, muls) in cal {
+        for (key, mult) in muls {
+            parts.push(format!("{device}.{key}x{mult}"));
+        }
+    }
+    parts.join("+")
+}
+
+fn workload_label(set: &[AppSpec]) -> String {
+    set.iter().map(|a| a.axis_tag()).collect::<Vec<_>>().join("+")
+}
+
+fn device_entry<'a>(env: &'a mut EnvSpec, device: &str) -> Option<&'a mut DeviceSpec> {
+    match device {
+        "cpu" => Some(&mut env.cpu),
+        "manycore" => env.manycore.as_mut(),
+        "gpu" => env.gpu.as_mut(),
+        "fpga" => env.fpga.as_mut(),
+        _ => None,
+    }
+}
+
+/// `spec`'s effective value for `key`: its own override, else the
+/// fig. 3 default.  Parse-time validation guarantees the key is known,
+/// so the fallback 0.0 is unreachable.
+fn effective_param(spec: &DeviceSpec, device: &str, key: &str) -> f64 {
+    spec.params
+        .get(key)
+        .copied()
+        .or_else(|| default_param(device, key))
+        .unwrap_or(0.0)
+}
+
+fn parse_calibration(j: &Json) -> Result<Calibration> {
+    let Json::Obj(m) = j else {
+        bail!("calibrations entries must be {{device: {{param: multiplier}}}} objects");
+    };
+    let mut out = Calibration::new();
+    for (device, params) in m {
+        let known = known_params(device).ok_or_else(|| {
+            anyhow!("calibration: unknown device {device:?} (known: cpu, manycore, gpu, fpga)")
+        })?;
+        let Json::Obj(pm) = params else {
+            bail!("calibration {device:?}: expected an object of multipliers");
+        };
+        let mut muls = BTreeMap::new();
+        for (key, v) in pm {
+            if !known.contains(&key.as_str()) {
+                bail!(
+                    "calibration: unknown {device} parameter {key:?} (known: {})",
+                    known.join(", ")
+                );
+            }
+            let n = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("calibration {device}.{key}: multiplier must be a number"))?;
+            if !n.is_finite() || n <= 0.0 {
+                bail!("calibration {device}.{key}: multiplier must be positive, got {n}");
+            }
+            muls.insert(key.clone(), n);
+        }
+        out.insert(device.clone(), muls);
+    }
+    Ok(out)
+}
+
+fn calibration_to_json(cal: &Calibration) -> Json {
+    Json::Obj(
+        cal.iter()
+            .map(|(device, muls)| {
+                let pm = muls.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect();
+                (device.clone(), Json::Obj(pm))
+            })
+            .collect(),
+    )
+}
+
+fn parse_workload_set(j: &Json, i: usize) -> Result<Vec<AppSpec>> {
+    let set = match j {
+        Json::Arr(items) => {
+            if items.is_empty() {
+                bail!("workloads[{i}]: application set must not be empty");
+            }
+            items.iter().map(AppSpec::parse).collect::<Result<Vec<_>>>()?
+        }
+        _ => vec![AppSpec::parse(j)?],
+    };
+    // Build every application once so expansion is infallible.
+    for a in &set {
+        a.build().map_err(|e| anyhow!("workloads[{i}]: {}: {e}", a.label()))?;
+    }
+    Ok(set)
+}
+
+impl GridSpec {
+    /// Parse a grid object; `fallback_name` names the grid when the JSON
+    /// has no `"name"` (the loader passes the file stem).
+    pub fn parse(j: &Json, fallback_name: &str) -> Result<Self> {
+        let Json::Obj(m) = j else {
+            bail!("grid: expected a JSON object");
+        };
+        const KNOWN: &[&str] =
+            &["name", "description", "trial_concurrency", "requirements", "axes"];
+        for k in m.keys() {
+            if !KNOWN.contains(&k.as_str()) {
+                bail!("unknown grid key {k:?} (known: {})", KNOWN.join(", "));
+            }
+        }
+        let name = get_str(m, "name")?.unwrap_or(fallback_name).to_string();
+        let description = get_str(m, "description")?.unwrap_or("").to_string();
+        let concurrency = match get_str(m, "trial_concurrency")? {
+            Some(s) => concurrency_from_label(s)?,
+            None => TrialConcurrency::Staged,
+        };
+        let requirements = match m.get("requirements") {
+            Some(r) => parse_requirements(r)?,
+            None => UserRequirements::default(),
+        };
+        let Some(Json::Obj(axes)) = m.get("axes") else {
+            bail!("grid needs an \"axes\" object");
+        };
+        const AXES: &[&str] =
+            &["fleets", "calibrations", "price_scales", "workloads", "seeds", "schedules"];
+        for k in axes.keys() {
+            if !AXES.contains(&k.as_str()) {
+                bail!("unknown grid axis {k:?} (known: {})", AXES.join(", "));
+            }
+        }
+        let axis = |key: &str| -> Result<Option<&Vec<Json>>> {
+            match axes.get(key) {
+                None => Ok(None),
+                Some(j) => {
+                    let arr =
+                        j.as_arr().ok_or_else(|| anyhow!("axis {key:?} must be an array"))?;
+                    if arr.is_empty() {
+                        bail!("axis {key:?} must not be empty (omit it for the default)");
+                    }
+                    Ok(Some(arr))
+                }
+            }
+        };
+
+        let fleets = match axis("fleets")? {
+            Some(items) => items
+                .iter()
+                .enumerate()
+                .map(|(i, j)| {
+                    let env =
+                        EnvSpec::parse(j).map_err(|e| anyhow!("fleets[{i}]: {e}"))?;
+                    Testbed::from_spec(&env).map_err(|e| anyhow!("fleets[{i}]: {e}"))?;
+                    Ok(env)
+                })
+                .collect::<Result<Vec<_>>>()?,
+            None => vec![EnvSpec::default()],
+        };
+        let calibrations = match axis("calibrations")? {
+            Some(items) => items.iter().map(parse_calibration).collect::<Result<Vec<_>>>()?,
+            None => vec![Calibration::new()],
+        };
+        let price_scales = match axis("price_scales")? {
+            Some(items) => items
+                .iter()
+                .map(|j| {
+                    let n = j
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("price_scales entries must be numbers"))?;
+                    if !n.is_finite() || n <= 0.0 {
+                        bail!("price_scales entries must be positive, got {n}");
+                    }
+                    Ok(n)
+                })
+                .collect::<Result<Vec<_>>>()?,
+            None => vec![1.0],
+        };
+        let workloads = axis("workloads")?
+            .ok_or_else(|| anyhow!("grid needs a \"workloads\" axis"))?
+            .iter()
+            .enumerate()
+            .map(|(i, j)| parse_workload_set(j, i))
+            .collect::<Result<Vec<_>>>()?;
+        let seeds = match axis("seeds")? {
+            Some(items) => items
+                .iter()
+                .map(|j| Ok(opt_u64(Some(j), "seeds")?.unwrap_or(0)))
+                .collect::<Result<Vec<_>>>()?,
+            None => vec![0xC0FFEE],
+        };
+        let schedules = match axis("schedules")? {
+            Some(items) => items
+                .iter()
+                .map(|j| {
+                    SchedulePolicy::from_label(
+                        j.as_str()
+                            .ok_or_else(|| anyhow!("schedules entries must be strings"))?,
+                    )
+                })
+                .collect::<Result<Vec<_>>>()?,
+            None => vec![SchedulePolicy::Paper],
+        };
+
+        Ok(Self {
+            name,
+            description,
+            concurrency,
+            requirements,
+            fleets,
+            calibrations,
+            price_scales,
+            workloads,
+            seeds,
+            schedules,
+        })
+    }
+
+    /// Parse from JSON source text (one `*.json` grid file).
+    pub fn from_str(src: &str, fallback_name: &str) -> Result<Self> {
+        Self::parse(&Json::parse(src)?, fallback_name)
+    }
+
+    /// Canonical JSON form; `parse(to_json(grid)) == grid`.
+    pub fn to_json(&self) -> Json {
+        let mut axes = BTreeMap::new();
+        axes.insert(
+            "fleets".to_string(),
+            Json::Arr(self.fleets.iter().map(EnvSpec::to_json).collect()),
+        );
+        axes.insert(
+            "calibrations".to_string(),
+            Json::Arr(self.calibrations.iter().map(calibration_to_json).collect()),
+        );
+        axes.insert(
+            "price_scales".to_string(),
+            Json::Arr(self.price_scales.iter().map(|s| Json::Num(*s)).collect()),
+        );
+        axes.insert(
+            "workloads".to_string(),
+            Json::Arr(
+                self.workloads
+                    .iter()
+                    .map(|set| {
+                        if set.len() == 1 {
+                            set[0].to_json()
+                        } else {
+                            Json::Arr(set.iter().map(AppSpec::to_json).collect())
+                        }
+                    })
+                    .collect(),
+            ),
+        );
+        axes.insert(
+            "seeds".to_string(),
+            Json::Arr(self.seeds.iter().map(|s| Json::Num(*s as f64)).collect()),
+        );
+        axes.insert(
+            "schedules".to_string(),
+            Json::Arr(self.schedules.iter().map(|s| Json::Str(s.label().into())).collect()),
+        );
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        if !self.description.is_empty() {
+            m.insert("description".to_string(), Json::Str(self.description.clone()));
+        }
+        m.insert(
+            "trial_concurrency".to_string(),
+            Json::Str(self.concurrency.label().to_string()),
+        );
+        if self.requirements != UserRequirements::default() {
+            let mut r = BTreeMap::new();
+            if let Some(t) = self.requirements.target_improvement {
+                r.insert("target_improvement".to_string(), Json::Num(t));
+            }
+            if let Some(p) = self.requirements.max_price_usd {
+                r.insert("max_price_usd".to_string(), Json::Num(p));
+            }
+            m.insert("requirements".to_string(), Json::Obj(r));
+        }
+        m.insert("axes".to_string(), Json::Obj(axes));
+        Json::Obj(m)
+    }
+
+    /// Cells in the cross-product (product of the axis lengths).
+    pub fn len(&self) -> usize {
+        self.fleets.len()
+            * self.calibrations.len()
+            * self.price_scales.len()
+            * self.workloads.len()
+            * self.seeds.len()
+            * self.schedules.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The fleet of cell (`fleet_i`, `cal_i`, `price_i`): the base fleet
+    /// with the calibration multipliers folded into its overrides, then
+    /// every present destination's price scaled.
+    fn cell_fleet(&self, fleet_i: usize, cal_i: usize, price_i: usize) -> EnvSpec {
+        let mut env = self.fleets[fleet_i].clone();
+        for (device, muls) in &self.calibrations[cal_i] {
+            let Some(spec) = device_entry(&mut env, device) else {
+                continue; // fleet doesn't carry this device: inapplicable
+            };
+            for (key, mult) in muls {
+                let base = effective_param(spec, device, key);
+                spec.params.insert(key.clone(), base * mult);
+            }
+        }
+        let scale = self.price_scales[price_i];
+        if scale != 1.0 {
+            for device in ["manycore", "gpu", "fpga"] {
+                if let Some(spec) = device_entry(&mut env, device) {
+                    let base = effective_param(spec, device, "price_usd");
+                    spec.params.insert("price_usd".to_string(), base * scale);
+                }
+            }
+        }
+        env
+    }
+
+    /// Expand cell `index` (row-major over the axis order, schedules
+    /// fastest).  Infallible — everything was validated at parse time.
+    /// Panics if `index >= self.len()`.
+    pub fn scenario(&self, index: usize) -> GridScenario {
+        assert!(index < self.len(), "grid cell {index} out of range ({} cells)", self.len());
+        let mut rest = index;
+        let mut pick = |len: usize| {
+            let i = rest % len;
+            rest /= len;
+            i
+        };
+        let sched_i = pick(self.schedules.len());
+        let seed_i = pick(self.seeds.len());
+        let wl_i = pick(self.workloads.len());
+        let price_i = pick(self.price_scales.len());
+        let cal_i = pick(self.calibrations.len());
+        let fleet_i = pick(self.fleets.len());
+
+        let devices = self.cell_fleet(fleet_i, cal_i, price_i);
+        let labels: [(&str, usize, String); 6] = [
+            ("fleet", self.fleets.len(), devices.fleet_label()),
+            (
+                "calibration",
+                self.calibrations.len(),
+                calibration_label(&self.calibrations[cal_i]),
+            ),
+            (
+                "price",
+                self.price_scales.len(),
+                format!("price x{}", self.price_scales[price_i]),
+            ),
+            ("workload", self.workloads.len(), workload_label(&self.workloads[wl_i])),
+            ("seed", self.seeds.len(), format!("seed {}", self.seeds[seed_i])),
+            ("schedule", self.schedules.len(), self.schedules[sched_i].label().to_string()),
+        ];
+        let description = labels
+            .iter()
+            .map(|(axis, _, label)| format!("{axis}={label}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let coords: Vec<(String, String)> = labels
+            .iter()
+            .filter(|(_, n, _)| *n > 1)
+            .map(|(axis, _, label)| (axis.to_string(), label.clone()))
+            .collect();
+        GridScenario {
+            index,
+            spec: ScenarioSpec {
+                name: format!("{}-{:05}", self.name, index),
+                description,
+                seed: self.seeds[seed_i],
+                concurrency: self.concurrency,
+                schedule: self.schedules[sched_i],
+                requirements: self.requirements,
+                devices,
+                apps: self.workloads[wl_i].clone(),
+            },
+            coords,
+        }
+    }
+
+    /// Lazily expand every cell, in index order.
+    pub fn scenarios(&self) -> impl Iterator<Item = GridScenario> + '_ {
+        (0..self.len()).map(|i| self.scenario(i))
+    }
+}
+
+/// Load and validate a grid file.  Every error names the file.
+pub fn load_grid(path: &Path) -> Result<GridSpec> {
+    let src = std::fs::read_to_string(path).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("grid");
+    GridSpec::from_str(&src, stem).map_err(|e| anyhow!("{}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: &str = r#"{
+        "name": "study",
+        "trial_concurrency": "sequential",
+        "requirements": {"target_improvement": 2.0},
+        "axes": {
+            "fleets": [{"manycore": {}, "gpu": {"price_usd": 3000}}, {"manycore": {}}],
+            "calibrations": [{}, {"gpu": {"flops": 2}}],
+            "price_scales": [1, 1.5],
+            "workloads": [{"workload": "vecadd", "n": 1048576},
+                          [{"workload": "2mm"}, {"workload": "atax"}]],
+            "seeds": [1, 2, 3],
+            "schedules": ["paper", "price_ascending"]
+        }
+    }"#;
+
+    #[test]
+    fn len_is_the_product_of_axis_lengths() {
+        let g = GridSpec::from_str(SRC, "g").unwrap();
+        assert_eq!(g.len(), 2 * 2 * 2 * 2 * 3 * 2);
+        assert!(!g.is_empty());
+        assert_eq!(g.scenarios().count(), g.len());
+    }
+
+    #[test]
+    fn omitted_axes_default_to_one_identity_cell() {
+        let g = GridSpec::from_str(
+            r#"{"axes": {"workloads": [{"workload": "vecadd"}]}}"#,
+            "tiny",
+        )
+        .unwrap();
+        assert_eq!(g.name, "tiny", "falls back to the file stem");
+        assert_eq!(g.len(), 1);
+        let cell = g.scenario(0);
+        assert_eq!(cell.spec.name, "tiny-00000");
+        assert_eq!(cell.spec.seed, 0xC0FFEE);
+        assert_eq!(cell.spec.schedule, SchedulePolicy::Paper);
+        assert_eq!(cell.spec.devices, EnvSpec::default());
+        assert!(cell.coords.is_empty(), "single-valued axes contribute no coords");
+    }
+
+    #[test]
+    fn schedules_axis_varies_fastest_and_fleets_slowest() {
+        let g = GridSpec::from_str(SRC, "g").unwrap();
+        let (a, b) = (g.scenario(0), g.scenario(1));
+        assert_eq!(a.spec.schedule, SchedulePolicy::Paper);
+        assert_eq!(b.spec.schedule, SchedulePolicy::PriceAscending);
+        assert_eq!(a.spec.seed, b.spec.seed, "only the fastest axis moved");
+        let last = g.scenario(g.len() - 1);
+        assert_eq!(last.spec.devices.fleet_label(), "cpu + manycore");
+        assert_eq!(last.spec.seed, 3);
+    }
+
+    #[test]
+    fn calibration_scales_override_or_default_and_skips_absent_devices() {
+        let g = GridSpec::from_str(SRC, "g").unwrap();
+        // Cell with fleet 0 (has a gpu) and calibration 1 (gpu.flops x2):
+        // index = ((((0*2 + 1)*2 + 0)*2 + 0)*3 + 0)*2 + 0 = 24.
+        let cell = g.scenario(24);
+        let gpu = cell.spec.devices.gpu.as_ref().unwrap();
+        let base = default_param("gpu", "flops").unwrap();
+        assert_eq!(gpu.params["flops"], base * 2.0);
+        assert_eq!(gpu.params["price_usd"], 3000.0, "fleet override untouched");
+        assert!(cell.coords.iter().any(|(a, l)| a == "calibration" && l == "gpu.flopsx2"));
+        // Same calibration on fleet 1 (no gpu): inapplicable, cell still expands.
+        let cell = g.scenario(24 + g.len() / 2);
+        assert!(cell.spec.devices.gpu.is_none());
+    }
+
+    #[test]
+    fn price_scale_multiplies_every_present_destination() {
+        let g = GridSpec::from_str(SRC, "g").unwrap();
+        // Fleet 0, calibration 0, price index 1 (x1.5):
+        // index = ((((0*2 + 0)*2 + 1)*2 + 0)*3 + 0)*2 + 0 = 12.
+        let cell = g.scenario(12);
+        let mc = cell.spec.devices.manycore.as_ref().unwrap();
+        let gpu = cell.spec.devices.gpu.as_ref().unwrap();
+        assert_eq!(mc.params["price_usd"], default_param("manycore", "price_usd").unwrap() * 1.5);
+        assert_eq!(gpu.params["price_usd"], 3000.0 * 1.5, "scales the fleet's own override");
+        // Identity scale leaves overrides untouched (clean round-trips).
+        let id = g.scenario(0);
+        assert!(!id.spec.devices.manycore.as_ref().unwrap().params.contains_key("price_usd"));
+    }
+
+    #[test]
+    fn expanded_cells_carry_the_shared_configuration() {
+        let g = GridSpec::from_str(SRC, "g").unwrap();
+        let cell = g.scenario(7);
+        assert_eq!(cell.index, 7);
+        assert_eq!(cell.spec.concurrency, TrialConcurrency::Sequential);
+        assert_eq!(cell.spec.requirements.target_improvement, Some(2.0));
+        assert!(cell.spec.description.contains("seed="), "{}", cell.spec.description);
+        // Every cell validates end-to-end (parse already built everything).
+        cell.spec.offloader().unwrap();
+        cell.spec.applications().unwrap();
+    }
+
+    #[test]
+    fn grid_roundtrips_through_json() {
+        let g = GridSpec::from_str(SRC, "g").unwrap();
+        let back = GridSpec::parse(&Json::parse(&g.to_json().to_string()).unwrap(), "g").unwrap();
+        assert_eq!(g, back);
+    }
+
+    #[test]
+    fn rejects_malformed_grids() {
+        let cases = [
+            (r#"{"axes": {}}"#, "needs a \"workloads\" axis"),
+            (r#"{"grid": 1, "axes": {"workloads": [{"workload": "vecadd"}]}}"#, "unknown grid key"),
+            (
+                r#"{"axes": {"workloads": [{"workload": "vecadd"}], "devices": []}}"#,
+                "unknown grid axis",
+            ),
+            (
+                r#"{"axes": {"workloads": [{"workload": "vecadd"}], "seeds": []}}"#,
+                "must not be empty",
+            ),
+            (
+                r#"{"axes": {"workloads": [{"workload": "warp-drive"}]}}"#,
+                "unknown workload",
+            ),
+            (
+                r#"{"axes": {"workloads": [[]]}}"#,
+                "must not be empty",
+            ),
+            (
+                r#"{"axes": {"workloads": [{"workload": "vecadd"}],
+                    "calibrations": [{"tpu": {"flops": 2}}]}}"#,
+                "unknown device \"tpu\"",
+            ),
+            (
+                r#"{"axes": {"workloads": [{"workload": "vecadd"}],
+                    "calibrations": [{"gpu": {"flopz": 2}}]}}"#,
+                "unknown gpu parameter \"flopz\"",
+            ),
+            (
+                r#"{"axes": {"workloads": [{"workload": "vecadd"}],
+                    "calibrations": [{"gpu": {"flops": -1}}]}}"#,
+                "must be positive",
+            ),
+            (
+                r#"{"axes": {"workloads": [{"workload": "vecadd"}],
+                    "price_scales": [0]}}"#,
+                "must be positive",
+            ),
+            (
+                r#"{"axes": {"workloads": [{"workload": "vecadd"}],
+                    "fleets": [{"gpu": {"flopz": 1}}]}}"#,
+                "fleets[0]",
+            ),
+            (
+                r#"{"axes": {"workloads": [{"workload": "vecadd"}],
+                    "schedules": ["speed_descending"]}}"#,
+                "unknown schedule",
+            ),
+        ];
+        for (src, needle) in cases {
+            let e = GridSpec::from_str(src, "bad").unwrap_err().to_string();
+            assert!(e.contains(needle), "{src}: {e}");
+        }
+    }
+}

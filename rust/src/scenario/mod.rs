@@ -22,13 +22,18 @@
 //! via `SchedulePolicy::schedule_for`, so a fleet that omits a device
 //! simply never schedules its trials.
 
+pub mod grid;
 pub mod spec;
 pub mod sweep;
 
 use crate::coordinator::{BatchOutcome, SchedulePolicy};
 
+pub use grid::{load_grid, GridScenario, GridSpec};
 pub use spec::{AppSpec, ScenarioSpec};
-pub use sweep::{load_dir, load_file, run_dir, run_scenarios, Scenario};
+pub use sweep::{
+    load_dir, load_file, run_dir, run_grid, run_scenarios, run_streamed, stream_dir, Scenario,
+    StreamOutcome,
+};
 
 /// What one scenario produced: its applications' outcomes (in spec order)
 /// plus the fleet/schedule labels the reports show.

@@ -26,6 +26,7 @@
 //! `tests/properties.rs::scenario_spec_roundtrips_through_json`.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -35,6 +36,7 @@ use crate::coordinator::{
     BatchOffloader, MixedOffloader, SchedulePolicy, TrialConcurrency, UserRequirements,
 };
 use crate::devices::{EnvSpec, EvalCache, PlanCache, Testbed};
+use crate::record::{NullSink, RecordSink, ScopedSink};
 use crate::util::json::Json;
 
 use super::ScenarioOutcome;
@@ -47,7 +49,7 @@ pub enum AppSpec {
     Inline { source: String },
 }
 
-fn opt_u64(v: Option<&Json>, key: &str) -> Result<Option<u64>> {
+pub(crate) fn opt_u64(v: Option<&Json>, key: &str) -> Result<Option<u64>> {
     match v {
         None => Ok(None),
         Some(j) => {
@@ -66,7 +68,7 @@ fn opt_u64(v: Option<&Json>, key: &str) -> Result<Option<u64>> {
 }
 
 impl AppSpec {
-    fn parse(j: &Json) -> Result<Self> {
+    pub(crate) fn parse(j: &Json) -> Result<Self> {
         let Json::Obj(m) = j else {
             bail!("each applications entry must be an object");
         };
@@ -99,7 +101,7 @@ impl AppSpec {
         }
     }
 
-    fn to_json(&self) -> Json {
+    pub(crate) fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         match self {
             AppSpec::Named { workload, n, iters } => {
@@ -126,10 +128,21 @@ impl AppSpec {
         }
     }
 
-    fn label(&self) -> String {
+    pub(crate) fn label(&self) -> String {
         match self {
             AppSpec::Named { workload, .. } => format!("workload {workload:?}"),
             AppSpec::Inline { .. } => "inline application".to_string(),
+        }
+    }
+
+    /// Short tag for grid-axis labels, e.g. `vecadd(1048576)`.
+    pub(crate) fn axis_tag(&self) -> String {
+        match self {
+            AppSpec::Named { workload, n, .. } => match n {
+                Some(n) => format!("{workload}({n})"),
+                None => workload.clone(),
+            },
+            AppSpec::Inline { .. } => "inline".to_string(),
         }
     }
 }
@@ -148,7 +161,7 @@ pub struct ScenarioSpec {
     pub apps: Vec<AppSpec>,
 }
 
-fn concurrency_from_label(s: &str) -> Result<TrialConcurrency> {
+pub(crate) fn concurrency_from_label(s: &str) -> Result<TrialConcurrency> {
     match s {
         "staged" => Ok(TrialConcurrency::Staged),
         "sequential" => Ok(TrialConcurrency::Sequential),
@@ -156,13 +169,13 @@ fn concurrency_from_label(s: &str) -> Result<TrialConcurrency> {
     }
 }
 
-fn get_str<'a>(m: &'a BTreeMap<String, Json>, key: &str) -> Result<Option<&'a str>> {
+pub(crate) fn get_str<'a>(m: &'a BTreeMap<String, Json>, key: &str) -> Result<Option<&'a str>> {
     m.get(key)
         .map(|v| v.as_str().ok_or_else(|| anyhow!("{key:?} must be a string")))
         .transpose()
 }
 
-fn parse_requirements(j: &Json) -> Result<UserRequirements> {
+pub(crate) fn parse_requirements(j: &Json) -> Result<UserRequirements> {
     let Json::Obj(m) = j else {
         bail!("requirements: expected an object");
     };
@@ -326,6 +339,23 @@ impl ScenarioSpec {
         plans: &PlanCache,
         evals: &EvalCache,
     ) -> Result<ScenarioOutcome> {
+        self.run_streamed(concurrency, plans, evals, &(Arc::new(NullSink) as Arc<dyn RecordSink>))
+    }
+
+    /// [`Self::run_with_caches`] with trial/clock records streaming into
+    /// `sink` *as trials commit*, each re-labelled with this scenario's
+    /// name.  Emission is outcome-neutral: the returned
+    /// [`ScenarioOutcome`] stays bit-identical to a sink-less run.
+    /// Within one application the event order is the commit order;
+    /// across concurrently-running applications the interleaving is
+    /// scheduling-dependent (see `record/`).
+    pub fn run_streamed(
+        &self,
+        concurrency: TrialConcurrency,
+        plans: &PlanCache,
+        evals: &EvalCache,
+        sink: &Arc<dyn RecordSink>,
+    ) -> Result<ScenarioOutcome> {
         let apps = self.applications()?;
         let mut batcher = BatchOffloader::default();
         batcher.offloader = self.offloader()?;
@@ -334,6 +364,9 @@ impl ScenarioSpec {
         // any worker count).
         batcher.offloader.workers = 1;
         batcher.offloader.concurrency = concurrency;
+        if sink.enabled() {
+            batcher.offloader.sink = Arc::new(ScopedSink::new(self.name.clone(), Arc::clone(sink)));
+        }
         let batch = batcher.run_with_caches(&apps, plans, evals);
         Ok(ScenarioOutcome {
             name: self.name.clone(),

@@ -10,13 +10,20 @@
 //! [`BatchOffloader`](crate::coordinator::BatchOffloader)/worker-pool
 //! machinery, in file-name order (deterministic reports).
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::devices::{EvalCache, PlanCache};
+use crate::record::{
+    AxisStat, ChosenRow, ParetoPoint, RecordEvent, RecordSink, SweepRow, WardProgress, WardenSet,
+};
+use crate::report;
 
+use super::grid::{GridScenario, GridSpec};
 use super::spec::ScenarioSpec;
 use super::{ScenarioOutcome, SweepOutcome};
 
@@ -42,16 +49,34 @@ pub fn load_file(path: &Path) -> Result<Scenario> {
 }
 
 /// Load every `*.json` scenario directly inside `dir` (the `golden/`
-/// subdirectory is not descended into), sorted by file name.
+/// subdirectory is not descended into), sorted by file name.  A
+/// directory holding only non-JSON files fails listing what it skipped,
+/// so a corpus of `.json.bak` or `.yaml` files doesn't read as "empty".
 pub fn load_dir(dir: &Path) -> Result<Vec<Scenario>> {
     let entries = std::fs::read_dir(dir).map_err(|e| anyhow!("{}: {e}", dir.display()))?;
-    let mut paths: Vec<PathBuf> = entries
-        .filter_map(|e| e.ok().map(|e| e.path()))
-        .filter(|p| p.is_file() && p.extension().map(|x| x == "json").unwrap_or(false))
-        .collect();
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut skipped: Vec<String> = Vec::new();
+    for p in entries.filter_map(|e| e.ok().map(|e| e.path())) {
+        if !p.is_file() {
+            continue;
+        }
+        if p.extension().map(|x| x == "json").unwrap_or(false) {
+            paths.push(p);
+        } else if let Some(name) = p.file_name().and_then(|n| n.to_str()) {
+            skipped.push(name.to_string());
+        }
+    }
     paths.sort();
     if paths.is_empty() {
-        bail!("{}: no *.json scenario files found", dir.display());
+        if skipped.is_empty() {
+            bail!("{}: no *.json scenario files found", dir.display());
+        }
+        skipped.sort();
+        bail!(
+            "{}: no *.json scenario files found (skipped non-JSON: {})",
+            dir.display(),
+            skipped.join(", ")
+        );
     }
     paths.iter().map(|p| load_file(p)).collect()
 }
@@ -82,6 +107,230 @@ pub fn run_scenarios(scenarios: &[Scenario]) -> Result<SweepOutcome> {
 /// `mixoff sweep <dir>`: load the corpus, run the sweep.
 pub fn run_dir(dir: &Path) -> Result<SweepOutcome> {
     run_scenarios(&load_dir(dir)?)
+}
+
+/// What a *streaming* sweep produced: aggregates only.  Per-scenario
+/// outcomes went out through the [`RecordSink`] as they happened and
+/// were dropped — this summary is all that stays resident, no matter
+/// how many cells the grid had.
+#[derive(Clone, Debug)]
+pub struct StreamOutcome {
+    /// Cells the grid/corpus offered.
+    pub scenarios_total: usize,
+    /// Cells actually run (`< scenarios_total` iff a warden stopped).
+    pub scenarios_run: usize,
+    /// Applications offloaded across every cell run.
+    pub apps: usize,
+    /// Distinct patterns measured across every cell run (deterministic —
+    /// what the warden evaluation budget counts).
+    pub evaluations: usize,
+    /// Total simulated verification hours across every cell run.
+    pub total_verify_hours: f64,
+    /// Real wall-clock seconds for the whole stream.
+    pub wall_seconds: f64,
+    /// The tripped warden's reason, if one stopped the sweep early.
+    pub stopped: Option<String>,
+    /// The chosen deployment with the highest improvement seen anywhere.
+    pub best: Option<ParetoPoint>,
+    /// Price-vs-time Pareto frontier over every chosen deployment
+    /// (non-dominated: no other point is both cheaper and faster).
+    pub pareto: Vec<ParetoPoint>,
+    /// Per-axis-value aggregates, for every varied grid axis.
+    pub axes: Vec<AxisStat>,
+}
+
+impl StreamOutcome {
+    /// Scenarios processed per wall-clock second.
+    pub fn scenarios_per_sec(&self) -> f64 {
+        if self.wall_seconds == 0.0 {
+            0.0
+        } else {
+            self.scenarios_run as f64 / self.wall_seconds
+        }
+    }
+}
+
+/// Insert `p` into the non-dominated frontier `front` (price vs time):
+/// drop `p` if some point is no worse on both axes, evict points `p`
+/// beats on both.  The frontier stays small — one point per distinct
+/// price level at most — so the streaming sweep's residency is O(1) in
+/// the number of cells.
+fn pareto_insert(front: &mut Vec<ParetoPoint>, p: ParetoPoint) {
+    if front.iter().any(|q| q.price_usd <= p.price_usd && q.seconds <= p.seconds) {
+        return;
+    }
+    front.retain(|q| !(p.price_usd <= q.price_usd && p.seconds <= q.seconds));
+    front.push(p);
+}
+
+/// Run scenarios one at a time, streaming every record into `sink` and
+/// dropping each outcome before the next cell starts — the resident
+/// state is the caches, the Pareto frontier and the per-axis
+/// accumulators, never the outcome list.  `wardens` are checked at each
+/// scenario-commit boundary: a tripped warden stops the sweep *between*
+/// scenarios, so every committed outcome is exactly what a wardenless
+/// sweep would have produced (the warden changes only how far the sweep
+/// got — see record/ward.rs).
+///
+/// Event order: each cell's trial/clock records stream while it runs,
+/// then its `scenario` and `sweep_row` records are emitted in commit
+/// order; `pareto` and `axis_stat` records follow the final cell.
+pub fn run_streamed(
+    scenarios: impl IntoIterator<Item = GridScenario>,
+    total: usize,
+    sink: &Arc<dyn RecordSink>,
+    wardens: &WardenSet,
+) -> Result<StreamOutcome> {
+    let t0 = Instant::now();
+    let plans = PlanCache::new();
+    let evals = EvalCache::new();
+    // (axis, label) -> (scenarios, sum of best improvements, best).
+    let mut axis_acc: BTreeMap<(String, String), (usize, f64, f64)> = BTreeMap::new();
+    let mut out = StreamOutcome {
+        scenarios_total: total,
+        scenarios_run: 0,
+        apps: 0,
+        evaluations: 0,
+        total_verify_hours: 0.0,
+        wall_seconds: 0.0,
+        stopped: None,
+        best: None,
+        pareto: Vec::new(),
+        axes: Vec::new(),
+    };
+    let mut progress = WardProgress::default();
+    for cell in scenarios {
+        let spec = &cell.spec;
+        let outcome = spec
+            .run_streamed(spec.concurrency, &plans, &evals, sink)
+            .map_err(|e| anyhow!("{}: {e}", spec.name))?;
+        if sink.enabled() {
+            sink.emit(&RecordEvent::Scenario {
+                name: outcome.name.clone(),
+                outcome: report::scenario_to_json(&outcome),
+            });
+        }
+        let mut all_satisfied = !outcome.batch.outcomes.is_empty();
+        let mut improved = false;
+        let mut cell_best = 1.0_f64; // no offload = staying on the 1-core baseline
+        for o in &outcome.batch.outcomes {
+            match &o.chosen {
+                Some(c) => {
+                    if !spec.requirements.satisfied(c.improvement, c.price_usd) {
+                        all_satisfied = false;
+                    }
+                    cell_best = cell_best.max(c.improvement);
+                    let p = ParetoPoint {
+                        scenario: outcome.name.clone(),
+                        app: o.app_name.clone(),
+                        price_usd: c.price_usd,
+                        seconds: c.seconds,
+                        improvement: c.improvement,
+                    };
+                    if out.best.as_ref().map(|b| c.improvement > b.improvement).unwrap_or(true)
+                    {
+                        out.best = Some(p.clone());
+                        improved = true;
+                    }
+                    pareto_insert(&mut out.pareto, p);
+                }
+                None => all_satisfied = false,
+            }
+            if sink.enabled() {
+                sink.emit(&RecordEvent::SweepRow(SweepRow {
+                    scenario: outcome.name.clone(),
+                    fleet: outcome.fleet.clone(),
+                    app: o.app_name.clone(),
+                    baseline_seconds: o.baseline_seconds,
+                    chosen: o.chosen.as_ref().map(|c| ChosenRow {
+                        trial: c.kind.label(),
+                        seconds: c.seconds,
+                        improvement: c.improvement,
+                        price_usd: c.price_usd,
+                    }),
+                    verify_hours: o.clock.total_hours(),
+                    evaluations: o.evaluations(),
+                }));
+            }
+        }
+        for (axis, label) in &cell.coords {
+            let e = axis_acc
+                .entry((axis.clone(), label.clone()))
+                .or_insert((0, 0.0, f64::NEG_INFINITY));
+            e.0 += 1;
+            e.1 += cell_best;
+            e.2 = e.2.max(cell_best);
+        }
+        out.scenarios_run += 1;
+        out.apps += outcome.batch.outcomes.len();
+        out.evaluations += outcome.batch.evaluations();
+        out.total_verify_hours += outcome.batch.total_verify_hours();
+        progress.scenarios = out.scenarios_run;
+        progress.evaluations = out.evaluations;
+        progress.wall_seconds = t0.elapsed().as_secs_f64();
+        progress.satisfied = all_satisfied;
+        progress.since_improvement =
+            if improved { 0 } else { progress.since_improvement + 1 };
+        if let Some(reason) = wardens.check(&progress) {
+            out.stopped = Some(reason);
+            break;
+        }
+        // `outcome` drops here: nothing per-cell stays resident.
+    }
+    out.pareto.sort_by(|a, b| {
+        a.price_usd.total_cmp(&b.price_usd).then(a.seconds.total_cmp(&b.seconds))
+    });
+    out.axes = axis_acc
+        .into_iter()
+        .map(|((axis, label), (n, sum, best))| AxisStat {
+            axis,
+            label,
+            scenarios: n,
+            mean_improvement: sum / n as f64,
+            best_improvement: best,
+        })
+        .collect();
+    if sink.enabled() {
+        for p in &out.pareto {
+            sink.emit(&RecordEvent::Pareto(p.clone()));
+        }
+        for a in &out.axes {
+            sink.emit(&RecordEvent::AxisStat(a.clone()));
+        }
+    }
+    out.wall_seconds = t0.elapsed().as_secs_f64();
+    Ok(out)
+}
+
+/// `mixoff sweep --grid <file>`: lazily expand the grid's cross-product
+/// through the streaming runner.
+pub fn run_grid(
+    grid: &GridSpec,
+    sink: &Arc<dyn RecordSink>,
+    wardens: &WardenSet,
+) -> Result<StreamOutcome> {
+    run_streamed(grid.scenarios(), grid.len(), sink, wardens)
+}
+
+/// Stream a scenario *directory* (same corpus `run_dir` runs buffered)
+/// through the record pipeline.  Directory scenarios carry no grid
+/// coordinates, so the stream has no axis aggregates.
+pub fn stream_dir(
+    dir: &Path,
+    sink: &Arc<dyn RecordSink>,
+    wardens: &WardenSet,
+) -> Result<StreamOutcome> {
+    let scenarios = load_dir(dir)?;
+    let total = scenarios.len();
+    run_streamed(
+        scenarios
+            .into_iter()
+            .enumerate()
+            .map(|(index, s)| GridScenario { index, spec: s.spec, coords: Vec::new() }),
+        total,
+        sink,
+        wardens,
+    )
 }
 
 #[cfg(test)]
@@ -173,7 +422,105 @@ mod tests {
     fn empty_dir_is_an_error() {
         let dir = tmp_dir("empty");
         let e = load_dir(&dir).unwrap_err().to_string();
+        assert!(e.contains(&dir.display().to_string()), "error must name the path: {e}");
         assert!(e.contains("no *.json scenario files"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_dir_error_names_the_path() {
+        let dir = tmp_dir("missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        let e = load_dir(&dir).unwrap_err().to_string();
+        assert!(e.contains(&dir.display().to_string()), "error must name the path: {e}");
+    }
+
+    #[test]
+    fn stray_files_are_listed_when_nothing_loads() {
+        let dir = tmp_dir("stray");
+        std::fs::write(dir.join("notes.txt"), "x").unwrap();
+        std::fs::write(dir.join("a.yaml"), "x").unwrap();
+        let e = load_dir(&dir).unwrap_err().to_string();
+        assert!(e.contains("no *.json scenario files"), "{e}");
+        assert!(e.contains("skipped non-JSON: a.yaml, notes.txt"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Streaming a directory emits one `scenario` + one `sweep_row` per
+    /// scenario (in commit order) and drops the outcomes; the summary
+    /// aggregates match the buffered runner's.
+    #[test]
+    fn stream_dir_matches_buffered_run_dir() {
+        use crate::record::{MemorySink, RecordEvent};
+
+        let dir = tmp_dir("stream");
+        std::fs::write(
+            dir.join("a-manycore.json"),
+            r#"{"devices": {"manycore": {}},
+                "applications": [{"workload": "vecadd", "n": 1048576}]}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("b-cpu-only.json"),
+            r#"{"devices": {}, "applications": [{"workload": "vecadd", "n": 1048576}]}"#,
+        )
+        .unwrap();
+        let mem = Arc::new(MemorySink::unbounded());
+        let sink: Arc<dyn RecordSink> = mem.clone();
+        let out = stream_dir(&dir, &sink, &WardenSet::default()).unwrap();
+        assert_eq!(out.scenarios_total, 2);
+        assert_eq!(out.scenarios_run, 2);
+        assert_eq!(out.apps, 2);
+        assert!(out.stopped.is_none());
+        assert!(out.scenarios_per_sec() > 0.0);
+
+        let buffered = run_dir(&dir).unwrap();
+        let events = mem.events();
+        let streamed_scenarios: Vec<&RecordEvent> =
+            events.iter().filter(|e| matches!(e, RecordEvent::Scenario { .. })).collect();
+        assert_eq!(streamed_scenarios.len(), 2);
+        for (ev, buf) in streamed_scenarios.iter().zip(&buffered.scenarios) {
+            let RecordEvent::Scenario { name, outcome } = ev else { unreachable!() };
+            assert_eq!(name, &buf.name);
+            assert_eq!(
+                outcome.to_string(),
+                report::scenario_to_json(buf).to_string(),
+                "streamed scenario record must be bit-identical to the buffered outcome"
+            );
+        }
+        let rows = events
+            .iter()
+            .filter(|e| matches!(e, RecordEvent::SweepRow(_)))
+            .count();
+        assert_eq!(rows, 2);
+        // The manycore cell offloads, so the stream found a best point.
+        assert!(out.best.is_some());
+        assert!(!out.pareto.is_empty());
+        assert!(out.axes.is_empty(), "directory scenarios carry no grid coords");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A `MaxScenarios` warden stops the sweep between commits: the cells
+    /// that ran are untouched, the rest never start.
+    #[test]
+    fn warden_stops_between_scenarios() {
+        use crate::record::{NullSink, Warden};
+
+        let dir = tmp_dir("warded");
+        for name in ["a.json", "b.json", "c.json"] {
+            std::fs::write(
+                dir.join(name),
+                r#"{"devices": {}, "applications": [{"workload": "vecadd", "n": 1048576}]}"#,
+            )
+            .unwrap();
+        }
+        let sink: Arc<dyn RecordSink> = Arc::new(NullSink);
+        let wardens = WardenSet::new(vec![Warden::MaxScenarios(2)]);
+        let out = stream_dir(&dir, &sink, &wardens).unwrap();
+        assert_eq!(out.scenarios_run, 2);
+        assert_eq!(out.scenarios_total, 3);
+        let reason = out.stopped.unwrap();
+        assert!(reason.contains("scenario budget"), "{reason}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

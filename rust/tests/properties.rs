@@ -18,7 +18,8 @@ use mixoff::devices::{
 use mixoff::ga::GaConfig;
 use mixoff::offload::manycore_loop;
 use mixoff::offload::pattern::OffloadPattern;
-use mixoff::scenario::{AppSpec, ScenarioSpec};
+use mixoff::scenario::grid::Calibration;
+use mixoff::scenario::{AppSpec, GridSpec, ScenarioSpec};
 use mixoff::util::bits::PatternBits;
 use mixoff::util::json::Json;
 use mixoff::util::prop::{forall, gen};
@@ -674,6 +675,128 @@ fn scenario_spec_roundtrips_through_json() {
         let parsed = ScenarioSpec::parse(&Json::parse(&text).unwrap(), "fallback")
             .unwrap_or_else(|e| panic!("{text}: {e}"));
         assert_eq!(parsed, spec, "{text}");
+    });
+}
+
+/// Random but well-formed grid: random axis lengths over random fleet
+/// subsets, calibrations with known parameter names, sized workload
+/// sets, seeds and schedules.
+fn random_grid_spec(rng: &mut Rng) -> GridSpec {
+    fn device(rng: &mut Rng, keys: &[&str]) -> DeviceSpec {
+        let mut d = DeviceSpec::default();
+        if rng.chance(0.3) {
+            d.count = 1 + rng.below(3);
+        }
+        for k in keys {
+            if rng.chance(0.3) {
+                d.params.insert(k.to_string(), 1.0 + rng.f64() * 1e10);
+            }
+        }
+        d
+    }
+    let fleets: Vec<EnvSpec> = (0..1 + rng.below(3))
+        .map(|_| EnvSpec {
+            cpu: device(rng, &["flops", "bw_stream", "price_usd"]),
+            manycore: rng.chance(0.7).then(|| device(rng, &["threads_eff", "price_usd"])),
+            gpu: rng.chance(0.7).then(|| device(rng, &["flops", "bw_pcie", "price_usd"])),
+            fpga: rng.chance(0.7).then(|| device(rng, &["unroll", "price_usd"])),
+        })
+        .collect();
+    let calibrations: Vec<Calibration> = (0..1 + rng.below(3))
+        .map(|_| {
+            let mut cal = Calibration::new();
+            for (device, key) in [
+                ("cpu", "bw_stream"),
+                ("manycore", "threads_eff"),
+                ("gpu", "flops"),
+                ("fpga", "unroll"),
+            ] {
+                if rng.chance(0.4) {
+                    cal.entry(device.to_string())
+                        .or_default()
+                        .insert(key.to_string(), 0.25 + rng.f64() * 4.0);
+                }
+            }
+            cal
+        })
+        .collect();
+    let price_scales: Vec<f64> = (0..1 + rng.below(3)).map(|_| 0.5 + rng.f64() * 2.0).collect();
+    let workloads: Vec<Vec<AppSpec>> = (0..1 + rng.below(2))
+        .map(|_| {
+            (0..1 + rng.below(2))
+                .map(|_| AppSpec::Named {
+                    workload: ["vecadd", "atax", "2mm"][rng.below(3)].to_string(),
+                    n: rng.chance(0.5).then(|| 64 + rng.below(4096) as u64),
+                    iters: None,
+                })
+                .collect()
+        })
+        .collect();
+    let seeds: Vec<u64> = (0..1 + rng.below(4)).map(|_| rng.next_u64() >> 12).collect();
+    let schedules = if rng.chance(0.5) {
+        vec![SchedulePolicy::Paper, SchedulePolicy::PriceAscending]
+    } else {
+        vec![SchedulePolicy::Paper]
+    };
+    GridSpec {
+        name: format!("grid-{}", rng.below(1 << 20)),
+        description: if rng.chance(0.5) { "grid property case".to_string() } else { String::new() },
+        concurrency: if rng.chance(0.5) {
+            TrialConcurrency::Staged
+        } else {
+            TrialConcurrency::Sequential
+        },
+        requirements: UserRequirements {
+            target_improvement: rng.chance(0.5).then(|| rng.f64() * 50.0),
+            max_price_usd: rng.chance(0.5).then(|| rng.f64() * 20_000.0),
+        },
+        fleets,
+        calibrations,
+        price_scales,
+        workloads,
+        seeds,
+        schedules,
+    }
+}
+
+/// A grid's lazy cross-product has exactly `product of axis lengths`
+/// cells, and every expanded cell is a well-formed [`ScenarioSpec`] that
+/// survives `spec -> JSON -> text -> JSON -> spec` exactly — including
+/// calibration-folded overrides and scaled prices.
+#[test]
+fn grid_expands_to_the_axis_product_and_cells_roundtrip() {
+    forall(25, |rng| {
+        let grid = random_grid_spec(rng);
+        let product = grid.fleets.len()
+            * grid.calibrations.len()
+            * grid.price_scales.len()
+            * grid.workloads.len()
+            * grid.seeds.len()
+            * grid.schedules.len();
+        assert_eq!(grid.len(), product);
+        assert_eq!(grid.scenarios().count(), product);
+        for _ in 0..4 {
+            let cell = grid.scenario(rng.below(grid.len()));
+            let text = cell.spec.to_json().to_string();
+            let parsed = ScenarioSpec::parse(&Json::parse(&text).unwrap(), "fallback")
+                .unwrap_or_else(|e| panic!("{text}: {e}"));
+            assert_eq!(parsed, cell.spec, "{text}");
+        }
+    });
+}
+
+/// Grid specs survive `grid -> JSON -> text -> JSON -> grid` exactly:
+/// every axis — fleets, calibration multipliers, price scales, workload
+/// sets, seeds, schedules — plus the shared configuration round-trips
+/// through the in-tree JSON layer with full equality.
+#[test]
+fn grid_spec_roundtrips_through_json() {
+    forall(40, |rng| {
+        let grid = random_grid_spec(rng);
+        let text = grid.to_json().to_string();
+        let parsed =
+            GridSpec::from_str(&text, "fallback").unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(parsed, grid, "{text}");
     });
 }
 

@@ -1,0 +1,194 @@
+//! End-to-end tests of the streaming record pipeline (record/ + the
+//! grid runner in scenario/sweep.rs):
+//!
+//! * a 1,000-cell grid streams through a tee of JSONL + a bounded
+//!   in-memory window whose peak residency never exceeds its cap;
+//! * the per-scenario records a streamed grid emits are byte-identical
+//!   to the golden serialization of a buffered run over the same
+//!   materialized cells, under both trial-concurrency modes;
+//! * a `FirstSatisfying` warden stops a satisfied sweep after one cell,
+//!   saving well over 30% of the GA evaluations.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use mixoff::coordinator::{SchedulePolicy, TrialConcurrency, UserRequirements};
+use mixoff::devices::{DeviceSpec, EnvSpec};
+use mixoff::record::{
+    JsonlSink, MemorySink, NullSink, RecordEvent, RecordSink, SharedBuffer, TeeSink, Warden,
+    WardenSet,
+};
+use mixoff::report;
+use mixoff::scenario::grid::Calibration;
+use mixoff::scenario::{run_grid, run_scenarios, AppSpec, GridSpec, Scenario};
+use mixoff::util::json::Json;
+
+fn fleet(manycore: bool) -> EnvSpec {
+    EnvSpec {
+        cpu: DeviceSpec::default(),
+        manycore: manycore.then(DeviceSpec::default),
+        gpu: None,
+        fpga: None,
+    }
+}
+
+fn vecadd(n: u64) -> Vec<AppSpec> {
+    vec![AppSpec::Named { workload: "vecadd".into(), n: Some(n), iters: None }]
+}
+
+/// Cpu-only cells have zero destination trials, so a 1,000-cell grid
+/// exercises the full streaming path in test-scale wall time.
+fn thousand_cell_grid() -> GridSpec {
+    GridSpec {
+        name: "bulk".into(),
+        description: String::new(),
+        concurrency: TrialConcurrency::Staged,
+        requirements: UserRequirements::default(),
+        fleets: vec![fleet(false)],
+        calibrations: vec![Calibration::new()],
+        price_scales: vec![1.0],
+        workloads: vec![vecadd(1024)],
+        seeds: (0..1000).collect(),
+        schedules: vec![SchedulePolicy::Paper],
+    }
+}
+
+/// A 1,000-cell grid streams end to end: every record reaches the JSONL
+/// sink as parseable JSON, while the bounded window's peak residency
+/// never exceeds its cap — memory is O(window), not O(cells).
+#[test]
+fn thousand_cell_grid_streams_with_bounded_residency() {
+    let grid = thousand_cell_grid();
+    assert_eq!(grid.len(), 1000);
+    let buf = SharedBuffer::new();
+    let mem = Arc::new(MemorySink::bounded(64));
+    let tee: Arc<dyn RecordSink> = Arc::new(TeeSink::new(vec![
+        Arc::new(JsonlSink::to_buffer(&buf)),
+        Arc::clone(&mem) as Arc<dyn RecordSink>,
+    ]));
+    let out = run_grid(&grid, &tee, &WardenSet::default()).unwrap();
+    tee.close().unwrap();
+
+    assert_eq!(out.scenarios_total, 1000);
+    assert_eq!(out.scenarios_run, 1000);
+    assert!(out.stopped.is_none());
+    // At least a scenario + a sweep-row record per cell, plus the
+    // end-of-run pareto/axis records.
+    assert!(mem.total_seen() >= 2000, "saw {} records", mem.total_seen());
+    assert!(mem.peak_resident() <= 64, "peak residency {}", mem.peak_resident());
+    let lines = buf.lines();
+    assert_eq!(lines.len(), mem.total_seen(), "tee fans every record out to both sinks");
+    for line in &lines {
+        Json::parse(line).unwrap_or_else(|e| panic!("{line}: {e}"));
+    }
+}
+
+fn eight_cell_grid(concurrency: TrialConcurrency) -> GridSpec {
+    GridSpec {
+        name: "g8".into(),
+        description: String::new(),
+        concurrency,
+        requirements: UserRequirements::default(),
+        fleets: vec![fleet(true), fleet(false)],
+        calibrations: vec![Calibration::new()],
+        price_scales: vec![1.0],
+        workloads: vec![vecadd(1 << 20)],
+        seeds: vec![7, 8],
+        schedules: vec![SchedulePolicy::Paper, SchedulePolicy::PriceAscending],
+    }
+}
+
+/// Streaming a grid and buffering its materialized cells produce the
+/// same golden scenario JSON, record for record, under both trial
+/// concurrency modes: the sink changes where outcomes go, never what
+/// they are.
+#[test]
+fn streamed_grid_matches_buffered_run_bit_for_bit() {
+    for concurrency in [TrialConcurrency::Sequential, TrialConcurrency::Staged] {
+        let grid = eight_cell_grid(concurrency);
+        assert_eq!(grid.len(), 8);
+
+        let mem = Arc::new(MemorySink::unbounded());
+        let sink = Arc::clone(&mem) as Arc<dyn RecordSink>;
+        let streamed = run_grid(&grid, &sink, &WardenSet::default()).unwrap();
+        assert_eq!(streamed.scenarios_run, 8);
+
+        let cells: Vec<Scenario> = grid
+            .scenarios()
+            .map(|c| Scenario {
+                path: PathBuf::from(format!("{}.json", c.spec.name)),
+                spec: c.spec,
+            })
+            .collect();
+        let buffered = run_scenarios(&cells).unwrap();
+
+        let events = mem.events();
+        let goldens: Vec<(&String, String)> = events
+            .iter()
+            .filter_map(|e| match e {
+                RecordEvent::Scenario { name, outcome } => Some((name, outcome.to_string())),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(goldens.len(), 8);
+        for ((name, streamed_json), outcome) in goldens.iter().zip(&buffered.scenarios) {
+            assert_eq!(*name, &outcome.name);
+            assert_eq!(
+                streamed_json,
+                &report::scenario_to_json(outcome).to_string(),
+                "{name} diverged under {concurrency:?}"
+            );
+        }
+    }
+}
+
+/// Vecadd on the default many-core fleet lands ~1.4x (stream-bandwidth
+/// bound), so a 1.2x target is met by every seed's first cell.
+fn satisfying_grid() -> GridSpec {
+    GridSpec {
+        name: "ward".into(),
+        description: String::new(),
+        concurrency: TrialConcurrency::Sequential,
+        requirements: UserRequirements { target_improvement: Some(1.2), max_price_usd: None },
+        fleets: vec![fleet(true)],
+        calibrations: vec![Calibration::new()],
+        price_scales: vec![1.0],
+        workloads: vec![vecadd(1 << 20)],
+        seeds: vec![1, 2, 3, 4, 5],
+        schedules: vec![SchedulePolicy::Paper],
+    }
+}
+
+/// With a reachable improvement target, a `FirstSatisfying` warden stops
+/// the sweep after the first cell: the remaining seeds' GA searches
+/// never run, saving well over 30% of the evaluations, while the
+/// committed cell is untouched.
+#[test]
+fn first_satisfying_warden_saves_evaluations() {
+    let grid = satisfying_grid();
+    let null: Arc<dyn RecordSink> = Arc::new(NullSink);
+
+    let full = run_grid(&grid, &null, &WardenSet::default()).unwrap();
+    assert_eq!(full.scenarios_run, 5);
+    assert!(full.stopped.is_none());
+    assert!(full.evaluations > 0, "GA searches ran");
+    let best = full.best.as_ref().expect("vecadd offloads to many-core");
+    assert!(best.improvement >= 1.2, "target reachable, got {:.2}x", best.improvement);
+
+    let warded = run_grid(&grid, &null, &WardenSet::new(vec![Warden::FirstSatisfying])).unwrap();
+    assert_eq!(warded.scenarios_run, 1);
+    assert!(warded.evaluations > 0);
+    let reason = warded.stopped.expect("warden tripped");
+    assert!(reason.contains("satisfying"), "{reason}");
+
+    let saved = full.evaluations - warded.evaluations;
+    assert!(
+        saved * 100 >= full.evaluations * 30,
+        "saved {saved} of {} evaluations",
+        full.evaluations
+    );
+    // The one committed cell is exactly what the wardenless sweep saw.
+    let first = warded.best.as_ref().expect("first cell offloads");
+    assert_eq!(first.improvement.to_bits(), best.improvement.to_bits());
+    assert_eq!(first.seconds.to_bits(), best.seconds.to_bits());
+}
