@@ -1,0 +1,117 @@
+//! Fault-injection overhead + graceful-degradation benches.
+//!
+//! Emits `BENCH_faults.json` (see EXPERIMENTS.md #Perf):
+//!   * `faults.retry_overhead_pct` — wall-clock cost of threading an
+//!     *inert* fault plan through the trial stack vs no plan at all
+//!     (target <= 5%: the fault layer must be invisible until it fires);
+//!   * `faults.degraded_completion_rate` — fraction of a chaos sweep
+//!     over the committed scenario corpus that completes with an
+//!     explicit outcome under compile/measure faults plus a permanent
+//!     GPU outage (target = 1.0: degrade, never crash);
+//!   * quarantine and charged-backoff totals for the same sweep.
+
+mod support;
+
+use std::path::Path;
+use std::time::Instant;
+
+use mixoff::devices::DeviceKind;
+use mixoff::fault::{FaultPlan, OutageWindow, RetryPolicy};
+use mixoff::report;
+use mixoff::scenario::{self, ScenarioSpec};
+
+const SPEC: &str = r#"{
+    "seed": 11,
+    "devices": {"manycore": {}, "gpu": {}},
+    "applications": [{"workload": "vecadd", "n": 1048576}]
+}"#;
+
+fn chaotic_plan(seed: u64) -> FaultPlan {
+    FaultPlan {
+        seed,
+        compile_failure_rate: 0.35,
+        measurement_error_rate: 0.25,
+        outages: vec![OutageWindow {
+            device: DeviceKind::Gpu,
+            start_s: 0.0,
+            duration_s: 1e9,
+        }],
+        retry: RetryPolicy { max_attempts: 2, backoff_base_s: 60.0, backoff_factor: 2.0 },
+    }
+}
+
+/// Mean wall ms per run over `iters` runs (one warm-up discarded).
+fn run_ms(spec: &ScenarioSpec, iters: usize) -> f64 {
+    spec.run().expect("scenario runs");
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        spec.run().expect("scenario runs");
+    }
+    t0.elapsed().as_secs_f64() * 1e3 / iters as f64
+}
+
+fn main() {
+    let bare = ScenarioSpec::from_str(SPEC, "fault-bench").unwrap();
+    let mut inert = ScenarioSpec::from_str(SPEC, "fault-bench").unwrap();
+    inert.faults = Some(FaultPlan::default());
+
+    // The zero-fault identity the overhead number rests on: an inert
+    // plan's outcome is byte-identical, so any delta is pure overhead.
+    let a = report::scenario_to_json(&bare.run().unwrap()).to_string();
+    let b = report::scenario_to_json(&inert.run().unwrap()).to_string();
+    assert_eq!(a, b, "inert fault plan must be byte-identical to no plan");
+
+    let iters = 5;
+    let no_plan_ms = run_ms(&bare, iters);
+    let inert_ms = run_ms(&inert, iters);
+    support::metric("faults.no_plan_ms", no_plan_ms, "ms", None);
+    support::metric("faults.inert_plan_ms", inert_ms, "ms", None);
+    support::metric(
+        "faults.retry_overhead_pct",
+        100.0 * (inert_ms - no_plan_ms) / no_plan_ms,
+        "%",
+        None,
+    );
+
+    let mut chaotic = ScenarioSpec::from_str(SPEC, "fault-bench").unwrap();
+    chaotic.faults = Some(chaotic_plan(7));
+    support::bench("faults.chaotic_scenario", 3, || {
+        chaotic.run().expect("chaotic scenario degrades, never crashes");
+    });
+
+    // Chaos sweep over the committed corpus: every scenario must
+    // complete with an explicit outcome.
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios");
+    let mut scenarios = scenario::load_dir(&dir).expect("scenario corpus loads");
+    for sc in &mut scenarios {
+        sc.spec.faults = Some(chaotic_plan(9));
+    }
+    let total = scenarios.len();
+    let sweep = scenario::run_scenarios(&scenarios).expect("chaos sweep completes");
+    let mut quarantines = 0usize;
+    let mut backoff_s = 0.0f64;
+    for sc in &sweep.scenarios {
+        for out in &sc.batch.outcomes {
+            quarantines += out.quarantined.len();
+            backoff_s += out.clock.backoff_seconds();
+            if let Some(c) = &out.chosen {
+                assert!(
+                    !out.quarantined.iter().any(|(d, _)| *d == c.kind.device),
+                    "{}: chose a quarantined device",
+                    out.app_name
+                );
+            }
+        }
+    }
+    support::metric(
+        "faults.degraded_completion_rate",
+        sweep.scenarios.len() as f64 / total as f64,
+        "fraction",
+        None,
+    );
+    support::metric("faults.chaos_scenarios", total as f64, "scenarios", None);
+    support::metric("faults.quarantines", quarantines as f64, "devices", None);
+    support::metric("faults.backoff_charged_hours", backoff_s / 3600.0, "h", None);
+
+    support::finish("faults");
+}

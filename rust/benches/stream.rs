@@ -45,6 +45,7 @@ fn grid(seeds: u64, target: Option<f64>) -> GridSpec {
         }]],
         seeds: (0..seeds).collect(),
         schedules: vec![SchedulePolicy::Paper],
+        faults: vec![None],
     }
 }
 

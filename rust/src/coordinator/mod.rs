@@ -32,10 +32,12 @@ pub mod trial;
 
 use std::borrow::Cow;
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 
 use crate::app::ir::{Application, LoopId};
-use crate::devices::{pricing, EvalCache, PlanCache, SimClock, Testbed};
+use crate::devices::{pricing, DeviceKind, EvalCache, PlanCache, SimClock, Testbed};
+use crate::fault::FaultPlan;
 use crate::offload::fpga_loop::FpgaSearchConfig;
 use crate::offload::function_block::{BlockDb, FbOffloadOutcome};
 use crate::offload::pattern::OffloadPattern;
@@ -83,6 +85,41 @@ pub struct Chosen {
     pub detail: String,
 }
 
+/// The typed selection outcome: every run ends in exactly one of these —
+/// there is no panic path from CLI input to the final decision.
+#[derive(Clone, Debug)]
+pub enum Selection {
+    /// A destination beat the baseline within the user's price cap.
+    Offloaded(Chosen),
+    /// No scheduled destination improved on the single-core baseline
+    /// (including the empty cpu-only schedule) — today's `chosen: None`.
+    NoDestinationAvailable { reason: String },
+    /// Fault-driven graceful degradation: at least one device was
+    /// quarantined after exhausting retries and nothing surviving beat
+    /// the baseline, so the app stays on the single-core CPU.
+    Fallback { reason: String },
+}
+
+impl Selection {
+    /// The chosen deployment, when one exists (compatibility accessor —
+    /// mirrors [`OffloadOutcome::chosen`]).
+    pub fn chosen(&self) -> Option<&Chosen> {
+        match self {
+            Selection::Offloaded(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    /// Short tag for reports: `offloaded` / `no_destination` / `fallback`.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Selection::Offloaded(_) => "offloaded",
+            Selection::NoDestinationAvailable { .. } => "no_destination",
+            Selection::Fallback { .. } => "fallback",
+        }
+    }
+}
+
 /// Everything the flow produced (feeds `report::figure4_row`).
 #[derive(Clone, Debug)]
 pub struct OffloadOutcome {
@@ -90,6 +127,13 @@ pub struct OffloadOutcome {
     pub baseline_seconds: f64,
     pub trials: Vec<TrialRecord>,
     pub chosen: Option<Chosen>,
+    /// The typed version of `chosen`: distinguishes "nothing improved"
+    /// from fault-driven degradation.  `chosen` stays in sync
+    /// (`selection.chosen()`), so existing consumers are untouched.
+    pub selection: Selection,
+    /// Devices quarantined after exhausting fault retries, with the
+    /// typed reason (empty on every fault-free run).
+    pub quarantined: Vec<(DeviceKind, String)>,
     pub clock: SimClock,
 }
 
@@ -132,6 +176,12 @@ pub struct MixedOffloader {
     /// Emission never changes outcomes — records mirror `trials`/`clock`
     /// exactly, in commit order.
     pub sink: Arc<dyn RecordSink>,
+    /// Deterministic fault injection (see `fault/`).  `None` — and any
+    /// inert plan (zero rates, no outages) — leaves every outcome
+    /// bit-identical to today's; under faults, trials retry with
+    /// deterministic backoff charged to the ledger and devices that
+    /// exhaust retries are quarantined (DESIGN.md invariant 8).
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for MixedOffloader {
@@ -148,6 +198,7 @@ impl Default for MixedOffloader {
             registry: StrategyRegistry::standard(),
             concurrency: TrialConcurrency::Sequential,
             sink: Arc::new(NullSink),
+            faults: None,
         }
     }
 }
@@ -170,6 +221,12 @@ struct ExecState<'a> {
     /// Library seconds of subtracted blocks, folded into later trials.
     fb_extra_seconds: f64,
     fb_note: String,
+    /// Devices that exhausted their fault retries, with the typed reason.
+    /// Remaining schedule steps for a quarantined device skip before
+    /// anything else is considered (even before execution in sequential
+    /// mode), and a quarantined device can never be chosen — it has no
+    /// successful trial record.
+    quarantined: BTreeMap<DeviceKind, String>,
 }
 
 impl<'a> ExecState<'a> {
@@ -184,7 +241,20 @@ impl<'a> ExecState<'a> {
             loop_map: None,
             fb_extra_seconds: 0.0,
             fb_note: String::new(),
+            quarantined: BTreeMap::new(),
         }
+    }
+}
+
+/// Best-effort text of a panic payload, for folding a panicking trial
+/// into a typed skip record instead of aborting the run.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
     }
 }
 
@@ -248,11 +318,30 @@ impl MixedOffloader {
             TrialConcurrency::Staged => self.execute_staged(app, schedule, plans, evals, &mut st),
         }
         let chosen = self.select(&st.trials);
+        let quarantined: Vec<(DeviceKind, String)> = st.quarantined.into_iter().collect();
+        let selection = match &chosen {
+            Some(c) => Selection::Offloaded(c.clone()),
+            None if !quarantined.is_empty() => Selection::Fallback {
+                reason: format!(
+                    "degraded to the single-core CPU baseline: {} quarantined after fault retries",
+                    quarantined
+                        .iter()
+                        .map(|(d, _)| d.label())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ),
+            },
+            None => Selection::NoDestinationAvailable {
+                reason: "no destination improved on the single-core baseline".to_string(),
+            },
+        };
         OffloadOutcome {
             app_name: app.name.clone(),
             baseline_seconds: st.baseline,
             trials: st.trials,
             chosen,
+            selection,
+            quarantined,
             clock: st.clock,
         }
     }
@@ -284,7 +373,7 @@ impl MixedOffloader {
                 self.apply_subtract(app, st);
             }
             let n = stage.trials.len();
-            let mut spec: Vec<Option<TrialOutcome>> = {
+            let mut spec: Vec<Option<std::thread::Result<TrialOutcome>>> = {
                 let cur: &Application = &st.cur_app;
                 let ctx = self.trial_ctx(st, plans, evals);
                 let mut jobs: Vec<(usize, TrialKind, &dyn OffloadStrategy)> = Vec::new();
@@ -294,7 +383,12 @@ impl MixedOffloader {
                     // once the user target is met it stays met for the
                     // rest of the stage (committed bests only ever grow,
                     // and always carry a cap-passing price), so the replay
-                    // is certain to skip this trial too.
+                    // is certain to skip this trial too.  A device already
+                    // quarantined at stage start is certain to still be
+                    // quarantined at commit — quarantine only grows.
+                    if st.quarantined.contains_key(&kind.device) {
+                        continue;
+                    }
                     if self.pre_skip(kind, &st.best_so_far).is_some() {
                         continue;
                     }
@@ -306,12 +400,19 @@ impl MixedOffloader {
                     }
                     jobs.push((i, *kind, strategy));
                 }
-                let results = WorkerPool::global().map(jobs, n.max(1), |(i, kind, strategy)| {
-                    (i, strategy.execute(cur, kind.device, &ctx))
-                });
-                let mut spec: Vec<Option<TrialOutcome>> = (0..n).map(|_| None).collect();
-                for (i, out) in results {
-                    spec[i] = Some(out);
+                // `try_map` folds a panicking speculative trial into a
+                // per-item Err instead of resuming the unwind here: the
+                // panic poisons only its own trial (committed as a typed
+                // skip), never the stage or the process.
+                let idxs: Vec<usize> = jobs.iter().map(|(i, _, _)| *i).collect();
+                let results =
+                    WorkerPool::global().try_map(jobs, n.max(1), |(_, kind, strategy)| {
+                        strategy.execute(cur, kind.device, &ctx)
+                    });
+                let mut spec: Vec<Option<std::thread::Result<TrialOutcome>>> =
+                    (0..n).map(|_| None).collect();
+                for (i, r) in idxs.into_iter().zip(results) {
+                    spec[i] = Some(r);
                 }
                 spec
             };
@@ -393,10 +494,12 @@ impl MixedOffloader {
 
     /// Commit one trial step: apply the skip logic against the *committed*
     /// state, then either take the speculative outcome (staged mode) or
-    /// execute in place (sequential mode), charge the clock and update the
-    /// running best.  A speculative outcome is only ever taken on the
-    /// exact `(working app, device, ctx)` it was computed for, so the two
-    /// sources are interchangeable bit-for-bit.
+    /// execute in place (sequential mode), run it through the fault plan,
+    /// charge the clock and update the running best.  A speculative
+    /// outcome is only ever taken on the exact `(working app, device,
+    /// ctx)` it was computed for, so the two sources are interchangeable
+    /// bit-for-bit; fault draws are keyed hashes evaluated *here*, against
+    /// the committed ledger, so they too are mode-independent.
     fn commit_trial(
         &self,
         app: &Application,
@@ -404,8 +507,13 @@ impl MixedOffloader {
         kind: &TrialKind,
         plans: &PlanCache,
         evals: &EvalCache,
-        speculated: Option<TrialOutcome>,
+        speculated: Option<std::thread::Result<TrialOutcome>>,
     ) {
+        if let Some(reason) = st.quarantined.get(&kind.device) {
+            let reason = format!("device quarantined ({reason})");
+            self.record_trial(app, st, TrialRecord::skipped(*kind, reason, st.baseline));
+            return;
+        }
         if let Some(reason) = self.pre_skip(kind, &st.best_so_far) {
             self.record_trial(app, st, TrialRecord::skipped(*kind, reason, st.baseline));
             return;
@@ -420,13 +528,30 @@ impl MixedOffloader {
             return;
         }
 
-        let out = match speculated {
-            Some(out) => out,
+        let result = match speculated {
+            Some(r) => r,
             None => {
                 let ctx = self.trial_ctx(st, plans, evals);
-                strategy.execute(&st.cur_app, kind.device, &ctx)
+                catch_unwind(AssertUnwindSafe(|| {
+                    strategy.execute(&st.cur_app, kind.device, &ctx)
+                }))
             }
         };
+        let out = match result {
+            Ok(out) => out,
+            Err(payload) => {
+                // A panicking strategy poisons only its own trial: fold
+                // the unwind into a typed skip and keep the run alive.
+                let reason = format!("trial panicked: {}", panic_message(&*payload));
+                self.record_trial(app, st, TrialRecord::skipped(*kind, reason, st.baseline));
+                return;
+            }
+        };
+        if let Some(plan) = self.faults.as_ref() {
+            if !self.faults_pass(app, st, kind, plan, &out) {
+                return;
+            }
+        }
         st.clock.charge(kind.label(), out.cost_s);
         let seconds = out.seconds + st.fb_extra_seconds;
         let improvement = st.baseline / seconds;
@@ -472,6 +597,81 @@ impl MixedOffloader {
         }
     }
 
+    /// Run one trial's committed outcome through the fault plan: while a
+    /// keyed draw (or an outage window on the committed ledger) faults the
+    /// attempt, charge any wasted measurement cost, wait out the
+    /// deterministic backoff and try again; when attempts run out,
+    /// quarantine the device and commit a typed skip.  Returns `true` when
+    /// an attempt passes cleanly (the commit proceeds) and `false` when
+    /// the trial was consumed by quarantine.  Inert plans return `true`
+    /// on the first draw without charging, emitting or recording anything
+    /// — the zero-fault bit-identity invariant (DESIGN.md invariant 8).
+    fn faults_pass(
+        &self,
+        app: &Application,
+        st: &mut ExecState<'_>,
+        kind: &TrialKind,
+        plan: &FaultPlan,
+        out: &TrialOutcome,
+    ) -> bool {
+        let fp = app.fingerprint();
+        let label = kind.label();
+        let max = plan.retry.max_attempts.max(1);
+        for attempt in 1..=max {
+            let Some(fault) =
+                plan.check(fp, kind.fault_key(), kind.device, attempt, st.clock.total_seconds())
+            else {
+                return true;
+            };
+            if fault.boundary == "measure" {
+                // The measurement ran before failing: its verification
+                // cost is spent either way.  Compile/outage faults fail
+                // before measuring and charge nothing.
+                st.clock.charge(format!("{label} (failed measurement)"), out.cost_s);
+            }
+            if self.sink.enabled() {
+                self.sink.emit(&RecordEvent::Fault {
+                    scenario: String::new(),
+                    app: app.name.clone(),
+                    trial: label.clone(),
+                    boundary: fault.boundary.to_string(),
+                    attempt: attempt as u64,
+                    detail: fault.detail.clone(),
+                });
+            }
+            if attempt < max {
+                let wait = plan.retry.backoff_s(attempt);
+                st.clock.charge_backoff(&label, wait);
+                if self.sink.enabled() {
+                    self.sink.emit(&RecordEvent::Retry {
+                        scenario: String::new(),
+                        app: app.name.clone(),
+                        trial: label.clone(),
+                        attempt: (attempt + 1) as u64,
+                        wait_s: wait,
+                    });
+                }
+            } else {
+                let reason = format!(
+                    "faulted after {max} attempts: {} ({})",
+                    fault.detail, fault.boundary
+                );
+                st.quarantined.entry(kind.device).or_insert_with(|| reason.clone());
+                if self.sink.enabled() {
+                    self.sink.emit(&RecordEvent::Quarantine {
+                        scenario: String::new(),
+                        app: app.name.clone(),
+                        device: kind.device.label().to_string(),
+                        reason: reason.clone(),
+                    });
+                }
+                self.record_trial(app, st, TrialRecord::skipped(*kind, reason, st.baseline));
+                return false;
+            }
+        }
+        true
+    }
+
     fn pre_skip(&self, kind: &TrialKind, best: &Option<(f64, f64)>) -> Option<String> {
         if !self.requirements.price_ok(self.testbed.device(kind.device).price_usd()) {
             return Some(format!(
@@ -510,9 +710,11 @@ impl MixedOffloader {
             })
             .collect();
         cands.sort_by(|(ia, a), (ib, b)| {
+            // `total_cmp`, not `partial_cmp().unwrap()`: identical order
+            // for the finite improvements real trials produce, and no
+            // panic path should a degenerate model ever yield a NaN.
             b.improvement
-                .partial_cmp(&a.improvement)
-                .unwrap()
+                .total_cmp(&a.improvement)
                 .then(pricing::price_band(a.kind.device).cmp(&pricing::price_band(b.kind.device)))
                 .then(ia.cmp(ib))
         });
@@ -740,5 +942,156 @@ mod tests {
         let executed = out.trials.iter().filter(|t| t.skipped.is_none()).count();
         assert_eq!(out.clock.by_label().len(), executed);
         assert!(out.clock.total_seconds() > 0.0);
+    }
+
+    /// A strategy that always panics — the worst-case trial.
+    struct PanickingStrategy;
+
+    impl OffloadStrategy for PanickingStrategy {
+        fn name(&self) -> &'static str {
+            "panicking"
+        }
+        fn execute(&self, _: &Application, _: DeviceKind, _: &TrialCtx) -> TrialOutcome {
+            panic!("boom");
+        }
+    }
+
+    /// A panicking trial must poison only itself — folded into a typed
+    /// skip in BOTH modes, with every other trial unaffected and the two
+    /// modes still bit-identical.
+    #[test]
+    fn panicking_trial_is_folded_into_a_typed_skip() {
+        let app = extra::vecadd(1 << 20);
+        let build = |concurrency| {
+            let mut registry = StrategyRegistry::standard();
+            registry.register(DeviceKind::Gpu, Method::LoopOffload, Arc::new(PanickingStrategy));
+            MixedOffloader { registry, concurrency, ..Default::default() }
+        };
+        let seq = build(TrialConcurrency::Sequential).run(&app);
+        let staged = build(TrialConcurrency::Staged).run(&app);
+        for out in [&seq, &staged] {
+            let gpu_loop = out
+                .trials
+                .iter()
+                .find(|t| t.kind.device == DeviceKind::Gpu && t.kind.method == Method::LoopOffload)
+                .unwrap();
+            let reason = gpu_loop.skipped.as_deref().unwrap();
+            assert!(reason.contains("trial panicked: boom"), "{reason:?}");
+            assert_eq!(out.trials.len(), 6, "the rest of the schedule still runs");
+            assert!(out.chosen.is_some(), "surviving trials still offload vecadd");
+        }
+        assert_outcomes_identical(&seq, &staged);
+    }
+
+    /// An always-on GPU outage: both GPU trials fault, the first
+    /// exhausts its 2 attempts (charging one 60 s backoff) and
+    /// quarantines the device, the second skips on the quarantine —
+    /// and the GPU is never chosen.
+    fn gpu_outage_offloader(concurrency: TrialConcurrency) -> MixedOffloader {
+        MixedOffloader {
+            concurrency,
+            faults: Some(FaultPlan {
+                outages: vec![crate::fault::OutageWindow {
+                    device: DeviceKind::Gpu,
+                    start_s: 0.0,
+                    duration_s: 1e12,
+                }],
+                retry: crate::fault::RetryPolicy {
+                    max_attempts: 2,
+                    backoff_base_s: 60.0,
+                    backoff_factor: 2.0,
+                },
+                ..FaultPlan::default()
+            }),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn quarantined_device_skips_and_is_never_chosen() {
+        let app = extra::vecadd(1 << 20);
+        let out = gpu_outage_offloader(TrialConcurrency::Sequential).run(&app);
+        let gpu_fb = out
+            .trials
+            .iter()
+            .find(|t| t.kind.device == DeviceKind::Gpu && t.kind.method == Method::FunctionBlock)
+            .unwrap();
+        let reason = gpu_fb.skipped.as_deref().unwrap();
+        assert!(reason.contains("faulted after 2 attempts"), "{reason:?}");
+        assert!(reason.contains("outage"), "{reason:?}");
+        let gpu_loop = out
+            .trials
+            .iter()
+            .find(|t| t.kind.device == DeviceKind::Gpu && t.kind.method == Method::LoopOffload)
+            .unwrap();
+        let reason = gpu_loop.skipped.as_deref().unwrap();
+        assert!(reason.contains("device quarantined"), "{reason:?}");
+        assert_eq!(out.quarantined.len(), 1);
+        assert_eq!(out.quarantined[0].0, DeviceKind::Gpu);
+        assert_eq!(out.clock.backoff_seconds(), 60.0, "one backoff before the retry");
+        if let Some(c) = &out.chosen {
+            assert_ne!(c.kind.device, DeviceKind::Gpu, "quarantined devices are never chosen");
+        }
+        assert_eq!(out.selection.label(), if out.chosen.is_some() { "offloaded" } else { "fallback" });
+    }
+
+    #[test]
+    fn fault_outcomes_are_identical_across_modes() {
+        let app = extra::vecadd(1 << 20);
+        let seq = gpu_outage_offloader(TrialConcurrency::Sequential).run(&app);
+        let staged = gpu_outage_offloader(TrialConcurrency::Staged).run(&app);
+        assert_outcomes_identical(&seq, &staged);
+        assert_eq!(seq.quarantined, staged.quarantined);
+        assert_eq!(seq.clock.backoff_seconds(), staged.clock.backoff_seconds());
+    }
+
+    /// Every destination down: the run degrades to the CPU baseline as a
+    /// typed [`Selection::Fallback`] — no panic, no destination chosen.
+    #[test]
+    fn fallback_when_every_destination_is_quarantined() {
+        let outage = |device| crate::fault::OutageWindow { device, start_s: 0.0, duration_s: 1e12 };
+        let mo = MixedOffloader {
+            faults: Some(FaultPlan {
+                outages: vec![
+                    outage(DeviceKind::ManyCore),
+                    outage(DeviceKind::Gpu),
+                    outage(DeviceKind::Fpga),
+                ],
+                retry: crate::fault::RetryPolicy {
+                    max_attempts: 2,
+                    backoff_base_s: 60.0,
+                    backoff_factor: 2.0,
+                },
+                ..FaultPlan::default()
+            }),
+            ..Default::default()
+        };
+        let out = mo.run(&extra::vecadd(1 << 20));
+        assert!(out.chosen.is_none());
+        assert_eq!(out.quarantined.len(), 3, "all three destinations quarantined");
+        match &out.selection {
+            Selection::Fallback { reason } => {
+                assert!(reason.contains("single-core CPU"), "{reason:?}");
+                assert!(reason.contains("quarantined"), "{reason:?}");
+            }
+            other => panic!("expected Fallback, got {other:?}"),
+        }
+    }
+
+    /// An inert (zero-rate, no-outage) plan must leave the outcome
+    /// bit-identical to no plan at all — trials, ledger, selection.
+    #[test]
+    fn inert_fault_plan_changes_nothing() {
+        let app = extra::vecadd(1 << 20);
+        let bare = MixedOffloader::default().run(&app);
+        let inert = MixedOffloader {
+            faults: Some(FaultPlan::default()),
+            ..Default::default()
+        }
+        .run(&app);
+        assert_outcomes_identical(&bare, &inert);
+        assert!(inert.quarantined.is_empty());
+        assert_eq!(inert.clock.backoff_seconds(), 0.0);
+        assert_eq!(bare.selection.label(), inert.selection.label());
     }
 }

@@ -35,6 +35,24 @@ impl TrialKind {
         };
         format!("{} {m} offload", self.device.label())
     }
+
+    /// Stable small-integer identity for deterministic fault draws
+    /// (fault/mod.rs): a pure function of (device, method), independent
+    /// of schedule position or execution order, so fault outcomes are
+    /// identical under sequential and staged execution.
+    pub fn fault_key(&self) -> u64 {
+        let d = match self.device {
+            DeviceKind::CpuSingle => 0u64,
+            DeviceKind::ManyCore => 1,
+            DeviceKind::Gpu => 2,
+            DeviceKind::Fpga => 3,
+        };
+        let m = match self.method {
+            Method::FunctionBlock => 0u64,
+            Method::LoopOffload => 1,
+        };
+        (d << 1) | m
+    }
 }
 
 /// What happened to one trial.
@@ -103,6 +121,14 @@ mod tests {
     fn labels_are_readable() {
         let t = TrialKind::order()[4];
         assert_eq!(t.label(), "GPU loop offload");
+    }
+
+    #[test]
+    fn fault_keys_are_distinct_per_trial_kind() {
+        let mut keys: Vec<u64> = TrialKind::order().iter().map(|t| t.fault_key()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 6, "every (device, method) pair draws independently");
     }
 
     #[test]

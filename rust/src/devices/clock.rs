@@ -4,11 +4,22 @@
 
 use std::fmt;
 
+/// What a ledger entry charges for: a measurement/setup activity (the
+/// original event kind) or a retry backoff wait the coordinator's fault
+/// handling inserted between attempts of a faulted trial.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ClockEventKind {
+    #[default]
+    Measure,
+    Backoff,
+}
+
 /// One charged verification activity.
 #[derive(Clone, Debug)]
 pub struct ClockEvent {
     pub label: String,
     pub seconds: f64,
+    pub kind: ClockEventKind,
 }
 
 /// Accumulates simulated verification time per labelled phase.
@@ -23,7 +34,31 @@ impl SimClock {
     }
 
     pub fn charge(&mut self, label: impl Into<String>, seconds: f64) {
-        self.events.push(ClockEvent { label: label.into(), seconds });
+        self.events.push(ClockEvent {
+            label: label.into(),
+            seconds,
+            kind: ClockEventKind::Measure,
+        });
+    }
+
+    /// Charge a retry backoff wait (the coordinator's fault handling):
+    /// a typed ledger entry, distinguishable from measurement charges by
+    /// [`ClockEventKind::Backoff`] and by its `retry backoff:` label.
+    pub fn charge_backoff(&mut self, trial_label: &str, seconds: f64) {
+        self.events.push(ClockEvent {
+            label: format!("retry backoff: {trial_label}"),
+            seconds,
+            kind: ClockEventKind::Backoff,
+        });
+    }
+
+    /// Total simulated seconds spent waiting out retry backoffs.
+    pub fn backoff_seconds(&self) -> f64 {
+        self.events
+            .iter()
+            .filter(|e| e.kind == ClockEventKind::Backoff)
+            .map(|e| e.seconds)
+            .sum()
     }
 
     pub fn total_seconds(&self) -> f64 {
@@ -80,6 +115,21 @@ mod tests {
         let by = c.by_label();
         assert_eq!(by[0], ("ga".to_string(), 150.0));
         assert_eq!(by[1], ("fpga".to_string(), 3600.0));
+    }
+
+    #[test]
+    fn backoff_charges_are_typed_and_summed_separately() {
+        let mut c = SimClock::new();
+        c.charge("GPU loop offload", 100.0);
+        c.charge_backoff("GPU loop offload", 60.0);
+        c.charge_backoff("GPU loop offload", 120.0);
+        assert_eq!(c.total_seconds(), 280.0, "backoff waits count toward the total");
+        assert_eq!(c.backoff_seconds(), 180.0);
+        let backoffs: Vec<&ClockEvent> =
+            c.events().iter().filter(|e| e.kind == ClockEventKind::Backoff).collect();
+        assert_eq!(backoffs.len(), 2);
+        assert_eq!(backoffs[0].label, "retry backoff: GPU loop offload");
+        assert_eq!(c.events()[0].kind, ClockEventKind::Measure);
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub mod spec;
 use crate::app::ir::Application;
 use crate::offload::pattern::OffloadPattern;
 
-pub use clock::SimClock;
+pub use clock::{ClockEvent, ClockEventKind, SimClock};
 pub use cpu::CpuSingle;
 pub use fpga::Fpga;
 pub use gpu::Gpu;
@@ -45,6 +45,28 @@ impl DeviceKind {
             DeviceKind::ManyCore => "many-core CPU",
             DeviceKind::Gpu => "GPU",
             DeviceKind::Fpga => "FPGA",
+        }
+    }
+
+    /// Spec-file key — the same lowercase names `EnvSpec` devices use
+    /// (scenario `"devices"` objects, fault-plan `"outages"` entries).
+    pub fn key(&self) -> &'static str {
+        match self {
+            DeviceKind::CpuSingle => "cpu",
+            DeviceKind::ManyCore => "manycore",
+            DeviceKind::Gpu => "gpu",
+            DeviceKind::Fpga => "fpga",
+        }
+    }
+
+    /// Inverse of [`DeviceKind::key`].
+    pub fn from_key(s: &str) -> Option<DeviceKind> {
+        match s {
+            "cpu" => Some(DeviceKind::CpuSingle),
+            "manycore" => Some(DeviceKind::ManyCore),
+            "gpu" => Some(DeviceKind::Gpu),
+            "fpga" => Some(DeviceKind::Fpga),
+            _ => None,
         }
     }
 }

@@ -1,0 +1,518 @@
+//! Deterministic fault injection for the trial stack.
+//!
+//! The paper's flow repeatedly compiles and measures candidate patterns
+//! in a verification environment; in a real mixed GPU/FPGA/many-core
+//! fleet those trials fail routinely — compile errors, busy devices,
+//! node outages, transient measurement faults (the companion proposal
+//! arXiv:2011.12431 simply skips trials that fail compilation; the
+//! function-block work arXiv:2004.09883 assumes destinations can be
+//! unavailable).  A [`FaultPlan`] injects those failures *reproducibly*:
+//! every draw is a pure keyed hash (SplitMix64 finalizer, the same
+//! constants as `util/rng.rs`) over (fault seed, application
+//! fingerprint, trial key, attempt, boundary) — no mutable RNG state —
+//! so fault outcomes are a pure function of the plan and the trial
+//! identity, independent of execution order.  That is what lets the
+//! staged executor speculate trials in parallel and still commit
+//! bit-identically to the sequential walk (DESIGN.md invariant 8).
+//!
+//! Three injection boundaries:
+//! * **compile** — the trial's compile/setup step fails before any
+//!   measurement runs (no measurement cost is charged);
+//! * **measure** — a transient measurement error *after* the full
+//!   measurement ran (its cost is charged to the ledger, then wasted);
+//! * **outage** — the destination device is inside an [`OutageWindow`]
+//!   on the simulated clock at the moment the trial commits.
+//!
+//! The coordinator retries a faulted trial under the plan's
+//! [`RetryPolicy`] (capped attempts, deterministic exponential backoff
+//! charged to the `SimClock` ledger); a device whose trials exhaust
+//! retries is quarantined and its remaining schedule steps skip with a
+//! typed reason (see coordinator/mod.rs).
+//!
+//! The zero-fault invariant: a plan with both rates at `0.0` and no
+//! outage windows never returns a fault, charges nothing, and emits
+//! nothing — runs under it are bit-identical to runs with no plan at
+//! all (pinned by `tests/faults.rs`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::devices::DeviceKind;
+use crate::util::json::Json;
+
+/// How the coordinator retries a faulted trial.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts per trial, including the first (min 1).
+    pub max_attempts: u32,
+    /// Wait before the second attempt, simulated seconds.
+    pub backoff_base_s: f64,
+    /// Multiplier per further attempt (2.0 = classic doubling).
+    pub backoff_factor: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { max_attempts: 3, backoff_base_s: 60.0, backoff_factor: 2.0 }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff charged after failed attempt `attempt` (1-based):
+    /// `base * factor^(attempt-1)`, so attempt 1 waits `base`.
+    pub fn backoff_s(&self, attempt: u32) -> f64 {
+        self.backoff_base_s * self.backoff_factor.powi(attempt.saturating_sub(1) as i32)
+    }
+}
+
+/// A device unavailability window on the simulated verification clock.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OutageWindow {
+    pub device: DeviceKind,
+    /// Window start on the `SimClock` ledger, simulated seconds.
+    pub start_s: f64,
+    pub duration_s: f64,
+}
+
+impl OutageWindow {
+    /// Half-open containment: `[start_s, start_s + duration_s)`.
+    pub fn contains(&self, at_s: f64) -> bool {
+        at_s >= self.start_s && at_s < self.start_s + self.duration_s
+    }
+}
+
+/// One injected fault, as the coordinator sees it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Injection boundary: `"compile"`, `"measure"` or `"outage"`.
+    pub boundary: &'static str,
+    /// Human-readable cause (typed skip reasons embed it).
+    pub detail: String,
+}
+
+/// A seeded, deterministic fault schedule, independent of the GA seed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Fault seed — deliberately separate from the scenario's GA seed, so
+    /// (scenario seed, fault seed) pairs replay independently.
+    pub seed: u64,
+    /// Probability a given (trial, attempt) fails compile/setup, in [0, 1].
+    pub compile_failure_rate: f64,
+    /// Probability a given (trial, attempt) loses its measurement, in [0, 1].
+    pub measurement_error_rate: f64,
+    /// Device unavailability windows on the simulated clock.
+    pub outages: Vec<OutageWindow>,
+    pub retry: RetryPolicy,
+}
+
+impl Default for FaultPlan {
+    /// The inert plan: zero rates, no outages — bit-identical to no plan.
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            compile_failure_rate: 0.0,
+            measurement_error_rate: 0.0,
+            outages: Vec::new(),
+            retry: RetryPolicy::default(),
+        }
+    }
+}
+
+/// SplitMix64 finalizer (the same constants as `util/rng.rs`), used as a
+/// pure keyed hash: chaining `mix(h ^ key)` folds each key component in.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+const BOUNDARY_COMPILE: u64 = 0xC0;
+const BOUNDARY_MEASURE: u64 = 0xAE;
+
+impl FaultPlan {
+    /// Uniform draw in [0, 1) keyed on the full trial identity.  Pure —
+    /// the same key always answers the same, whatever ran in between.
+    fn unit(&self, app_fp: u64, trial_key: u64, attempt: u32, boundary: u64) -> f64 {
+        let mut h = mix(self.seed);
+        h = mix(h ^ app_fp);
+        h = mix(h ^ trial_key);
+        h = mix(h ^ attempt as u64);
+        h = mix(h ^ boundary);
+        (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Does attempt `attempt` of this trial fail its compile/setup step?
+    pub fn compile_fails(&self, app_fp: u64, trial_key: u64, attempt: u32) -> bool {
+        self.compile_failure_rate > 0.0
+            && self.unit(app_fp, trial_key, attempt, BOUNDARY_COMPILE) < self.compile_failure_rate
+    }
+
+    /// Does attempt `attempt` of this trial lose its measurement?
+    pub fn measurement_fails(&self, app_fp: u64, trial_key: u64, attempt: u32) -> bool {
+        self.measurement_error_rate > 0.0
+            && self.unit(app_fp, trial_key, attempt, BOUNDARY_MEASURE)
+                < self.measurement_error_rate
+    }
+
+    /// The outage window covering `device` at simulated time `at_s`, if any.
+    pub fn outage(&self, device: DeviceKind, at_s: f64) -> Option<&OutageWindow> {
+        self.outages.iter().find(|w| w.device == device && w.contains(at_s))
+    }
+
+    /// Evaluate every boundary for one attempt, in severity order: an
+    /// outage masks a compile failure masks a measurement error (only the
+    /// first applicable fault is reported per attempt).
+    pub fn check(
+        &self,
+        app_fp: u64,
+        trial_key: u64,
+        device: DeviceKind,
+        attempt: u32,
+        at_s: f64,
+    ) -> Option<FaultEvent> {
+        if let Some(w) = self.outage(device, at_s) {
+            return Some(FaultEvent {
+                boundary: "outage",
+                detail: format!(
+                    "{} unavailable (outage window [{:.0}s, {:.0}s))",
+                    device.label(),
+                    w.start_s,
+                    w.start_s + w.duration_s
+                ),
+            });
+        }
+        if self.compile_fails(app_fp, trial_key, attempt) {
+            return Some(FaultEvent {
+                boundary: "compile",
+                detail: "injected compile/setup failure".to_string(),
+            });
+        }
+        if self.measurement_fails(app_fp, trial_key, attempt) {
+            return Some(FaultEvent {
+                boundary: "measure",
+                detail: "injected transient measurement error".to_string(),
+            });
+        }
+        None
+    }
+
+    /// Can this plan ever fault?  Inert plans (both rates 0, no outages)
+    /// are behaviorally identical to no plan at all.
+    pub fn is_inert(&self) -> bool {
+        self.compile_failure_rate <= 0.0
+            && self.measurement_error_rate <= 0.0
+            && self.outages.is_empty()
+    }
+
+    /// Short tag for grid-axis labels, e.g. `seed7:c0.35:m0.25:o1`.
+    pub fn tag(&self) -> String {
+        format!(
+            "seed{}:c{}:m{}:o{}",
+            self.seed,
+            self.compile_failure_rate,
+            self.measurement_error_rate,
+            self.outages.len()
+        )
+    }
+
+    /// Parse the `"faults"` object of a scenario/grid spec:
+    ///
+    /// ```json
+    /// {
+    ///   "seed": 7,
+    ///   "compile_failure_rate": 0.35,
+    ///   "measurement_error_rate": 0.25,
+    ///   "retry": {"max_attempts": 2, "backoff_base_s": 60, "backoff_factor": 2},
+    ///   "outages": [{"device": "gpu", "start_s": 0, "duration_s": 1200}]
+    /// }
+    /// ```
+    ///
+    /// Every field is optional; the defaults are the inert plan.
+    pub fn parse(j: &Json) -> Result<Self> {
+        let Json::Obj(m) = j else {
+            bail!("faults: expected an object");
+        };
+        const KNOWN: &[&str] = &[
+            "seed",
+            "compile_failure_rate",
+            "measurement_error_rate",
+            "outages",
+            "retry",
+        ];
+        for k in m.keys() {
+            if !KNOWN.contains(&k.as_str()) {
+                bail!("unknown faults key {k:?} (known: {})", KNOWN.join(", "));
+            }
+        }
+        let mut plan = FaultPlan {
+            seed: parse_u64(m.get("seed"), "seed")?.unwrap_or(0),
+            compile_failure_rate: parse_rate(m.get("compile_failure_rate"), "compile_failure_rate")?,
+            measurement_error_rate: parse_rate(
+                m.get("measurement_error_rate"),
+                "measurement_error_rate",
+            )?,
+            outages: Vec::new(),
+            retry: RetryPolicy::default(),
+        };
+        if let Some(r) = m.get("retry") {
+            plan.retry = parse_retry(r)?;
+        }
+        if let Some(o) = m.get("outages") {
+            let arr = o.as_arr().ok_or_else(|| anyhow!("\"outages\" must be an array"))?;
+            plan.outages = arr.iter().map(parse_outage).collect::<Result<Vec<_>>>()?;
+        }
+        Ok(plan)
+    }
+
+    /// Canonical JSON form; `parse(to_json(plan)) == plan`.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        m.insert("compile_failure_rate".into(), Json::Num(self.compile_failure_rate));
+        m.insert("measurement_error_rate".into(), Json::Num(self.measurement_error_rate));
+        let mut r = BTreeMap::new();
+        r.insert("max_attempts".into(), Json::Num(self.retry.max_attempts as f64));
+        r.insert("backoff_base_s".into(), Json::Num(self.retry.backoff_base_s));
+        r.insert("backoff_factor".into(), Json::Num(self.retry.backoff_factor));
+        m.insert("retry".into(), Json::Obj(r));
+        if !self.outages.is_empty() {
+            m.insert(
+                "outages".into(),
+                Json::Arr(
+                    self.outages
+                        .iter()
+                        .map(|w| {
+                            let mut o = BTreeMap::new();
+                            o.insert("device".into(), Json::Str(w.device.key().to_string()));
+                            o.insert("start_s".into(), Json::Num(w.start_s));
+                            o.insert("duration_s".into(), Json::Num(w.duration_s));
+                            Json::Obj(o)
+                        })
+                        .collect(),
+                ),
+            );
+        }
+        Json::Obj(m)
+    }
+}
+
+fn parse_u64(v: Option<&Json>, key: &str) -> Result<Option<u64>> {
+    match v {
+        None => Ok(None),
+        Some(j) => {
+            let n = j.as_f64().ok_or_else(|| anyhow!("{key:?} must be a number"))?;
+            if n < 0.0 || n.fract() != 0.0 {
+                bail!("{key:?} must be a non-negative integer, got {n}");
+            }
+            if n > (1u64 << 53) as f64 {
+                bail!("{key:?} must fit in 2^53 (JSON number precision), got {n}");
+            }
+            Ok(Some(n as u64))
+        }
+    }
+}
+
+fn parse_rate(v: Option<&Json>, key: &str) -> Result<f64> {
+    match v {
+        None => Ok(0.0),
+        Some(j) => {
+            let n = j.as_f64().ok_or_else(|| anyhow!("{key:?} must be a number"))?;
+            if !(0.0..=1.0).contains(&n) {
+                bail!("{key:?} must be in [0, 1], got {n}");
+            }
+            Ok(n)
+        }
+    }
+}
+
+fn parse_retry(j: &Json) -> Result<RetryPolicy> {
+    let Json::Obj(m) = j else {
+        bail!("\"retry\" must be an object");
+    };
+    for k in m.keys() {
+        if !matches!(k.as_str(), "max_attempts" | "backoff_base_s" | "backoff_factor") {
+            bail!(
+                "unknown retry key {k:?} (known: max_attempts, backoff_base_s, backoff_factor)"
+            );
+        }
+    }
+    let d = RetryPolicy::default();
+    let num = |key: &str, default: f64| -> Result<f64> {
+        match m.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_f64().ok_or_else(|| anyhow!("{key:?} must be a number")),
+        }
+    };
+    let max_attempts = match parse_u64(m.get("max_attempts"), "max_attempts")? {
+        None => d.max_attempts,
+        Some(0) => bail!("\"max_attempts\" must be at least 1"),
+        Some(n) if n > u32::MAX as u64 => bail!("\"max_attempts\" too large: {n}"),
+        Some(n) => n as u32,
+    };
+    let backoff_base_s = num("backoff_base_s", d.backoff_base_s)?;
+    let backoff_factor = num("backoff_factor", d.backoff_factor)?;
+    if !(backoff_base_s >= 0.0) {
+        bail!("\"backoff_base_s\" must be >= 0, got {backoff_base_s}");
+    }
+    if !(backoff_factor > 0.0) {
+        bail!("\"backoff_factor\" must be > 0, got {backoff_factor}");
+    }
+    Ok(RetryPolicy { max_attempts, backoff_base_s, backoff_factor })
+}
+
+fn parse_outage(j: &Json) -> Result<OutageWindow> {
+    let Json::Obj(m) = j else {
+        bail!("each outages entry must be an object");
+    };
+    for k in m.keys() {
+        if !matches!(k.as_str(), "device" | "start_s" | "duration_s") {
+            bail!("unknown outage key {k:?} (known: device, start_s, duration_s)");
+        }
+    }
+    let key = m
+        .get("device")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("each outage needs a \"device\" string"))?;
+    let device = DeviceKind::from_key(key)
+        .ok_or_else(|| anyhow!("unknown outage device {key:?} (want cpu | manycore | gpu | fpga)"))?;
+    let num = |key: &str| -> Result<f64> {
+        m.req(key)?.as_f64().ok_or_else(|| anyhow!("{key:?} must be a number"))
+    };
+    let start_s = num("start_s")?;
+    let duration_s = num("duration_s")?;
+    if !(start_s >= 0.0) {
+        bail!("\"start_s\" must be >= 0, got {start_s}");
+    }
+    if !(duration_s > 0.0) {
+        bail!("\"duration_s\" must be > 0, got {duration_s}");
+    }
+    Ok(OutageWindow { device, start_s, duration_s })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chaotic() -> FaultPlan {
+        FaultPlan {
+            seed: 7,
+            compile_failure_rate: 0.35,
+            measurement_error_rate: 0.25,
+            outages: vec![OutageWindow {
+                device: DeviceKind::Gpu,
+                start_s: 0.0,
+                duration_s: 1200.0,
+            }],
+            retry: RetryPolicy { max_attempts: 2, backoff_base_s: 60.0, backoff_factor: 2.0 },
+        }
+    }
+
+    #[test]
+    fn inert_plan_never_faults() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_inert());
+        for trial_key in 0..8 {
+            for attempt in 1..4 {
+                assert!(plan
+                    .check(0xFEED, trial_key, DeviceKind::Gpu, attempt, 1e9)
+                    .is_none());
+            }
+        }
+    }
+
+    /// Draws are a pure function of the key — re-asking in any order
+    /// answers the same, which is what makes staged == sequential hold
+    /// under faults.
+    #[test]
+    fn draws_are_pure_and_order_independent() {
+        let plan = chaotic();
+        let forward: Vec<bool> =
+            (1..=8).map(|a| plan.compile_fails(0xFEED, 3, a)).collect();
+        let backward: Vec<bool> =
+            (1..=8).rev().map(|a| plan.compile_fails(0xFEED, 3, a)).collect();
+        assert_eq!(forward, backward.into_iter().rev().collect::<Vec<_>>());
+        // Distinct boundaries draw independently.
+        let c = plan.unit(1, 2, 3, BOUNDARY_COMPILE);
+        let m = plan.unit(1, 2, 3, BOUNDARY_MEASURE);
+        assert_ne!(c.to_bits(), m.to_bits());
+        // A different fault seed reshuffles the draws.
+        let other = FaultPlan { seed: 8, ..chaotic() };
+        assert_ne!(
+            plan.unit(1, 2, 3, BOUNDARY_COMPILE).to_bits(),
+            other.unit(1, 2, 3, BOUNDARY_COMPILE).to_bits()
+        );
+    }
+
+    #[test]
+    fn rate_extremes_are_certain() {
+        let always = FaultPlan { compile_failure_rate: 1.0, ..FaultPlan::default() };
+        let never = FaultPlan { compile_failure_rate: 0.0, ..FaultPlan::default() };
+        for attempt in 1..16 {
+            assert!(always.compile_fails(9, 4, attempt));
+            assert!(!never.compile_fails(9, 4, attempt));
+        }
+    }
+
+    #[test]
+    fn outage_windows_are_half_open_and_device_scoped() {
+        let plan = chaotic();
+        assert!(plan.outage(DeviceKind::Gpu, 0.0).is_some());
+        assert!(plan.outage(DeviceKind::Gpu, 1199.9).is_some());
+        assert!(plan.outage(DeviceKind::Gpu, 1200.0).is_none(), "half-open end");
+        assert!(plan.outage(DeviceKind::Fpga, 0.0).is_none(), "other devices unaffected");
+        let f = plan.check(1, 2, DeviceKind::Gpu, 1, 100.0).unwrap();
+        assert_eq!(f.boundary, "outage");
+        assert!(f.detail.contains("GPU"), "{}", f.detail);
+    }
+
+    #[test]
+    fn backoff_is_exponential_from_base() {
+        let r = RetryPolicy { max_attempts: 4, backoff_base_s: 60.0, backoff_factor: 2.0 };
+        assert_eq!(r.backoff_s(1), 60.0);
+        assert_eq!(r.backoff_s(2), 120.0);
+        assert_eq!(r.backoff_s(3), 240.0);
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        for plan in [FaultPlan::default(), chaotic()] {
+            let j = plan.to_json();
+            let back = FaultPlan::parse(&j).unwrap();
+            assert_eq!(back, plan);
+        }
+        // The documented grammar parses, defaults filled in.
+        let j = Json::parse(r#"{"seed": 7, "compile_failure_rate": 0.5}"#).unwrap();
+        let p = FaultPlan::parse(&j).unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.compile_failure_rate, 0.5);
+        assert_eq!(p.retry, RetryPolicy::default());
+        assert!(p.outages.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_plans() {
+        let cases = [
+            (r#"{"chaos": 1}"#, "unknown faults key"),
+            (r#"{"compile_failure_rate": 1.5}"#, "must be in [0, 1]"),
+            (r#"{"measurement_error_rate": -0.1}"#, "must be in [0, 1]"),
+            (r#"{"retry": {"max_attempts": 0}}"#, "at least 1"),
+            (r#"{"retry": {"waits": 3}}"#, "unknown retry key"),
+            (r#"{"retry": {"backoff_factor": 0}}"#, "must be > 0"),
+            (r#"{"outages": [{"device": "tpu", "start_s": 0, "duration_s": 1}]}"#, "unknown outage device"),
+            (r#"{"outages": [{"device": "gpu", "start_s": 0}]}"#, "missing key"),
+            (r#"{"outages": [{"device": "gpu", "start_s": 0, "duration_s": 0}]}"#, "must be > 0"),
+        ];
+        for (src, needle) in cases {
+            let e = FaultPlan::parse(&Json::parse(src).unwrap()).unwrap_err().to_string();
+            assert!(e.contains(needle), "{src}: {e}");
+        }
+    }
+
+    #[test]
+    fn tags_are_compact_and_distinct() {
+        assert_eq!(chaotic().tag(), "seed7:c0.35:m0.25:o1");
+        assert_ne!(FaultPlan::default().tag(), chaotic().tag());
+    }
+}

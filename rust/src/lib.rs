@@ -24,6 +24,7 @@ pub mod app;
 pub mod codegen;
 pub mod coordinator;
 pub mod devices;
+pub mod fault;
 pub mod ga;
 pub mod offload;
 pub mod record;
@@ -34,10 +35,11 @@ pub mod util;
 
 pub use app::ir::{Application, FunctionBlockKind, Loop, LoopId};
 pub use coordinator::{
-    BatchOffloader, BatchOutcome, MixedOffloader, OffloadOutcome, Schedule, SchedulePolicy,
-    TrialConcurrency, UserRequirements,
+    BatchOffloader, BatchOutcome, Chosen, MixedOffloader, OffloadOutcome, Schedule,
+    SchedulePolicy, Selection, TrialConcurrency, UserRequirements,
 };
 pub use devices::{DeviceKind, EnvSpec, PlanCache, Testbed};
+pub use fault::{FaultPlan, OutageWindow, RetryPolicy};
 pub use record::{
     CsvSink, JsonlSink, MemorySink, NullSink, RecordEvent, RecordSink, SharedBuffer, StdoutSink,
     TeeSink, Warden, WardenSet,

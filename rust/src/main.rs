@@ -22,7 +22,8 @@ use mixoff::analysis::{intensity, Profile};
 use mixoff::app::workloads;
 use mixoff::codegen;
 use mixoff::coordinator::{BatchOffloader, MixedOffloader, TrialConcurrency, UserRequirements};
-use mixoff::devices::{DeviceModel, Testbed};
+use mixoff::devices::{DeviceKind, DeviceModel, Testbed};
+use mixoff::fault::{FaultPlan, OutageWindow};
 use mixoff::offload::function_block::BlockDb;
 use mixoff::record::{CsvSink, JsonlSink, NullSink, RecordSink, StdoutSink, Warden, WardenSet};
 use mixoff::report;
@@ -54,7 +55,67 @@ fn offloader_from(args: &Args) -> Result<MixedOffloader> {
         Some("sequential") => TrialConcurrency::Sequential,
         Some(other) => bail!("--trial-concurrency: expected staged|sequential, got {other:?}"),
     };
+    mo.faults = fault_plan_from(args)?;
     Ok(mo)
+}
+
+/// A fault plan assembled from the `--fault-*` flags, or `None` when no
+/// such flag is given (the default fault-free run).
+fn fault_plan_from(args: &Args) -> Result<Option<FaultPlan>> {
+    let seed = args.get_u64("fault-seed")?;
+    let compile = args.get_f64("fault-compile-rate")?;
+    let measure = args.get_f64("fault-measure-rate")?;
+    let attempts = args.get_u64("fault-attempts")?;
+    let backoff = args.get_f64("fault-backoff")?;
+    let outage = args.get("fault-outage");
+    if seed.is_none()
+        && compile.is_none()
+        && measure.is_none()
+        && attempts.is_none()
+        && backoff.is_none()
+        && outage.is_none()
+    {
+        return Ok(None);
+    }
+    let rate = |flag: &str, v: Option<f64>| -> Result<f64> {
+        match v {
+            None => Ok(0.0),
+            Some(p) if (0.0..=1.0).contains(&p) => Ok(p),
+            Some(p) => bail!("--{flag}: rate must be in [0, 1], got {p}"),
+        }
+    };
+    let mut plan = FaultPlan {
+        seed: seed.unwrap_or(0),
+        compile_failure_rate: rate("fault-compile-rate", compile)?,
+        measurement_error_rate: rate("fault-measure-rate", measure)?,
+        ..FaultPlan::default()
+    };
+    if let Some(n) = attempts {
+        plan.retry.max_attempts = n.max(1) as u32;
+    }
+    if let Some(s) = backoff {
+        if s < 0.0 {
+            bail!("--fault-backoff: seconds must be non-negative, got {s}");
+        }
+        plan.retry.backoff_base_s = s;
+    }
+    if let Some(spec) = outage {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let [device, start, dur] = parts[..] else {
+            bail!("--fault-outage: expected <device>:<start_s>:<duration_s>, got {spec:?}");
+        };
+        let device = DeviceKind::from_key(device).ok_or_else(|| {
+            anyhow!("--fault-outage: unknown device {device:?} (cpu|manycore|gpu|fpga)")
+        })?;
+        let start_s: f64 = start
+            .parse()
+            .map_err(|_| anyhow!("--fault-outage: bad start seconds {start:?}"))?;
+        let duration_s: f64 = dur
+            .parse()
+            .map_err(|_| anyhow!("--fault-outage: bad duration seconds {dur:?}"))?;
+        plan.outages.push(OutageWindow { device, start_s, duration_s });
+    }
+    Ok(Some(plan))
 }
 
 fn run() -> Result<()> {
@@ -105,6 +166,13 @@ options: --target <x> --max-price <usd> --seed <n> --json --timing
         --workers <n> (batch: applications in flight at once)
         --trial-concurrency <staged|sequential> (default staged: each
           dependency stage's trials run in parallel; outcomes identical)
+fault injection (offload/batch/figure4; deterministic per fault seed):
+        --fault-seed <n> --fault-compile-rate <p> --fault-measure-rate <p>
+        --fault-attempts <n> --fault-backoff <s>
+        --fault-outage <device>:<start_s>:<duration_s>
+        faulted trials retry with exponential backoff charged to the
+        verification clock; a destination that exhausts its retries is
+        quarantined and the flow degrades to the CPU baseline
 sweep streaming options:
         --sink <path>  stream typed records as the sweep runs: `-` for
           stdout, `*.csv` for fixed-column CSV, else JSONL (a sink or
@@ -155,6 +223,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
     batcher.offloader.requirements = configured.requirements;
     batcher.offloader.ga_seed = configured.ga_seed;
     batcher.offloader.concurrency = configured.concurrency;
+    batcher.offloader.faults = configured.faults;
     if let Some(w) = args.get_usize("workers")? {
         batcher.batch_workers = w.max(1);
     }

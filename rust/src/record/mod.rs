@@ -121,6 +121,24 @@ pub enum RecordEvent {
     Pareto(ParetoPoint),
     /// One final per-axis aggregate.
     AxisStat(AxisStat),
+    /// One injected fault on one trial attempt (see `fault/`).
+    Fault {
+        scenario: String,
+        app: String,
+        trial: String,
+        /// Injection boundary: `"compile"`, `"measure"` or `"outage"`.
+        boundary: String,
+        /// 1-based attempt that faulted.
+        attempt: u64,
+        detail: String,
+    },
+    /// A retry scheduled after a fault: the trial will run again as
+    /// attempt `attempt` once the `wait_s` backoff elapses on the
+    /// simulated clock.
+    Retry { scenario: String, app: String, trial: String, attempt: u64, wait_s: f64 },
+    /// A device quarantined after exhausting its fault retries; its
+    /// remaining schedule steps skip with a typed reason.
+    Quarantine { scenario: String, app: String, device: String, reason: String },
 }
 
 impl RecordEvent {
@@ -133,6 +151,9 @@ impl RecordEvent {
             RecordEvent::SweepRow(_) => "sweep_row",
             RecordEvent::Pareto(_) => "pareto",
             RecordEvent::AxisStat(_) => "axis_stat",
+            RecordEvent::Fault { .. } => "fault",
+            RecordEvent::Retry { .. } => "retry",
+            RecordEvent::Quarantine { .. } => "quarantine",
         }
     }
 
@@ -141,7 +162,11 @@ impl RecordEvent {
     pub fn with_scenario(&self, name: &str) -> RecordEvent {
         let mut ev = self.clone();
         match &mut ev {
-            RecordEvent::Trial { scenario, .. } | RecordEvent::Clock { scenario, .. } => {
+            RecordEvent::Trial { scenario, .. }
+            | RecordEvent::Clock { scenario, .. }
+            | RecordEvent::Fault { scenario, .. }
+            | RecordEvent::Retry { scenario, .. }
+            | RecordEvent::Quarantine { scenario, .. } => {
                 *scenario = name.to_string();
             }
             _ => {}
@@ -218,6 +243,27 @@ impl RecordEvent {
                 m.insert("scenarios".into(), Json::Num(a.scenarios as f64));
                 m.insert("mean_improvement".into(), num(a.mean_improvement));
                 m.insert("best_improvement".into(), num(a.best_improvement));
+            }
+            RecordEvent::Fault { scenario, app, trial, boundary, attempt, detail } => {
+                m.insert("scenario".into(), Json::Str(scenario.clone()));
+                m.insert("app".into(), Json::Str(app.clone()));
+                m.insert("trial".into(), Json::Str(trial.clone()));
+                m.insert("boundary".into(), Json::Str(boundary.clone()));
+                m.insert("attempt".into(), Json::Num(*attempt as f64));
+                m.insert("detail".into(), Json::Str(detail.clone()));
+            }
+            RecordEvent::Retry { scenario, app, trial, attempt, wait_s } => {
+                m.insert("scenario".into(), Json::Str(scenario.clone()));
+                m.insert("app".into(), Json::Str(app.clone()));
+                m.insert("trial".into(), Json::Str(trial.clone()));
+                m.insert("attempt".into(), Json::Num(*attempt as f64));
+                m.insert("wait_s".into(), num(*wait_s));
+            }
+            RecordEvent::Quarantine { scenario, app, device, reason } => {
+                m.insert("scenario".into(), Json::Str(scenario.clone()));
+                m.insert("app".into(), Json::Str(app.clone()));
+                m.insert("device".into(), Json::Str(device.clone()));
+                m.insert("reason".into(), Json::Str(reason.clone()));
             }
         }
         Json::Obj(m)
@@ -322,6 +368,43 @@ mod tests {
             assert_eq!(ev.to_json().req("scenario").unwrap().as_str(), Some("grid-00007"));
         }
         assert_eq!(mem.total_seen(), 2);
+    }
+
+    #[test]
+    fn fault_events_serialize_and_take_the_scenario_label() {
+        let events = [
+            RecordEvent::Fault {
+                scenario: String::new(),
+                app: "vecadd".into(),
+                trial: "GPU loop offload".into(),
+                boundary: "outage".into(),
+                attempt: 1,
+                detail: "GPU unavailable".into(),
+            },
+            RecordEvent::Retry {
+                scenario: String::new(),
+                app: "vecadd".into(),
+                trial: "GPU loop offload".into(),
+                attempt: 2,
+                wait_s: 60.0,
+            },
+            RecordEvent::Quarantine {
+                scenario: String::new(),
+                app: "vecadd".into(),
+                device: "GPU".into(),
+                reason: "faulted after 2 attempts".into(),
+            },
+        ];
+        for (ev, kind) in events.iter().zip(["fault", "retry", "quarantine"]) {
+            assert_eq!(ev.kind(), kind);
+            let j = ev.with_scenario("grid-00003").to_json();
+            assert_eq!(j.req("type").unwrap().as_str(), Some(kind));
+            assert_eq!(j.req("scenario").unwrap().as_str(), Some("grid-00003"));
+            assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        }
+        let j = events[1].to_json();
+        assert_eq!(j.req("attempt").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.req("wait_s").unwrap().as_f64(), Some(60.0));
     }
 
     #[test]

@@ -76,7 +76,10 @@ impl WriterState {
                 self.error = Some(e.to_string());
             }
         }
-        match &self.error {
+        // `take()`, not a borrow: the captured error surfaces exactly once.
+        // A caller that retries `close` after handling the error gets
+        // `Ok(())`, not the same failure replayed forever.
+        match self.error.take() {
             Some(e) => Err(anyhow!("{what}: {e}")),
             None => Ok(()),
         }
@@ -194,6 +197,27 @@ fn csv_row(ev: &RecordEvent) -> String {
             f[5] = a.label.clone();
             f[7] = csv_num(a.mean_improvement);
             f[10] = format!("{} scenarios, best {:.2}x", a.scenarios, a.best_improvement);
+        }
+        RecordEvent::Fault { scenario, app, trial, boundary, attempt, detail } => {
+            f[1] = scenario.clone();
+            f[2] = app.clone();
+            f[3] = trial.clone();
+            f[5] = boundary.clone();
+            f[9] = format!("{attempt}");
+            f[10] = detail.clone();
+        }
+        RecordEvent::Retry { scenario, app, trial, attempt, wait_s } => {
+            f[1] = scenario.clone();
+            f[2] = app.clone();
+            f[3] = trial.clone();
+            f[6] = csv_num(*wait_s);
+            f[9] = format!("{attempt}");
+        }
+        RecordEvent::Quarantine { scenario, app, device, reason } => {
+            f[1] = scenario.clone();
+            f[2] = app.clone();
+            f[5] = device.clone();
+            f[10] = reason.clone();
         }
     }
     f.iter().map(|s| csv_escape(s)).collect::<Vec<_>>().join(",")
@@ -399,6 +423,53 @@ mod tests {
         let cols = CSV_HEADER.split(',').count();
         assert!(lines[1].contains("\"a,pp\""), "comma-bearing field is quoted: {}", lines[1]);
         assert_eq!(lines[2].split(',').count(), cols, "skip reason row keeps the column count");
+    }
+
+    #[test]
+    fn fault_rows_keep_the_csv_column_count() {
+        let buf = SharedBuffer::new();
+        let sink = CsvSink::to_buffer(&buf);
+        sink.emit(&RecordEvent::Fault {
+            scenario: "s".into(),
+            app: "vecadd".into(),
+            trial: "GPU loop offload".into(),
+            boundary: "outage".into(),
+            attempt: 1,
+            detail: "GPU unavailable (outage window [0s, 1200s))".into(),
+        });
+        sink.emit(&RecordEvent::Retry {
+            scenario: "s".into(),
+            app: "vecadd".into(),
+            trial: "GPU loop offload".into(),
+            attempt: 2,
+            wait_s: 60.0,
+        });
+        sink.emit(&RecordEvent::Quarantine {
+            scenario: "s".into(),
+            app: "vecadd".into(),
+            device: "GPU".into(),
+            reason: "faulted after 2 attempts".into(),
+        });
+        sink.close().unwrap();
+        let lines = buf.lines();
+        let cols = CSV_HEADER.split(',').count();
+        assert_eq!(lines.len(), 4, "header + three rows");
+        for (line, kind) in lines[1..].iter().zip(["fault", "retry", "quarantine"]) {
+            assert!(line.starts_with(kind), "{line}");
+            // The outage detail carries a comma, so it must arrive quoted;
+            // count columns outside quotes.
+            let mut in_quotes = false;
+            let cells = 1 + line
+                .chars()
+                .filter(|c| {
+                    if *c == '"' {
+                        in_quotes = !in_quotes;
+                    }
+                    *c == ',' && !in_quotes
+                })
+                .count();
+            assert_eq!(cells, cols, "{line}");
+        }
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use std::fmt::{self, Write};
 
-use crate::coordinator::{BatchOutcome, OffloadOutcome, TrialKind};
+use crate::coordinator::{BatchOutcome, OffloadOutcome, Selection, TrialKind};
 use crate::devices::DeviceKind;
 use crate::offload::pattern::Method;
 use crate::scenario::{ScenarioOutcome, StreamOutcome, SweepOutcome};
@@ -54,7 +54,9 @@ pub fn figure4_row(out: &OffloadOutcome) -> Figure4Row {
         .trials
         .iter()
         .filter(|t| t.skipped.is_none() && Some(t.kind.device) != chosen_device)
-        .max_by(|a, b| a.improvement.partial_cmp(&b.improvement).unwrap());
+        // total_cmp: a NaN improvement (degenerate trial) must not panic
+        // the report path; it just sorts below every real number.
+        .max_by(|a, b| a.improvement.total_cmp(&b.improvement));
     let (alt_label, alt_s, alt_improvement) = match alt {
         Some(t) => {
             let label = if t.offloaded {
@@ -134,6 +136,9 @@ pub fn render_trials(out: &OffloadOutcome) -> String {
             }
         }
     }
+    for (device, reason) in &out.quarantined {
+        let _ = writeln!(s, "  !! {} quarantined: {reason}", device.label());
+    }
     match &out.chosen {
         Some(c) => {
             let _ = writeln!(
@@ -145,9 +150,14 @@ pub fn render_trials(out: &OffloadOutcome) -> String {
                 c.price_usd
             );
         }
-        None => {
-            let _ = writeln!(s, "  => chosen: none (stay on single-core CPU)");
-        }
+        None => match &out.selection {
+            Selection::Fallback { reason } => {
+                let _ = writeln!(s, "  => chosen: none — {reason}");
+            }
+            _ => {
+                let _ = writeln!(s, "  => chosen: none (stay on single-core CPU)");
+            }
+        },
     }
     s
 }
@@ -176,7 +186,10 @@ pub fn write_batch<W: Write>(w: &mut W, batch: &BatchOutcome) -> fmt::Result {
                 format!("{} USD", c.price_usd),
             ),
             None => (
-                "none (stay on CPU)".to_string(),
+                match &out.selection {
+                    Selection::Fallback { .. } => "none (fallback: quarantined)".to_string(),
+                    _ => "none (stay on CPU)".to_string(),
+                },
                 out.baseline_seconds,
                 "1.0x".to_string(),
                 "-".to_string(),
@@ -351,6 +364,26 @@ pub fn to_json_full(out: &OffloadOutcome) -> Json {
         })
         .collect();
     root.insert("clock".into(), Json::Arr(clock));
+    // Fault-run extras, emitted only when a quarantine actually happened:
+    // zero-fault runs must serialize byte-identically to the pre-fault
+    // golden corpus.
+    if !out.quarantined.is_empty() {
+        root.insert("selection".into(), Json::Str(out.selection.label().to_string()));
+        root.insert(
+            "quarantined".into(),
+            Json::Arr(
+                out.quarantined
+                    .iter()
+                    .map(|(device, reason)| {
+                        let mut m = BTreeMap::new();
+                        m.insert("device".into(), Json::Str(device.key().to_string()));
+                        m.insert("reason".into(), Json::Str(reason.clone()));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+    }
     Json::Obj(root)
 }
 

@@ -42,6 +42,9 @@
 //!   application object or an array of them.  Required.
 //! * `seeds` — GA seeds; omitted = the default 0xC0FFEE.
 //! * `schedules` — schedule policy labels; omitted = `"paper"`.
+//! * `faults` — fault-plan objects (same grammar as a scenario's
+//!   `"faults"`; see `fault/`) or `null` for a fault-free cell; omitted =
+//!   every cell fault-free.  The chaos-sweep axis.
 //!
 //! Validation is eager and total: device names, parameter names,
 //! multipliers and every workload are checked (and built once) at parse
@@ -55,6 +58,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::{SchedulePolicy, TrialConcurrency, UserRequirements};
 use crate::devices::{default_param, known_params, DeviceSpec, EnvSpec, Testbed};
+use crate::fault::FaultPlan;
 use crate::util::json::Json;
 
 use super::spec::{
@@ -66,8 +70,8 @@ pub type Calibration = BTreeMap<String, BTreeMap<String, f64>>;
 
 /// A declarative scenario grid: shared run configuration plus one list
 /// per axis.  The cross-product (axis order: fleets, calibrations,
-/// price_scales, workloads, seeds, schedules — last axis fastest)
-/// expands lazily into [`ScenarioSpec`]s.
+/// price_scales, workloads, seeds, schedules, faults — last axis
+/// fastest) expands lazily into [`ScenarioSpec`]s.
 #[derive(Clone, Debug, PartialEq)]
 pub struct GridSpec {
     pub name: String,
@@ -83,6 +87,8 @@ pub struct GridSpec {
     pub workloads: Vec<Vec<AppSpec>>,
     pub seeds: Vec<u64>,
     pub schedules: Vec<SchedulePolicy>,
+    /// Fault plans (`None` = fault-free cell) — the chaos-sweep axis.
+    pub faults: Vec<Option<FaultPlan>>,
 }
 
 /// One expanded grid cell: its flat index, the materialized spec, and
@@ -221,8 +227,15 @@ impl GridSpec {
         let Some(Json::Obj(axes)) = m.get("axes") else {
             bail!("grid needs an \"axes\" object");
         };
-        const AXES: &[&str] =
-            &["fleets", "calibrations", "price_scales", "workloads", "seeds", "schedules"];
+        const AXES: &[&str] = &[
+            "fleets",
+            "calibrations",
+            "price_scales",
+            "workloads",
+            "seeds",
+            "schedules",
+            "faults",
+        ];
         for k in axes.keys() {
             if !AXES.contains(&k.as_str()) {
                 bail!("unknown grid axis {k:?} (known: {})", AXES.join(", "));
@@ -299,6 +312,17 @@ impl GridSpec {
                 .collect::<Result<Vec<_>>>()?,
             None => vec![SchedulePolicy::Paper],
         };
+        let faults = match axis("faults")? {
+            Some(items) => items
+                .iter()
+                .enumerate()
+                .map(|(i, j)| match j {
+                    Json::Null => Ok(None),
+                    _ => FaultPlan::parse(j).map(Some).map_err(|e| anyhow!("faults[{i}]: {e}")),
+                })
+                .collect::<Result<Vec<_>>>()?,
+            None => vec![None],
+        };
 
         Ok(Self {
             name,
@@ -311,6 +335,7 @@ impl GridSpec {
             workloads,
             seeds,
             schedules,
+            faults,
         })
     }
 
@@ -357,6 +382,18 @@ impl GridSpec {
             "schedules".to_string(),
             Json::Arr(self.schedules.iter().map(|s| Json::Str(s.label().into())).collect()),
         );
+        axes.insert(
+            "faults".to_string(),
+            Json::Arr(
+                self.faults
+                    .iter()
+                    .map(|f| match f {
+                        Some(p) => p.to_json(),
+                        None => Json::Null,
+                    })
+                    .collect(),
+            ),
+        );
         let mut m = BTreeMap::new();
         m.insert("name".to_string(), Json::Str(self.name.clone()));
         if !self.description.is_empty() {
@@ -388,6 +425,7 @@ impl GridSpec {
             * self.workloads.len()
             * self.seeds.len()
             * self.schedules.len()
+            * self.faults.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -420,7 +458,7 @@ impl GridSpec {
         env
     }
 
-    /// Expand cell `index` (row-major over the axis order, schedules
+    /// Expand cell `index` (row-major over the axis order, faults
     /// fastest).  Infallible — everything was validated at parse time.
     /// Panics if `index >= self.len()`.
     pub fn scenario(&self, index: usize) -> GridScenario {
@@ -431,6 +469,7 @@ impl GridSpec {
             rest /= len;
             i
         };
+        let fault_i = pick(self.faults.len());
         let sched_i = pick(self.schedules.len());
         let seed_i = pick(self.seeds.len());
         let wl_i = pick(self.workloads.len());
@@ -439,7 +478,7 @@ impl GridSpec {
         let fleet_i = pick(self.fleets.len());
 
         let devices = self.cell_fleet(fleet_i, cal_i, price_i);
-        let labels: [(&str, usize, String); 6] = [
+        let labels: [(&str, usize, String); 7] = [
             ("fleet", self.fleets.len(), devices.fleet_label()),
             (
                 "calibration",
@@ -454,6 +493,14 @@ impl GridSpec {
             ("workload", self.workloads.len(), workload_label(&self.workloads[wl_i])),
             ("seed", self.seeds.len(), format!("seed {}", self.seeds[seed_i])),
             ("schedule", self.schedules.len(), self.schedules[sched_i].label().to_string()),
+            (
+                "faults",
+                self.faults.len(),
+                match &self.faults[fault_i] {
+                    Some(p) => p.tag(),
+                    None => "none".to_string(),
+                },
+            ),
         ];
         let description = labels
             .iter()
@@ -476,6 +523,7 @@ impl GridSpec {
                 requirements: self.requirements,
                 devices,
                 apps: self.workloads[wl_i].clone(),
+                faults: self.faults[fault_i].clone(),
             },
             coords,
         }
@@ -599,6 +647,59 @@ mod tests {
         let g = GridSpec::from_str(SRC, "g").unwrap();
         let back = GridSpec::parse(&Json::parse(&g.to_json().to_string()).unwrap(), "g").unwrap();
         assert_eq!(g, back);
+    }
+
+    const CHAOS_SRC: &str = r#"{
+        "name": "chaos",
+        "axes": {
+            "workloads": [{"workload": "vecadd", "n": 1048576}],
+            "seeds": [1, 2],
+            "faults": [null,
+                       {"seed": 7, "compile_failure_rate": 0.35,
+                        "retry": {"max_attempts": 2},
+                        "outages": [{"device": "gpu", "start_s": 0, "duration_s": 1200}]}]
+        }
+    }"#;
+
+    #[test]
+    fn faults_axis_expands_fastest_and_labels_cells() {
+        let g = GridSpec::from_str(CHAOS_SRC, "chaos").unwrap();
+        assert_eq!(g.len(), 2 * 2, "seeds x faults");
+        let (a, b) = (g.scenario(0), g.scenario(1));
+        assert!(a.spec.faults.is_none());
+        let plan = b.spec.faults.as_ref().expect("faults axis varies fastest");
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.retry.max_attempts, 2);
+        assert_eq!(a.spec.seed, b.spec.seed, "only the faults axis moved");
+        assert!(a.coords.iter().any(|(ax, l)| ax == "faults" && l == "none"));
+        assert!(b.coords.iter().any(|(ax, l)| ax == "faults" && l == "seed7:c0.35:m0:o1"));
+        // Round-trips with the null entry intact.
+        let back =
+            GridSpec::parse(&Json::parse(&g.to_json().to_string()).unwrap(), "chaos").unwrap();
+        assert_eq!(g, back);
+        // The plan reaches the cell's coordinator.
+        assert!(b.spec.offloader().unwrap().faults.is_some());
+    }
+
+    #[test]
+    fn omitted_faults_axis_defaults_to_fault_free() {
+        let g = GridSpec::from_str(SRC, "g").unwrap();
+        assert_eq!(g.faults, vec![None]);
+        assert!(g.scenario(0).spec.faults.is_none());
+        assert!(!g.scenario(0).coords.iter().any(|(ax, _)| ax == "faults"));
+    }
+
+    #[test]
+    fn rejects_malformed_faults_axis() {
+        let e = GridSpec::from_str(
+            r#"{"axes": {"workloads": [{"workload": "vecadd"}],
+                "faults": [{"chaos": 1}]}}"#,
+            "bad",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("faults[0]"), "{e}");
+        assert!(e.contains("unknown faults key"), "{e}");
     }
 
     #[test]

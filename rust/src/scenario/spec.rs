@@ -36,6 +36,7 @@ use crate::coordinator::{
     BatchOffloader, MixedOffloader, SchedulePolicy, TrialConcurrency, UserRequirements,
 };
 use crate::devices::{EnvSpec, EvalCache, PlanCache, Testbed};
+use crate::fault::FaultPlan;
 use crate::record::{NullSink, RecordSink, ScopedSink};
 use crate::util::json::Json;
 
@@ -159,6 +160,9 @@ pub struct ScenarioSpec {
     pub requirements: UserRequirements,
     pub devices: EnvSpec,
     pub apps: Vec<AppSpec>,
+    /// Deterministic fault injection (`"faults"` object, see `fault/`).
+    /// `None` — the default — runs fault-free.
+    pub faults: Option<FaultPlan>,
 }
 
 pub(crate) fn concurrency_from_label(s: &str) -> Result<TrialConcurrency> {
@@ -213,6 +217,7 @@ impl ScenarioSpec {
             "requirements",
             "devices",
             "applications",
+            "faults",
         ];
         for k in m.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -249,6 +254,7 @@ impl ScenarioSpec {
                 None => EnvSpec::default(),
             },
             apps,
+            faults: m.get("faults").map(FaultPlan::parse).transpose()?,
         })
     }
 
@@ -285,6 +291,9 @@ impl ScenarioSpec {
             "applications".into(),
             Json::Arr(self.apps.iter().map(AppSpec::to_json).collect()),
         );
+        if let Some(f) = &self.faults {
+            m.insert("faults".into(), f.to_json());
+        }
         Json::Obj(m)
     }
 
@@ -311,6 +320,7 @@ impl ScenarioSpec {
             ga_seed: self.seed,
             schedule,
             concurrency: self.concurrency,
+            faults: self.faults.clone(),
             ..MixedOffloader::default()
         })
     }
@@ -428,6 +438,34 @@ mod tests {
         assert_eq!(spec.devices, EnvSpec::default());
         let mo = spec.offloader().unwrap();
         assert_eq!(mo.schedule, crate::coordinator::Schedule::paper());
+    }
+
+    #[test]
+    fn faults_key_parses_and_threads_into_the_offloader() {
+        let src = r#"{
+            "applications": [{"workload": "vecadd", "n": 1048576}],
+            "faults": {
+                "seed": 7,
+                "compile_failure_rate": 0.35,
+                "retry": {"max_attempts": 2},
+                "outages": [{"device": "gpu", "start_s": 0, "duration_s": 1200}]
+            }
+        }"#;
+        let spec = ScenarioSpec::from_str(src, "chaotic").unwrap();
+        let plan = spec.faults.as_ref().unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.retry.max_attempts, 2);
+        assert_eq!(plan.outages.len(), 1);
+        let mo = spec.offloader().unwrap();
+        assert_eq!(mo.faults.as_ref(), Some(plan), "plan reaches the coordinator");
+        // Round-trips; a fault-free spec serializes without the key at all.
+        let back = ScenarioSpec::parse(&spec.to_json(), "chaotic").unwrap();
+        assert_eq!(back, spec);
+        let bare = ScenarioSpec::from_str(r#"{"applications": [{"workload": "vecadd"}]}"#, "d")
+            .unwrap();
+        assert!(bare.faults.is_none());
+        assert!(!bare.to_json().to_string().contains("faults"));
+        assert!(bare.offloader().unwrap().faults.is_none());
     }
 
     #[test]

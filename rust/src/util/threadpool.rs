@@ -207,6 +207,53 @@ impl WorkerPool {
         if cap == 1 {
             return items.into_iter().map(f).collect();
         }
+        let mut out = Vec::with_capacity(n);
+        for slot in self.run_call(items, cap, f) {
+            match slot {
+                Ok(r) => out.push(r),
+                Err(payload) => resume_unwind(payload),
+            }
+        }
+        out
+    }
+
+    /// Like [`WorkerPool::map`], but a panic in `f` poisons only its own
+    /// item: every item's result comes back as a `std::thread::Result`,
+    /// in input order, and the call itself never panics.  The commit
+    /// layer of the staged trial executor uses this to fold a panicking
+    /// speculative trial into a typed failure record instead of taking
+    /// down the whole stage.
+    pub fn try_map<T, R, F>(&self, items: Vec<T>, cap: usize, f: F) -> Vec<std::thread::Result<R>>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Send + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let cap = cap.clamp(1, n);
+        if cap == 1 {
+            return items
+                .into_iter()
+                .map(|it| catch_unwind(AssertUnwindSafe(|| f(it))))
+                .collect();
+        }
+        self.run_call(items, cap, f)
+    }
+
+    /// The shared fan-out core behind [`WorkerPool::map`] and
+    /// [`WorkerPool::try_map`]: per-item dispatch with the caller draining
+    /// its own queue, results (or caught panics) in input order.  Callers
+    /// have already handled the `n == 0` and inline `cap == 1` paths.
+    fn run_call<T, R, F>(&self, items: Vec<T>, cap: usize, f: F) -> Vec<std::thread::Result<R>>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Send + Sync,
+    {
+        let n = items.len();
         self.shared.dispatched.fetch_add(n, Ordering::Relaxed);
         let call = Arc::new(Call {
             queue: Mutex::new(items.into_iter().enumerate().rev().collect()),
@@ -231,14 +278,10 @@ impl WorkerPool {
         }
         drop(rem);
         let slots = std::mem::take(&mut *call.results.lock().unwrap());
-        let mut out = Vec::with_capacity(n);
-        for slot in slots {
-            match slot.expect("worker died before producing result") {
-                Ok(r) => out.push(r),
-                Err(payload) => resume_unwind(payload),
-            }
-        }
-        out
+        slots
+            .into_iter()
+            .map(|slot| slot.expect("worker died before producing result"))
+            .collect()
     }
 
     /// Batches where one measurement is cheap (a GA generation after the
@@ -465,6 +508,53 @@ mod tests {
         let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
         assert!(msg.contains("boom in chunk"), "unexpected payload {msg:?}");
         assert_eq!(pool.map_chunked((0..10usize).collect(), 3, |i| i * 2).len(), 10);
+    }
+
+    /// `try_map` isolates a panic to its own slot: every other item still
+    /// produces its value, in input order, and the caller decides what a
+    /// poisoned item means.
+    #[test]
+    fn try_map_isolates_panics_per_item() {
+        let pool = WorkerPool::new(3);
+        let out = pool.try_map((0..6usize).collect(), 3, |i| {
+            if i == 2 {
+                panic!("poisoned item");
+            }
+            i * 10
+        });
+        assert_eq!(out.len(), 6);
+        for (i, slot) in out.iter().enumerate() {
+            match slot {
+                Ok(v) => {
+                    assert_ne!(i, 2);
+                    assert_eq!(*v, i * 10, "order preserved around the poisoned slot");
+                }
+                Err(payload) => {
+                    assert_eq!(i, 2, "only the panicking item is poisoned");
+                    let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+                    assert!(msg.contains("poisoned item"), "unexpected payload {msg:?}");
+                }
+            }
+        }
+        // The pool survives for the next call.
+        assert_eq!(pool.map((0..4usize).collect(), 3, |i| i).len(), 4);
+    }
+
+    /// The inline cap-1 path of `try_map` catches panics too — same
+    /// contract whichever path runs.
+    #[test]
+    fn try_map_inline_path_catches_panics() {
+        let pool = WorkerPool::new(2);
+        let out = pool.try_map(vec![1usize, 2, 3], 1, |i| {
+            if i == 2 {
+                panic!("inline boom");
+            }
+            i
+        });
+        assert!(out[0].is_ok() && out[2].is_ok());
+        assert!(out[1].is_err());
+        let empty: Vec<std::thread::Result<usize>> = pool.try_map(Vec::new(), 4, |i: usize| i);
+        assert!(empty.is_empty());
     }
 
     /// Private pools work standalone and join their threads on drop.

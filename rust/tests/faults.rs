@@ -1,0 +1,153 @@
+//! Fault-injection properties (DESIGN.md invariant 8):
+//!
+//! * an inert (zero-rate, no-outage) fault plan is byte-identical to no
+//!   plan at all, under both trial-concurrency modes;
+//! * under faults, the outcome is a pure function of (scenario seed,
+//!   fault seed): replays are identical, and staged == sequential holds;
+//! * a chaos sweep over the whole committed scenario corpus completes
+//!   with explicit outcomes — every trial is a result or a typed skip,
+//!   and a quarantined device is never chosen.
+
+use std::path::{Path, PathBuf};
+
+use mixoff::coordinator::{Selection, TrialConcurrency};
+use mixoff::devices::DeviceKind;
+use mixoff::fault::{FaultPlan, OutageWindow, RetryPolicy};
+use mixoff::report;
+use mixoff::scenario::{self, ScenarioSpec};
+
+/// A two-destination fleet: enough surface for quarantine + fallback
+/// without the full corpus's wall time.
+const SPEC: &str = r#"{
+    "seed": 11,
+    "devices": {"manycore": {}, "gpu": {}},
+    "applications": [{"workload": "vecadd", "n": 1048576}]
+}"#;
+
+/// Compile + measurement faults on every destination, plus a GPU outage
+/// that spans any plausible verification ledger — with two attempts and
+/// a 60 s backoff, the GPU is guaranteed to fault, retry, and quarantine.
+fn chaotic_plan(seed: u64) -> FaultPlan {
+    FaultPlan {
+        seed,
+        compile_failure_rate: 0.35,
+        measurement_error_rate: 0.25,
+        outages: vec![OutageWindow {
+            device: DeviceKind::Gpu,
+            start_s: 0.0,
+            duration_s: 1e9,
+        }],
+        retry: RetryPolicy { max_attempts: 2, backoff_base_s: 60.0, backoff_factor: 2.0 },
+    }
+}
+
+fn scenarios_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios")
+}
+
+/// Inert plan == no plan, byte for byte: the fault layer must be
+/// invisible until it actually injects something, so the committed
+/// golden corpus stays valid for fault-free runs.
+#[test]
+fn inert_plan_is_byte_identical_to_no_plan() {
+    let bare = ScenarioSpec::from_str(SPEC, "fault-id").unwrap();
+    let mut inert = ScenarioSpec::from_str(SPEC, "fault-id").unwrap();
+    inert.faults = Some(FaultPlan::default());
+    assert!(inert.faults.as_ref().unwrap().is_inert());
+    for concurrency in [TrialConcurrency::Sequential, TrialConcurrency::Staged] {
+        let a = report::scenario_to_json(&bare.run_with(concurrency).unwrap()).to_string();
+        let b = report::scenario_to_json(&inert.run_with(concurrency).unwrap()).to_string();
+        assert_eq!(a, b, "inert plan diverged under {concurrency:?}");
+        assert!(!a.contains("quarantined"), "fault-free JSON must not grow fault keys");
+    }
+}
+
+/// Under faults the outcome is a pure function of (scenario seed, fault
+/// seed): replaying is bit-identical, and the staged executor still
+/// matches the paper's sequential walk.
+#[test]
+fn faulted_runs_replay_identically_across_modes() {
+    let mut spec = ScenarioSpec::from_str(SPEC, "chaos").unwrap();
+    spec.faults = Some(chaotic_plan(7));
+
+    let seq = spec.run_with(TrialConcurrency::Sequential).unwrap();
+    let replay = spec.run_with(TrialConcurrency::Sequential).unwrap();
+    let staged = spec.run_with(TrialConcurrency::Staged).unwrap();
+    let a = report::scenario_to_json(&seq).to_string();
+    assert_eq!(a, report::scenario_to_json(&replay).to_string(), "replay diverged");
+    assert_eq!(a, report::scenario_to_json(&staged).to_string(), "staged != sequential");
+
+    // The t=0 GPU outage actually bites: faults, retries with backoff
+    // charged to the ledger, then quarantine — and the degraded outcome
+    // is explicit, not a panic.
+    let out = &seq.batch.outcomes[0];
+    assert!(
+        out.quarantined.iter().any(|(d, _)| *d == DeviceKind::Gpu),
+        "GPU must quarantine under a permanent outage: {:?}",
+        out.quarantined
+    );
+    for (_, reason) in &out.quarantined {
+        assert!(reason.contains("faulted after 2 attempts"), "{reason}");
+    }
+    assert!(out.clock.backoff_seconds() >= 60.0, "retry backoff is charged to the ledger");
+    if let Some(c) = &out.chosen {
+        assert_ne!(c.kind.device, DeviceKind::Gpu, "a quarantined device was chosen");
+    }
+    assert!(a.contains("quarantined"), "faulted golden JSON carries the quarantine record");
+}
+
+/// Chaos sweep over the committed corpus: every scenario completes with
+/// an explicit outcome. No trial panics, a quarantined device is never
+/// chosen, and a fallback is always backed by at least one quarantine.
+#[test]
+fn chaos_sweep_over_the_corpus_never_chooses_quarantined() {
+    let mut scenarios = scenario::load_dir(&scenarios_dir()).expect("scenario corpus loads");
+    assert!(scenarios.len() >= 10, "corpus shrank to {}", scenarios.len());
+    for sc in &mut scenarios {
+        sc.spec.faults = Some(chaotic_plan(9));
+    }
+    let sweep = scenario::run_scenarios(&scenarios).expect("chaos sweep completes");
+    assert_eq!(sweep.scenarios.len(), scenarios.len());
+
+    let mut quarantines = 0usize;
+    for sc in &sweep.scenarios {
+        for out in &sc.batch.outcomes {
+            quarantines += out.quarantined.len();
+            for (_, reason) in &out.quarantined {
+                assert!(reason.contains("faulted after"), "untyped quarantine: {reason}");
+            }
+            match (&out.chosen, &out.selection) {
+                (Some(c), Selection::Offloaded(_)) => {
+                    assert!(
+                        !out.quarantined.iter().any(|(d, _)| *d == c.kind.device),
+                        "{}/{}: chose quarantined {}",
+                        sc.name,
+                        out.app_name,
+                        c.kind.device.label()
+                    );
+                }
+                (None, Selection::NoDestinationAvailable { reason }) => {
+                    assert!(!reason.is_empty());
+                }
+                (None, Selection::Fallback { reason }) => {
+                    assert!(
+                        !out.quarantined.is_empty(),
+                        "{}/{}: fallback without a quarantine: {reason}",
+                        sc.name,
+                        out.app_name
+                    );
+                }
+                (chosen, selection) => panic!(
+                    "{}/{}: chosen {:?} inconsistent with selection {:?}",
+                    sc.name,
+                    out.app_name,
+                    chosen.is_some(),
+                    selection.label()
+                ),
+            }
+        }
+    }
+    // The GPU-bearing scenarios all sit inside the permanent outage, so
+    // the sweep must have quarantined something.
+    assert!(quarantines > 0, "a chaos sweep with a t=0 outage quarantined nothing");
+}

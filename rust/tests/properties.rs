@@ -15,6 +15,7 @@ use mixoff::coordinator::{
 use mixoff::devices::{
     DeviceKind, DeviceModel, DeviceSpec, EnvSpec, EvalCache, PlanCache, Testbed,
 };
+use mixoff::fault::{FaultPlan, OutageWindow, RetryPolicy};
 use mixoff::ga::GaConfig;
 use mixoff::offload::manycore_loop;
 use mixoff::offload::pattern::OffloadPattern;
@@ -660,6 +661,34 @@ fn random_scenario_spec(rng: &mut Rng) -> ScenarioSpec {
                 .then(|| device(rng, &["unroll", "synthesis_s", "budget_dsps", "price_usd"])),
         },
         apps,
+        faults: if rng.chance(0.4) { Some(random_fault_plan(rng)) } else { None },
+    }
+}
+
+/// Random but well-formed fault plan: rates in [0, 1], positive-duration
+/// outage windows on valid devices, a sane retry policy.
+fn random_fault_plan(rng: &mut Rng) -> FaultPlan {
+    FaultPlan {
+        seed: rng.next_u64() >> 12, // JSON numbers: keep below 2^53
+        compile_failure_rate: if rng.chance(0.5) { rng.f64() } else { 0.0 },
+        measurement_error_rate: if rng.chance(0.5) { rng.f64() } else { 0.0 },
+        outages: (0..rng.below(3))
+            .map(|_| OutageWindow {
+                device: [
+                    DeviceKind::CpuSingle,
+                    DeviceKind::ManyCore,
+                    DeviceKind::Gpu,
+                    DeviceKind::Fpga,
+                ][rng.below(4)],
+                start_s: rng.below(10_000) as f64,
+                duration_s: 1.0 + rng.below(10_000) as f64,
+            })
+            .collect(),
+        retry: RetryPolicy {
+            max_attempts: 1 + rng.below(4) as u32,
+            backoff_base_s: rng.below(600) as f64,
+            backoff_factor: 1.0 + rng.f64() * 3.0,
+        },
     }
 }
 
@@ -738,6 +767,9 @@ fn random_grid_spec(rng: &mut Rng) -> GridSpec {
     } else {
         vec![SchedulePolicy::Paper]
     };
+    let faults: Vec<Option<FaultPlan>> = (0..1 + rng.below(2))
+        .map(|_| if rng.chance(0.4) { Some(random_fault_plan(rng)) } else { None })
+        .collect();
     GridSpec {
         name: format!("grid-{}", rng.below(1 << 20)),
         description: if rng.chance(0.5) { "grid property case".to_string() } else { String::new() },
@@ -756,6 +788,7 @@ fn random_grid_spec(rng: &mut Rng) -> GridSpec {
         workloads,
         seeds,
         schedules,
+        faults,
     }
 }
 
@@ -772,7 +805,8 @@ fn grid_expands_to_the_axis_product_and_cells_roundtrip() {
             * grid.price_scales.len()
             * grid.workloads.len()
             * grid.seeds.len()
-            * grid.schedules.len();
+            * grid.schedules.len()
+            * grid.faults.len();
         assert_eq!(grid.len(), product);
         assert_eq!(grid.scenarios().count(), product);
         for _ in 0..4 {

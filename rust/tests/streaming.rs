@@ -7,8 +7,11 @@
 //!   to the golden serialization of a buffered run over the same
 //!   materialized cells, under both trial-concurrency modes;
 //! * a `FirstSatisfying` warden stops a satisfied sweep after one cell,
-//!   saving well over 30% of the GA evaluations.
+//!   saving well over 30% of the GA evaluations;
+//! * a writer that starts failing mid-stream never panics the pipeline:
+//!   the first I/O error surfaces at `close()`, exactly once.
 
+use std::io;
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -50,6 +53,7 @@ fn thousand_cell_grid() -> GridSpec {
         workloads: vec![vecadd(1024)],
         seeds: (0..1000).collect(),
         schedules: vec![SchedulePolicy::Paper],
+        faults: vec![None],
     }
 }
 
@@ -95,6 +99,7 @@ fn eight_cell_grid(concurrency: TrialConcurrency) -> GridSpec {
         workloads: vec![vecadd(1 << 20)],
         seeds: vec![7, 8],
         schedules: vec![SchedulePolicy::Paper, SchedulePolicy::PriceAscending],
+        faults: vec![None],
     }
 }
 
@@ -156,6 +161,7 @@ fn satisfying_grid() -> GridSpec {
         workloads: vec![vecadd(1 << 20)],
         seeds: vec![1, 2, 3, 4, 5],
         schedules: vec![SchedulePolicy::Paper],
+        faults: vec![None],
     }
 }
 
@@ -191,4 +197,49 @@ fn first_satisfying_warden_saves_evaluations() {
     let first = warded.best.as_ref().expect("first cell offloads");
     assert_eq!(first.improvement.to_bits(), best.improvement.to_bits());
     assert_eq!(first.seconds.to_bits(), best.seconds.to_bits());
+}
+
+/// A writer that accepts the first `ok_writes` write calls, then fails
+/// every later one — a disk filling up mid-sweep.
+struct FailingWriter {
+    ok_writes: usize,
+    seen: usize,
+}
+
+impl io::Write for FailingWriter {
+    fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+        self.seen += 1;
+        if self.seen > self.ok_writes {
+            Err(io::Error::new(io::ErrorKind::WriteZero, "disk full"))
+        } else {
+            Ok(data.len())
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Emit is fire-and-forget: a writer failing mid-stream never panics the
+/// producer. The first I/O error is captured, later emits are dropped
+/// without masking it, and `close()` surfaces it exactly once — a
+/// retried close after handling the error is clean.
+#[test]
+fn sink_io_failure_surfaces_once_at_close() {
+    let sink = JsonlSink::to_writer(Box::new(FailingWriter { ok_writes: 2, seen: 0 }));
+    let ev = RecordEvent::Fault {
+        scenario: "chaos".into(),
+        app: "vecadd".into(),
+        trial: "gpu loop offload".into(),
+        boundary: "measure".into(),
+        attempt: 1,
+        detail: "injected".into(),
+    };
+    sink.emit(&ev); // line + newline: writes 1 and 2 both land
+    sink.emit(&ev); // write 3 fails; the error is captured, not panicked
+    sink.emit(&ev); // dropped — must not overwrite the first error
+    let err = sink.close().expect_err("mid-stream I/O failure surfaces at close");
+    assert!(err.to_string().contains("disk full"), "{err}");
+    sink.close().expect("the error surfaces exactly once; a retried close is clean");
 }
