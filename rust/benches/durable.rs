@@ -1,0 +1,130 @@
+//! Durability overhead and payoff, measured (see EXPERIMENTS.md #Perf):
+//!
+//! Emits `BENCH_durable.json`:
+//!   * `durable.journal_overhead_pct` — journaled vs plain wall clock on
+//!     the same grid, min-of-3 each (target <= 5%);
+//!   * `durable.resume_savings_pct` — resuming after half the cells vs
+//!     recomputing the whole grid (target >= 50% for a half-done run);
+//!   * `durable.cache.warm_hit_rate` — measurement hit rate of a run
+//!     warmed entirely from the persistent cache tier (target 1.0).
+
+mod support;
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use mixoff::app::workloads;
+use mixoff::coordinator::BatchOffloader;
+use mixoff::devices::{EvalCache, PlanCache};
+use mixoff::durable::{load_caches, save_caches, JournalHeader, SweepJournal, JOURNAL_VERSION};
+use mixoff::record::{NullSink, RecordSink, WardenSet};
+use mixoff::scenario::{run_streamed_durable, GridSpec};
+use mixoff::Durability;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mixoff-bench-durable-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn grid() -> GridSpec {
+    GridSpec::from_str(
+        r#"{"name": "durablebench", "trial_concurrency": "sequential",
+            "axes": {"fleets": [{"manycore": {}}],
+                     "workloads": [{"workload": "vecadd", "n": 1048576}],
+                     "seeds": [1, 2, 3, 4, 5, 6]}}"#,
+        "durablebench",
+    )
+    .unwrap()
+}
+
+/// One full grid run, optionally journaled (fresh journal per run so
+/// every iteration appends the same frames), returning wall seconds.
+fn run_once(g: &GridSpec, journal_dir: Option<&Path>) -> f64 {
+    let sink: Arc<dyn RecordSink> = Arc::new(NullSink);
+    let mut dur = Durability::none();
+    if let Some(dir) = journal_dir {
+        let _ = std::fs::remove_dir_all(dir);
+        let header =
+            JournalHeader { version: JOURNAL_VERSION, grid: g.fingerprint(), total: g.len() };
+        dur.journal = Some(SweepJournal::open(dir, &header, 1, false).unwrap().journal);
+    }
+    let t0 = Instant::now();
+    let out = run_streamed_durable(g.scenarios(), g.len(), &sink, &WardenSet::default(), &mut dur)
+        .expect("grid runs");
+    assert_eq!(out.scenarios_run, g.len());
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let g = grid();
+    support::metric("durable.grid_cells", g.len() as f64, "scenarios", None);
+
+    // Journal overhead: min-of-3 plain vs min-of-3 journaled (fsync
+    // every cell — the default, worst-case cadence).
+    let jdir = tmp_dir("journal");
+    let plain = (0..3).map(|_| run_once(&g, None)).fold(f64::INFINITY, f64::min);
+    let journaled = (0..3).map(|_| run_once(&g, Some(&jdir))).fold(f64::INFINITY, f64::min);
+    let overhead_pct = if plain > 0.0 { (journaled / plain - 1.0) * 100.0 } else { 0.0 };
+    support::metric("durable.journal_overhead_pct", overhead_pct, "%", None);
+
+    // Resume savings: interrupt a journaled run at the halfway boundary,
+    // then time the resume (replays half, recomputes half) against the
+    // full journaled run.
+    let rdir = tmp_dir("resume");
+    let header = JournalHeader { version: JOURNAL_VERSION, grid: g.fingerprint(), total: g.len() };
+    let sink: Arc<dyn RecordSink> = Arc::new(NullSink);
+    let half = g.len() / 2;
+    let mut dur = Durability::none();
+    dur.journal = Some(SweepJournal::open(&rdir, &header, 1, false).unwrap().journal);
+    let trip = dur.shutdown.clone();
+    let cells = g.scenarios().inspect(|cell| {
+        if cell.index + 1 == half {
+            trip.request();
+        }
+    });
+    let out = run_streamed_durable(cells, g.len(), &sink, &WardenSet::default(), &mut dur)
+        .expect("interrupted run");
+    assert_eq!(out.scenarios_run, half);
+    drop(dur);
+    let opened = SweepJournal::open(&rdir, &header, 1, true).unwrap();
+    assert_eq!(opened.replay.len(), half);
+    let mut dur = Durability::none();
+    dur.journal = Some(opened.journal);
+    dur.replay = opened.replay;
+    let t0 = Instant::now();
+    let out = run_streamed_durable(g.scenarios(), g.len(), &sink, &WardenSet::default(), &mut dur)
+        .expect("resumed run");
+    assert_eq!(out.scenarios_run, g.len());
+    let t_resume = t0.elapsed().as_secs_f64();
+    let savings_pct = if journaled > 0.0 { (1.0 - t_resume / journaled) * 100.0 } else { 0.0 };
+    support::metric("durable.resume_savings_pct", savings_pct, "%", None);
+
+    // Warm-cache hit rate: a second batch answered entirely from a cache
+    // loaded off disk.
+    let cdir = tmp_dir("cache");
+    let apps = vec![workloads::by_name("vecadd").expect("workload exists")];
+    let b = BatchOffloader::default();
+    let plans = PlanCache::new();
+    let evals = EvalCache::new();
+    let cold = b.run_with_caches(&apps, &plans, &evals);
+    save_caches(&cdir, &plans, &evals).expect("caches save");
+    let plans2 = PlanCache::new();
+    let evals2 = EvalCache::new();
+    let load = load_caches(&cdir, &plans2, &evals2);
+    assert!(load.warnings.is_empty(), "{:?}", load.warnings);
+    let warm = b.run_with_caches(&apps, &plans2, &evals2);
+    support::metric(
+        "durable.cache.cold_eval_misses",
+        cold.eval_misses as f64,
+        "measurements",
+        None,
+    );
+    support::metric("durable.cache.warm_hit_rate", warm.eval_hit_rate(), "ratio", None);
+
+    for dir in [&jdir, &rdir, &cdir] {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+    support::finish("durable");
+}

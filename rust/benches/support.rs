@@ -74,8 +74,10 @@ pub fn finish(bench: &str) {
     }
     out.push_str("]\n");
     // CARGO_MANIFEST_DIR is <repo>/rust; the JSON lands at the repo root.
+    // Atomic so a bench killed mid-write leaves the previous trajectory
+    // file intact rather than a truncated one.
     let path = format!("{}/../BENCH_{bench}.json", env!("CARGO_MANIFEST_DIR"));
-    match std::fs::write(&path, out) {
+    match mixoff::util::atomic::atomic_write(std::path::Path::new(&path), out.as_bytes()) {
         Ok(()) => println!("WROTE {path}"),
         Err(e) => eprintln!("warning: could not write {path}: {e}"),
     }

@@ -28,6 +28,7 @@ use std::time::Instant;
 
 use crate::app::ir::Application;
 use crate::devices::{EvalCache, PlanCache};
+use crate::record::{ChosenRow, SweepRow};
 use crate::util::threadpool::WorkerPool;
 
 use super::{MixedOffloader, OffloadOutcome, TrialConcurrency};
@@ -128,6 +129,31 @@ impl BatchOutcome {
     /// warden evaluation budget counts these).
     pub fn evaluations(&self) -> usize {
         self.outcomes.iter().map(|o| o.evaluations()).sum()
+    }
+
+    /// The batch's per-application [`SweepRow`]s, in input order — the
+    /// rows the streaming sweep emits and the sweep journal replays.  A
+    /// row carries everything the sweep aggregates fold over (chosen
+    /// deployment, verify hours, evaluation count), so a journaled cell
+    /// can be absorbed without re-running the batch.
+    pub fn sweep_rows(&self, scenario: &str, fleet: &str) -> Vec<SweepRow> {
+        self.outcomes
+            .iter()
+            .map(|o| SweepRow {
+                scenario: scenario.to_string(),
+                fleet: fleet.to_string(),
+                app: o.app_name.clone(),
+                baseline_seconds: o.baseline_seconds,
+                chosen: o.chosen.as_ref().map(|c| ChosenRow {
+                    trial: c.kind.label(),
+                    seconds: c.seconds,
+                    improvement: c.improvement,
+                    price_usd: c.price_usd,
+                }),
+                verify_hours: o.clock.total_hours(),
+                evaluations: o.evaluations(),
+            })
+            .collect()
     }
 }
 

@@ -69,6 +69,29 @@ impl DeviceKind {
             _ => None,
         }
     }
+
+    /// Stable one-byte tag for the persistent-cache formats
+    /// (durable/cachefile.rs).  Never renumber: files written by earlier
+    /// builds must keep decoding to the same kinds.
+    pub(crate) fn tag(self) -> u8 {
+        match self {
+            DeviceKind::CpuSingle => 0,
+            DeviceKind::ManyCore => 1,
+            DeviceKind::Gpu => 2,
+            DeviceKind::Fpga => 3,
+        }
+    }
+
+    /// Inverse of [`DeviceKind::tag`]; `None` on a corrupt tag.
+    pub(crate) fn from_tag(tag: u8) -> Option<DeviceKind> {
+        match tag {
+            0 => Some(DeviceKind::CpuSingle),
+            1 => Some(DeviceKind::ManyCore),
+            2 => Some(DeviceKind::Gpu),
+            3 => Some(DeviceKind::Fpga),
+            _ => None,
+        }
+    }
 }
 
 /// Result of one simulated pattern measurement.

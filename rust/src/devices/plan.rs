@@ -40,7 +40,8 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::analysis::resources::{estimate, FpgaResources, ResourceEstimate};
 use crate::app::ir::{Application, Dependence, LoopId};
-use crate::util::bits::PatternBits;
+use crate::util::bits::{PatternBits, MAX_BITS, WORDS};
+use crate::util::bytes::{ByteReader, ByteWriter};
 
 use super::cpu::CpuSingle;
 use super::fpga::Fpga;
@@ -965,6 +966,198 @@ impl MeasurementPlan {
     }
 }
 
+impl MeasurementPlan {
+    /// Serialize for the persistent plan-cache tier
+    /// (durable/cachefile.rs).  Every `f64` travels as raw IEEE-754
+    /// bits, so a reloaded plan measures bit-identically to the
+    /// compiled original — the property
+    /// `plan_serialization_roundtrip_measures_bit_identically` asserts
+    /// for all four device kinds.
+    pub(crate) fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u8(self.kind.tag());
+        w.u32(self.n as u32);
+        w.u64(self.app_fp);
+        w.u64(self.config_fp);
+        w.f64(self.setup_seconds);
+        w.u32s(&self.parent);
+        w.f64s(&self.inv);
+        w.f64s(&self.host_secs);
+        w.u64s(&self.self_amask);
+        w.u64s(&self.nest_amask);
+        w.f64s(&self.array_bytes);
+        put_bits(&mut w, &self.dep_free);
+        w.u32(self.subtree.len() as u32);
+        for b in &self.subtree {
+            put_bits(&mut w, b);
+        }
+        w.u32(self.ancestors.len() as u32);
+        for b in &self.ancestors {
+            put_bits(&mut w, b);
+        }
+        match &self.device {
+            DevicePlan::Cpu { total_secs } => {
+                w.u8(DeviceKind::CpuSingle.tag());
+                w.f64(*total_secs);
+            }
+            DevicePlan::ManyCore { par_secs, omp_secs } => {
+                w.u8(DeviceKind::ManyCore.tag());
+                w.f64s(par_secs);
+                w.f64s(omp_secs);
+            }
+            DevicePlan::Gpu { kernel_nest, launch_nest, hoist, bw_pcie } => {
+                w.u8(DeviceKind::Gpu.tag());
+                w.f64s(kernel_nest);
+                w.f64s(launch_nest);
+                w.u8(*hoist as u8);
+                w.f64(*bw_pcie);
+            }
+            DevicePlan::Fpga { levels, budget, bw_pcie } => {
+                w.u8(DeviceKind::Fpga.tag());
+                w.u32(levels.len() as u32);
+                for lv in levels {
+                    w.f64(lv.unroll);
+                    w.u32(lv.est.len() as u32);
+                    for e in &lv.est {
+                        w.f64(e.dsps);
+                        w.f64(e.alms);
+                        w.f64(e.bram_kb);
+                    }
+                    w.f64s(&lv.pipe_nest);
+                }
+                w.f64(budget.dsps);
+                w.f64(budget.alms);
+                w.f64(budget.bram_kb);
+                w.f64(*bw_pcie);
+            }
+        }
+        w.into_inner()
+    }
+
+    /// Inverse of [`MeasurementPlan::to_bytes`].  `None` on any damage:
+    /// truncation, trailing bytes, table lengths disagreeing with the
+    /// loop count, a parent that does not precede its child, or a
+    /// device payload that contradicts the plan's kind.  Structural
+    /// validation is deliberately strict — the measurement kernels index
+    /// these tables unchecked under the invariants the builder
+    /// established, so a decoded plan must re-establish all of them.
+    pub(crate) fn from_bytes(bytes: &[u8]) -> Option<Self> {
+        let mut r = ByteReader::new(bytes);
+        let kind = DeviceKind::from_tag(r.u8()?)?;
+        let n = r.u32()? as usize;
+        if n > MAX_BITS {
+            return None;
+        }
+        let app_fp = r.u64()?;
+        let config_fp = r.u64()?;
+        let setup_seconds = r.f64()?;
+        let parent = r.u32s().filter(|v| v.len() == n)?;
+        for (i, &p) in parent.iter().enumerate() {
+            if p != NO_PARENT && p as usize >= i {
+                return None;
+            }
+        }
+        let inv = r.f64s().filter(|v| v.len() == n)?;
+        let host_secs = r.f64s().filter(|v| v.len() == n)?;
+        let self_amask = r.u64s().filter(|v| v.len() == n)?;
+        let nest_amask = r.u64s().filter(|v| v.len() == n)?;
+        let array_bytes = r.f64s().filter(|v| v.len() <= 64)?;
+        let dep_free = get_bits(&mut r).filter(|b| b.len() == n)?;
+        let subtree = get_bits_vec(&mut r, n)?;
+        let ancestors = get_bits_vec(&mut r, n)?;
+        let device = match (kind, DeviceKind::from_tag(r.u8()?)?) {
+            (DeviceKind::CpuSingle, DeviceKind::CpuSingle) => {
+                DevicePlan::Cpu { total_secs: r.f64()? }
+            }
+            (DeviceKind::ManyCore, DeviceKind::ManyCore) => DevicePlan::ManyCore {
+                par_secs: r.f64s().filter(|v| v.len() == n)?,
+                omp_secs: r.f64s().filter(|v| v.len() == n)?,
+            },
+            (DeviceKind::Gpu, DeviceKind::Gpu) => DevicePlan::Gpu {
+                kernel_nest: r.f64s().filter(|v| v.len() == n)?,
+                launch_nest: r.f64s().filter(|v| v.len() == n)?,
+                hoist: r.u8()? != 0,
+                bw_pcie: r.f64()?,
+            },
+            (DeviceKind::Fpga, DeviceKind::Fpga) => {
+                let count = r.u32()? as usize;
+                if count > 64 {
+                    return None;
+                }
+                let mut levels = Vec::with_capacity(count);
+                for _ in 0..count {
+                    let unroll = r.f64()?;
+                    if r.u32()? as usize != n {
+                        return None;
+                    }
+                    let mut est = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        est.push(ResourceEstimate {
+                            dsps: r.f64()?,
+                            alms: r.f64()?,
+                            bram_kb: r.f64()?,
+                        });
+                    }
+                    let pipe_nest = r.f64s().filter(|v| v.len() == n)?;
+                    levels.push(FpgaLevel { unroll, est, pipe_nest });
+                }
+                let budget =
+                    FpgaResources { dsps: r.f64()?, alms: r.f64()?, bram_kb: r.f64()? };
+                DevicePlan::Fpga { levels, budget, bw_pcie: r.f64()? }
+            }
+            _ => return None,
+        };
+        if !r.is_empty() {
+            return None;
+        }
+        Some(Self {
+            kind,
+            n,
+            app_fp,
+            config_fp,
+            setup_seconds,
+            parent,
+            inv,
+            host_secs,
+            self_amask,
+            nest_amask,
+            array_bytes,
+            dep_free,
+            subtree,
+            ancestors,
+            device,
+        })
+    }
+}
+
+fn put_bits(w: &mut ByteWriter, b: &PatternBits) {
+    w.u32(b.len() as u32);
+    for &word in b.words() {
+        w.u64(word);
+    }
+}
+
+fn get_bits(r: &mut ByteReader<'_>) -> Option<PatternBits> {
+    let len = r.u32()? as usize;
+    let mut words = [0u64; WORDS];
+    for word in &mut words {
+        *word = r.u64()?;
+    }
+    PatternBits::from_raw(len, words)
+}
+
+fn get_bits_vec(r: &mut ByteReader<'_>, n: usize) -> Option<Vec<PatternBits>> {
+    if r.u32()? as usize != n {
+        return None;
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let b = get_bits(r).filter(|b| b.len() == n)?;
+        out.push(b);
+    }
+    Some(out)
+}
+
 /// Concurrent cache of compiled [`MeasurementPlan`]s, keyed by
 /// ([`Application::fingerprint`], device kind,
 /// [`DeviceModel::config_fingerprint`]) — the config component keeps
@@ -988,7 +1181,7 @@ pub struct PlanCache {
 }
 
 /// (app fingerprint, device kind, device config fingerprint).
-type PlanKey = (u64, DeviceKind, u64);
+pub type PlanKey = (u64, DeviceKind, u64);
 
 /// Per-key compile cell: filled exactly once, shared by every waiter.
 type PlanSlot = Arc<OnceLock<Arc<MeasurementPlan>>>;
@@ -1044,6 +1237,33 @@ impl PlanCache {
         } else {
             hits / total
         }
+    }
+
+    /// Snapshot every compiled plan in deterministic key order — the
+    /// persistent plan-cache tier (durable/cachefile.rs) serializes
+    /// this.  Slots whose compile is still in flight are skipped.
+    pub fn export(&self) -> Vec<(PlanKey, Arc<MeasurementPlan>)> {
+        let map = self.plans.lock().unwrap();
+        let mut out: Vec<(PlanKey, Arc<MeasurementPlan>)> = map
+            .iter()
+            .filter_map(|(key, slot)| slot.get().map(|plan| (*key, Arc::clone(plan))))
+            .collect();
+        drop(map);
+        out.sort_by_key(|(key, _)| *key);
+        out
+    }
+
+    /// Pre-fill `key` with an already-compiled plan — the disk tier's
+    /// load path.  A no-op if the key is already resident; seeding
+    /// counts as neither a hit nor a compile, so the counters keep
+    /// describing only this process's lookups.
+    pub fn seed(&self, key: PlanKey, plan: MeasurementPlan) {
+        let mut map = self.plans.lock().unwrap();
+        map.entry(key).or_insert_with(|| {
+            let slot = OnceLock::new();
+            let _ = slot.set(Arc::new(plan));
+            Arc::new(slot)
+        });
     }
 }
 
@@ -1169,6 +1389,18 @@ impl EvalCache {
             hits / total
         }
     }
+
+    /// Snapshot every resident entry, oldest first — the persistent
+    /// eval-cache tier (durable/cachefile.rs) serializes this.
+    /// Re-storing the snapshot into a fresh cache reproduces the same
+    /// contents in the same FIFO order.
+    pub fn export(&self) -> Vec<(EvalScope, PatternBits, Measurement)> {
+        let map = self.map.lock().unwrap();
+        map.order
+            .iter()
+            .filter_map(|key| map.entries.get(key).map(|m| (key.0, key.1, *m)))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -1210,6 +1442,43 @@ mod tests {
                     assert_same(dev.measure(&app, &pattern), plan.measure(&bits));
                 }
             }
+        }
+    }
+
+    #[test]
+    fn plan_serialization_roundtrip_measures_bit_identically() {
+        let tb = Testbed::default();
+        let app = nas_bt::build(8, 5);
+        let plans = [
+            tb.cpu.compile_plan(&app),
+            tb.manycore.compile_plan(&app),
+            tb.gpu.compile_plan(&app),
+            tb.fpga.compile_plan(&app),
+        ];
+        let mut rng = Rng::new(0xD15C);
+        for plan in &plans {
+            let bytes = plan.to_bytes();
+            let back = MeasurementPlan::from_bytes(&bytes).expect("intact bytes must decode");
+            assert_eq!(back.kind(), plan.kind());
+            assert_eq!(back.eval_scope(), plan.eval_scope());
+            for _ in 0..32 {
+                let mut bits = PatternBits::zeros(app.loop_count());
+                for i in 0..app.loop_count() {
+                    if rng.chance(0.3) {
+                        bits.set(i, true);
+                    }
+                }
+                assert_same(plan.measure(&bits), back.measure(&bits));
+            }
+            // Damage is detected, never half-decoded: truncation, trailing
+            // garbage, and a corrupt kind tag all refuse to decode.
+            assert!(MeasurementPlan::from_bytes(&bytes[..bytes.len() - 1]).is_none());
+            let mut padded = bytes.clone();
+            padded.push(0);
+            assert!(MeasurementPlan::from_bytes(&padded).is_none());
+            let mut bad_tag = bytes.clone();
+            bad_tag[0] = 9;
+            assert!(MeasurementPlan::from_bytes(&bad_tag).is_none());
         }
     }
 

@@ -1,0 +1,407 @@
+//! Persistent, corruption-checked disk tier for the measurement caches.
+//!
+//! `mixoff sweep --cache <dir>` warms the in-memory [`PlanCache`] and
+//! [`EvalCache`] from segment files written by a previous run and saves
+//! a fresh generation when the sweep finishes.  The tier is strictly an
+//! accelerator: hits return values bit-identical to recomputation (the
+//! plan kernels are deterministic and every `f64` travels as raw
+//! IEEE-754 bits), and any damage — torn write, bit flip, wrong magic,
+//! trailing garbage — fails closed to a cold cache and a recompute,
+//! never to a wrong result.
+//!
+//! On-disk format, one file per cache kind per generation
+//! (`eval-NNNNNN.bin`, `plan-NNNNNN.bin`):
+//!
+//! ```text
+//! [magic: 8 bytes]  MIXOFEV1 / MIXOFPL1 (kind + format version)
+//! [payload]         u64 record count, then fixed-order records
+//! [crc32(payload): u32 LE]
+//! ```
+//!
+//! Files are published with [`atomic_write`] (temp file + rename), so a
+//! crash mid-save leaves the previous generation intact.  Loads try the
+//! newest generation first and fall back to older ones on corruption.
+//! Invalidation is automatic rather than explicit: every record carries
+//! its full scope key (application fingerprint, device kind, device
+//! config fingerprint), so a calibration change simply never matches —
+//! the stale entries are dead weight that the next save prunes.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::devices::plan::{EvalCache, MeasurementPlan, PlanCache};
+use crate::devices::{DeviceKind, Measurement};
+use crate::util::atomic::atomic_write;
+use crate::util::bits::{PatternBits, WORDS};
+use crate::util::bytes::{crc32, ByteReader, ByteWriter};
+
+const EVAL_MAGIC: &[u8; 8] = b"MIXOFEV1";
+const PLAN_MAGIC: &[u8; 8] = b"MIXOFPL1";
+
+/// Cap on the record count decoded from a segment.  Far above anything
+/// the bounded in-memory caches can export; a count beyond it is
+/// corruption that slipped past the checksum, not data.
+const MAX_RECORDS: usize = 1 << 22;
+
+/// What [`load_caches`] managed to warm, plus human-readable warnings
+/// for every segment it had to skip.
+#[derive(Debug, Default)]
+pub struct CacheLoad {
+    /// Plans seeded into the [`PlanCache`].
+    pub plans: usize,
+    /// Measurements stored into the [`EvalCache`].
+    pub evals: usize,
+    /// One line per skipped/corrupt segment — report, then proceed cold.
+    pub warnings: Vec<String>,
+}
+
+/// Save both caches under `dir` as a new generation, then prune older
+/// generations.  Publication is atomic per file; pruning failures are
+/// ignored (stale generations are harmless, merely unreferenced).
+pub fn save_caches(dir: &Path, plans: &PlanCache, evals: &EvalCache) -> Result<()> {
+    fs::create_dir_all(dir)
+        .with_context(|| format!("creating cache directory {}", dir.display()))?;
+    let generation = [list_segments(dir, "eval"), list_segments(dir, "plan")]
+        .iter()
+        .flatten()
+        .map(|(g, _)| *g)
+        .max()
+        .map_or(0, |g| g + 1);
+    for (stem, payload) in
+        [("eval", eval_payload(evals), EVAL_MAGIC), ("plan", plan_payload(plans), PLAN_MAGIC)]
+            .map(|(stem, payload, magic)| (stem, seal(magic, payload)))
+    {
+        let path = segment_path(dir, stem, generation);
+        atomic_write(&path, &payload)
+            .with_context(|| format!("writing cache segment {}", path.display()))?;
+    }
+    for stem in ["eval", "plan"] {
+        for (g, path) in list_segments(dir, stem) {
+            if g < generation {
+                let _ = fs::remove_file(path);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Warm `plans` and `evals` from the newest intact generation under
+/// `dir`.  Never fails: a missing directory is simply a cold start, and
+/// each corrupt segment produces a warning and a fall-back to the next
+/// older generation of that kind.
+pub fn load_caches(dir: &Path, plans: &PlanCache, evals: &EvalCache) -> CacheLoad {
+    let mut load = CacheLoad::default();
+    for (generation, path) in list_segments(dir, "eval").into_iter().rev() {
+        match read_segment(&path, EVAL_MAGIC).and_then(|payload| {
+            parse_eval_payload(&payload).context("undecodable eval records")
+        }) {
+            Ok(records) => {
+                load.evals = records.len();
+                for (scope, bits, m) in records {
+                    evals.store(scope, &bits, m);
+                }
+                break;
+            }
+            Err(e) => load.warnings.push(format!(
+                "cache segment {} (generation {generation}) is unusable: {e:#}; \
+                 falling back to an older generation or a cold cache",
+                path.display()
+            )),
+        }
+    }
+    for (generation, path) in list_segments(dir, "plan").into_iter().rev() {
+        match read_segment(&path, PLAN_MAGIC).and_then(|payload| {
+            parse_plan_payload(&payload).context("undecodable plan records")
+        }) {
+            Ok(records) => {
+                load.plans = records.len();
+                for (key, plan) in records {
+                    plans.seed(key, plan);
+                }
+                break;
+            }
+            Err(e) => load.warnings.push(format!(
+                "cache segment {} (generation {generation}) is unusable: {e:#}; \
+                 falling back to an older generation or a cold cache",
+                path.display()
+            )),
+        }
+    }
+    load
+}
+
+fn segment_path(dir: &Path, stem: &str, generation: u64) -> PathBuf {
+    dir.join(format!("{stem}-{generation:06}.bin"))
+}
+
+/// `(generation, path)` for every `stem-NNNNNN.bin` under `dir`, sorted
+/// ascending by generation.  A missing or unreadable directory is an
+/// empty list (cold start).
+fn list_segments(dir: &Path, stem: &str) -> Vec<(u64, PathBuf)> {
+    let Ok(entries) = fs::read_dir(dir) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else {
+            continue;
+        };
+        let Some(digits) = name
+            .strip_prefix(stem)
+            .and_then(|r| r.strip_prefix('-'))
+            .and_then(|r| r.strip_suffix(".bin"))
+        else {
+            continue;
+        };
+        if let Ok(generation) = digits.parse::<u64>() {
+            out.push((generation, entry.path()));
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Wrap `payload` in the segment envelope: magic + payload + CRC32.
+fn seal(magic: &[u8; 8], payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + payload.len() + 4);
+    out.extend_from_slice(magic);
+    let crc = crc32(&payload);
+    out.extend_from_slice(&payload);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Read and verify a segment envelope, returning the payload.
+fn read_segment(path: &Path, magic: &[u8; 8]) -> Result<Vec<u8>> {
+    let bytes = fs::read(path).context("reading segment")?;
+    if bytes.len() < 8 + 4 {
+        anyhow::bail!("segment is shorter than its envelope ({} bytes)", bytes.len());
+    }
+    if &bytes[..8] != magic {
+        anyhow::bail!("bad magic (expected {:?})", String::from_utf8_lossy(magic));
+    }
+    let payload = &bytes[8..bytes.len() - 4];
+    let stored = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+    let actual = crc32(payload);
+    if stored != actual {
+        anyhow::bail!("checksum mismatch (stored {stored:08x}, computed {actual:08x})");
+    }
+    Ok(payload.to_vec())
+}
+
+fn eval_payload(evals: &EvalCache) -> Vec<u8> {
+    let entries = evals.export();
+    let mut w = ByteWriter::new();
+    w.u64(entries.len() as u64);
+    for (scope, bits, m) in &entries {
+        w.u64(scope.0);
+        w.u8(scope.1.tag());
+        w.u64(scope.2);
+        w.u32(bits.len() as u32);
+        for &word in bits.words() {
+            w.u64(word);
+        }
+        w.f64(m.seconds);
+        w.u8(m.valid as u8);
+        w.f64(m.setup_seconds);
+    }
+    w.into_inner()
+}
+
+type EvalRecords = Vec<((u64, DeviceKind, u64), PatternBits, Measurement)>;
+
+/// Decode a full eval payload, or `None` on any structural damage.
+/// All-or-nothing on purpose: a partially-loaded cache would be
+/// correct (entries are independent) but would make warm-cache hit
+/// counts nondeterministic, so damage always means a cold cache.
+fn parse_eval_payload(payload: &[u8]) -> Option<EvalRecords> {
+    let mut r = ByteReader::new(payload);
+    let count = r.u64()? as usize;
+    if count > MAX_RECORDS {
+        return None;
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let app_fp = r.u64()?;
+        let kind = DeviceKind::from_tag(r.u8()?)?;
+        let cfg_fp = r.u64()?;
+        let len = r.u32()? as usize;
+        let mut words = [0u64; WORDS];
+        for word in &mut words {
+            *word = r.u64()?;
+        }
+        let bits = PatternBits::from_raw(len, words)?;
+        let seconds = r.f64()?;
+        let valid = r.u8()? != 0;
+        let setup_seconds = r.f64()?;
+        out.push(((app_fp, kind, cfg_fp), bits, Measurement { seconds, valid, setup_seconds }));
+    }
+    if !r.is_empty() {
+        return None;
+    }
+    Some(out)
+}
+
+fn plan_payload(plans: &PlanCache) -> Vec<u8> {
+    let entries = plans.export();
+    let mut w = ByteWriter::new();
+    w.u64(entries.len() as u64);
+    for (key, plan) in &entries {
+        w.u64(key.0);
+        w.u8(key.1.tag());
+        w.u64(key.2);
+        let bytes = plan.to_bytes();
+        w.u32(bytes.len() as u32);
+        w.raw(&bytes);
+    }
+    w.into_inner()
+}
+
+type PlanRecords = Vec<((u64, DeviceKind, u64), MeasurementPlan)>;
+
+/// Decode a full plan payload, or `None` on any structural damage.
+/// Each embedded plan re-runs [`MeasurementPlan::from_bytes`]'s own
+/// invariant checks, and its key must agree with the plan's scope —
+/// a mismatch means the record was stitched together, not written.
+fn parse_plan_payload(payload: &[u8]) -> Option<PlanRecords> {
+    let mut r = ByteReader::new(payload);
+    let count = r.u64()? as usize;
+    if count > MAX_RECORDS {
+        return None;
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let app_fp = r.u64()?;
+        let kind = DeviceKind::from_tag(r.u8()?)?;
+        let cfg_fp = r.u64()?;
+        let len = r.u32()? as usize;
+        let plan = MeasurementPlan::from_bytes(r.take(len)?)?;
+        if plan.eval_scope() != (app_fp, kind, cfg_fp) {
+            return None;
+        }
+        out.push(((app_fp, kind, cfg_fp), plan));
+    }
+    if !r.is_empty() {
+        return None;
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::workloads::threemm;
+    use crate::devices::{DeviceModel, Testbed};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("mixoff-cachefile-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn populated_caches() -> (PlanCache, EvalCache) {
+        let tb = Testbed::default();
+        let app = threemm::build(64);
+        let plans = PlanCache::new();
+        let evals = EvalCache::new();
+        for dev in [&tb.cpu as &dyn DeviceModel, &tb.manycore, &tb.gpu, &tb.fpga] {
+            let plan = plans.plan(&app, dev);
+            let mut bits = PatternBits::zeros(app.loop_count());
+            let m = plan.measure(&bits);
+            evals.store(plan.eval_scope(), &bits, m);
+            bits.set(0, true);
+            let m = plan.measure(&bits);
+            evals.store(plan.eval_scope(), &bits, m);
+        }
+        (plans, evals)
+    }
+
+    #[test]
+    fn save_and_load_roundtrip_bit_identically() {
+        let dir = tmp_dir("roundtrip");
+        let (plans, evals) = populated_caches();
+        save_caches(&dir, &plans, &evals).unwrap();
+
+        let plans2 = PlanCache::new();
+        let evals2 = EvalCache::new();
+        let load = load_caches(&dir, &plans2, &evals2);
+        assert!(load.warnings.is_empty(), "{:?}", load.warnings);
+        assert_eq!(load.plans, 4);
+        assert_eq!(load.evals, evals.len());
+
+        for ((k1, p1), (k2, p2)) in plans.export().iter().zip(plans2.export().iter()) {
+            assert_eq!(k1, k2);
+            assert_eq!(p1.to_bytes(), p2.to_bytes(), "reloaded plan differs");
+        }
+        for ((s1, b1, m1), (s2, b2, m2)) in evals.export().iter().zip(evals2.export().iter()) {
+            assert_eq!((s1, b1), (s2, b2));
+            assert_eq!(m1.seconds.to_bits(), m2.seconds.to_bits());
+            assert_eq!(m1.valid, m2.valid);
+            assert_eq!(m1.setup_seconds.to_bits(), m2.setup_seconds.to_bits());
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_segments_fall_back_to_cold_with_warnings() {
+        let dir = tmp_dir("corrupt");
+        let (plans, evals) = populated_caches();
+        save_caches(&dir, &plans, &evals).unwrap();
+
+        // Flip one payload byte in each segment: both must be rejected.
+        for stem in ["eval", "plan"] {
+            let (_, path) = list_segments(&dir, stem).pop().unwrap();
+            let mut bytes = fs::read(&path).unwrap();
+            bytes[10] ^= 0x01;
+            fs::write(&path, bytes).unwrap();
+        }
+        let plans2 = PlanCache::new();
+        let evals2 = EvalCache::new();
+        let load = load_caches(&dir, &plans2, &evals2);
+        assert_eq!(load.plans, 0, "corrupt plan segment must not load");
+        assert_eq!(load.evals, 0, "corrupt eval segment must not load");
+        assert_eq!(load.warnings.len(), 2, "{:?}", load.warnings);
+        assert!(load.warnings.iter().all(|w| w.contains("checksum mismatch")));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corruption_falls_back_to_an_older_intact_generation() {
+        let dir = tmp_dir("fallback");
+        let (plans, evals) = populated_caches();
+        save_caches(&dir, &plans, &evals).unwrap();
+        // Second generation (pruning removes generation 0 on save, so
+        // recreate an "old" copy by renaming, then save anew).
+        let (g0, eval0) = list_segments(&dir, "eval").pop().unwrap();
+        save_caches(&dir, &plans, &evals).unwrap();
+        let (g1, eval1) = list_segments(&dir, "eval").pop().unwrap();
+        assert!(g1 > g0 || eval1 != eval0);
+        // Re-materialize the older generation, corrupt the newest.
+        fs::copy(&eval1, segment_path(&dir, "eval", g1 + 1)).unwrap();
+        let newest = segment_path(&dir, "eval", g1 + 1);
+        let mut bytes = fs::read(&newest).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        fs::write(&newest, bytes).unwrap();
+
+        let plans2 = PlanCache::new();
+        let evals2 = EvalCache::new();
+        let load = load_caches(&dir, &plans2, &evals2);
+        assert_eq!(load.evals, evals.len(), "must fall back to intact generation");
+        assert_eq!(load.warnings.len(), 1, "{:?}", load.warnings);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_directory_is_a_cold_start() {
+        let dir = tmp_dir("missing");
+        let load = load_caches(&dir, &PlanCache::new(), &EvalCache::new());
+        assert_eq!(load.plans, 0);
+        assert_eq!(load.evals, 0);
+        assert!(load.warnings.is_empty());
+    }
+}

@@ -1,0 +1,554 @@
+//! The sweep journal: a write-ahead log of committed scenario cells.
+//!
+//! `mixoff sweep --grid g.json --journal dir/` appends one frame per
+//! committed cell; after a crash, OOM-kill or Ctrl-C, `--resume` replays
+//! the intact prefix as already-committed results (skipping their
+//! searches entirely) and the sweep continues from the first missing
+//! cell.  Replay is outcome-neutral (DESIGN.md invariant 9): a frame
+//! carries the cell's full golden-serialization outcome plus its sweep
+//! rows, which is exactly the state `scenario/sweep.rs` folds into its
+//! aggregates, so a resumed run's report and record stream are
+//! byte-identical to an uninterrupted run's.
+//!
+//! ## File format (`<dir>/sweep.journal`)
+//!
+//! A sequence of frames, each `[len: u32 LE][crc32(payload): u32 LE]
+//! [payload]`.  Frame 0 is the header: a JSON object naming the format,
+//! version, grid fingerprint (hex — `Json` numbers are f64 and would
+//! round a u64) and cell count.  Every later frame is one committed
+//! cell, in index order, as JSON.  JSON payloads are safe here because
+//! this crate's `Json` printer/parser round-trips f64 bit-exactly
+//! (shortest-roundtrip printing) and every journaled quantity is finite
+//! and non-negative.
+//!
+//! ## Torn tails and corruption
+//!
+//! Appends write whole frames with a configurable fsync cadence, so
+//! process death leaves at worst a torn final frame.  The scanner stops
+//! at the first frame whose length runs past EOF, whose CRC mismatches,
+//! whose JSON fails to decode, or whose cell index breaks contiguity —
+//! everything before it replays, everything from it on is truncated and
+//! recomputed.  Corruption degrades to recomputation, never to wrong or
+//! missing results.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::record::{ChosenRow, RecordEvent, SweepRow};
+use crate::util::bytes::crc32;
+use crate::util::json::Json;
+
+/// Bump on any frame- or payload-format change.  A journal written by a
+/// different version is never replayed — it is discarded with a warning
+/// and the sweep recomputes from scratch.
+pub const JOURNAL_VERSION: u32 = 1;
+
+/// Upper bound on a single frame.  A cell frame holds one scenario's
+/// outcome JSON (kilobytes); a length beyond this is a torn or corrupt
+/// header, not data.
+const MAX_FRAME: usize = 64 << 20;
+
+const JOURNAL_KIND: &str = "mixoff-sweep-journal";
+
+/// Identity of the sweep a journal belongs to.  Replaying a journal
+/// against a different grid would silently fabricate results, so
+/// [`SweepJournal::open`] refuses to resume on any mismatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JournalHeader {
+    pub version: u32,
+    /// [`GridSpec::fingerprint`](crate::scenario::GridSpec::fingerprint)
+    /// of the grid.
+    pub grid: u64,
+    /// Cells in the grid's cross-product.
+    pub total: usize,
+}
+
+impl JournalHeader {
+    fn to_json(self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("kind".into(), Json::Str(JOURNAL_KIND.into()));
+        m.insert("version".into(), Json::Num(self.version as f64));
+        m.insert("grid".into(), Json::Str(format!("{:016x}", self.grid)));
+        m.insert("total".into(), Json::Num(self.total as f64));
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        if j.get("kind").and_then(|k| k.as_str()) != Some(JOURNAL_KIND) {
+            bail!("not a {JOURNAL_KIND} header");
+        }
+        let version = j
+            .req("version")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("header version is not an integer"))? as u32;
+        let grid_hex =
+            j.req("grid")?.as_str().ok_or_else(|| anyhow!("header grid is not a string"))?;
+        let grid = u64::from_str_radix(grid_hex, 16)
+            .map_err(|e| anyhow!("header grid {grid_hex:?}: {e}"))?;
+        let total = j
+            .req("total")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("header total is not an integer"))?;
+        Ok(Self { version, grid, total })
+    }
+}
+
+/// One committed cell, exactly as the streaming sweep committed it.
+#[derive(Clone, Debug)]
+pub struct CommittedCell {
+    /// The cell's grid index (frames are contiguous from 0).
+    pub index: usize,
+    /// `report::scenario_to_json` of the cell's outcome — what the
+    /// `scenario` record event carried.
+    pub outcome: Json,
+    /// The cell's `sweep_row` events, in emission order.  Everything the
+    /// sweep aggregates (Pareto frontier, best point, axis stats,
+    /// evaluation and verify-hour totals) folds from these.
+    pub rows: Vec<SweepRow>,
+    /// The record sink's durable byte count when this cell committed
+    /// (file sinks only).  `--resume` truncates the sink file to the
+    /// last committed value and appends.
+    pub sink_bytes: Option<u64>,
+}
+
+impl CommittedCell {
+    fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("cell".into(), Json::Num(self.index as f64));
+        m.insert("outcome".into(), self.outcome.clone());
+        m.insert(
+            "rows".into(),
+            Json::Arr(
+                self.rows.iter().map(|r| RecordEvent::SweepRow(r.clone()).to_json()).collect(),
+            ),
+        );
+        m.insert(
+            "sink_bytes".into(),
+            match self.sink_bytes {
+                Some(n) => Json::Num(n as f64),
+                None => Json::Null,
+            },
+        );
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let index =
+            j.req("cell")?.as_usize().ok_or_else(|| anyhow!("cell index is not an integer"))?;
+        let outcome = j.req("outcome")?.clone();
+        let rows = j
+            .req("rows")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("rows is not an array"))?
+            .iter()
+            .map(row_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let sink_bytes = match j.req("sink_bytes")? {
+            Json::Null => None,
+            v => Some(
+                v.as_f64()
+                    .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                    .ok_or_else(|| anyhow!("sink_bytes is not a byte count"))?
+                    as u64,
+            ),
+        };
+        Ok(Self { index, outcome, rows, sink_bytes })
+    }
+
+    /// Total distinct patterns measured across the cell's apps — the
+    /// same fold `BatchOutcome::evaluations()` computes.
+    pub fn evaluations(&self) -> usize {
+        self.rows.iter().map(|r| r.evaluations).sum()
+    }
+}
+
+/// Inverse of `RecordEvent::SweepRow(..).to_json()`.
+fn row_from_json(j: &Json) -> Result<SweepRow> {
+    let s = |key: &str| -> Result<String> {
+        Ok(j.req(key)?
+            .as_str()
+            .ok_or_else(|| anyhow!("row {key} is not a string"))?
+            .to_string())
+    };
+    let f = |key: &str| -> Result<f64> {
+        j.req(key)?.as_f64().ok_or_else(|| anyhow!("row {key} is not a number"))
+    };
+    let chosen = match j.req("chosen")? {
+        Json::Null => None,
+        c => {
+            let cs = |key: &str| -> Result<f64> {
+                c.req(key)?.as_f64().ok_or_else(|| anyhow!("chosen {key} is not a number"))
+            };
+            Some(ChosenRow {
+                trial: c
+                    .req("trial")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("chosen trial is not a string"))?
+                    .to_string(),
+                seconds: cs("seconds")?,
+                improvement: cs("improvement")?,
+                price_usd: cs("price_usd")?,
+            })
+        }
+    };
+    Ok(SweepRow {
+        scenario: s("scenario")?,
+        fleet: s("fleet")?,
+        app: s("app")?,
+        baseline_seconds: f("baseline_seconds")?,
+        chosen,
+        verify_hours: f("verify_hours")?,
+        evaluations: j
+            .req("evaluations")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("row evaluations is not an integer"))?,
+    })
+}
+
+/// An open journal plus what its existing contents yielded.
+pub struct OpenedJournal {
+    pub journal: SweepJournal,
+    /// The intact committed prefix, in cell order (empty for a fresh
+    /// journal or when `resume` was off).
+    pub replay: Vec<CommittedCell>,
+    /// Human-readable notes about anything discarded on the way in —
+    /// torn tails, undecodable frames, foreign headers.  The CLI prints
+    /// these to stderr; nothing discarded is ever trusted.
+    pub warnings: Vec<String>,
+}
+
+/// Append-side handle: one frame per committed cell, fsync every
+/// `fsync_every` appends (0 = never; the OS flushes on its own cadence).
+pub struct SweepJournal {
+    file: File,
+    path: PathBuf,
+    fsync_every: usize,
+    unsynced: usize,
+}
+
+impl SweepJournal {
+    /// The journal file inside a `--journal` directory.
+    pub fn path_in(dir: &Path) -> PathBuf {
+        dir.join("sweep.journal")
+    }
+
+    /// Open `dir`'s journal for a sweep identified by `header`.
+    ///
+    /// With `resume` set and an existing journal whose header matches,
+    /// the intact committed prefix is returned for replay and appends
+    /// continue after it (any torn tail is truncated first).  In every
+    /// other case — no journal yet, `resume` off, version or grid
+    /// mismatch, unreadable header — a fresh journal is started and the
+    /// whole sweep recomputes; mismatches are reported as warnings, so
+    /// corruption and drift degrade to recomputation, never to replayed
+    /// results from the wrong sweep.
+    pub fn open(
+        dir: &Path,
+        header: &JournalHeader,
+        fsync_every: usize,
+        resume: bool,
+    ) -> Result<OpenedJournal> {
+        std::fs::create_dir_all(dir).map_err(|e| anyhow!("{}: {e}", dir.display()))?;
+        let path = Self::path_in(dir);
+        let mut warnings = Vec::new();
+        if resume && path.exists() {
+            match scan(&path) {
+                Ok(s) if s.header == *header => {
+                    if let Some(w) = s.warning {
+                        warnings.push(w);
+                    }
+                    let mut file = OpenOptions::new()
+                        .write(true)
+                        .open(&path)
+                        .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+                    file.set_len(s.intact_bytes).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+                    file.seek(SeekFrom::End(0)).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+                    let journal = SweepJournal { file, path, fsync_every, unsynced: 0 };
+                    return Ok(OpenedJournal { journal, replay: s.cells, warnings });
+                }
+                Ok(s) => {
+                    warnings.push(format!(
+                        "{}: journal belongs to a different sweep \
+                         (found {:?}, expected {:?}); discarding it and recomputing",
+                        path.display(),
+                        s.header,
+                        header
+                    ));
+                }
+                Err(e) => {
+                    warnings.push(format!(
+                        "{}: unreadable journal ({e}); discarding it and recomputing",
+                        path.display()
+                    ));
+                }
+            }
+        }
+        let mut file = File::create(&path).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        write_frame(&mut file, header.to_json().to_string().as_bytes())
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        // The header frame is always durable before any cell commits.
+        file.sync_all().map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let journal = SweepJournal { file, path, fsync_every, unsynced: 0 };
+        Ok(OpenedJournal { journal, replay: Vec::new(), warnings })
+    }
+
+    /// Append one committed cell.  The frame is written whole (one
+    /// `write_all`), so death mid-append leaves a torn tail the scanner
+    /// truncates — never a frame that lies.
+    pub fn append(&mut self, cell: &CommittedCell) -> Result<()> {
+        let payload = cell.to_json().to_string();
+        write_frame(&mut self.file, payload.as_bytes())
+            .map_err(|e| anyhow!("{}: {e}", self.path.display()))?;
+        self.unsynced += 1;
+        if self.fsync_every > 0 && self.unsynced >= self.fsync_every {
+            self.sync()?;
+        }
+        Ok(())
+    }
+
+    /// Force everything appended so far to disk (graceful shutdown calls
+    /// this regardless of the fsync cadence).
+    pub fn sync(&mut self) -> Result<()> {
+        self.file.sync_data().map_err(|e| anyhow!("{}: {e}", self.path.display()))?;
+        self.unsynced = 0;
+        Ok(())
+    }
+}
+
+fn write_frame(file: &mut File, payload: &[u8]) -> std::io::Result<()> {
+    let mut frame = Vec::with_capacity(payload.len() + 8);
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&crc32(payload).to_le_bytes());
+    frame.extend_from_slice(payload);
+    file.write_all(&frame)
+}
+
+/// What scanning an existing journal yielded.
+pub struct JournalScan {
+    pub header: JournalHeader,
+    /// The intact, contiguous committed prefix.
+    pub cells: Vec<CommittedCell>,
+    /// Byte length of the intact prefix (header + cells); everything
+    /// past it is torn or corrupt and gets truncated before appending.
+    pub intact_bytes: u64,
+    /// Set when anything after the intact prefix was discarded.
+    pub warning: Option<String>,
+}
+
+/// Decode the frame at `off`: `Some((next_offset, payload))` iff the
+/// length fits, the payload is fully present and the CRC matches.
+fn frame_at(bytes: &[u8], off: usize) -> Option<(usize, &[u8])> {
+    let header = bytes.get(off..off + 8)?;
+    let len = u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
+    if len > MAX_FRAME {
+        return None;
+    }
+    let crc = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    let payload = bytes.get(off + 8..off + 8 + len)?;
+    if crc32(payload) != crc {
+        return None;
+    }
+    Some((off + 8 + len, payload))
+}
+
+fn parse_payload(payload: &[u8]) -> Result<Json> {
+    let text = std::str::from_utf8(payload).map_err(|e| anyhow!("not UTF-8: {e}"))?;
+    Json::parse(text)
+}
+
+/// Read and verify an existing journal.  Errors only when the header
+/// frame itself is missing or unreadable (the caller starts fresh);
+/// damage after the header is reported via [`JournalScan::warning`] and
+/// the intact prefix is still returned.
+pub fn scan(path: &Path) -> Result<JournalScan> {
+    let bytes = std::fs::read(path).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let (mut off, header_payload) =
+        frame_at(&bytes, 0).ok_or_else(|| anyhow!("missing or torn header frame"))?;
+    let header = JournalHeader::from_json(&parse_payload(header_payload)?)?;
+    let mut cells: Vec<CommittedCell> = Vec::new();
+    let mut warning = None;
+    while off < bytes.len() {
+        let Some((next, payload)) = frame_at(&bytes, off) else {
+            warning = Some(format!(
+                "torn tail: {} trailing bytes after {} committed cells failed the \
+                 length/CRC check and were discarded",
+                bytes.len() - off,
+                cells.len()
+            ));
+            break;
+        };
+        let cell = parse_payload(payload).and_then(|j| CommittedCell::from_json(&j));
+        match cell {
+            Ok(cell) if cell.index == cells.len() => {
+                cells.push(cell);
+                off = next;
+            }
+            Ok(cell) => {
+                warning = Some(format!(
+                    "cell {} out of order after {} committed cells; discarding it and the rest",
+                    cell.index,
+                    cells.len()
+                ));
+                break;
+            }
+            Err(e) => {
+                warning = Some(format!(
+                    "undecodable entry after {} committed cells ({e}); \
+                     discarding it and the rest",
+                    cells.len()
+                ));
+                break;
+            }
+        }
+    }
+    Ok(JournalScan { header, cells, intact_bytes: off as u64, warning })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("mixoff-journal-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn header() -> JournalHeader {
+        JournalHeader { version: JOURNAL_VERSION, grid: 0xDEAD_BEEF_0123_4567, total: 3 }
+    }
+
+    fn cell(index: usize) -> CommittedCell {
+        let rows = vec![SweepRow {
+            scenario: format!("g-{index:05}"),
+            fleet: "cpu + manycore".into(),
+            app: "vecadd".into(),
+            baseline_seconds: 1.5,
+            chosen: Some(ChosenRow {
+                trial: "many-core CPU loop offload".into(),
+                seconds: 0.25,
+                improvement: 6.0,
+                price_usd: 4000.0,
+            }),
+            verify_hours: 0.125,
+            evaluations: 42 + index,
+        }];
+        CommittedCell {
+            index,
+            outcome: Json::parse(r#"{"name": "x", "apps": []}"#).unwrap(),
+            rows,
+            sink_bytes: Some(1000 + index as u64),
+        }
+    }
+
+    fn assert_cells_eq(a: &CommittedCell, b: &CommittedCell) {
+        assert_eq!(a.index, b.index);
+        assert_eq!(a.outcome.to_string(), b.outcome.to_string());
+        assert_eq!(a.rows, b.rows);
+        assert_eq!(a.sink_bytes, b.sink_bytes);
+    }
+
+    #[test]
+    fn append_scan_roundtrip_is_exact() {
+        let dir = tmp_dir("roundtrip");
+        let opened = SweepJournal::open(&dir, &header(), 1, false).unwrap();
+        assert!(opened.replay.is_empty());
+        assert!(opened.warnings.is_empty());
+        let mut j = opened.journal;
+        for i in 0..3 {
+            j.append(&cell(i)).unwrap();
+        }
+        drop(j);
+        let s = scan(&SweepJournal::path_in(&dir)).unwrap();
+        assert_eq!(s.header, header());
+        assert_eq!(s.cells.len(), 3);
+        assert!(s.warning.is_none());
+        for (i, c) in s.cells.iter().enumerate() {
+            assert_cells_eq(c, &cell(i));
+            assert_eq!(c.evaluations(), 42 + i);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_not_trusted() {
+        let dir = tmp_dir("torn");
+        let mut j = SweepJournal::open(&dir, &header(), 1, false).unwrap().journal;
+        for i in 0..3 {
+            j.append(&cell(i)).unwrap();
+        }
+        drop(j);
+        let path = SweepJournal::path_in(&dir);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        let opened = SweepJournal::open(&dir, &header(), 1, true).unwrap();
+        assert_eq!(opened.replay.len(), 2, "only the intact prefix replays");
+        assert!(opened.warnings.iter().any(|w| w.contains("torn tail")), "{:?}", opened.warnings);
+        // The torn bytes are gone: appending cell 2 again then rescanning
+        // yields exactly three intact cells.
+        let mut j = opened.journal;
+        j.append(&cell(2)).unwrap();
+        drop(j);
+        let s = scan(&path).unwrap();
+        assert_eq!(s.cells.len(), 3);
+        assert!(s.warning.is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bit_flip_stops_replay_at_the_damaged_frame() {
+        let dir = tmp_dir("flip");
+        let mut j = SweepJournal::open(&dir, &header(), 1, false).unwrap().journal;
+        for i in 0..3 {
+            j.append(&cell(i)).unwrap();
+        }
+        drop(j);
+        let path = SweepJournal::path_in(&dir);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one byte inside cell 0's payload (just past the header
+        // frame and cell 0's own 8-byte frame header).
+        let header_len = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+        let target = 8 + header_len + 8 + 2;
+        bytes[target] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let opened = SweepJournal::open(&dir, &header(), 1, true).unwrap();
+        assert!(opened.replay.is_empty(), "nothing after the flip is trusted");
+        assert!(!opened.warnings.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn foreign_header_recomputes_instead_of_replaying() {
+        let dir = tmp_dir("foreign");
+        let mut j = SweepJournal::open(&dir, &header(), 1, false).unwrap().journal;
+        j.append(&cell(0)).unwrap();
+        drop(j);
+        let other = JournalHeader { grid: 1, ..header() };
+        let opened = SweepJournal::open(&dir, &other, 1, true).unwrap();
+        assert!(opened.replay.is_empty(), "a different grid's cells must never replay");
+        assert!(
+            opened.warnings.iter().any(|w| w.contains("different sweep")),
+            "{:?}",
+            opened.warnings
+        );
+        // The directory now holds a fresh journal for the new header.
+        drop(opened);
+        let s = scan(&SweepJournal::path_in(&dir)).unwrap();
+        assert_eq!(s.header, other);
+        assert!(s.cells.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_without_existing_journal_starts_fresh() {
+        let dir = tmp_dir("fresh");
+        let opened = SweepJournal::open(&dir, &header(), 0, true).unwrap();
+        assert!(opened.replay.is_empty());
+        assert!(opened.warnings.is_empty(), "{:?}", opened.warnings);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,70 @@
+//! Crash-safety for long-running sweeps: write-ahead journal with
+//! checkpoint/resume, persistent corruption-checked caches, and
+//! cooperative graceful shutdown.
+//!
+//! Paper context: the proposed method's verification step is the
+//! expensive part of automatic offloading (sec. 4.1.2 charges ~6 hours
+//! of measurements per application/destination pair), and a mixed-
+//! destination sweep multiplies that by every cell of a scenario grid.
+//! A crash — or an operator Ctrl-C — hours into such a sweep must not
+//! forfeit the completed cells.  This module makes the sweep driver
+//! restartable at any scenario-commit boundary with the recovered run
+//! byte-identical to an uninterrupted one:
+//!
+//! * [`journal`] — an append-only, CRC-framed write-ahead log of
+//!   committed scenario cells (`--journal`/`--resume`).  Torn tails are
+//!   detected and truncated, never trusted.
+//! * [`cachefile`] — a disk tier for the [`PlanCache`]/[`EvalCache`]
+//!   (`--cache`): checksum-verified segment files published atomically,
+//!   falling back to a cold cache on any damage.
+//! * [`shutdown`] — a [`ShutdownGuard`] polled at commit boundaries and
+//!   wired to SIGINT, so Ctrl-C means "flush and report the resume
+//!   point", not "die mid-write".
+//!
+//! The shared invariant (DESIGN.md invariant 9): durability features
+//! only ever change *wall-clock work*, never results.  Replay, warm
+//! caches and early shutdown all degrade to recomputation on any
+//! inconsistency.
+
+pub mod cachefile;
+pub mod journal;
+pub mod shutdown;
+
+pub use cachefile::{load_caches, save_caches, CacheLoad};
+pub use journal::{
+    scan, CommittedCell, JournalHeader, JournalScan, OpenedJournal, SweepJournal, JOURNAL_VERSION,
+};
+pub use shutdown::ShutdownGuard;
+
+use crate::devices::{EvalCache, PlanCache};
+
+/// Everything the durable sweep driver
+/// ([`run_streamed_durable`](crate::scenario::run_streamed_durable))
+/// threads through a run: the open journal (if any), cells to replay
+/// from it, the stop flag, and the caches the searches share.
+///
+/// [`Durability::none`] is the plain-run configuration — no journal,
+/// nothing to replay, a guard nobody requests — and is what the
+/// non-durable entry points use, so their behaviour is unchanged.
+#[derive(Default)]
+pub struct Durability {
+    /// Open write-ahead journal; `None` runs without one.
+    pub journal: Option<SweepJournal>,
+    /// Cells recovered from the journal, in cell order starting at 0.
+    /// The driver re-emits their aggregates without re-running them.
+    pub replay: Vec<CommittedCell>,
+    /// Checked at every scenario-commit boundary.
+    pub shutdown: ShutdownGuard,
+    /// Compiled-plan cache shared across the sweep (optionally warmed
+    /// from and saved to disk via [`cachefile`]).
+    pub plans: PlanCache,
+    /// Cross-search measurement cache (same disk tier).
+    pub evals: EvalCache,
+}
+
+impl Durability {
+    /// Plain run: no journal, no replay, no pending shutdown.
+    pub fn none() -> Self {
+        Self::default()
+    }
+}

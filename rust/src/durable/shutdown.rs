@@ -1,0 +1,105 @@
+//! Cooperative graceful shutdown for long-running sweeps.
+//!
+//! A [`ShutdownGuard`] is a shared flag the streaming sweep polls at the
+//! same scenario-commit boundaries the wardens use (record/ward.rs): a
+//! request never interrupts a cell mid-flight, so every committed cell
+//! is exactly what an uninterrupted run would have produced, and the
+//! journal's last entry is always a complete frame.  The CLI wires the
+//! flag to SIGINT via [`ShutdownGuard::install_sigint`], turning Ctrl-C
+//! on a journaled sweep into "flush, report `resumable at cell N/M`,
+//! exit cleanly" instead of dying mid-write.
+//!
+//! The signal handler itself only stores to a process-wide `AtomicBool`
+//! — the one operation that is unconditionally async-signal-safe.  All
+//! draining, flushing and reporting happens on the normal control path
+//! when the sweep next reaches a commit boundary.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Set by the SIGINT handler; observed by every guard in the process.
+/// Stays false forever unless [`ShutdownGuard::install_sigint`] ran, so
+/// guards in library callers (tests, embedders) see only their own
+/// explicit [`ShutdownGuard::request`] calls.
+static SIGINT_PENDING: AtomicBool = AtomicBool::new(false);
+
+/// Shared stop-requested flag, checked between scenario cells.
+///
+/// Clones observe the same flag, so the CLI can hand one clone to the
+/// sweep loop and keep another to decide its exit message.
+#[derive(Clone, Debug, Default)]
+pub struct ShutdownGuard {
+    requested: Arc<AtomicBool>,
+}
+
+impl ShutdownGuard {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ask the sweep to stop at the next scenario-commit boundary.
+    pub fn request(&self) {
+        self.requested.store(true, Ordering::SeqCst);
+    }
+
+    /// Has anyone — this guard's [`request`](Self::request) or an
+    /// installed SIGINT handler — asked the process to wind down?
+    pub fn is_requested(&self) -> bool {
+        self.requested.load(Ordering::SeqCst) || SIGINT_PENDING.load(Ordering::SeqCst)
+    }
+
+    /// Route SIGINT (Ctrl-C) into the shutdown flag.  Idempotent;
+    /// process-wide (signal dispositions are per-process, so the first
+    /// installation serves every guard).  On non-unix targets this is a
+    /// no-op and Ctrl-C keeps its default behaviour.
+    pub fn install_sigint(&self) {
+        install_sigint_handler();
+    }
+}
+
+#[cfg(unix)]
+fn install_sigint_handler() {
+    static INSTALLED: AtomicBool = AtomicBool::new(false);
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    const SIGINT: i32 = 2;
+    extern "C" fn on_sigint(_signum: i32) {
+        SIGINT_PENDING.store(true, Ordering::SeqCst);
+    }
+    // libc is not vendored; `signal(2)` is declared directly.  The typed
+    // function pointer keeps the cast safe and the handler body is a
+    // single atomic store, the async-signal-safe operation.
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    unsafe {
+        signal(SIGINT, on_sigint);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_sigint_handler() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_is_seen_by_every_clone() {
+        let a = ShutdownGuard::new();
+        let b = a.clone();
+        assert!(!a.is_requested());
+        assert!(!b.is_requested());
+        b.request();
+        assert!(a.is_requested(), "clones share one flag");
+    }
+
+    #[test]
+    fn independent_guards_do_not_cross_talk() {
+        let a = ShutdownGuard::new();
+        let b = ShutdownGuard::new();
+        a.request();
+        assert!(!b.is_requested(), "separate guards are separate flags");
+    }
+}

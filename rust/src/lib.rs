@@ -24,6 +24,7 @@ pub mod app;
 pub mod codegen;
 pub mod coordinator;
 pub mod devices;
+pub mod durable;
 pub mod fault;
 pub mod ga;
 pub mod offload;
@@ -39,6 +40,7 @@ pub use coordinator::{
     SchedulePolicy, Selection, TrialConcurrency, UserRequirements,
 };
 pub use devices::{DeviceKind, EnvSpec, PlanCache, Testbed};
+pub use durable::{Durability, ShutdownGuard, SweepJournal};
 pub use fault::{FaultPlan, OutageWindow, RetryPolicy};
 pub use record::{
     CsvSink, JsonlSink, MemorySink, NullSink, RecordEvent, RecordSink, SharedBuffer, StdoutSink,

@@ -23,6 +23,8 @@ use mixoff::app::workloads;
 use mixoff::codegen;
 use mixoff::coordinator::{BatchOffloader, MixedOffloader, TrialConcurrency, UserRequirements};
 use mixoff::devices::{DeviceKind, DeviceModel, Testbed};
+use mixoff::durable::{load_caches, save_caches, JournalHeader, SweepJournal, JOURNAL_VERSION};
+use mixoff::Durability;
 use mixoff::fault::{FaultPlan, OutageWindow};
 use mixoff::offload::function_block::BlockDb;
 use mixoff::record::{CsvSink, JsonlSink, NullSink, RecordSink, StdoutSink, Warden, WardenSet};
@@ -180,6 +182,18 @@ sweep streaming options:
         wardens (early exit, checked between scenarios): --max-scenarios
           <n> --max-evals <n> --max-wall <s> --stop-on-satisfying
           --converge-window <n>
+durability (sweep --grid only; DESIGN.md "Durability & resume"):
+        --journal <dir>  write-ahead journal: one CRC-framed record per
+          committed cell (--journal-fsync <n> sets the fsync cadence,
+          default 1 = every cell)
+        --resume  replay the journal's intact prefix without re-running
+          it and continue from the first missing cell; the sink file and
+          final report come out byte-identical to an uninterrupted run
+        --cache <dir>  persist the compiled-plan and measurement caches
+          across runs (checksum-verified segments; any corruption falls
+          back to recomputation, never wrong results)
+        Ctrl-C on a grid sweep stops at the next cell boundary, flushes
+        journal and sinks, and reports the resume point
 "#;
 
 fn cmd_offload(args: &Args) -> Result<()> {
@@ -245,15 +259,32 @@ fn cmd_batch(args: &Args) -> Result<()> {
 /// The record sink `--sink <path>` names: `-` streams event JSON to
 /// stdout, `*.csv` writes the fixed-column CSV, anything else JSONL.
 fn sweep_sink(args: &Args) -> Result<Option<Arc<dyn RecordSink>>> {
+    sweep_sink_resumable(args, None)
+}
+
+/// [`sweep_sink`], but when `resume_at` carries the journal's committed
+/// byte offset the file sink is reopened there: the uncommitted tail is
+/// truncated and new records append, so the resumed file ends up
+/// byte-identical to an uninterrupted run's.
+fn sweep_sink_resumable(args: &Args, resume_at: Option<u64>) -> Result<Option<Arc<dyn RecordSink>>> {
     let Some(path) = args.get("sink") else {
         return Ok(None);
     };
     let sink: Arc<dyn RecordSink> = if path == "-" {
+        if resume_at.is_some() {
+            bail!("--resume: stdout has no committed offset to truncate to; use a file sink");
+        }
         Arc::new(StdoutSink)
     } else if path.ends_with(".csv") {
-        Arc::new(CsvSink::create(Path::new(path))?)
+        match resume_at {
+            Some(offset) => Arc::new(CsvSink::resume(Path::new(path), offset)?),
+            None => Arc::new(CsvSink::create(Path::new(path))?),
+        }
     } else {
-        Arc::new(JsonlSink::create(Path::new(path))?)
+        match resume_at {
+            Some(offset) => Arc::new(JsonlSink::resume(Path::new(path), offset)?),
+            None => Arc::new(JsonlSink::create(Path::new(path))?),
+        }
     };
     Ok(Some(sink))
 }
@@ -288,19 +319,18 @@ fn print_stream(args: &Args, out: &StreamOutcome) {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    let sink = sweep_sink(args)?;
     let wardens = sweep_wardens(args)?;
 
     // Grid mode: lazily expand the cross-product through the streaming
-    // runner (constant memory no matter how many cells).
+    // runner (constant memory no matter how many cells), with optional
+    // journaling, resume and persistent caches.
     if let Some(grid_path) = args.get("grid") {
-        let grid = mixoff::scenario::load_grid(Path::new(grid_path))?;
-        let sink = sink.unwrap_or_else(|| Arc::new(NullSink) as Arc<dyn RecordSink>);
-        let out = mixoff::scenario::run_grid(&grid, &sink, &wardens)?;
-        sink.close()?;
-        print_stream(args, &out);
-        return Ok(());
+        return cmd_sweep_grid(args, grid_path, &wardens);
     }
+    if args.get("journal").is_some() || args.flag("resume") || args.get("cache").is_some() {
+        bail!("--journal/--resume/--cache apply to grid sweeps; use `mixoff sweep --grid <file>`");
+    }
+    let sink = sweep_sink(args)?;
 
     let dir = args
         .positional
@@ -333,6 +363,74 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             }
         }
     }
+    Ok(())
+}
+
+/// `sweep --grid`: the durable streaming runner.  `--cache <dir>` warms
+/// the plan/measurement caches from disk and saves them back after the
+/// run; `--journal <dir>` write-ahead-logs every committed cell so
+/// `--resume` can replay the intact prefix and continue; SIGINT stops at
+/// the next cell boundary with a `resumable at cell N/M` report.  With
+/// none of those flags the behaviour is identical to the plain runner.
+fn cmd_sweep_grid(args: &Args, grid_path: &str, wardens: &WardenSet) -> Result<()> {
+    let grid = mixoff::scenario::load_grid(Path::new(grid_path))?;
+    let mut dur = Durability::none();
+
+    let cache_dir = args.get("cache");
+    if let Some(dir) = cache_dir {
+        let load = load_caches(Path::new(dir), &dur.plans, &dur.evals);
+        for w in &load.warnings {
+            eprintln!("mixoff: cache: {w}");
+        }
+        if load.plans + load.evals > 0 {
+            eprintln!(
+                "mixoff: cache: warmed {} plan(s), {} measurement(s) from {dir}",
+                load.plans, load.evals
+            );
+        }
+    }
+
+    let resume = args.flag("resume");
+    let mut sink_offset = None;
+    if let Some(journal_dir) = args.get("journal") {
+        let fsync_every = args.get_usize("journal-fsync")?.unwrap_or(1);
+        let header = JournalHeader {
+            version: JOURNAL_VERSION,
+            grid: grid.fingerprint(),
+            total: grid.len(),
+        };
+        let opened = SweepJournal::open(Path::new(journal_dir), &header, fsync_every, resume)?;
+        for w in &opened.warnings {
+            eprintln!("mixoff: journal: {w}");
+        }
+        if !opened.replay.is_empty() {
+            sink_offset = opened.replay.last().and_then(|c| c.sink_bytes);
+            eprintln!(
+                "mixoff: resuming at cell {}/{} from {journal_dir}",
+                opened.replay.len(),
+                grid.len()
+            );
+        }
+        dur.journal = Some(opened.journal);
+        dur.replay = opened.replay;
+    } else if resume {
+        bail!("--resume needs --journal <dir> to resume from");
+    }
+
+    dur.shutdown.install_sigint();
+
+    let sink = sweep_sink_resumable(args, sink_offset)?;
+    let sink = sink.unwrap_or_else(|| Arc::new(NullSink) as Arc<dyn RecordSink>);
+    let out = mixoff::scenario::run_grid_durable(&grid, &sink, wardens, &mut dur)?;
+    sink.close()?;
+    if let Some(dir) = cache_dir {
+        // A failed save degrades to a cold next run; the sweep's results
+        // are already out, so warn instead of failing the command.
+        if let Err(e) = save_caches(Path::new(dir), &dur.plans, &dur.evals) {
+            eprintln!("mixoff: cache: saving to {dir} failed: {e:#}");
+        }
+    }
+    print_stream(args, &out);
     Ok(())
 }
 

@@ -288,6 +288,25 @@ pub trait RecordSink: Send + Sync {
     fn close(&self) -> anyhow::Result<()> {
         Ok(())
     }
+
+    /// Push buffered bytes to the backing store and surface any I/O
+    /// error captured so far.  The streaming sweep calls this at every
+    /// scenario-commit boundary, so a hard kill loses at most the cell
+    /// in flight (see durable/).  Default: nothing buffered, nothing to
+    /// report.
+    fn flush(&self) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// Bytes written to the sink's backing file so far, for file-backed
+    /// sinks (`None` otherwise).  Sampled right after a
+    /// [`flush`](Self::flush), this is a durable prefix length: the
+    /// sweep journal records it at each commit so `--resume` can
+    /// truncate the file back to its last committed prefix and append
+    /// seamlessly (see durable/journal.rs).
+    fn bytes_written(&self) -> Option<u64> {
+        None
+    }
 }
 
 /// The no-op sink every non-streaming run uses: `enabled()` is `false`,
@@ -328,6 +347,14 @@ impl RecordSink for ScopedSink {
 
     fn close(&self) -> anyhow::Result<()> {
         self.inner.close()
+    }
+
+    fn flush(&self) -> anyhow::Result<()> {
+        self.inner.flush()
+    }
+
+    fn bytes_written(&self) -> Option<u64> {
+        self.inner.bytes_written()
     }
 }
 

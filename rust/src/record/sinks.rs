@@ -8,12 +8,12 @@
 //! commit boundary instead of panicking a worker mid-trial.
 
 use std::collections::VecDeque;
-use std::fs::File;
-use std::io::{self, BufWriter, Write};
+use std::fs::{File, OpenOptions};
+use std::io::{self, BufWriter, Seek, SeekFrom, Write};
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::{RecordEvent, RecordSink};
 
@@ -57,9 +57,18 @@ struct WriterState {
     out: Box<dyn Write + Send>,
     /// First I/O error seen; every later emit is dropped.
     error: Option<String>,
+    /// Bytes handed to `out` so far (newlines included), on top of any
+    /// resume offset.  After a successful [`WriterState::flush`] this is
+    /// the sink's durable-prefix length — what the sweep journal records
+    /// so `--resume` can truncate uncommitted tail rows.
+    bytes: u64,
 }
 
 impl WriterState {
+    fn new(out: Box<dyn Write + Send>, offset: u64) -> Self {
+        Self { out, error: None, bytes: offset }
+    }
+
     fn write_line(&mut self, line: &str) {
         if self.error.is_some() {
             return;
@@ -67,6 +76,24 @@ impl WriterState {
         if let Err(e) = self.out.write_all(line.as_bytes()).and_then(|()| self.out.write_all(b"\n"))
         {
             self.error = Some(e.to_string());
+        } else {
+            self.bytes += line.len() as u64 + 1;
+        }
+    }
+
+    /// Flush buffered lines through to the backing writer.  Unlike
+    /// [`WriterState::close`] the captured error stays set, so a sweep
+    /// that aborts on a failed flush still reports the root cause if it
+    /// also closes the sink.
+    fn flush(&mut self, what: &str) -> Result<()> {
+        if self.error.is_none() {
+            if let Err(e) = self.out.flush() {
+                self.error = Some(e.to_string());
+            }
+        }
+        match self.error.as_ref() {
+            Some(e) => Err(anyhow!("{what}: {e}")),
+            None => Ok(()),
         }
     }
 
@@ -95,13 +122,21 @@ pub struct JsonlSink {
 
 impl JsonlSink {
     pub fn to_writer(out: Box<dyn Write + Send>) -> Self {
-        Self { state: Mutex::new(WriterState { out, error: None }) }
+        Self { state: Mutex::new(WriterState::new(out, 0)) }
     }
 
     /// Stream to a file (buffered; created or truncated).
     pub fn create(path: &Path) -> Result<Self> {
         let f = File::create(path).map_err(|e| anyhow!("{}: {e}", path.display()))?;
         Ok(Self::to_writer(Box::new(BufWriter::new(f))))
+    }
+
+    /// Reopen an existing stream at the journal's committed byte
+    /// `offset`, truncating any uncommitted tail, and keep appending —
+    /// the `--resume` path to a byte-identical final file.
+    pub fn resume(path: &Path, offset: u64) -> Result<Self> {
+        let out = open_resumable(path, offset)?;
+        Ok(Self { state: Mutex::new(WriterState::new(out, offset)) })
     }
 
     /// Stream into a cloneable in-memory buffer.
@@ -115,9 +150,38 @@ impl RecordSink for JsonlSink {
         self.state.lock().unwrap().write_line(&ev.to_json().to_string());
     }
 
+    fn flush(&self) -> Result<()> {
+        self.state.lock().unwrap().flush("jsonl sink")
+    }
+
+    fn bytes_written(&self) -> Option<u64> {
+        Some(self.state.lock().unwrap().bytes)
+    }
+
     fn close(&self) -> Result<()> {
         self.state.lock().unwrap().close("jsonl sink")
     }
+}
+
+/// Open `path` positioned to append at exactly `offset` — the durable
+/// prefix a sweep journal committed.  Bytes past `offset` are rows from
+/// cells whose commit never landed; they are truncated away.  A file
+/// *shorter* than the committed prefix was replaced or truncated
+/// out-of-band, which resume cannot repair.
+fn open_resumable(path: &Path, offset: u64) -> Result<Box<dyn Write + Send>> {
+    let err = |e: io::Error| anyhow!("{}: {e}", path.display());
+    let mut f = OpenOptions::new().read(true).write(true).open(path).map_err(err)?;
+    let len = f.metadata().map_err(err)?.len();
+    if len < offset {
+        bail!(
+            "{}: sink holds {len} bytes but the journal committed {offset}; the file was \
+             truncated or replaced — delete the journal directory to start fresh",
+            path.display()
+        );
+    }
+    f.set_len(offset).map_err(err)?;
+    f.seek(SeekFrom::End(0)).map_err(err)?;
+    Ok(Box::new(BufWriter::new(f)))
 }
 
 /// The fixed CSV column superset every event type maps onto.
@@ -232,15 +296,22 @@ pub struct CsvSink {
 
 impl CsvSink {
     pub fn to_writer(out: Box<dyn Write + Send>) -> Self {
-        Self {
-            state: Mutex::new(WriterState { out, error: None }),
-            header_written: Mutex::new(false),
-        }
+        Self { state: Mutex::new(WriterState::new(out, 0)), header_written: Mutex::new(false) }
     }
 
     pub fn create(path: &Path) -> Result<Self> {
         let f = File::create(path).map_err(|e| anyhow!("{}: {e}", path.display()))?;
         Ok(Self::to_writer(Box::new(BufWriter::new(f))))
+    }
+
+    /// CSV twin of [`JsonlSink::resume`].  A non-zero offset implies the
+    /// original run already wrote the header, so it is not repeated.
+    pub fn resume(path: &Path, offset: u64) -> Result<Self> {
+        let out = open_resumable(path, offset)?;
+        Ok(Self {
+            state: Mutex::new(WriterState::new(out, offset)),
+            header_written: Mutex::new(offset > 0),
+        })
     }
 
     pub fn to_buffer(buf: &SharedBuffer) -> Self {
@@ -257,6 +328,14 @@ impl RecordSink for CsvSink {
             *hdr = true;
         }
         state.write_line(&csv_row(ev));
+    }
+
+    fn flush(&self) -> Result<()> {
+        self.state.lock().unwrap().flush("csv sink")
+    }
+
+    fn bytes_written(&self) -> Option<u64> {
+        Some(self.state.lock().unwrap().bytes)
     }
 
     fn close(&self) -> Result<()> {
@@ -357,6 +436,13 @@ impl RecordSink for TeeSink {
 
     fn enabled(&self) -> bool {
         self.sinks.iter().any(|s| s.enabled())
+    }
+
+    fn flush(&self) -> Result<()> {
+        for s in &self.sinks {
+            s.flush()?;
+        }
+        Ok(())
     }
 
     fn close(&self) -> Result<()> {
@@ -486,6 +572,99 @@ mod tests {
             RecordEvent::Trial { scenario, .. } => assert_eq!(scenario, "s99"),
             other => panic!("unexpected tail event {other:?}"),
         }
+    }
+
+    #[test]
+    fn flush_counts_bytes_and_reaches_the_writer() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        struct CountingWriter {
+            inner: SharedBuffer,
+            flushes: Arc<AtomicUsize>,
+        }
+        impl io::Write for CountingWriter {
+            fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+                self.inner.write(data)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                self.flushes.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            }
+        }
+
+        let buf = SharedBuffer::new();
+        let flushes = Arc::new(AtomicUsize::new(0));
+        let sink = JsonlSink::to_writer(Box::new(CountingWriter {
+            inner: buf.clone(),
+            flushes: Arc::clone(&flushes),
+        }));
+        assert_eq!(sink.bytes_written(), Some(0));
+        sink.emit(&trial("a"));
+        let after_one = buf.contents().len() as u64;
+        assert_eq!(sink.bytes_written(), Some(after_one), "bytes include the newline");
+        sink.flush().unwrap();
+        assert_eq!(flushes.load(Ordering::SeqCst), 1, "flush reaches the writer");
+        sink.emit(&trial("b"));
+        sink.close().unwrap();
+        assert_eq!(flushes.load(Ordering::SeqCst), 2, "close flushes too");
+        assert_eq!(sink.bytes_written(), Some(buf.contents().len() as u64));
+    }
+
+    #[test]
+    fn resume_truncates_the_uncommitted_tail_and_appends() {
+        let dir = std::env::temp_dir().join(format!("mixoff-sink-resume-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.jsonl");
+
+        // First run: two committed lines, then an uncommitted third.
+        let sink = JsonlSink::create(&path).unwrap();
+        sink.emit(&trial("a"));
+        sink.emit(&trial("b"));
+        sink.flush().unwrap();
+        let committed = sink.bytes_written().unwrap();
+        sink.emit(&trial("uncommitted"));
+        sink.close().unwrap();
+        assert!(std::fs::metadata(&path).unwrap().len() > committed);
+
+        // Resume at the committed offset: the tail vanishes, appends go on.
+        let sink = JsonlSink::resume(&path, committed).unwrap();
+        assert_eq!(sink.bytes_written(), Some(committed));
+        sink.emit(&trial("c"));
+        sink.close().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(!text.contains("uncommitted"), "truncated tail must be gone: {text}");
+
+        // A sink shorter than the committed offset cannot be resumed.
+        std::fs::write(&path, b"x").unwrap();
+        assert!(JsonlSink::resume(&path, committed).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn csv_resume_does_not_repeat_the_header() {
+        let dir = std::env::temp_dir().join(format!("mixoff-csv-resume-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.csv");
+
+        let sink = CsvSink::create(&path).unwrap();
+        sink.emit(&trial("a"));
+        sink.flush().unwrap();
+        let committed = sink.bytes_written().unwrap();
+        sink.emit(&trial("uncommitted"));
+        sink.close().unwrap();
+
+        let sink = CsvSink::resume(&path, committed).unwrap();
+        sink.emit(&trial("b"));
+        sink.close().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "header + two rows: {text}");
+        assert_eq!(lines[0], CSV_HEADER);
+        assert_eq!(lines.iter().filter(|l| **l == CSV_HEADER).count(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -59,6 +59,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::coordinator::{SchedulePolicy, TrialConcurrency, UserRequirements};
 use crate::devices::{default_param, known_params, DeviceSpec, EnvSpec, Testbed};
 use crate::fault::FaultPlan;
+use crate::util::fnv::Fnv;
 use crate::util::json::Json;
 
 use super::spec::{
@@ -532,6 +533,17 @@ impl GridSpec {
     /// Lazily expand every cell, in index order.
     pub fn scenarios(&self) -> impl Iterator<Item = GridScenario> + '_ {
         (0..self.len()).map(|i| self.scenario(i))
+    }
+
+    /// Stable fingerprint of the whole grid — FNV over the canonical JSON
+    /// form, so it covers every axis value and shared setting.  The sweep
+    /// journal stores it in its header: `--resume` against an edited grid
+    /// (whose cell indices would mean different scenarios) is detected
+    /// and degrades to a fresh run instead of stitching mismatched cells.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.bytes(self.to_json().to_string().as_bytes());
+        h.finish()
     }
 }
 

@@ -31,8 +31,8 @@ use crate::coordinator::{BatchOutcome, SchedulePolicy};
 pub use grid::{load_grid, GridScenario, GridSpec};
 pub use spec::{AppSpec, ScenarioSpec};
 pub use sweep::{
-    load_dir, load_file, run_dir, run_grid, run_scenarios, run_streamed, stream_dir, Scenario,
-    StreamOutcome,
+    load_dir, load_file, run_dir, run_grid, run_grid_durable, run_scenarios, run_streamed,
+    run_streamed_durable, stream_dir, Scenario, StreamOutcome,
 };
 
 /// What one scenario produced: its applications' outcomes (in spec order)

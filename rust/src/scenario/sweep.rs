@@ -17,11 +17,15 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::coordinator::UserRequirements;
 use crate::devices::{EvalCache, PlanCache};
+use crate::durable::{CommittedCell, Durability};
 use crate::record::{
-    AxisStat, ChosenRow, ParetoPoint, RecordEvent, RecordSink, SweepRow, WardProgress, WardenSet,
+    AxisStat, ParetoPoint, RecordEvent, RecordSink, SweepRow, WardProgress, WardenSet,
 };
 use crate::report;
+use crate::util::threadpool::WorkerPool;
+use crate::util::Json;
 
 use super::grid::{GridScenario, GridSpec};
 use super::spec::ScenarioSpec;
@@ -181,9 +185,86 @@ pub fn run_streamed(
     sink: &Arc<dyn RecordSink>,
     wardens: &WardenSet,
 ) -> Result<StreamOutcome> {
+    run_streamed_durable(scenarios, total, sink, wardens, &mut Durability::none())
+}
+
+/// What one committed cell contributed to the warden-visible progress.
+struct CellStats {
+    all_satisfied: bool,
+    improved: bool,
+}
+
+/// Fold one committed cell's rows into the streaming aggregates — the
+/// single accumulation path shared by live cells and journal replay, so
+/// a resumed sweep's summary is bit-identical to an uninterrupted one
+/// (same rows, same fold order, same floats).
+fn absorb_cell(
+    out: &mut StreamOutcome,
+    axis_acc: &mut BTreeMap<(String, String), (usize, f64, f64)>,
+    requirements: &UserRequirements,
+    coords: &[(String, String)],
+    rows: &[SweepRow],
+) -> CellStats {
+    let mut all_satisfied = !rows.is_empty();
+    let mut improved = false;
+    let mut cell_best = 1.0_f64; // no offload = staying on the 1-core baseline
+    for r in rows {
+        match &r.chosen {
+            Some(c) => {
+                if !requirements.satisfied(c.improvement, c.price_usd) {
+                    all_satisfied = false;
+                }
+                cell_best = cell_best.max(c.improvement);
+                let p = ParetoPoint {
+                    scenario: r.scenario.clone(),
+                    app: r.app.clone(),
+                    price_usd: c.price_usd,
+                    seconds: c.seconds,
+                    improvement: c.improvement,
+                };
+                if out.best.as_ref().map(|b| c.improvement > b.improvement).unwrap_or(true) {
+                    out.best = Some(p.clone());
+                    improved = true;
+                }
+                pareto_insert(&mut out.pareto, p);
+            }
+            None => all_satisfied = false,
+        }
+    }
+    for (axis, label) in coords {
+        let e =
+            axis_acc.entry((axis.clone(), label.clone())).or_insert((0, 0.0, f64::NEG_INFINITY));
+        e.0 += 1;
+        e.1 += cell_best;
+        e.2 = e.2.max(cell_best);
+    }
+    out.scenarios_run += 1;
+    out.apps += rows.len();
+    out.evaluations += rows.iter().map(|r| r.evaluations).sum::<usize>();
+    out.total_verify_hours += rows.iter().map(|r| r.verify_hours).sum::<f64>();
+    CellStats { all_satisfied, improved }
+}
+
+/// [`run_streamed`] with crash-safety: cells already recovered from a
+/// sweep journal are *replayed* (their journaled rows fold into the
+/// aggregates and nothing is re-run or re-emitted), live cells are
+/// committed in order — rows to the sink, `sink.flush()`, then one
+/// journal frame recording the rows and the sink's durable byte offset —
+/// and [`Durability::shutdown`] is polled at every commit boundary, right
+/// after the wardens.  A shutdown stop drains the worker pool, syncs the
+/// journal, reports `resumable at cell N/M`, and suppresses the trailing
+/// `pareto`/`axis_stat` emissions (a resumed run emits them at the true
+/// end, keeping the concatenated streams identical to an uninterrupted
+/// run's).
+pub fn run_streamed_durable(
+    scenarios: impl IntoIterator<Item = GridScenario>,
+    total: usize,
+    sink: &Arc<dyn RecordSink>,
+    wardens: &WardenSet,
+    dur: &mut Durability,
+) -> Result<StreamOutcome> {
     let t0 = Instant::now();
-    let plans = PlanCache::new();
-    let evals = EvalCache::new();
+    let replayed = dur.replay.len();
     // (axis, label) -> (scenarios, sum of best improvements, best).
     let mut axis_acc: BTreeMap<(String, String), (usize, f64, f64)> = BTreeMap::new();
     let mut out = StreamOutcome {
@@ -199,83 +280,72 @@ pub fn run_streamed(
         axes: Vec::new(),
     };
     let mut progress = WardProgress::default();
+    let mut interrupted = false;
     for cell in scenarios {
-        let spec = &cell.spec;
-        let outcome = spec
-            .run_streamed(spec.concurrency, &plans, &evals, sink)
-            .map_err(|e| anyhow!("{}: {e}", spec.name))?;
-        if sink.enabled() {
-            sink.emit(&RecordEvent::Scenario {
-                name: outcome.name.clone(),
-                outcome: report::scenario_to_json(&outcome),
-            });
-        }
-        let mut all_satisfied = !outcome.batch.outcomes.is_empty();
-        let mut improved = false;
-        let mut cell_best = 1.0_f64; // no offload = staying on the 1-core baseline
-        for o in &outcome.batch.outcomes {
-            match &o.chosen {
-                Some(c) => {
-                    if !spec.requirements.satisfied(c.improvement, c.price_usd) {
-                        all_satisfied = false;
-                    }
-                    cell_best = cell_best.max(c.improvement);
-                    let p = ParetoPoint {
-                        scenario: outcome.name.clone(),
-                        app: o.app_name.clone(),
-                        price_usd: c.price_usd,
-                        seconds: c.seconds,
-                        improvement: c.improvement,
-                    };
-                    if out.best.as_ref().map(|b| c.improvement > b.improvement).unwrap_or(true)
-                    {
-                        out.best = Some(p.clone());
-                        improved = true;
-                    }
-                    pareto_insert(&mut out.pareto, p);
-                }
-                None => all_satisfied = false,
-            }
+        let stats = if cell.index < replayed {
+            let rows = std::mem::take(&mut dur.replay[cell.index].rows);
+            absorb_cell(&mut out, &mut axis_acc, &cell.spec.requirements, &cell.coords, &rows)
+        } else {
+            let spec = &cell.spec;
+            let outcome = spec
+                .run_streamed(spec.concurrency, &dur.plans, &dur.evals, sink)
+                .map_err(|e| anyhow!("{}: {e}", spec.name))?;
+            let outcome_json = if sink.enabled() || dur.journal.is_some() {
+                report::scenario_to_json(&outcome)
+            } else {
+                Json::Null
+            };
             if sink.enabled() {
-                sink.emit(&RecordEvent::SweepRow(SweepRow {
-                    scenario: outcome.name.clone(),
-                    fleet: outcome.fleet.clone(),
-                    app: o.app_name.clone(),
-                    baseline_seconds: o.baseline_seconds,
-                    chosen: o.chosen.as_ref().map(|c| ChosenRow {
-                        trial: c.kind.label(),
-                        seconds: c.seconds,
-                        improvement: c.improvement,
-                        price_usd: c.price_usd,
-                    }),
-                    verify_hours: o.clock.total_hours(),
-                    evaluations: o.evaluations(),
-                }));
+                sink.emit(&RecordEvent::Scenario {
+                    name: outcome.name.clone(),
+                    outcome: outcome_json.clone(),
+                });
             }
-        }
-        for (axis, label) in &cell.coords {
-            let e = axis_acc
-                .entry((axis.clone(), label.clone()))
-                .or_insert((0, 0.0, f64::NEG_INFINITY));
-            e.0 += 1;
-            e.1 += cell_best;
-            e.2 = e.2.max(cell_best);
-        }
-        out.scenarios_run += 1;
-        out.apps += outcome.batch.outcomes.len();
-        out.evaluations += outcome.batch.evaluations();
-        out.total_verify_hours += outcome.batch.total_verify_hours();
+            let rows = outcome.batch.sweep_rows(&outcome.name, &outcome.fleet);
+            if sink.enabled() {
+                for r in &rows {
+                    sink.emit(&RecordEvent::SweepRow(r.clone()));
+                }
+            }
+            let stats =
+                absorb_cell(&mut out, &mut axis_acc, &spec.requirements, &cell.coords, &rows);
+            // Commit: rows durably in the sink *before* the journal frame
+            // that claims them, so a replayed prefix never references
+            // bytes the sink lost.
+            sink.flush()?;
+            if let Some(journal) = dur.journal.as_mut() {
+                journal.append(&CommittedCell {
+                    index: cell.index,
+                    outcome: outcome_json,
+                    rows,
+                    sink_bytes: sink.bytes_written(),
+                })?;
+            }
+            stats
+            // `outcome` drops here: nothing per-cell stays resident.
+        };
         progress.scenarios = out.scenarios_run;
         progress.evaluations = out.evaluations;
         progress.wall_seconds = t0.elapsed().as_secs_f64();
-        progress.satisfied = all_satisfied;
+        progress.satisfied = stats.all_satisfied;
         progress.since_improvement =
-            if improved { 0 } else { progress.since_improvement + 1 };
+            if stats.improved { 0 } else { progress.since_improvement + 1 };
         if let Some(reason) = wardens.check(&progress) {
             out.stopped = Some(reason);
             break;
         }
-        // `outcome` drops here: nothing per-cell stays resident.
+        if dur.shutdown.is_requested() {
+            WorkerPool::global().quiesce();
+            out.stopped = Some(format!(
+                "interrupted: resumable at cell {}/{}",
+                out.scenarios_run, out.scenarios_total
+            ));
+            interrupted = true;
+            break;
+        }
+    }
+    if let Some(journal) = dur.journal.as_mut() {
+        journal.sync()?;
     }
     out.pareto.sort_by(|a, b| {
         a.price_usd.total_cmp(&b.price_usd).then(a.seconds.total_cmp(&b.seconds))
@@ -290,7 +360,7 @@ pub fn run_streamed(
             best_improvement: best,
         })
         .collect();
-    if sink.enabled() {
+    if sink.enabled() && !interrupted {
         for p in &out.pareto {
             sink.emit(&RecordEvent::Pareto(p.clone()));
         }
@@ -298,6 +368,7 @@ pub fn run_streamed(
             sink.emit(&RecordEvent::AxisStat(a.clone()));
         }
     }
+    sink.flush()?;
     out.wall_seconds = t0.elapsed().as_secs_f64();
     Ok(out)
 }
@@ -310,6 +381,20 @@ pub fn run_grid(
     wardens: &WardenSet,
 ) -> Result<StreamOutcome> {
     run_streamed(grid.scenarios(), grid.len(), sink, wardens)
+}
+
+/// [`run_grid`] with journaling/resume, persistent caches and graceful
+/// shutdown threaded through — `mixoff sweep --grid <file> --journal
+/// <dir>`.  Grid expansion is deterministic, so a resumed run's cell
+/// `k` is the same scenario the interrupted run committed as cell `k`;
+/// the journal header's grid fingerprint guards that assumption.
+pub fn run_grid_durable(
+    grid: &GridSpec,
+    sink: &Arc<dyn RecordSink>,
+    wardens: &WardenSet,
+    dur: &mut Durability,
+) -> Result<StreamOutcome> {
+    run_streamed_durable(grid.scenarios(), grid.len(), sink, wardens, dur)
 }
 
 /// Stream a scenario *directory* (same corpus `run_dir` runs buffered)

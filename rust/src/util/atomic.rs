@@ -1,0 +1,100 @@
+//! Crash-safe file publication: write a temp file, fsync, rename.
+//!
+//! Every artifact this repo leaves at rest — `BENCH_*.json`, regenerated
+//! goldens, persistent cache segments — goes through [`atomic_write`], so
+//! a crash (or SIGKILL, or full disk) can leave behind *the old file* or
+//! *the new file*, never a truncated half of either.  POSIX `rename(2)`
+//! within one directory is atomic; the temp file lives next to its
+//! destination so the rename never crosses a filesystem boundary.
+//!
+//! Streaming outputs (`--sink` files, the sweep journal) deliberately do
+//! NOT use this: their crash story is the opposite one — the bytes
+//! already flushed must *survive* a crash so `--resume` can truncate to
+//! the last committed prefix and append (see durable/journal.rs).
+
+use std::io::{self, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Write `contents` to `path` atomically: the file at `path` is either
+/// its previous state or exactly `contents`, never a partial write.  The
+/// temp file is fsynced before the rename so the *new* bytes are durable
+/// when the new name appears.
+pub fn atomic_write(path: &Path, contents: &[u8]) -> io::Result<()> {
+    // Unique per (process, call): concurrent writers to the same target
+    // (parallel tests, racing benches) must not share a temp file.
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+
+    let dir = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p,
+        _ => Path::new("."),
+    };
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "atomic_write: no file name"))?;
+    let tmp = dir.join(format!(".{name}.{}.{seq}.tmp", std::process::id()));
+
+    let publish = (|| {
+        let mut file = std::fs::File::create(&tmp)?;
+        file.write_all(contents)?;
+        file.sync_all()?;
+        std::fs::rename(&tmp, path)
+    })();
+    if publish.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+        return publish;
+    }
+
+    // Make the rename itself durable.  Directory fsync is a unix-ism and
+    // advisory here: a failure downgrades the guarantee (the rename may
+    // ride a later flush), it does not invalidate the bytes.
+    #[cfg(unix)]
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mixoff-atomic-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn writes_replaces_and_leaves_no_temp_files() {
+        let dir = tmp_dir("basic");
+        let target = dir.join("artifact.json");
+        atomic_write(&target, b"first").unwrap();
+        assert_eq!(std::fs::read(&target).unwrap(), b"first");
+        atomic_write(&target, b"second, longer contents").unwrap();
+        assert_eq!(std::fs::read(&target).unwrap(), b"second, longer contents");
+        let stray: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(stray.is_empty(), "temp files must not outlive the publish: {stray:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_publish_leaves_the_old_file_intact() {
+        let dir = tmp_dir("fail");
+        let target = dir.join("artifact.json");
+        atomic_write(&target, b"old").unwrap();
+        // A destination whose parent does not exist cannot be published.
+        let bad = dir.join("no-such-subdir").join("artifact.json");
+        assert!(atomic_write(&bad, b"new").is_err());
+        assert_eq!(std::fs::read(&target).unwrap(), b"old");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

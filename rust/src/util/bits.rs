@@ -200,6 +200,30 @@ impl PatternBits {
     pub fn ones(&self) -> Ones<'_> {
         Ones { bits: self, w: 0, cur: self.words[0] }
     }
+
+    /// The raw backing words — the serialization surface for the
+    /// persistent cache tier (durable/cachefile.rs).
+    #[inline]
+    pub fn words(&self) -> &[u64; WORDS] {
+        &self.words
+    }
+
+    /// Rebuild from raw words, enforcing the type invariant.  Returns
+    /// `None` if `len` exceeds [`MAX_BITS`] or any bit at position
+    /// `>= len` is set: a corrupt serialization must surface as a decode
+    /// failure, never as a bitset whose derived `Eq`/`Hash` disagree
+    /// with logical equality.
+    pub fn from_raw(len: usize, words: [u64; WORDS]) -> Option<Self> {
+        if len > MAX_BITS {
+            return None;
+        }
+        for (w, &word) in words.iter().enumerate() {
+            if word & !low_mask(len, w) != 0 {
+                return None;
+            }
+        }
+        Some(Self { len: len as u32, words })
+    }
 }
 
 /// Mask of bit positions `< cut` within word `w`.
@@ -389,6 +413,21 @@ mod tests {
     #[should_panic(expected = "at most")]
     fn capacity_is_enforced() {
         PatternBits::zeros(MAX_BITS + 1);
+    }
+
+    #[test]
+    fn from_raw_roundtrips_and_rejects_invariant_violations() {
+        let b = PatternBits::from_ones(70, [2, 64, 69]);
+        assert_eq!(PatternBits::from_raw(b.len(), *b.words()), Some(b));
+        // A stray bit above len violates the invariant.
+        let mut words = *b.words();
+        words[1] |= 1u64 << (70 - 64); // bit 70, first out-of-range position
+        assert_eq!(PatternBits::from_raw(70, words), None);
+        // A length beyond capacity is rejected outright.
+        assert_eq!(PatternBits::from_raw(MAX_BITS + 1, [0; WORDS]), None);
+        // Word-boundary lengths keep full words valid.
+        let full = PatternBits::from_bools(&vec![true; 128]);
+        assert_eq!(PatternBits::from_raw(128, *full.words()), Some(full));
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Little-endian byte codec + CRC32 for the durable on-disk formats.
+//!
+//! The sweep journal (durable/journal.rs) and the persistent cache
+//! segments (durable/cachefile.rs) both need the same three things: a
+//! writer that lays fields out in a fixed order, a reader that refuses
+//! to run past the end of a (possibly truncated) buffer, and a checksum
+//! to tell a torn or bit-flipped file from an intact one.  Everything is
+//! little-endian; `f64`s travel as raw IEEE-754 bits so a value read
+//! back is the value written, bit for bit — the durability invariant
+//! (DESIGN.md invariant 9) rests on that.
+//!
+//! No `std::io` here on purpose: both formats are built fully in memory
+//! and published/verified as whole buffers, so `Option`-returning
+//! bounds-checked reads are the entire error story.
+
+/// Hard cap on any length-prefixed vector read back from disk.  Every
+/// on-disk collection in this crate is tiny (loops per app ≤ 256, cache
+/// entries ≤ 2^16); a count beyond this is corruption that slipped past
+/// the checksum, not data, and must not turn into a huge allocation.
+const MAX_SEQ: usize = 1 << 20;
+
+/// Append-only little-endian writer over a growable buffer.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_inner(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Raw IEEE-754 bits — NaN payloads and signed zeros round-trip.
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Length-prefixed (`u32` count) sequence of `u32`s.
+    pub fn u32s(&mut self, vs: &[u32]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.u32(v);
+        }
+    }
+
+    /// Length-prefixed (`u32` count) sequence of `u64`s.
+    pub fn u64s(&mut self, vs: &[u64]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.u64(v);
+        }
+    }
+
+    /// Length-prefixed (`u32` count) sequence of `f64`s (raw bits).
+    pub fn f64s(&mut self, vs: &[f64]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.f64(v);
+        }
+    }
+}
+
+/// Bounds-checked little-endian reader: every accessor returns `None`
+/// instead of running past the end, so a truncated buffer surfaces as a
+/// decode failure, never a panic.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    pub fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let bytes = self.buf.get(self.pos..self.pos.checked_add(n)?)?;
+        self.pos += n;
+        Some(bytes)
+    }
+
+    pub fn u8(&mut self) -> Option<u8> {
+        let b = *self.buf.get(self.pos)?;
+        self.pos += 1;
+        Some(b)
+    }
+
+    pub fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Option<f64> {
+        self.u64().map(f64::from_bits)
+    }
+
+    /// Inverse of [`ByteWriter::u32s`].
+    pub fn u32s(&mut self) -> Option<Vec<u32>> {
+        let n = self.seq_len()?;
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    /// Inverse of [`ByteWriter::u64s`].
+    pub fn u64s(&mut self) -> Option<Vec<u64>> {
+        let n = self.seq_len()?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    /// Inverse of [`ByteWriter::f64s`].
+    pub fn f64s(&mut self) -> Option<Vec<f64>> {
+        let n = self.seq_len()?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    fn seq_len(&mut self) -> Option<usize> {
+        let n = self.u32()? as usize;
+        if n > MAX_SEQ {
+            return None;
+        }
+        Some(n)
+    }
+}
+
+/// CRC-32 (IEEE 802.3, reflected, polynomial 0xEDB88320) — the checksum
+/// gzip/zlib/PNG use.  Bitwise per byte: the durable formats checksum a
+/// few kilobytes per commit, so a lookup table would buy nothing.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let lsb = crc & 1;
+            crc >>= 1;
+            if lsb != 0 {
+                crc ^= 0xEDB8_8320;
+            }
+        }
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The standard CRC-32 check value: crc32("123456789").
+    #[test]
+    fn crc32_matches_the_ieee_check_value() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"a"), crc32(b"b"));
+    }
+
+    #[test]
+    fn scalar_roundtrip_is_bit_exact() {
+        let mut w = ByteWriter::new();
+        w.u8(0xAB);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 7);
+        w.f64(-0.0);
+        w.f64(f64::NAN);
+        w.f64(1.0 / 3.0);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8(), Some(0xAB));
+        assert_eq!(r.u32(), Some(0xDEAD_BEEF));
+        assert_eq!(r.u64(), Some(u64::MAX - 7));
+        assert_eq!(r.f64().map(f64::to_bits), Some((-0.0f64).to_bits()));
+        assert_eq!(r.f64().map(f64::to_bits), Some(f64::NAN.to_bits()));
+        assert_eq!(r.f64(), Some(1.0 / 3.0));
+        assert!(r.is_empty());
+        assert_eq!(r.u8(), None, "reads past the end must fail, not panic");
+    }
+
+    #[test]
+    fn sequences_roundtrip_and_truncation_is_detected() {
+        let mut w = ByteWriter::new();
+        w.u32s(&[1, 2, 3]);
+        w.u64s(&[]);
+        w.f64s(&[0.5, -1.5]);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u32s(), Some(vec![1, 2, 3]));
+        assert_eq!(r.u64s(), Some(vec![]));
+        assert_eq!(r.f64s(), Some(vec![0.5, -1.5]));
+        assert!(r.is_empty());
+        // Chop the last byte: the final sequence must fail to decode.
+        let mut r = ByteReader::new(&buf[..buf.len() - 1]);
+        assert_eq!(r.u32s(), Some(vec![1, 2, 3]));
+        assert_eq!(r.u64s(), Some(vec![]));
+        assert_eq!(r.f64s(), None);
+    }
+
+    #[test]
+    fn absurd_sequence_counts_are_rejected() {
+        let mut w = ByteWriter::new();
+        w.u32(u32::MAX); // claims 4 billion entries in an empty buffer
+        let buf = w.into_inner();
+        assert_eq!(ByteReader::new(&buf).u64s(), None);
+    }
+}

@@ -5,7 +5,9 @@
 //! bench harness and property-test driver live here, each with their own
 //! unit tests.
 
+pub mod atomic;
 pub mod bits;
+pub mod bytes;
 pub mod cli;
 pub mod fnv;
 pub mod json;

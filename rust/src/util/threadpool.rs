@@ -181,6 +181,22 @@ impl WorkerPool {
         self.shared.dispatched.load(Ordering::Relaxed)
     }
 
+    /// Jobs waiting in the pool queue (not ones already running).
+    pub fn pending_jobs(&self) -> usize {
+        self.shared.queue.lock().unwrap().jobs.len()
+    }
+
+    /// Wait until the job queue is empty — the graceful-shutdown drain.
+    /// Every `map` call blocks its caller until its items settle, so at a
+    /// scenario-commit boundary the queue holds at most stale helper jobs
+    /// (whose item queues are already empty and who return immediately);
+    /// a yield loop drains them in microseconds.
+    pub fn quiesce(&self) {
+        while self.pending_jobs() > 0 {
+            std::thread::yield_now();
+        }
+    }
+
     fn submit(&self, job: Job) {
         let mut q = self.shared.queue.lock().unwrap();
         q.jobs.push_back(job);
@@ -555,6 +571,18 @@ mod tests {
         assert!(out[1].is_err());
         let empty: Vec<std::thread::Result<usize>> = pool.try_map(Vec::new(), 4, |i: usize| i);
         assert!(empty.is_empty());
+    }
+
+    /// After a map settles, `quiesce` returns with an empty queue — the
+    /// graceful-shutdown drain has nothing left to wait for.
+    #[test]
+    fn quiesce_returns_once_the_queue_drains() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.pending_jobs(), 0);
+        let out = pool.map((0..32).collect::<Vec<usize>>(), 2, |i| i + 1);
+        assert_eq!(out.len(), 32);
+        pool.quiesce();
+        assert_eq!(pool.pending_jobs(), 0);
     }
 
     /// Private pools work standalone and join their threads on drop.

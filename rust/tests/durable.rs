@@ -1,0 +1,364 @@
+//! Crash-safety integration tests: kill a journaled grid sweep at every
+//! cell boundary, resume it, and require the concatenated record stream
+//! and the final summary to be byte-identical to an uninterrupted run —
+//! under both trial-concurrency modes.  Corruption (torn tails, bit
+//! flips, damaged cache segments, stale calibrations) must always
+//! degrade to recomputation, never to wrong results (DESIGN.md
+//! invariant 9).
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use mixoff::app::workloads;
+use mixoff::coordinator::BatchOffloader;
+use mixoff::devices::{EvalCache, PlanCache};
+use mixoff::durable::{load_caches, save_caches, JournalHeader, SweepJournal, JOURNAL_VERSION};
+use mixoff::record::{JsonlSink, NullSink, RecordSink, SharedBuffer, WardenSet};
+use mixoff::report;
+use mixoff::scenario::{run_streamed_durable, GridSpec};
+use mixoff::util::Json;
+use mixoff::{Durability, StreamOutcome};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mixoff-durable-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A 4-cell grid (2 fleets x 2 seeds) of single-application cells, so
+/// every cell's record stream is deterministic and byte-comparable.
+fn grid(concurrency: &str) -> GridSpec {
+    let src = format!(
+        r#"{{"name": "t", "trial_concurrency": "{concurrency}",
+            "axes": {{
+                "fleets": [{{"manycore": {{}}}}, {{}}],
+                "workloads": [{{"workload": "vecadd", "n": 1048576}}],
+                "seeds": [1, 2]
+            }}}}"#
+    );
+    GridSpec::from_str(&src, "t").unwrap()
+}
+
+fn header_for(grid: &GridSpec) -> JournalHeader {
+    JournalHeader { version: JOURNAL_VERSION, grid: grid.fingerprint(), total: grid.len() }
+}
+
+/// The stream summary with its two wall-clock-dependent fields blanked —
+/// everything else must reproduce bit-exactly across resume.
+fn normalized(out: &StreamOutcome) -> String {
+    let mut j = report::stream_to_json(out);
+    if let Json::Obj(m) = &mut j {
+        m.insert("wall_seconds".into(), Json::Null);
+        m.insert("scenarios_per_sec".into(), Json::Null);
+    }
+    j.to_string()
+}
+
+/// Kill at every cell boundary `k` (shutdown requested while cell `k-1`
+/// runs, honored right after it commits), resume, and compare both the
+/// concatenated record streams and the final summaries against one
+/// uninterrupted run.
+fn kill_and_resume_round_trip(concurrency: &str) {
+    let g = grid(concurrency);
+    let total = g.len();
+    let wardens = WardenSet::default();
+
+    let clean_buf = SharedBuffer::new();
+    let clean_sink: Arc<dyn RecordSink> = Arc::new(JsonlSink::to_buffer(&clean_buf));
+    let clean = run_streamed_durable(
+        g.scenarios(),
+        total,
+        &clean_sink,
+        &wardens,
+        &mut Durability::none(),
+    )
+    .unwrap();
+    clean_sink.close().unwrap();
+    let clean_stream = clean_buf.contents();
+    let clean_summary = normalized(&clean);
+    assert_eq!(clean.scenarios_run, total);
+
+    for k in 1..=total {
+        let jdir = tmp_dir(&format!("resume-{concurrency}-{k}"));
+        let header = header_for(&g);
+
+        let buf1 = SharedBuffer::new();
+        let sink1: Arc<dyn RecordSink> = Arc::new(JsonlSink::to_buffer(&buf1));
+        let opened = SweepJournal::open(&jdir, &header, 1, false).unwrap();
+        assert!(opened.replay.is_empty());
+        let mut dur = Durability::none();
+        dur.journal = Some(opened.journal);
+        let trip = dur.shutdown.clone();
+        let cells = g.scenarios().inspect(|cell| {
+            if cell.index + 1 == k {
+                trip.request();
+            }
+        });
+        let out1 = run_streamed_durable(cells, total, &sink1, &wardens, &mut dur).unwrap();
+        sink1.close().unwrap();
+        assert_eq!(out1.scenarios_run, k, "shutdown must land exactly at the cell boundary");
+        let reason = out1.stopped.as_deref().unwrap();
+        assert!(reason.contains(&format!("resumable at cell {k}/{total}")), "{reason}");
+        drop(dur);
+
+        let opened = SweepJournal::open(&jdir, &header, 1, true).unwrap();
+        assert!(opened.warnings.is_empty(), "{:?}", opened.warnings);
+        assert_eq!(opened.replay.len(), k, "every committed cell must replay");
+        let mut dur = Durability::none();
+        dur.journal = Some(opened.journal);
+        dur.replay = opened.replay;
+        let buf2 = SharedBuffer::new();
+        let sink2: Arc<dyn RecordSink> = Arc::new(JsonlSink::to_buffer(&buf2));
+        let out2 = run_streamed_durable(g.scenarios(), total, &sink2, &wardens, &mut dur).unwrap();
+        sink2.close().unwrap();
+
+        assert!(out2.stopped.is_none());
+        assert_eq!(
+            format!("{}{}", buf1.contents(), buf2.contents()),
+            clean_stream,
+            "concatenated interrupted+resumed streams must be byte-identical \
+             to the uninterrupted stream (killed at cell {k}, {concurrency})"
+        );
+        assert_eq!(
+            normalized(&out2),
+            clean_summary,
+            "resumed summary must be bit-identical (killed at cell {k}, {concurrency})"
+        );
+        let _ = fs::remove_dir_all(&jdir);
+    }
+}
+
+#[test]
+fn kill_and_resume_is_byte_identical_staged() {
+    kill_and_resume_round_trip("staged");
+}
+
+#[test]
+fn kill_and_resume_is_byte_identical_sequential() {
+    kill_and_resume_round_trip("sequential");
+}
+
+/// The journal's sink-offset contract end to end with a real file sink:
+/// the resumed file — uncommitted tail truncated, remainder appended —
+/// equals a clean run's file byte for byte.
+#[test]
+fn file_sink_resume_truncates_to_the_committed_offset() {
+    let g = grid("staged");
+    let total = g.len();
+    let wardens = WardenSet::default();
+    let dir = tmp_dir("sink-file");
+    fs::create_dir_all(&dir).unwrap();
+    let clean_path = dir.join("clean.jsonl");
+    let resumed_path = dir.join("resumed.jsonl");
+    let jdir = dir.join("journal");
+
+    let sink: Arc<dyn RecordSink> = Arc::new(JsonlSink::create(&clean_path).unwrap());
+    run_streamed_durable(g.scenarios(), total, &sink, &wardens, &mut Durability::none()).unwrap();
+    sink.close().unwrap();
+
+    let header = header_for(&g);
+    let opened = SweepJournal::open(&jdir, &header, 1, false).unwrap();
+    let mut dur = Durability::none();
+    dur.journal = Some(opened.journal);
+    let trip = dur.shutdown.clone();
+    let sink: Arc<dyn RecordSink> = Arc::new(JsonlSink::create(&resumed_path).unwrap());
+    let cells = g.scenarios().inspect(|cell| {
+        if cell.index == 1 {
+            trip.request();
+        }
+    });
+    let out = run_streamed_durable(cells, total, &sink, &wardens, &mut dur).unwrap();
+    sink.close().unwrap();
+    assert_eq!(out.scenarios_run, 2);
+    drop(dur);
+
+    // Simulate an uncommitted tail the crash left in the sink file.
+    {
+        use std::io::Write as _;
+        let mut f = fs::OpenOptions::new().append(true).open(&resumed_path).unwrap();
+        f.write_all(b"{\"event\": \"uncommitted\"}\n").unwrap();
+    }
+
+    let opened = SweepJournal::open(&jdir, &header, 1, true).unwrap();
+    assert_eq!(opened.replay.len(), 2);
+    let offset = opened.replay.last().and_then(|c| c.sink_bytes).unwrap();
+    let sink: Arc<dyn RecordSink> = Arc::new(JsonlSink::resume(&resumed_path, offset).unwrap());
+    let mut dur = Durability::none();
+    dur.journal = Some(opened.journal);
+    dur.replay = opened.replay;
+    let out = run_streamed_durable(g.scenarios(), total, &sink, &wardens, &mut dur).unwrap();
+    sink.close().unwrap();
+    assert!(out.stopped.is_none());
+    assert_eq!(
+        fs::read(&resumed_path).unwrap(),
+        fs::read(&clean_path).unwrap(),
+        "resumed sink file must be byte-identical to the clean run's"
+    );
+    let contents = fs::read_to_string(&resumed_path).unwrap();
+    assert!(!contents.contains("uncommitted"), "the torn tail must be gone");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Runs the grid journaled (no sink), damages the journal with `damage`,
+/// then resumes and returns (replayed cell count, warnings, resumed
+/// summary) plus the clean summary to compare against.
+fn damaged_resume(
+    tag: &str,
+    damage: impl FnOnce(&mut Vec<u8>),
+) -> (usize, Vec<String>, String, String) {
+    let g = grid("staged");
+    let total = g.len();
+    let wardens = WardenSet::default();
+    let jdir = tmp_dir(tag);
+    let header = header_for(&g);
+
+    let sink: Arc<dyn RecordSink> = Arc::new(NullSink);
+    let opened = SweepJournal::open(&jdir, &header, 1, false).unwrap();
+    let mut dur = Durability::none();
+    dur.journal = Some(opened.journal);
+    let clean = run_streamed_durable(g.scenarios(), total, &sink, &wardens, &mut dur).unwrap();
+    let clean_summary = normalized(&clean);
+    drop(dur);
+
+    let jpath = SweepJournal::path_in(&jdir);
+    let mut bytes = fs::read(&jpath).unwrap();
+    damage(&mut bytes);
+    fs::write(&jpath, &bytes).unwrap();
+
+    let opened = SweepJournal::open(&jdir, &header, 1, true).unwrap();
+    let replayed = opened.replay.len();
+    let warnings = opened.warnings.clone();
+    let mut dur = Durability::none();
+    dur.journal = Some(opened.journal);
+    dur.replay = opened.replay;
+    let out = run_streamed_durable(g.scenarios(), total, &sink, &wardens, &mut dur).unwrap();
+    assert!(out.stopped.is_none());
+    let _ = fs::remove_dir_all(&jdir);
+    (replayed, warnings, normalized(&out), clean_summary)
+}
+
+#[test]
+fn torn_journal_tail_recomputes_the_lost_cell_only() {
+    let total = grid("staged").len();
+    let (replayed, warnings, resumed, clean) = damaged_resume("torn", |bytes| {
+        let len = bytes.len();
+        bytes.truncate(len - 5);
+    });
+    assert_eq!(replayed, total - 1, "only the torn final frame is lost");
+    assert!(warnings.iter().any(|w| w.contains("torn tail")), "{warnings:?}");
+    assert_eq!(resumed, clean, "recomputation must reproduce the clean summary");
+}
+
+#[test]
+fn bit_flipped_journal_frame_recomputes_from_the_damage_on() {
+    let (replayed, warnings, resumed, clean) = damaged_resume("bitflip", |bytes| {
+        // Flip one byte inside cell 0's payload: 8-byte frame header +
+        // header payload, then cell 0's own 8-byte frame header.
+        let header_len = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+        bytes[8 + header_len + 8 + 2] ^= 0x40;
+    });
+    assert_eq!(replayed, 0, "nothing at or after the flipped frame is trusted");
+    assert!(!warnings.is_empty());
+    assert_eq!(resumed, clean, "full recomputation must reproduce the clean summary");
+}
+
+#[test]
+fn persistent_caches_answer_a_warm_run_bit_identically() {
+    let dir = tmp_dir("cache-warm");
+    let apps = vec![workloads::by_name("vecadd").unwrap()];
+    let b = BatchOffloader::default();
+    let plans = PlanCache::new();
+    let evals = EvalCache::new();
+    let cold = b.run_with_caches(&apps, &plans, &evals);
+    assert!(cold.eval_misses > 0, "cold caches must miss");
+    save_caches(&dir, &plans, &evals).unwrap();
+
+    let plans2 = PlanCache::new();
+    let evals2 = EvalCache::new();
+    let load = load_caches(&dir, &plans2, &evals2);
+    assert!(load.warnings.is_empty(), "{:?}", load.warnings);
+    assert!(load.plans > 0 && load.evals > 0, "{load:?}");
+    let warm = b.run_with_caches(&apps, &plans2, &evals2);
+    assert_eq!(warm.eval_misses, 0, "disk-warmed cache must answer every measurement");
+    assert_eq!(warm.plan_compiles, 0, "disk-warmed plans must not recompile");
+    assert_eq!(warm.eval_hit_rate(), 1.0);
+    assert_eq!(
+        cold.outcomes[0].chosen.as_ref().map(|c| (c.kind, c.seconds.to_bits())),
+        warm.outcomes[0].chosen.as_ref().map(|c| (c.kind, c.seconds.to_bits())),
+        "warm hits must be bit-identical to recomputation"
+    );
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_cache_segments_degrade_to_a_correct_cold_run() {
+    let dir = tmp_dir("cache-corrupt");
+    let apps = vec![workloads::by_name("vecadd").unwrap()];
+    let b = BatchOffloader::default();
+    let plans = PlanCache::new();
+    let evals = EvalCache::new();
+    let cold = b.run_with_caches(&apps, &plans, &evals);
+    save_caches(&dir, &plans, &evals).unwrap();
+
+    for entry in fs::read_dir(&dir).unwrap().flatten() {
+        let path = entry.path();
+        if path.extension().map(|x| x == "bin").unwrap_or(false) {
+            let mut bytes = fs::read(&path).unwrap();
+            bytes[10] ^= 0x01;
+            fs::write(&path, bytes).unwrap();
+        }
+    }
+
+    let plans2 = PlanCache::new();
+    let evals2 = EvalCache::new();
+    let load = load_caches(&dir, &plans2, &evals2);
+    assert_eq!(load.plans + load.evals, 0, "corrupt segments must not load");
+    assert_eq!(load.warnings.len(), 2, "{:?}", load.warnings);
+    let recomputed = b.run_with_caches(&apps, &plans2, &evals2);
+    assert!(recomputed.eval_misses > 0, "a damaged cache means a cold recompute");
+    assert_eq!(
+        cold.outcomes[0].chosen.as_ref().map(|c| (c.kind, c.seconds.to_bits())),
+        recomputed.outcomes[0].chosen.as_ref().map(|c| (c.kind, c.seconds.to_bits())),
+        "corruption must never change results"
+    );
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// A calibration change alters the device config fingerprint, so every
+/// persisted entry's scope key stops matching: zero hits, no explicit
+/// invalidation step needed.
+#[test]
+fn calibration_change_invalidates_persisted_cache_entries() {
+    let dir = tmp_dir("cache-stale");
+    let base = GridSpec::from_str(
+        r#"{"axes": {"fleets": [{"gpu": {}}],
+                     "workloads": [{"workload": "vecadd", "n": 1048576}]}}"#,
+        "base",
+    )
+    .unwrap();
+    let calibrated = GridSpec::from_str(
+        r#"{"axes": {"fleets": [{"gpu": {}}],
+                     "calibrations": [{"gpu": {"flops": 2}}],
+                     "workloads": [{"workload": "vecadd", "n": 1048576}]}}"#,
+        "cal",
+    )
+    .unwrap();
+
+    let plans = PlanCache::new();
+    let evals = EvalCache::new();
+    let spec = base.scenario(0).spec;
+    spec.run_with_caches(spec.concurrency, &plans, &evals).unwrap();
+    save_caches(&dir, &plans, &evals).unwrap();
+
+    let plans2 = PlanCache::new();
+    let evals2 = EvalCache::new();
+    let load = load_caches(&dir, &plans2, &evals2);
+    assert!(load.plans > 0 && load.evals > 0, "{load:?}");
+    let spec = calibrated.scenario(0).spec;
+    let outcome = spec.run_with_caches(spec.concurrency, &plans2, &evals2).unwrap();
+    assert_eq!(outcome.batch.eval_hits, 0, "stale-calibration entries must never match");
+    assert_eq!(outcome.batch.plan_hits, 0);
+    assert!(outcome.batch.eval_misses > 0);
+    let _ = fs::remove_dir_all(&dir);
+}

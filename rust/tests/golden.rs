@@ -20,6 +20,7 @@ use std::path::{Path, PathBuf};
 use mixoff::coordinator::TrialConcurrency;
 use mixoff::report;
 use mixoff::scenario;
+use mixoff::util::atomic::atomic_write;
 
 fn scenarios_dir() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios")
@@ -83,9 +84,12 @@ fn golden_replay_corpus() {
             "{file}: staged outcome diverged from sequential"
         );
 
+        // Golden files are published atomically: a test run killed
+        // mid-regeneration must never leave a truncated golden that a
+        // later run would diff against as truth.
         let gpath = golden_dir.join(&file);
         if update {
-            fs::write(&gpath, &rendered).expect("write golden");
+            atomic_write(&gpath, rendered.as_bytes()).expect("write golden");
             continue;
         }
         match fs::read_to_string(&gpath) {
@@ -97,7 +101,7 @@ fn golden_replay_corpus() {
             Err(_) => {
                 // Bootstrap: no golden yet for this scenario.  Write the
                 // baseline so the next run (and `git status`) sees it.
-                fs::write(&gpath, &rendered).expect("write golden");
+                atomic_write(&gpath, rendered.as_bytes()).expect("write golden");
                 eprintln!(
                     "golden: bootstrapped {} (commit it to pin this scenario)",
                     gpath.display()
