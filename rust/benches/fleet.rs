@@ -1,0 +1,85 @@
+//! Fleet-simulation throughput over the committed scenario corpus
+//! (`scenarios/*.json`): every scenario's offload search runs once,
+//! untimed, to fix its fleet model; the timed section is pure slot
+//! stepping — arrivals, least-loaded placement, FIFO service, stats.
+//!
+//! Emits `BENCH_fleet.json` (see EXPERIMENTS.md #Perf):
+//!   * `fleet.slots_per_sec` — simulated slots per wall second across
+//!     the whole corpus (target ≥ 10k slots/s);
+//!   * `fleet.requests_per_sec` — completed requests per wall second in
+//!     the same pass (load-dependent companion number).
+
+mod support;
+
+use std::path::Path;
+use std::time::Instant;
+
+use mixoff::devices::{EvalCache, PlanCache};
+use mixoff::fleet::{
+    ArrivalProcess, ArrivalSpec, FleetModel, FleetSim, FleetSpec, ServiceProcess,
+};
+use mixoff::record::NullSink;
+use mixoff::scenario;
+
+/// Slots each corpus scenario steps per timed pass.
+const SLOTS: u64 = 20_000;
+
+/// A load point just under each model's saturation arrival rate, so the
+/// timed loop exercises queues and placement rather than idling.
+fn spec_for(model: &FleetModel) -> FleetSpec {
+    let rate = (0.8 * model.saturation_rate()).max(0.5);
+    FleetSpec {
+        slots: SLOTS,
+        slot_s: 1.0,
+        arrivals: ArrivalSpec { process: ArrivalProcess::Deterministic, rate },
+        seed: 7,
+        queue_capacity: Some(64),
+        service: ServiceProcess::Deterministic,
+    }
+}
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios");
+    let scenarios = scenario::load_dir(&dir).expect("scenario corpus loads");
+    support::metric("fleet.scenarios", scenarios.len() as f64, "scenarios", None);
+
+    // Untimed setup: one offload search per scenario (shared sweep
+    // caches), whose outcomes fix the fleet models.
+    let plans = PlanCache::new();
+    let evals = EvalCache::new();
+    let models: Vec<FleetModel> = scenarios
+        .iter()
+        .map(|s| {
+            let mut spec = s.spec.clone();
+            spec.fleet = None;
+            let out = spec
+                .run_with_caches(spec.concurrency, &plans, &evals)
+                .expect("scenario search runs");
+            FleetModel::from_outcomes(&spec.devices, &out.batch.outcomes)
+        })
+        .collect();
+
+    let corpus_pass = || {
+        let mut completed = 0u64;
+        for model in &models {
+            let fspec = spec_for(model);
+            let mut sim = FleetSim::new(model.clone(), &fspec);
+            let run = sim.run("bench", &NullSink);
+            assert_eq!(run.slots, SLOTS, "every pass must step the full horizon");
+            completed += run.completed;
+        }
+        completed
+    };
+
+    support::bench("fleet.corpus", 3, || {
+        corpus_pass();
+    });
+
+    let t0 = Instant::now();
+    let completed = corpus_pass();
+    let elapsed = t0.elapsed().as_secs_f64();
+    let total_slots = SLOTS * models.len() as u64;
+    support::metric("fleet.slots_per_sec", total_slots as f64 / elapsed, "slots/s", None);
+    support::metric("fleet.requests_per_sec", completed as f64 / elapsed, "requests/s", None);
+    support::finish("fleet");
+}

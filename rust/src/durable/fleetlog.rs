@@ -1,0 +1,332 @@
+//! The fleet log: slot checkpoints for long fleet simulations.
+//!
+//! A saturation study runs hundreds of thousands of slots per scenario;
+//! `mixoff fleet <scenario> --journal dir/ --checkpoint-every K` appends
+//! one checkpoint frame every K slots so a crash or Ctrl-C resumes from
+//! the last checkpoint instead of slot 0.  Resume is *byte-identical*:
+//! a checkpoint carries the simulator's complete state — slot cursor,
+//! exact RNG words, every queued request, incremental backlogs, the
+//! latency histogram (`FleetSim::state_json`) — and
+//! `tests/fleet.rs` pins that a restored sim continues the exact slot
+//! timeline and summary of an uninterrupted run.
+//!
+//! ## File format (`<dir>/fleet.journal`)
+//!
+//! The sweep journal's framing, reused verbatim (`journal::write_frame`
+//! / `journal::frame_at`): `[len: u32 LE][crc32: u32 LE][payload]`.
+//! Frame 0 is a header binding the log to one (scenario, fleet spec)
+//! pair by FNV fingerprint — resuming a log written for a different
+//! scenario or an edited spec would fabricate a timeline, so any
+//! mismatch degrades to a fresh run with a warning.  Every later frame
+//! is one checkpoint; the scanner keeps the *last* intact one (frames
+//! are cumulative snapshots, not deltas) and truncates torn tails.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::fleet::FleetSpec;
+use crate::util::fnv::Fnv;
+use crate::util::json::Json;
+
+use super::journal::{frame_at, parse_payload, write_frame, JOURNAL_VERSION};
+
+const FLEETLOG_KIND: &str = "mixoff-fleet-journal";
+
+/// Identity of the run a fleet log belongs to.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FleetLogHeader {
+    pub version: u32,
+    pub scenario: String,
+    /// FNV over the scenario name and the fleet spec's canonical JSON —
+    /// covers every simulation knob (slots, rates, seed, capacity).
+    pub fingerprint: u64,
+}
+
+impl FleetLogHeader {
+    pub fn new(scenario: &str, spec: &FleetSpec) -> Self {
+        let mut h = Fnv::new();
+        h.bytes(scenario.as_bytes());
+        h.bytes(spec.to_json().to_string().as_bytes());
+        Self { version: JOURNAL_VERSION, scenario: scenario.to_string(), fingerprint: h.finish() }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("kind".into(), Json::Str(FLEETLOG_KIND.into()));
+        m.insert("version".into(), Json::Num(self.version as f64));
+        m.insert("scenario".into(), Json::Str(self.scenario.clone()));
+        m.insert("fingerprint".into(), Json::Str(format!("{:016x}", self.fingerprint)));
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        if j.get("kind").and_then(|k| k.as_str()) != Some(FLEETLOG_KIND) {
+            bail!("not a {FLEETLOG_KIND} header");
+        }
+        let version = j
+            .req("version")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("header version is not an integer"))? as u32;
+        let scenario = j
+            .req("scenario")?
+            .as_str()
+            .ok_or_else(|| anyhow!("header scenario is not a string"))?
+            .to_string();
+        let hex = j
+            .req("fingerprint")?
+            .as_str()
+            .ok_or_else(|| anyhow!("header fingerprint is not a string"))?;
+        let fingerprint = u64::from_str_radix(hex, 16)
+            .map_err(|e| anyhow!("header fingerprint {hex:?}: {e}"))?;
+        Ok(Self { version, scenario, fingerprint })
+    }
+}
+
+/// One recovered checkpoint: the slot it was taken at plus the full
+/// simulator state to hand to `FleetSim::restore`.
+#[derive(Clone, Debug)]
+pub struct FleetCheckpoint {
+    pub slot: u64,
+    pub state: Json,
+}
+
+/// An open fleet log plus what its existing contents yielded.
+pub struct OpenedFleetLog {
+    pub log: FleetLog,
+    /// The last intact checkpoint (empty for a fresh log or when
+    /// `resume` was off).
+    pub checkpoint: Option<FleetCheckpoint>,
+    /// Notes about anything discarded on the way in (torn tails,
+    /// foreign headers) — printed to stderr, never trusted.
+    pub warnings: Vec<String>,
+}
+
+/// Append-side handle.  Every checkpoint frame is synced before
+/// [`FleetLog::append`] returns: checkpoints are rare (every K slots)
+/// and a checkpoint that might not survive a crash is worthless.
+pub struct FleetLog {
+    file: File,
+    path: PathBuf,
+}
+
+impl FleetLog {
+    /// The fleet log file inside a `--journal` directory.
+    pub fn path_in(dir: &Path) -> PathBuf {
+        dir.join("fleet.journal")
+    }
+
+    /// Open `dir`'s fleet log for the run identified by `header`.  Same
+    /// contract as the sweep journal: with `resume` and a matching
+    /// intact header, the last checkpoint is returned and appends
+    /// continue after it; any mismatch or damage starts fresh with a
+    /// warning — corruption degrades to recomputation, never to a
+    /// fabricated timeline.
+    pub fn open(dir: &Path, header: &FleetLogHeader, resume: bool) -> Result<OpenedFleetLog> {
+        std::fs::create_dir_all(dir).map_err(|e| anyhow!("{}: {e}", dir.display()))?;
+        let path = Self::path_in(dir);
+        let mut warnings = Vec::new();
+        if resume && path.exists() {
+            match scan_fleetlog(&path) {
+                Ok(s) if s.header == *header => {
+                    if let Some(w) = s.warning {
+                        warnings.push(w);
+                    }
+                    let mut file = OpenOptions::new()
+                        .write(true)
+                        .open(&path)
+                        .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+                    file.set_len(s.intact_bytes)
+                        .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+                    file.seek(SeekFrom::End(0))
+                        .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+                    let log = FleetLog { file, path };
+                    return Ok(OpenedFleetLog { log, checkpoint: s.checkpoint, warnings });
+                }
+                Ok(s) => warnings.push(format!(
+                    "{}: fleet log belongs to a different run (found {:?}, expected {:?}); \
+                     discarding it and restarting from slot 0",
+                    path.display(),
+                    s.header,
+                    header
+                )),
+                Err(e) => warnings.push(format!(
+                    "{}: unreadable fleet log ({e}); discarding it and restarting from slot 0",
+                    path.display()
+                )),
+            }
+        }
+        let mut file = File::create(&path).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        write_frame(&mut file, header.to_json().to_string().as_bytes())
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        file.sync_all().map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Ok(OpenedFleetLog { log: FleetLog { file, path }, checkpoint: None, warnings })
+    }
+
+    /// Append one checkpoint frame and sync it to disk.
+    pub fn append(&mut self, slot: u64, state: &Json) -> Result<()> {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("slot".into(), Json::Num(slot as f64));
+        m.insert("state".into(), state.clone());
+        let payload = Json::Obj(m).to_string();
+        write_frame(&mut self.file, payload.as_bytes())
+            .map_err(|e| anyhow!("{}: {e}", self.path.display()))?;
+        self.file.sync_data().map_err(|e| anyhow!("{}: {e}", self.path.display()))?;
+        Ok(())
+    }
+}
+
+/// What scanning an existing fleet log yielded.
+pub struct FleetLogScan {
+    pub header: FleetLogHeader,
+    /// The last intact checkpoint, if any frame survived.
+    pub checkpoint: Option<FleetCheckpoint>,
+    /// Byte length of the intact prefix; everything past it is torn.
+    pub intact_bytes: u64,
+    pub warning: Option<String>,
+}
+
+/// Read and verify an existing fleet log, keeping the last intact
+/// checkpoint.  Errors only when the header frame itself is unreadable.
+pub fn scan_fleetlog(path: &Path) -> Result<FleetLogScan> {
+    let bytes = std::fs::read(path).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let (mut off, header_payload) =
+        frame_at(&bytes, 0).ok_or_else(|| anyhow!("missing or torn header frame"))?;
+    let header = FleetLogHeader::from_json(&parse_payload(header_payload)?)?;
+    let mut checkpoint: Option<FleetCheckpoint> = None;
+    let mut frames = 0usize;
+    let mut warning = None;
+    while off < bytes.len() {
+        let Some((next, payload)) = frame_at(&bytes, off) else {
+            warning = Some(format!(
+                "torn tail: {} trailing bytes after {frames} checkpoints failed the \
+                 length/CRC check and were discarded",
+                bytes.len() - off
+            ));
+            break;
+        };
+        let decoded = parse_payload(payload).and_then(|j| {
+            let slot = j
+                .req("slot")?
+                .as_f64()
+                .filter(|s| *s >= 0.0 && s.fract() == 0.0)
+                .ok_or_else(|| anyhow!("checkpoint slot is not an integer"))?
+                as u64;
+            Ok(FleetCheckpoint { slot, state: j.req("state")?.clone() })
+        });
+        match decoded {
+            Ok(cp) => {
+                checkpoint = Some(cp);
+                frames += 1;
+                off = next;
+            }
+            Err(e) => {
+                warning = Some(format!(
+                    "undecodable checkpoint after {frames} intact ones ({e}); \
+                     discarding it and the rest"
+                ));
+                break;
+            }
+        }
+    }
+    Ok(FleetLogScan { header, checkpoint, intact_bytes: off as u64, warning })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::{ArrivalProcess, ArrivalSpec, ServiceProcess};
+
+    fn spec() -> FleetSpec {
+        FleetSpec {
+            slots: 100,
+            slot_s: 1.0,
+            arrivals: ArrivalSpec { process: ArrivalProcess::Poisson, rate: 1.5 },
+            seed: 3,
+            queue_capacity: None,
+            service: ServiceProcess::Deterministic,
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("mixoff-fleetlog-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn state(slot: u64) -> Json {
+        Json::parse(&format!(r#"{{"slot": {slot}, "marker": "s{slot}"}}"#)).unwrap()
+    }
+
+    #[test]
+    fn last_checkpoint_wins_and_roundtrips() {
+        let dir = tmp_dir("roundtrip");
+        let header = FleetLogHeader::new("fleet-nominal", &spec());
+        let opened = FleetLog::open(&dir, &header, false).unwrap();
+        assert!(opened.checkpoint.is_none());
+        let mut log = opened.log;
+        for slot in [25u64, 50, 75] {
+            log.append(slot, &state(slot)).unwrap();
+        }
+        drop(log);
+        let opened = FleetLog::open(&dir, &header, true).unwrap();
+        let cp = opened.checkpoint.expect("last checkpoint survives");
+        assert_eq!(cp.slot, 75);
+        assert_eq!(cp.state.to_string(), state(75).to_string());
+        assert!(opened.warnings.is_empty(), "{:?}", opened.warnings);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_falls_back_to_the_previous_checkpoint() {
+        let dir = tmp_dir("torn");
+        let header = FleetLogHeader::new("fleet-nominal", &spec());
+        let mut log = FleetLog::open(&dir, &header, false).unwrap().log;
+        log.append(25, &state(25)).unwrap();
+        log.append(50, &state(50)).unwrap();
+        drop(log);
+        let path = FleetLog::path_in(&dir);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        let opened = FleetLog::open(&dir, &header, true).unwrap();
+        assert_eq!(opened.checkpoint.unwrap().slot, 25, "torn frame 50 is discarded");
+        assert!(opened.warnings.iter().any(|w| w.contains("torn tail")), "{:?}", opened.warnings);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn edited_spec_or_other_scenario_restarts_fresh() {
+        let dir = tmp_dir("foreign");
+        let header = FleetLogHeader::new("fleet-nominal", &spec());
+        let mut log = FleetLog::open(&dir, &header, false).unwrap().log;
+        log.append(25, &state(25)).unwrap();
+        drop(log);
+        // Same scenario, different slot count: different fingerprint.
+        let edited = FleetSpec { slots: 999, ..spec() };
+        let other = FleetLogHeader::new("fleet-nominal", &edited);
+        assert_ne!(header, other);
+        let opened = FleetLog::open(&dir, &other, true).unwrap();
+        assert!(opened.checkpoint.is_none(), "a different run's checkpoint must never restore");
+        assert!(
+            opened.warnings.iter().any(|w| w.contains("different run")),
+            "{:?}",
+            opened.warnings
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_off_ignores_existing_checkpoints() {
+        let dir = tmp_dir("noresume");
+        let header = FleetLogHeader::new("fleet-nominal", &spec());
+        let mut log = FleetLog::open(&dir, &header, false).unwrap().log;
+        log.append(25, &state(25)).unwrap();
+        drop(log);
+        let opened = FleetLog::open(&dir, &header, false).unwrap();
+        assert!(opened.checkpoint.is_none(), "without --resume the log restarts");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -318,7 +318,9 @@ impl SweepJournal {
     }
 }
 
-fn write_frame(file: &mut File, payload: &[u8]) -> std::io::Result<()> {
+/// Write one `[len][crc32][payload]` frame (shared with the fleet log —
+/// same torn-tail/corruption story for both journals).
+pub(crate) fn write_frame(file: &mut File, payload: &[u8]) -> std::io::Result<()> {
     let mut frame = Vec::with_capacity(payload.len() + 8);
     frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     frame.extend_from_slice(&crc32(payload).to_le_bytes());
@@ -340,7 +342,7 @@ pub struct JournalScan {
 
 /// Decode the frame at `off`: `Some((next_offset, payload))` iff the
 /// length fits, the payload is fully present and the CRC matches.
-fn frame_at(bytes: &[u8], off: usize) -> Option<(usize, &[u8])> {
+pub(crate) fn frame_at(bytes: &[u8], off: usize) -> Option<(usize, &[u8])> {
     let header = bytes.get(off..off + 8)?;
     let len = u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
     if len > MAX_FRAME {
@@ -354,7 +356,7 @@ fn frame_at(bytes: &[u8], off: usize) -> Option<(usize, &[u8])> {
     Some((off + 8 + len, payload))
 }
 
-fn parse_payload(payload: &[u8]) -> Result<Json> {
+pub(crate) fn parse_payload(payload: &[u8]) -> Result<Json> {
     let text = std::str::from_utf8(payload).map_err(|e| anyhow!("not UTF-8: {e}"))?;
     Json::parse(text)
 }

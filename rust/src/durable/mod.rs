@@ -27,10 +27,12 @@
 //! inconsistency.
 
 pub mod cachefile;
+pub mod fleetlog;
 pub mod journal;
 pub mod shutdown;
 
 pub use cachefile::{load_caches, save_caches, CacheLoad};
+pub use fleetlog::{scan_fleetlog, FleetCheckpoint, FleetLog, FleetLogHeader, OpenedFleetLog};
 pub use journal::{
     scan, CommittedCell, JournalHeader, JournalScan, OpenedJournal, SweepJournal, JOURNAL_VERSION,
 };

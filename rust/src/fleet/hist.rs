@@ -1,0 +1,176 @@
+//! Deterministic log-scale latency histogram for tail percentiles.
+//!
+//! The fleet simulator records one sojourn time per completed request;
+//! a saturation sweep completes millions, so percentiles cannot come
+//! from a sorted `Vec`.  [`Hist`] buckets by the *bit pattern* of the
+//! `f64` — exponent plus the top [`SUB_BITS`] mantissa bits — so
+//! bucketing is pure integer arithmetic: platform-stable (no `log`
+//! calls), O(1) per sample, and bounded relative error per bucket
+//! (≤ 2^-SUB_BITS ≈ 3%).  Buckets are kept sparse (a `BTreeMap`), so a
+//! run whose latencies span a few decades holds a few hundred entries,
+//! and the whole histogram serializes into a checkpoint frame
+//! (`to_json`/`from_json`) for byte-identical resume.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// Mantissa bits per bucket: 2^5 = 32 sub-buckets per power of two.
+const SUB_BITS: u32 = 5;
+
+/// Sparse log-scale histogram over non-negative `f64` samples.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Hist {
+    /// bucket id → sample count.  Id 0 holds zero/negative samples;
+    /// positive finite samples map to `1 + (exponent << SUB_BITS | top
+    /// mantissa bits)`, which sorts by magnitude.
+    buckets: BTreeMap<u32, u64>,
+    count: u64,
+}
+
+fn bucket_of(v: f64) -> u32 {
+    if !(v > 0.0) || !v.is_finite() {
+        return 0;
+    }
+    let bits = v.to_bits();
+    let exp = ((bits >> 52) & 0x7FF) as u32;
+    let sub = ((bits >> (52 - SUB_BITS)) & ((1 << SUB_BITS) - 1)) as u32;
+    1 + ((exp << SUB_BITS) | sub)
+}
+
+/// The lower edge of a bucket — the value percentile queries report.
+fn bucket_floor(id: u32) -> f64 {
+    if id == 0 {
+        return 0.0;
+    }
+    let raw = (id - 1) as u64;
+    let exp = (raw >> SUB_BITS) & 0x7FF;
+    let sub = raw & ((1 << SUB_BITS) - 1);
+    f64::from_bits((exp << 52) | (sub << (52 - SUB_BITS)))
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, v: f64) {
+        *self.buckets.entry(bucket_of(v)).or_insert(0) += 1;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// The q-quantile (q in [0, 1]) as the lower edge of the bucket
+    /// holding the rank-⌈q·n⌉ sample.  0.0 on an empty histogram, so
+    /// reported percentiles are always finite.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (&id, &n) in &self.buckets {
+            seen += n;
+            if seen >= rank {
+                return bucket_floor(id);
+            }
+        }
+        // Unreachable: Σ counts == self.count.  Keep the walk total.
+        bucket_floor(*self.buckets.keys().next_back().unwrap())
+    }
+
+    /// Checkpoint form: `{"<bucket id>": count, ...}` (sparse, sorted).
+    pub fn to_json(&self) -> Json {
+        let m = self
+            .buckets
+            .iter()
+            .filter(|(_, &n)| n > 0)
+            .map(|(&id, &n)| (format!("{id}"), Json::Num(n as f64)))
+            .collect();
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let Json::Obj(m) = j else {
+            bail!("histogram: expected an object of bucket counts");
+        };
+        let mut h = Hist::new();
+        for (k, v) in m {
+            let id: u32 = k.parse().map_err(|_| anyhow!("histogram: bad bucket id {k:?}"))?;
+            let n = v
+                .as_f64()
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                .ok_or_else(|| anyhow!("histogram: bucket {k:?} count must be a whole number"))?
+                as u64;
+            if n > 0 {
+                h.buckets.insert(id, n);
+                h.count += n;
+            }
+        }
+        Ok(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_sort_by_magnitude_and_floors_bound_samples() {
+        let samples = [1e-9, 0.5, 1.0, 1.5, 2.0, 3.75, 1e6];
+        for w in samples.windows(2) {
+            assert!(bucket_of(w[0]) <= bucket_of(w[1]), "{w:?}");
+        }
+        for &v in &samples {
+            let floor = bucket_floor(bucket_of(v));
+            assert!(floor <= v, "floor {floor} above sample {v}");
+            assert!(v < floor * (1.0 + 2.0 / (1u64 << SUB_BITS) as f64), "bucket too wide at {v}");
+        }
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(-1.0), 0);
+        assert_eq!(bucket_floor(0), 0.0);
+    }
+
+    #[test]
+    fn quantiles_track_a_known_distribution() {
+        let mut h = Hist::new();
+        for i in 1..=1000 {
+            h.add(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!((p50 - 500.0).abs() / 500.0 < 0.05, "p50 {p50}");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.05, "p99 {p99}");
+        assert!(p50 <= p99);
+        assert_eq!(h.quantile(0.0), h.quantile(1e-9), "rank clamps to the first sample");
+    }
+
+    #[test]
+    fn empty_histogram_reports_finite_zero_quantiles() {
+        let h = Hist::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let mut h = Hist::new();
+        for v in [0.0, 0.125, 3.5, 3.6, 1e12, 7e-5] {
+            h.add(v);
+            h.add(v);
+        }
+        let back = Hist::from_json(&Json::parse(&h.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(h, back);
+        assert_eq!(back.quantile(0.95), h.quantile(0.95));
+
+        assert!(Hist::from_json(&Json::parse("[1, 2]").unwrap()).is_err());
+        assert!(Hist::from_json(&Json::parse(r#"{"x": 1}"#).unwrap()).is_err());
+        assert!(Hist::from_json(&Json::parse(r#"{"3": 1.5}"#).unwrap()).is_err());
+    }
+}

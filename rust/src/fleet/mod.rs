@@ -1,0 +1,366 @@
+//! Fleet-scale request-stream simulation over the offload pipeline.
+//!
+//! The paper picks one offload destination per application and stops;
+//! the ROADMAP's north star is a service placing those destinations on
+//! a *finite fleet* under load over time (the companion proposal,
+//! arXiv 2011.12431, frames exactly this commercial setting).  This
+//! module layers a time-sliced queueing simulation on top of a finished
+//! offload batch:
+//!
+//! * the scenario's `devices` object already carries per-device node
+//!   counts and prices — that *is* the fleet ([`sim::FleetModel`]);
+//! * each application's chosen destination and measured seconds become
+//!   its service class and per-request service time;
+//! * requests arrive over discrete slots via a seeded arrival process
+//!   ([`ArrivalProcess`]; the RNG is the crate's xoshiro256** — no
+//!   `Date::now`, no OS randomness anywhere), are placed least-loaded
+//!   within their device class, overflow to the CPU fallback when every
+//!   class node saturates, and are dropped (typed, counted) when the
+//!   CPU is full too;
+//! * per-node utilization, queue depths, waiting times, a running price
+//!   ledger and drop counts are tracked per slot and summarized as
+//!   p50/p95/p99 sojourn latency plus the saturation arrival rate.
+//!
+//! Results stream through the existing `record/` pipeline as
+//! `fleet_slot`/`fleet_summary` events, and the summary joins the
+//! golden serialization (`report::scenario_to_json`) — but only when a
+//! scenario opts in with a `"fleet"` key: **the fleet layer never
+//! alters offload outcomes** (DESIGN.md invariant 10), and a scenario
+//! without the key serializes byte-identically to the pre-fleet tree.
+//!
+//! The committed fleet scenarios use deterministic arrivals and
+//! deterministic service, so the golden path never calls `exp`/`ln`
+//! (platform-stable goldens); the Poisson/exponential knobs exist for
+//! the queueing-theory test battery (`tests/fleet.rs` holds the
+//! simulated mean wait against the M/M/1 formula).
+
+pub mod hist;
+pub mod sim;
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+pub use hist::Hist;
+pub use sim::{run_for_scenario, AppService, FleetClass, FleetModel, FleetRun, FleetSim, NodeStat};
+
+/// How request arrivals are drawn per slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalProcess {
+    /// Exactly `rate` requests per second, spread over slots by a
+    /// fractional accumulator (`⌊(t+1)·r⌋ − ⌊t·r⌋` arrivals in slot t):
+    /// no RNG draws, no libm — the golden-stable default.
+    Deterministic,
+    /// Poisson-distributed slot counts (Knuth's product method over the
+    /// seeded RNG) — the M/M/1 test battery's arrival side.
+    Poisson,
+}
+
+impl ArrivalProcess {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Deterministic => "deterministic",
+            ArrivalProcess::Poisson => "poisson",
+        }
+    }
+
+    fn parse(name: &str) -> Result<Self> {
+        match name {
+            "deterministic" => Ok(ArrivalProcess::Deterministic),
+            "poisson" => Ok(ArrivalProcess::Poisson),
+            other => bail!(
+                "fleet.arrivals.process: unknown arrival process {other:?} \
+                 (known: deterministic, poisson)"
+            ),
+        }
+    }
+}
+
+/// The arrival side of a fleet spec: a process plus its rate in
+/// requests per second.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ArrivalSpec {
+    pub process: ArrivalProcess,
+    pub rate: f64,
+}
+
+impl ArrivalSpec {
+    fn parse(j: &Json) -> Result<Self> {
+        let Json::Obj(m) = j else {
+            bail!("fleet.arrivals: expected an object {{\"process\", \"rate\"}}");
+        };
+        let mut process = None;
+        let mut rate = None;
+        for (k, v) in m {
+            match k.as_str() {
+                "process" => {
+                    let name = v
+                        .as_str()
+                        .ok_or_else(|| anyhow!("fleet.arrivals.process: expected a string"))?;
+                    process = Some(ArrivalProcess::parse(name)?);
+                }
+                "rate" => rate = Some(v),
+                other => bail!("fleet.arrivals: unknown key {other:?} (known: process, rate)"),
+            }
+        }
+        let process =
+            process.ok_or_else(|| anyhow!("fleet.arrivals.process: missing (required)"))?;
+        let rate = rate
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("fleet.arrivals.rate: expected a number (requests/s)"))?;
+        if !(rate > 0.0) || !rate.is_finite() {
+            bail!("fleet.arrivals.rate: must be a positive finite number, got {rate}");
+        }
+        Ok(Self { process, rate })
+    }
+
+    /// CLI form: `<process>:<rate>`, e.g. `poisson:2.5`.
+    pub fn from_flag(s: &str) -> Result<Self> {
+        let (name, rate) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow!("expected <process>:<rate> (e.g. poisson:2.5), got {s:?}"))?;
+        let process = match name {
+            "deterministic" => ArrivalProcess::Deterministic,
+            "poisson" => ArrivalProcess::Poisson,
+            other => bail!("unknown arrival process {other:?} (known: deterministic, poisson)"),
+        };
+        let rate: f64 =
+            rate.parse().map_err(|_| anyhow!("arrival rate must be a number, got {rate:?}"))?;
+        if !(rate > 0.0) || !rate.is_finite() {
+            bail!("arrival rate must be a positive finite number, got {rate}");
+        }
+        Ok(Self { process, rate })
+    }
+
+    fn to_json(self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("process".into(), Json::Str(self.process.label().into()));
+        m.insert("rate".into(), Json::Num(self.rate));
+        Json::Obj(m)
+    }
+}
+
+/// How per-request service times are drawn from the calibrated mean.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServiceProcess {
+    /// Every request costs exactly its class's calibrated seconds — the
+    /// golden-stable default (no RNG, no libm on the service side).
+    Deterministic,
+    /// Exponentially-distributed service around the calibrated mean
+    /// (−ln(1−u) scaling) — what makes a single-node Poisson run an
+    /// M/M/1 queue the analytic tests can hold to the textbook formula.
+    Exponential,
+}
+
+impl ServiceProcess {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ServiceProcess::Deterministic => "deterministic",
+            ServiceProcess::Exponential => "exponential",
+        }
+    }
+}
+
+/// The `"fleet"` key of a scenario spec (all simulation knobs; the
+/// fleet's *shape* — node counts, prices — comes from the scenario's
+/// own `devices` object).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetSpec {
+    /// Time slots to simulate (must be ≥ 1).
+    pub slots: u64,
+    /// Simulated seconds per slot (default 1.0).
+    pub slot_s: f64,
+    pub arrivals: ArrivalSpec,
+    /// Seed of the fleet's own RNG stream — independent of the GA seed,
+    /// like the fault seed (default 0).
+    pub seed: u64,
+    /// Per-node resident cap (waiting + in service).  `None` (the
+    /// default) is unbounded: nothing overflows, nothing drops.
+    pub queue_capacity: Option<usize>,
+    pub service: ServiceProcess,
+}
+
+impl FleetSpec {
+    /// Parse the `"fleet"` object of a scenario spec.  Every error names
+    /// the offending field (`fleet.<field>: …`); `scenario::load_file`
+    /// prefixes the file name.
+    pub fn parse(j: &Json) -> Result<Self> {
+        let Json::Obj(m) = j else {
+            bail!("fleet: expected an object of simulation parameters");
+        };
+        let mut slots = None;
+        let mut slot_s = 1.0;
+        let mut arrivals = None;
+        let mut seed = 0u64;
+        let mut queue_capacity = None;
+        let mut service = ServiceProcess::Deterministic;
+        for (k, v) in m {
+            match k.as_str() {
+                "slots" => slots = Some(pos_int(v, "fleet.slots")?),
+                "slot_s" => {
+                    let s = v
+                        .as_f64()
+                        .filter(|s| *s > 0.0 && s.is_finite())
+                        .ok_or_else(|| anyhow!("fleet.slot_s: must be a positive number"))?;
+                    slot_s = s;
+                }
+                "arrivals" => arrivals = Some(ArrivalSpec::parse(v)?),
+                "seed" => seed = pos_or_zero_int(v, "fleet.seed")?,
+                "queue_capacity" => {
+                    queue_capacity = Some(pos_int(v, "fleet.queue_capacity")? as usize)
+                }
+                "service" => {
+                    let name = v
+                        .as_str()
+                        .ok_or_else(|| anyhow!("fleet.service: expected a string"))?;
+                    service = match name {
+                        "deterministic" => ServiceProcess::Deterministic,
+                        "exponential" => ServiceProcess::Exponential,
+                        other => bail!(
+                            "fleet.service: unknown service process {other:?} \
+                             (known: deterministic, exponential)"
+                        ),
+                    };
+                }
+                other => bail!(
+                    "fleet: unknown key {other:?} (known: slots, slot_s, arrivals, seed, \
+                     queue_capacity, service)"
+                ),
+            }
+        }
+        let slots = slots.ok_or_else(|| anyhow!("fleet.slots: missing (required)"))?;
+        let arrivals = arrivals.ok_or_else(|| anyhow!("fleet.arrivals: missing (required)"))?;
+        Ok(Self { slots, slot_s, arrivals, seed, queue_capacity, service })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("slots".into(), Json::Num(self.slots as f64));
+        m.insert("slot_s".into(), Json::Num(self.slot_s));
+        m.insert("arrivals".into(), self.arrivals.to_json());
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        if let Some(cap) = self.queue_capacity {
+            m.insert("queue_capacity".into(), Json::Num(cap as f64));
+        }
+        m.insert("service".into(), Json::Str(self.service.label().into()));
+        Json::Obj(m)
+    }
+
+    /// Compact axis label for grid coordinates, e.g. `poisson-2.5x1000`.
+    pub fn label(&self) -> String {
+        format!("{}-{}x{}", self.arrivals.process.label(), self.arrivals.rate, self.slots)
+    }
+}
+
+/// Positive integer (≥ 1) that fits f64 exactly.
+fn pos_int(v: &Json, what: &str) -> Result<u64> {
+    let n = pos_or_zero_int(v, what)?;
+    if n == 0 {
+        bail!("{what}: must be a positive integer, got 0");
+    }
+    Ok(n)
+}
+
+/// Non-negative integer that fits f64 exactly.
+fn pos_or_zero_int(v: &Json, what: &str) -> Result<u64> {
+    v.as_f64()
+        .filter(|n| *n >= 0.0 && n.fract() == 0.0 && *n <= (1u64 << 53) as f64)
+        .map(|n| n as u64)
+        .ok_or_else(|| anyhow!("{what}: must be a non-negative integer"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<FleetSpec> {
+        FleetSpec::parse(&Json::parse(s).unwrap())
+    }
+
+    #[test]
+    fn full_spec_parses_and_roundtrips() {
+        let spec = parse(
+            r#"{"slots": 200, "slot_s": 0.5, "seed": 7, "queue_capacity": 4,
+                "service": "exponential",
+                "arrivals": {"process": "poisson", "rate": 2.5}}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.slots, 200);
+        assert_eq!(spec.slot_s, 0.5);
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.queue_capacity, Some(4));
+        assert_eq!(spec.service, ServiceProcess::Exponential);
+        assert_eq!(spec.arrivals.process, ArrivalProcess::Poisson);
+        assert_eq!(spec.arrivals.rate, 2.5);
+        let back = FleetSpec::parse(&Json::parse(&spec.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(spec, back);
+        assert_eq!(spec.label(), "poisson-2.5x200");
+    }
+
+    #[test]
+    fn defaults_fill_in_and_roundtrip() {
+        let spec =
+            parse(r#"{"slots": 10, "arrivals": {"process": "deterministic", "rate": 3}}"#).unwrap();
+        assert_eq!(spec.slot_s, 1.0);
+        assert_eq!(spec.seed, 0);
+        assert_eq!(spec.queue_capacity, None);
+        assert_eq!(spec.service, ServiceProcess::Deterministic);
+        let back = FleetSpec::parse(&Json::parse(&spec.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn field_errors_name_the_field() {
+        let cases: &[(&str, &str)] = &[
+            (r#"{"arrivals": {"process": "poisson", "rate": 1}}"#, "fleet.slots: missing"),
+            (
+                r#"{"slots": 0, "arrivals": {"process": "poisson", "rate": 1}}"#,
+                "fleet.slots: must be a positive integer",
+            ),
+            (r#"{"slots": 5}"#, "fleet.arrivals: missing"),
+            (
+                r#"{"slots": 5, "arrivals": {"process": "weibull", "rate": 1}}"#,
+                "unknown arrival process \"weibull\"",
+            ),
+            (
+                r#"{"slots": 5, "arrivals": {"process": "poisson", "rate": -2}}"#,
+                "fleet.arrivals.rate: must be a positive finite number",
+            ),
+            (
+                r#"{"slots": 5, "arrivals": {"process": "poisson"}}"#,
+                "fleet.arrivals.rate: expected a number",
+            ),
+            (
+                r#"{"slots": 5, "arrivals": {"process": "poisson", "rate": 1}, "qcap": 3}"#,
+                "fleet: unknown key \"qcap\"",
+            ),
+            (
+                r#"{"slots": 5, "arrivals": {"process": "poisson", "rate": 1}, "queue_capacity": 0}"#,
+                "fleet.queue_capacity: must be a positive integer",
+            ),
+            (
+                r#"{"slots": 5, "arrivals": {"process": "poisson", "rate": 1}, "service": "uniform"}"#,
+                "fleet.service: unknown service process \"uniform\"",
+            ),
+            ("[1]", "fleet: expected an object"),
+        ];
+        for (src, want) in cases {
+            let err = parse(src).unwrap_err().to_string();
+            assert!(err.contains(want), "{src}: expected {want:?} in {err:?}");
+        }
+    }
+
+    #[test]
+    fn cli_arrival_flag_parses_and_rejects() {
+        let a = ArrivalSpec::from_flag("poisson:2.5").unwrap();
+        assert_eq!(a.process, ArrivalProcess::Poisson);
+        assert_eq!(a.rate, 2.5);
+        let d = ArrivalSpec::from_flag("deterministic:4").unwrap();
+        assert_eq!(d.process, ArrivalProcess::Deterministic);
+        for bad in ["poisson", "weibull:1", "poisson:x", "poisson:-1", "poisson:0"] {
+            assert!(ArrivalSpec::from_flag(bad).is_err(), "{bad}");
+        }
+    }
+}

@@ -1,0 +1,935 @@
+//! The slot-stepped fleet simulator: model, queues, stats, checkpoints.
+//!
+//! [`FleetModel::from_outcomes`] turns a finished offload batch into a
+//! service model — the scenario's device fleet (node counts and prices
+//! from `devices/spec.rs`, the fig. 3 defaults where not overridden)
+//! plus one service profile per application (its chosen destination's
+//! measured seconds; the single-core baseline as the CPU fallback).
+//! [`FleetSim`] then advances discrete time slots:
+//!
+//! 1. **arrivals** — the slot's request count comes from the arrival
+//!    process (deterministic accumulator or seeded Poisson); requests
+//!    round-robin across applications and are stamped at slot start;
+//! 2. **placement** — least-loaded-first (smallest backlog seconds, tie
+//!    to the lowest node index) within the app's device class; when
+//!    every class node is at `queue_capacity` the request overflows to
+//!    the CPU fallback at its baseline service time; when the CPU is
+//!    full too it is dropped, counted against the class that refused it;
+//! 3. **service** — each node consumes up to `slot_s` seconds of FIFO
+//!    work; completions record sojourn (arrival → completion) and
+//!    waiting time and feed the latency histogram and per-node ledger.
+//!
+//! Everything is a pure function of (model, spec): same inputs, same
+//! seed ⇒ byte-identical slot timeline and summary under any trial
+//! concurrency or worker-pool size (`tests/fleet.rs` pins this).  The
+//! whole mid-run state serializes to JSON (`state_json`/`restore`), so
+//! `durable/fleetlog.rs` can checkpoint long runs and resume them
+//! byte-identically.  [`FleetSim::finalize`] asserts the conservation
+//! invariant — arrivals = completed + in-queue + dropped — on every run.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::OffloadOutcome;
+use crate::devices::{default_param, DeviceKind, DeviceSpec, EnvSpec};
+use crate::record::{FleetSlotRow, FleetSummaryRow, RecordEvent, RecordSink};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::hist::Hist;
+use super::{ArrivalProcess, FleetSpec, ServiceProcess};
+
+/// JSON-safe number (non-finite values have no JSON literal).
+fn num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// One device class of the fleet: `count` identical nodes at one price.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetClass {
+    /// Spec-file device key: `cpu`, `manycore`, `gpu` or `fpga`.
+    pub device: String,
+    pub count: usize,
+    /// Per-node price — the scenario's `price_usd` override or the
+    /// fig. 3 default.  The ledger charges busy node-seconds × price.
+    pub price_usd: f64,
+}
+
+/// One application's service profile in the request mix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AppService {
+    pub app: String,
+    /// Index into [`FleetModel::classes`] of the chosen destination.
+    pub class: usize,
+    /// Mean per-request service seconds on the chosen destination.
+    pub service_s: f64,
+    /// Mean per-request service seconds on the CPU fallback (the
+    /// single-core baseline).
+    pub fallback_s: f64,
+}
+
+/// The service model a fleet simulation runs over.  Class 0 is always
+/// the baseline CPU (the overflow destination).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetModel {
+    pub classes: Vec<FleetClass>,
+    pub apps: Vec<AppService>,
+}
+
+fn node_price(key: &str, d: &DeviceSpec) -> f64 {
+    d.params.get("price_usd").copied().or_else(|| default_param(key, "price_usd")).unwrap_or(0.0)
+}
+
+impl FleetModel {
+    /// Build the model a scenario implies: its device fleet plus one
+    /// service profile per finished application.  An app whose search
+    /// chose no destination (or a CPU trial) is served by the CPU class
+    /// at its baseline seconds.
+    pub fn from_outcomes(env: &EnvSpec, outcomes: &[OffloadOutcome]) -> Self {
+        let mut classes = vec![FleetClass {
+            device: "cpu".into(),
+            count: env.cpu.count,
+            price_usd: node_price("cpu", &env.cpu),
+        }];
+        let mut index: BTreeMap<&str, usize> = BTreeMap::new();
+        for (key, dev) in [
+            ("manycore", env.manycore.as_ref()),
+            ("gpu", env.gpu.as_ref()),
+            ("fpga", env.fpga.as_ref()),
+        ] {
+            if let Some(d) = dev {
+                index.insert(key, classes.len());
+                classes.push(FleetClass {
+                    device: key.into(),
+                    count: d.count,
+                    price_usd: node_price(key, d),
+                });
+            }
+        }
+        let class_of = |kind: DeviceKind| match kind {
+            DeviceKind::CpuSingle => 0,
+            DeviceKind::ManyCore => index.get("manycore").copied().unwrap_or(0),
+            DeviceKind::Gpu => index.get("gpu").copied().unwrap_or(0),
+            DeviceKind::Fpga => index.get("fpga").copied().unwrap_or(0),
+        };
+        let apps = outcomes
+            .iter()
+            .map(|o| {
+                let (class, service_s) = match &o.chosen {
+                    Some(c) => (class_of(c.kind.device), c.seconds.max(0.0)),
+                    None => (0, o.baseline_seconds.max(0.0)),
+                };
+                AppService {
+                    app: o.app_name.clone(),
+                    class,
+                    service_s,
+                    fallback_s: o.baseline_seconds.max(0.0),
+                }
+            })
+            .collect();
+        Self { classes, apps }
+    }
+
+    /// The arrival rate (requests/s) at which the busiest class's
+    /// offered load reaches its node capacity: min over classes of
+    /// `count / w_c`, where `w_c` is the mean service seconds one
+    /// request of the round-robin mix puts on class `c`.  0.0 when no
+    /// class carries work (nothing to saturate).
+    pub fn saturation_rate(&self) -> f64 {
+        if self.apps.is_empty() {
+            return 0.0;
+        }
+        let mut work = vec![0.0f64; self.classes.len()];
+        for a in &self.apps {
+            work[a.class] += a.service_s / self.apps.len() as f64;
+        }
+        let mut sat = f64::INFINITY;
+        for (c, w) in self.classes.iter().zip(&work) {
+            if *w > 0.0 {
+                sat = sat.min(c.count as f64 / w);
+            }
+        }
+        if sat.is_finite() {
+            sat
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One queued request.  `service_s` is the drawn service time (kept for
+/// the waiting-time split); `remaining_s` counts down as nodes serve.
+#[derive(Clone, Debug)]
+struct Request {
+    arrival_s: f64,
+    service_s: f64,
+    remaining_s: f64,
+}
+
+#[derive(Clone, Debug)]
+struct Node {
+    class: usize,
+    queue: VecDeque<Request>,
+    /// Remaining work seconds across the queue — the least-loaded
+    /// placement key.  Maintained incrementally (and checkpointed, so a
+    /// resumed run ties placement exactly like the uninterrupted one).
+    backlog_s: f64,
+    busy_s: f64,
+    completed: u64,
+    peak_queue: usize,
+}
+
+/// Per-node summary statistics of a finished run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeStat {
+    pub device: String,
+    /// Node index within its device class.
+    pub node: usize,
+    pub price_usd: f64,
+    pub busy_s: f64,
+    /// busy seconds / simulated horizon.
+    pub utilization: f64,
+    /// busy node-seconds × per-node price.
+    pub ledger_usd_s: f64,
+    pub completed: u64,
+    pub peak_queue: usize,
+    /// Requests still resident when the run ended.
+    pub queued: usize,
+}
+
+/// End-of-run summary: the payload of a `fleet_summary` record and the
+/// `"fleet_sim"` member of the golden serialization.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetRun {
+    pub slots: u64,
+    pub slot_s: f64,
+    pub arrivals: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    /// Requests the chosen class refused that the CPU fallback absorbed.
+    pub overflowed: u64,
+    /// Requests still queued or in service at the end.
+    pub resident: u64,
+    pub mean_wait_s: f64,
+    pub mean_sojourn_s: f64,
+    pub p50_sojourn_s: f64,
+    pub p95_sojourn_s: f64,
+    pub p99_sojourn_s: f64,
+    pub saturation_rate_per_s: f64,
+    /// Σ busy node-seconds × per-node price, whole fleet.
+    pub ledger_usd_s: f64,
+    pub nodes: Vec<NodeStat>,
+    /// Drops charged to the device class that refused the request.
+    pub drops_by_class: Vec<(String, u64)>,
+}
+
+impl FleetRun {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("slots".into(), Json::Num(self.slots as f64));
+        m.insert("slot_s".into(), num(self.slot_s));
+        m.insert("arrivals".into(), Json::Num(self.arrivals as f64));
+        m.insert("completed".into(), Json::Num(self.completed as f64));
+        m.insert("dropped".into(), Json::Num(self.dropped as f64));
+        m.insert("overflowed".into(), Json::Num(self.overflowed as f64));
+        m.insert("resident".into(), Json::Num(self.resident as f64));
+        m.insert("mean_wait_s".into(), num(self.mean_wait_s));
+        m.insert("mean_sojourn_s".into(), num(self.mean_sojourn_s));
+        m.insert("p50_sojourn_s".into(), num(self.p50_sojourn_s));
+        m.insert("p95_sojourn_s".into(), num(self.p95_sojourn_s));
+        m.insert("p99_sojourn_s".into(), num(self.p99_sojourn_s));
+        m.insert("saturation_rate_per_s".into(), num(self.saturation_rate_per_s));
+        m.insert("ledger_usd_s".into(), num(self.ledger_usd_s));
+        m.insert(
+            "drops".into(),
+            Json::Arr(
+                self.drops_by_class
+                    .iter()
+                    .map(|(device, n)| {
+                        let mut d = BTreeMap::new();
+                        d.insert("device".into(), Json::Str(device.clone()));
+                        d.insert("dropped".into(), Json::Num(*n as f64));
+                        Json::Obj(d)
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "nodes".into(),
+            Json::Arr(
+                self.nodes
+                    .iter()
+                    .map(|n| {
+                        let mut d = BTreeMap::new();
+                        d.insert("device".into(), Json::Str(n.device.clone()));
+                        d.insert("node".into(), Json::Num(n.node as f64));
+                        d.insert("price_usd".into(), num(n.price_usd));
+                        d.insert("busy_s".into(), num(n.busy_s));
+                        d.insert("utilization".into(), num(n.utilization));
+                        d.insert("ledger_usd_s".into(), num(n.ledger_usd_s));
+                        d.insert("completed".into(), Json::Num(n.completed as f64));
+                        d.insert("peak_queue".into(), Json::Num(n.peak_queue as f64));
+                        d.insert("queued".into(), Json::Num(n.queued as f64));
+                        Json::Obj(d)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Poisson draw via Knuth's product method.  Never runs on the golden
+/// path (deterministic arrivals draw nothing).
+fn poisson(rng: &mut Rng, mean: f64) -> u64 {
+    let l = (-mean).exp();
+    let mut k = 0u64;
+    let mut p = 1.0f64;
+    loop {
+        p *= rng.f64();
+        if p <= l {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+/// The slot-stepped simulator.  Pure state machine: no clocks, no OS
+/// randomness — every draw comes from the seeded [`Rng`].
+pub struct FleetSim {
+    model: FleetModel,
+    spec: FleetSpec,
+    /// First node index of each class (nodes are grouped by class).
+    class_start: Vec<usize>,
+    nodes: Vec<Node>,
+    slot: u64,
+    rng: Rng,
+    /// Round-robin arrival → application counter.
+    next_app: u64,
+    arrivals: u64,
+    completed: u64,
+    dropped: u64,
+    overflowed: u64,
+    drops_by_class: Vec<u64>,
+    wait_sum_s: f64,
+    sojourn_sum_s: f64,
+    hist: Hist,
+}
+
+impl FleetSim {
+    pub fn new(model: FleetModel, spec: &FleetSpec) -> Self {
+        let mut class_start = Vec::with_capacity(model.classes.len());
+        let mut nodes = Vec::new();
+        for (c, class) in model.classes.iter().enumerate() {
+            class_start.push(nodes.len());
+            for _ in 0..class.count {
+                nodes.push(Node {
+                    class: c,
+                    queue: VecDeque::new(),
+                    backlog_s: 0.0,
+                    busy_s: 0.0,
+                    completed: 0,
+                    peak_queue: 0,
+                });
+            }
+        }
+        let drops = vec![0u64; model.classes.len()];
+        Self {
+            model,
+            spec: spec.clone(),
+            class_start,
+            nodes,
+            slot: 0,
+            rng: Rng::new(spec.seed),
+            next_app: 0,
+            arrivals: 0,
+            completed: 0,
+            dropped: 0,
+            overflowed: 0,
+            drops_by_class: drops,
+            wait_sum_s: 0.0,
+            sojourn_sum_s: 0.0,
+            hist: Hist::new(),
+        }
+    }
+
+    pub fn model(&self) -> &FleetModel {
+        &self.model
+    }
+
+    /// Slots simulated so far.
+    pub fn slot(&self) -> u64 {
+        self.slot
+    }
+
+    /// Least-loaded node of `class` with queue room; ties go to the
+    /// lowest node index.  `None` when every node is at capacity.
+    fn place(&self, class: usize) -> Option<usize> {
+        let start = self.class_start[class];
+        let count = self.model.classes[class].count;
+        let cap = self.spec.queue_capacity.unwrap_or(usize::MAX);
+        let mut best: Option<usize> = None;
+        for i in start..start + count {
+            if self.nodes[i].queue.len() >= cap {
+                continue;
+            }
+            match best {
+                Some(b) if self.nodes[b].backlog_s <= self.nodes[i].backlog_s => {}
+                _ => best = Some(i),
+            }
+        }
+        best
+    }
+
+    fn push(&mut self, node: usize, arrival_s: f64, service_s: f64) {
+        let n = &mut self.nodes[node];
+        n.queue.push_back(Request { arrival_s, service_s, remaining_s: service_s });
+        n.backlog_s += service_s;
+        n.peak_queue = n.peak_queue.max(n.queue.len());
+    }
+
+    /// Advance one slot: draw arrivals, place them, serve every node.
+    /// Returns the slot's record row (scenario label left empty — the
+    /// caller scopes it).
+    pub fn step(&mut self) -> FleetSlotRow {
+        let t = self.slot;
+        let slot_s = self.spec.slot_s;
+        let per_slot = self.spec.arrivals.rate * slot_s;
+        let n = if self.model.apps.is_empty() {
+            0
+        } else {
+            match self.spec.arrivals.process {
+                ArrivalProcess::Deterministic => {
+                    (((t + 1) as f64 * per_slot).floor() - (t as f64 * per_slot).floor()) as u64
+                }
+                ArrivalProcess::Poisson => poisson(&mut self.rng, per_slot),
+            }
+        };
+        let arrival_s = t as f64 * slot_s;
+        let mut drops = 0u64;
+        for _ in 0..n {
+            self.arrivals += 1;
+            let app_i = (self.next_app % self.model.apps.len() as u64) as usize;
+            self.next_app += 1;
+            // One service draw per request, applied as a scale factor, so
+            // a CPU-overflowed request re-uses its draw — placement never
+            // perturbs the RNG stream.
+            let factor = match self.spec.service {
+                ServiceProcess::Deterministic => 1.0,
+                ServiceProcess::Exponential => -(1.0 - self.rng.f64()).ln(),
+            };
+            let (class, service_s, fallback_s) = {
+                let app = &self.model.apps[app_i];
+                (app.class, factor * app.service_s, factor * app.fallback_s)
+            };
+            match self.place(class) {
+                Some(node) => self.push(node, arrival_s, service_s),
+                None => {
+                    let fallback = if class != 0 { self.place(0) } else { None };
+                    match fallback {
+                        Some(node) => {
+                            self.overflowed += 1;
+                            self.push(node, arrival_s, fallback_s);
+                        }
+                        None => {
+                            self.dropped += 1;
+                            self.drops_by_class[class] += 1;
+                            drops += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        let mut completions = 0u64;
+        let mut busy = 0.0f64;
+        for node in &mut self.nodes {
+            let mut budget = slot_s;
+            while budget > 0.0 {
+                let Some(head) = node.queue.front_mut() else { break };
+                if head.remaining_s <= budget {
+                    budget -= head.remaining_s;
+                    node.busy_s += head.remaining_s;
+                    node.backlog_s -= head.remaining_s;
+                    let done = node.queue.pop_front().unwrap();
+                    let completion_s = (t + 1) as f64 * slot_s - budget;
+                    let sojourn = completion_s - done.arrival_s;
+                    self.completed += 1;
+                    node.completed += 1;
+                    self.wait_sum_s += (sojourn - done.service_s).max(0.0);
+                    self.sojourn_sum_s += sojourn;
+                    self.hist.add(sojourn);
+                    completions += 1;
+                } else {
+                    head.remaining_s -= budget;
+                    node.busy_s += budget;
+                    node.backlog_s -= budget;
+                    budget = 0.0;
+                }
+            }
+            busy += slot_s - budget;
+        }
+        self.slot = t + 1;
+
+        FleetSlotRow {
+            scenario: String::new(),
+            slot: t,
+            time_s: (t + 1) as f64 * slot_s,
+            arrivals: n,
+            completions,
+            drops,
+            queue_depth: self.nodes.iter().map(|n| n.queue.len() as u64).sum(),
+            utilization: if self.nodes.is_empty() {
+                0.0
+            } else {
+                busy / (slot_s * self.nodes.len() as f64)
+            },
+        }
+    }
+
+    /// Run the remaining slots, streaming a `fleet_slot` record per slot
+    /// and one final `fleet_summary`, and return the summary.  Starting
+    /// from a restored checkpoint continues the timeline exactly.
+    pub fn run(&mut self, scenario: &str, sink: &dyn RecordSink) -> FleetRun {
+        while self.slot < self.spec.slots {
+            let mut row = self.step();
+            if sink.enabled() {
+                row.scenario = scenario.to_string();
+                sink.emit(&RecordEvent::FleetSlot(row));
+            }
+        }
+        let run = self.finalize();
+        if sink.enabled() {
+            sink.emit(&RecordEvent::FleetSummary(FleetSummaryRow {
+                scenario: scenario.to_string(),
+                summary: run.to_json(),
+            }));
+        }
+        run
+    }
+
+    /// Summarize the run so far.  Panics if the conservation invariant
+    /// — every arrival is completed, in queue, or dropped — is broken:
+    /// a bookkeeping bug must never pass silently.
+    pub fn finalize(&self) -> FleetRun {
+        let resident: u64 = self.nodes.iter().map(|n| n.queue.len() as u64).sum();
+        assert_eq!(
+            self.arrivals,
+            self.completed + resident + self.dropped,
+            "fleet conservation violated: arrivals != completed + in-queue + dropped"
+        );
+        let horizon = self.slot as f64 * self.spec.slot_s;
+        let mut ledger = 0.0f64;
+        let nodes: Vec<NodeStat> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, node)| {
+                let class = &self.model.classes[node.class];
+                let node_ledger = node.busy_s * class.price_usd;
+                ledger += node_ledger;
+                NodeStat {
+                    device: class.device.clone(),
+                    node: i - self.class_start[node.class],
+                    price_usd: class.price_usd,
+                    busy_s: node.busy_s,
+                    utilization: if horizon > 0.0 { node.busy_s / horizon } else { 0.0 },
+                    ledger_usd_s: node_ledger,
+                    completed: node.completed,
+                    peak_queue: node.peak_queue,
+                    queued: node.queue.len(),
+                }
+            })
+            .collect();
+        let mean = |sum: f64| if self.completed > 0 { sum / self.completed as f64 } else { 0.0 };
+        FleetRun {
+            slots: self.slot,
+            slot_s: self.spec.slot_s,
+            arrivals: self.arrivals,
+            completed: self.completed,
+            dropped: self.dropped,
+            overflowed: self.overflowed,
+            resident,
+            mean_wait_s: mean(self.wait_sum_s),
+            mean_sojourn_s: mean(self.sojourn_sum_s),
+            p50_sojourn_s: self.hist.quantile(0.50),
+            p95_sojourn_s: self.hist.quantile(0.95),
+            p99_sojourn_s: self.hist.quantile(0.99),
+            saturation_rate_per_s: self.model.saturation_rate(),
+            ledger_usd_s: ledger,
+            nodes,
+            drops_by_class: self
+                .model
+                .classes
+                .iter()
+                .zip(&self.drops_by_class)
+                .map(|(c, &n)| (c.device.clone(), n))
+                .collect(),
+        }
+    }
+
+    /// Complete mid-run state as JSON — the payload of a fleetlog
+    /// checkpoint frame.  Everything a resumed run needs to continue
+    /// byte-identically: slot cursor, RNG state (exact, hex), queues,
+    /// backlogs, accumulators and the latency histogram.
+    pub fn state_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("slot".into(), Json::Num(self.slot as f64));
+        m.insert(
+            "rng".into(),
+            Json::Arr(self.rng.state().iter().map(|w| Json::Str(format!("{w:016x}"))).collect()),
+        );
+        m.insert("next_app".into(), Json::Num(self.next_app as f64));
+        m.insert("arrivals".into(), Json::Num(self.arrivals as f64));
+        m.insert("completed".into(), Json::Num(self.completed as f64));
+        m.insert("dropped".into(), Json::Num(self.dropped as f64));
+        m.insert("overflowed".into(), Json::Num(self.overflowed as f64));
+        m.insert(
+            "drops_by_class".into(),
+            Json::Arr(self.drops_by_class.iter().map(|&n| Json::Num(n as f64)).collect()),
+        );
+        m.insert("wait_sum_s".into(), num(self.wait_sum_s));
+        m.insert("sojourn_sum_s".into(), num(self.sojourn_sum_s));
+        m.insert("hist".into(), self.hist.to_json());
+        m.insert(
+            "nodes".into(),
+            Json::Arr(
+                self.nodes
+                    .iter()
+                    .map(|n| {
+                        let mut d = BTreeMap::new();
+                        d.insert("busy_s".into(), num(n.busy_s));
+                        d.insert("backlog_s".into(), num(n.backlog_s));
+                        d.insert("completed".into(), Json::Num(n.completed as f64));
+                        d.insert("peak_queue".into(), Json::Num(n.peak_queue as f64));
+                        d.insert(
+                            "queue".into(),
+                            Json::Arr(
+                                n.queue
+                                    .iter()
+                                    .map(|r| {
+                                        Json::Arr(vec![
+                                            num(r.arrival_s),
+                                            num(r.service_s),
+                                            num(r.remaining_s),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        );
+                        Json::Obj(d)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+
+    /// Restore a `state_json` snapshot taken from a sim over the same
+    /// model and spec.  A shape mismatch (different node count) is an
+    /// error, not a silent misresume.
+    pub fn restore(&mut self, j: &Json) -> Result<()> {
+        let f = |key: &str| -> Result<f64> {
+            j.get(key)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("fleet checkpoint: missing number {key:?}"))
+        };
+        let state: Vec<u64> = j
+            .get("rng")
+            .and_then(|v| v.as_arr())
+            .map(|a| {
+                a.iter()
+                    .filter_map(|w| w.as_str())
+                    .filter_map(|w| u64::from_str_radix(w, 16).ok())
+                    .collect()
+            })
+            .unwrap_or_default();
+        let state: [u64; 4] = state
+            .try_into()
+            .map_err(|_| anyhow!("fleet checkpoint: rng state must be four hex words"))?;
+        let nodes = j
+            .get("nodes")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("fleet checkpoint: missing \"nodes\""))?;
+        if nodes.len() != self.nodes.len() {
+            bail!(
+                "fleet checkpoint: {} nodes but the model has {} — wrong scenario or fleet?",
+                nodes.len(),
+                self.nodes.len()
+            );
+        }
+        let drops = j
+            .get("drops_by_class")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("fleet checkpoint: missing \"drops_by_class\""))?;
+        if drops.len() != self.drops_by_class.len() {
+            bail!("fleet checkpoint: drop counters do not match the model's classes");
+        }
+
+        self.slot = f("slot")? as u64;
+        self.next_app = f("next_app")? as u64;
+        self.arrivals = f("arrivals")? as u64;
+        self.completed = f("completed")? as u64;
+        self.dropped = f("dropped")? as u64;
+        self.overflowed = f("overflowed")? as u64;
+        self.wait_sum_s = f("wait_sum_s")?;
+        self.sojourn_sum_s = f("sojourn_sum_s")?;
+        self.rng = Rng::from_state(state);
+        self.drops_by_class = drops
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .map(|n| n as u64)
+                    .ok_or_else(|| anyhow!("fleet checkpoint: bad drop counter"))
+            })
+            .collect::<Result<_>>()?;
+        self.hist = Hist::from_json(
+            j.get("hist").ok_or_else(|| anyhow!("fleet checkpoint: missing \"hist\""))?,
+        )?;
+        for (node, nj) in self.nodes.iter_mut().zip(nodes) {
+            let nf = |key: &str| -> Result<f64> {
+                nj.get(key)
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| anyhow!("fleet checkpoint: node missing {key:?}"))
+            };
+            node.busy_s = nf("busy_s")?;
+            node.backlog_s = nf("backlog_s")?;
+            node.completed = nf("completed")? as u64;
+            node.peak_queue = nf("peak_queue")? as usize;
+            node.queue.clear();
+            let queue = nj
+                .get("queue")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("fleet checkpoint: node missing \"queue\""))?;
+            for r in queue {
+                let r = r
+                    .as_arr()
+                    .filter(|a| a.len() == 3)
+                    .and_then(|a| {
+                        Some(Request {
+                            arrival_s: a[0].as_f64()?,
+                            service_s: a[1].as_f64()?,
+                            remaining_s: a[2].as_f64()?,
+                        })
+                    })
+                    .ok_or_else(|| anyhow!("fleet checkpoint: bad queued request"))?;
+                node.queue.push_back(r);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Run a scenario's fleet simulation: model from (devices, batch),
+/// stream through the (scenario-scoped) sink, return the summary.
+pub fn run_for_scenario(
+    spec: &FleetSpec,
+    env: &EnvSpec,
+    outcomes: &[OffloadOutcome],
+    scenario: &str,
+    sink: &dyn RecordSink,
+) -> FleetRun {
+    let model = FleetModel::from_outcomes(env, outcomes);
+    FleetSim::new(model, spec).run(scenario, sink)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::ArrivalSpec;
+    use crate::record::{MemorySink, NullSink};
+
+    fn model(nodes: usize, service_s: f64) -> FleetModel {
+        FleetModel {
+            classes: vec![FleetClass { device: "cpu".into(), count: nodes, price_usd: 1500.0 }],
+            apps: vec![AppService {
+                app: "unit".into(),
+                class: 0,
+                service_s,
+                fallback_s: service_s,
+            }],
+        }
+    }
+
+    fn spec(slots: u64, rate: f64) -> FleetSpec {
+        FleetSpec {
+            slots,
+            slot_s: 1.0,
+            arrivals: ArrivalSpec { process: ArrivalProcess::Deterministic, rate },
+            seed: 1,
+            queue_capacity: None,
+            service: ServiceProcess::Deterministic,
+        }
+    }
+
+    #[test]
+    fn deterministic_underload_completes_everything_without_waiting() {
+        let spec = spec(100, 0.5);
+        let mut sim = FleetSim::new(model(1, 1.0), &spec);
+        let run = sim.run("t", &NullSink);
+        assert_eq!(run.arrivals, 50);
+        assert_eq!(run.dropped, 0);
+        // The last arrival (slot 98) finishes inside the horizon.
+        assert_eq!(run.completed, 50);
+        assert_eq!(run.resident, 0);
+        assert_eq!(run.mean_wait_s, 0.0, "rate 0.5 on a 1s server never queues");
+        assert!((run.mean_sojourn_s - 1.0).abs() < 1e-9);
+        // Ledger: 50 requests x 1s x 1500 USD.
+        assert!((run.ledger_usd_s - 50.0 * 1500.0).abs() < 1e-6);
+        assert_eq!(run.saturation_rate_per_s, 1.0);
+        assert_eq!(run.nodes.len(), 1);
+        assert!((run.nodes[0].utilization - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fractional_rate_spreads_arrivals_exactly() {
+        let spec = spec(1000, 0.75);
+        let mut sim = FleetSim::new(model(2, 1.0), &spec);
+        let run = sim.run("t", &NullSink);
+        assert_eq!(run.arrivals, 750, "floor accumulator delivers exactly rate x horizon");
+    }
+
+    #[test]
+    fn saturated_bounded_queue_drops_and_conserves() {
+        let mut spec = spec(200, 3.0);
+        spec.queue_capacity = Some(2);
+        let mut sim = FleetSim::new(model(1, 1.0), &spec);
+        let run = sim.run("t", &NullSink);
+        assert_eq!(run.arrivals, 600);
+        assert!(run.dropped > 0, "offered load 3x capacity must drop");
+        assert_eq!(run.arrivals, run.completed + run.resident + run.dropped);
+        assert_eq!(run.drops_by_class, vec![("cpu".to_string(), run.dropped)]);
+        // One node can never serve more than one request-second per second.
+        assert!(run.completed as f64 <= 200.0 + 1.0);
+        assert!(run.nodes[0].utilization > 0.99, "saturated node stays busy");
+        assert!(run.p99_sojourn_s >= run.p50_sojourn_s);
+    }
+
+    #[test]
+    fn least_loaded_placement_balances_twin_nodes() {
+        let spec = spec(100, 2.0);
+        let mut sim = FleetSim::new(model(2, 1.0), &spec);
+        let run = sim.run("t", &NullSink);
+        assert_eq!(run.arrivals, 200);
+        assert_eq!(run.dropped, 0);
+        let (a, b) = (run.nodes[0].completed, run.nodes[1].completed);
+        assert!(a.abs_diff(b) <= 2, "twin nodes split the load: {a} vs {b}");
+    }
+
+    #[test]
+    fn overflow_rides_the_cpu_fallback_before_dropping() {
+        // One GPU node at capacity 1 under rate 2: the surplus lands on
+        // the (fast enough) CPU class instead of dropping.
+        let model = FleetModel {
+            classes: vec![
+                FleetClass { device: "cpu".into(), count: 4, price_usd: 1500.0 },
+                FleetClass { device: "gpu".into(), count: 1, price_usd: 4000.0 },
+            ],
+            apps: vec![AppService {
+                app: "unit".into(),
+                class: 1,
+                service_s: 1.0,
+                fallback_s: 1.0,
+            }],
+        };
+        let mut spec = spec(100, 2.0);
+        spec.queue_capacity = Some(1);
+        let mut sim = FleetSim::new(model, &spec);
+        let run = sim.run("t", &NullSink);
+        assert_eq!(run.dropped, 0, "CPU fallback absorbs the surplus");
+        assert!(run.overflowed > 0);
+        let cpu_completed: u64 =
+            run.nodes.iter().filter(|n| n.device == "cpu").map(|n| n.completed).sum();
+        assert!(cpu_completed > 0, "overflowed requests actually ran on the CPU");
+        assert_eq!(run.arrivals, run.completed + run.resident + run.dropped);
+    }
+
+    #[test]
+    fn slot_records_stream_with_scenario_label_and_summary() {
+        let spec = spec(10, 1.0);
+        let sink = MemorySink::unbounded();
+        let run = FleetSim::new(model(1, 0.5), &spec).run("fleet-unit", &sink);
+        let events = sink.events();
+        assert_eq!(events.len(), 11, "10 slots + 1 summary");
+        assert!(events[..10].iter().all(|e| e.kind() == "fleet_slot"));
+        assert_eq!(events[10].kind(), "fleet_summary");
+        for ev in &events {
+            assert_eq!(ev.to_json().req("scenario").unwrap().as_str(), Some("fleet-unit"));
+        }
+        match &events[10] {
+            RecordEvent::FleetSummary(s) => assert_eq!(s.summary, run.to_json()),
+            other => panic!("unexpected tail event {other:?}"),
+        }
+    }
+
+    #[test]
+    fn checkpoint_restore_resumes_byte_identically() {
+        let mut spec = spec(300, 1.7);
+        spec.arrivals.process = ArrivalProcess::Poisson;
+        spec.service = ServiceProcess::Exponential;
+        spec.seed = 99;
+        spec.queue_capacity = Some(8);
+
+        let m = model(3, 1.2);
+        // Uninterrupted reference.
+        let full_sink = MemorySink::unbounded();
+        let full = FleetSim::new(m.clone(), &spec).run("ckpt", &full_sink);
+
+        // Interrupted twin: 120 slots, snapshot, fresh sim, restore, finish.
+        let mut first = FleetSim::new(m.clone(), &spec);
+        for _ in 0..120 {
+            first.step();
+        }
+        let snap = first.state_json().to_string();
+        let mut resumed = FleetSim::new(m, &spec);
+        resumed.restore(&Json::parse(&snap).unwrap()).unwrap();
+        assert_eq!(resumed.slot(), 120);
+        let tail_sink = MemorySink::unbounded();
+        let second = resumed.run("ckpt", &tail_sink);
+
+        assert_eq!(second.to_json().to_string(), full.to_json().to_string());
+        // The resumed tail of the timeline matches the reference slots
+        // 120.. exactly.
+        let full_events = full_sink.events();
+        let tail_events = tail_sink.events();
+        assert_eq!(tail_events.len(), (300 - 120) + 1);
+        for (a, b) in full_events[120..].iter().zip(&tail_events) {
+            assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        }
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_shapes() {
+        let spec = spec(10, 1.0);
+        let snap = FleetSim::new(model(2, 1.0), &spec).state_json();
+        let mut other = FleetSim::new(model(3, 1.0), &spec);
+        let err = other.restore(&snap).unwrap_err().to_string();
+        assert!(err.contains("2 nodes but the model has 3"), "{err}");
+
+        let mut same = FleetSim::new(model(2, 1.0), &spec);
+        assert!(same.restore(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn saturation_rate_is_the_min_class_capacity() {
+        let m = FleetModel {
+            classes: vec![
+                FleetClass { device: "cpu".into(), count: 2, price_usd: 1500.0 },
+                FleetClass { device: "gpu".into(), count: 1, price_usd: 4000.0 },
+            ],
+            apps: vec![
+                AppService { app: "a".into(), class: 1, service_s: 0.5, fallback_s: 4.0 },
+                AppService { app: "b".into(), class: 0, service_s: 2.0, fallback_s: 2.0 },
+            ],
+        };
+        // Per request: cpu takes 2.0/2 = 1.0s, gpu takes 0.5/2 = 0.25s.
+        // cpu saturates at 2/1.0 = 2 req/s; gpu at 1/0.25 = 4 req/s.
+        assert!((m.saturation_rate() - 2.0).abs() < 1e-12);
+        assert_eq!(FleetModel { classes: m.classes.clone(), apps: vec![] }.saturation_rate(), 0.0);
+    }
+}

@@ -26,6 +26,7 @@ pub mod coordinator;
 pub mod devices;
 pub mod durable;
 pub mod fault;
+pub mod fleet;
 pub mod ga;
 pub mod offload;
 pub mod record;
@@ -42,6 +43,7 @@ pub use coordinator::{
 pub use devices::{DeviceKind, EnvSpec, PlanCache, Testbed};
 pub use durable::{Durability, ShutdownGuard, SweepJournal};
 pub use fault::{FaultPlan, OutageWindow, RetryPolicy};
+pub use fleet::{ArrivalSpec, FleetModel, FleetRun, FleetSim, FleetSpec};
 pub use record::{
     CsvSink, JsonlSink, MemorySink, NullSink, RecordEvent, RecordSink, SharedBuffer, StdoutSink,
     TeeSink, Warden, WardenSet,

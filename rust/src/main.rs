@@ -9,6 +9,8 @@
 //!   devices              the simulated verification environment (fig. 3)
 //!   codegen <workload>   emit annotated source for the chosen pattern
 //!   check <artifact>     run an AOT artifact through PJRT + result check
+//!   fleet <scenario>     time-sliced request-stream simulation over the
+//!                        scenario's chosen offload destinations
 //!
 //! Common options: --target <improvement>, --max-price <usd>, --seed <n>,
 //! --json, --timing.
@@ -23,11 +25,19 @@ use mixoff::app::workloads;
 use mixoff::codegen;
 use mixoff::coordinator::{BatchOffloader, MixedOffloader, TrialConcurrency, UserRequirements};
 use mixoff::devices::{DeviceKind, DeviceModel, Testbed};
-use mixoff::durable::{load_caches, save_caches, JournalHeader, SweepJournal, JOURNAL_VERSION};
+use mixoff::devices::{EvalCache, PlanCache};
+use mixoff::durable::{
+    load_caches, save_caches, FleetLog, FleetLogHeader, JournalHeader, SweepJournal,
+    JOURNAL_VERSION,
+};
 use mixoff::Durability;
 use mixoff::fault::{FaultPlan, OutageWindow};
+use mixoff::fleet::{ArrivalSpec, FleetModel, FleetSim, FleetSpec, ServiceProcess};
 use mixoff::offload::function_block::BlockDb;
-use mixoff::record::{CsvSink, JsonlSink, NullSink, RecordSink, StdoutSink, Warden, WardenSet};
+use mixoff::record::{
+    CsvSink, FleetSummaryRow, JsonlSink, NullSink, RecordEvent, RecordSink, StdoutSink, Warden,
+    WardenSet,
+};
 use mixoff::report;
 use mixoff::runtime::{ResultChecker, Runtime};
 use mixoff::scenario::StreamOutcome;
@@ -132,6 +142,7 @@ fn run() -> Result<()> {
         Some("codegen") => cmd_codegen(&args),
         Some("check") => cmd_check(&args),
         Some("sizing") => cmd_sizing(&args),
+        Some("fleet") => cmd_fleet(&args),
         _ => {
             println!("{}", HELP.trim());
             Ok(())
@@ -164,6 +175,11 @@ usage: mixoff <command> [options]
   codegen <workload>    annotated source for the winning pattern
   check <artifact>      execute an AOT artifact via PJRT + result check
   sizing <workload>     resource-amount sweep for the chosen destination
+  fleet <scenario>      run the scenario's offload search, then replay a
+                        time-sliced request stream over the chosen
+                        destinations (per-node utilization, p50/p95/p99
+                        sojourn latency, price ledger, drops); knobs come
+                        from the scenario's "fleet" key and/or flags
 options: --target <x> --max-price <usd> --seed <n> --json --timing
         --workers <n> (batch: applications in flight at once)
         --trial-concurrency <staged|sequential> (default staged: each
@@ -194,6 +210,16 @@ durability (sweep --grid only; DESIGN.md "Durability & resume"):
           back to recomputation, never wrong results)
         Ctrl-C on a grid sweep stops at the next cell boundary, flushes
         journal and sinks, and reports the resume point
+fleet options (override the scenario's "fleet" key field by field):
+        --slots <n> --arrivals <process>:<rate> (deterministic|poisson)
+        --slot-s <s> --queue-cap <n> --fleet-seed <n>
+        --service <deterministic|exponential>
+        --sink <path> streams fleet_slot/fleet_summary records (same
+          formats as sweep sinks); --json prints the summary JSON
+        --journal <dir> checkpoints sim state every --checkpoint-every
+          <slots> (default 1000); --resume continues the slot timeline
+          from the last intact checkpoint, byte-identical to an
+          uninterrupted run
 "#;
 
 fn cmd_offload(args: &Args) -> Result<()> {
@@ -563,6 +589,128 @@ fn cmd_sizing(args: &Args) -> Result<()> {
     let min = args.get_f64("target")?.unwrap_or(1.0);
     let sweep = mixoff::coordinator::sizing::sweep(&app, chosen.kind.device, &pattern, min);
     print!("{}", mixoff::coordinator::sizing::render(&sweep));
+    Ok(())
+}
+
+/// The simulation knobs for `mixoff fleet`: the scenario's own `fleet`
+/// key overridden field by field by the flags, or — for a scenario
+/// without one — a spec assembled from `--slots` and `--arrivals`.
+fn fleet_spec_from(args: &Args, sc: &mixoff::scenario::Scenario) -> Result<FleetSpec> {
+    let mut fspec = match (&sc.spec.fleet, args.get_u64("slots")?, args.get("arrivals")) {
+        (Some(f), _, _) => f.clone(),
+        (None, Some(slots), Some(arr)) if slots > 0 => FleetSpec {
+            slots,
+            slot_s: 1.0,
+            arrivals: ArrivalSpec::from_flag(arr).map_err(|e| anyhow!("--arrivals: {e}"))?,
+            seed: 0,
+            queue_capacity: None,
+            service: ServiceProcess::Deterministic,
+        },
+        (None, Some(0), _) => bail!("--slots: must be a positive integer, got 0"),
+        (None, ..) => bail!(
+            "{}: scenario has no \"fleet\" key; give at least --slots <n> and \
+             --arrivals <process>:<rate>",
+            sc.path.display()
+        ),
+    };
+    if let Some(n) = args.get_u64("slots")? {
+        if n == 0 {
+            bail!("--slots: must be a positive integer, got 0");
+        }
+        fspec.slots = n;
+    }
+    if let Some(s) = args.get("arrivals") {
+        fspec.arrivals = ArrivalSpec::from_flag(s).map_err(|e| anyhow!("--arrivals: {e}"))?;
+    }
+    if let Some(s) = args.get_f64("slot-s")? {
+        if !(s > 0.0) || !s.is_finite() {
+            bail!("--slot-s: must be a positive number, got {s}");
+        }
+        fspec.slot_s = s;
+    }
+    if let Some(c) = args.get_usize("queue-cap")? {
+        if c == 0 {
+            bail!("--queue-cap: must be a positive integer, got 0");
+        }
+        fspec.queue_capacity = Some(c);
+    }
+    if let Some(s) = args.get_u64("fleet-seed")? {
+        fspec.seed = s;
+    }
+    if let Some(name) = args.get("service") {
+        fspec.service = match name {
+            "deterministic" => ServiceProcess::Deterministic,
+            "exponential" => ServiceProcess::Exponential,
+            other => bail!("--service: expected deterministic|exponential, got {other:?}"),
+        };
+    }
+    Ok(fspec)
+}
+
+/// `mixoff fleet <scenario>`: run the scenario's offload search, build
+/// the fleet model from its chosen destinations, and replay a
+/// time-sliced request stream over it.  The search itself runs exactly
+/// as `sweep` would run it (DESIGN.md invariant 10: the fleet layer
+/// never alters offload outcomes); only fleet records reach the sink.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let path = args.positional.get(1).ok_or_else(|| {
+        anyhow!("usage: mixoff fleet <scenario.json> [--slots <n> --arrivals <process>:<rate>]")
+    })?;
+    let sc = mixoff::scenario::load_file(Path::new(path))?;
+    let fspec = fleet_spec_from(args, &sc)?;
+
+    // The search runs fleet-less and sink-less: the simulation replays
+    // *over* its outcomes, and the fleet sink carries only fleet records.
+    let mut search = sc.spec.clone();
+    search.fleet = None;
+    let outcome = search.run_with_caches(search.concurrency, &PlanCache::new(), &EvalCache::new())?;
+    let model = FleetModel::from_outcomes(&search.devices, &outcome.batch.outcomes);
+    let mut sim = FleetSim::new(model, &fspec);
+
+    let resume = args.flag("resume");
+    let mut flog = None;
+    if let Some(dir) = args.get("journal") {
+        let header = FleetLogHeader::new(&search.name, &fspec);
+        let opened = FleetLog::open(Path::new(dir), &header, resume)?;
+        for w in &opened.warnings {
+            eprintln!("mixoff: fleet journal: {w}");
+        }
+        if let Some(cp) = &opened.checkpoint {
+            sim.restore(&cp.state)?;
+            eprintln!("mixoff: fleet: resuming at slot {}/{} from {dir}", cp.slot, fspec.slots);
+        }
+        flog = Some(opened.log);
+    } else if resume {
+        bail!("--resume needs --journal <dir> to resume from");
+    }
+    let every = args.get_u64("checkpoint-every")?.unwrap_or(1000).max(1);
+
+    let sink = sweep_sink(args)?.unwrap_or_else(|| Arc::new(NullSink) as Arc<dyn RecordSink>);
+    while sim.slot() < fspec.slots {
+        let mut row = sim.step();
+        if sink.enabled() {
+            row.scenario = search.name.clone();
+            sink.emit(&RecordEvent::FleetSlot(row));
+        }
+        if let Some(log) = flog.as_mut() {
+            if sim.slot() % every == 0 || sim.slot() == fspec.slots {
+                log.append(sim.slot(), &sim.state_json())?;
+            }
+        }
+    }
+    let run = sim.finalize();
+    if sink.enabled() {
+        sink.emit(&RecordEvent::FleetSummary(FleetSummaryRow {
+            scenario: search.name.clone(),
+            summary: run.to_json(),
+        }));
+    }
+    sink.close()?;
+    if args.flag("json") {
+        println!("{}", run.to_json());
+    } else {
+        print!("{}", report::render_fleet(&run));
+    }
     Ok(())
 }
 

@@ -102,6 +102,35 @@ pub struct AxisStat {
     pub best_improvement: f64,
 }
 
+/// One time slot of a fleet request-stream simulation (see `fleet/`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetSlotRow {
+    pub scenario: String,
+    /// 0-based slot index.
+    pub slot: u64,
+    /// Simulated seconds at the *end* of this slot.
+    pub time_s: f64,
+    /// Requests that arrived during this slot (placed or dropped).
+    pub arrivals: u64,
+    /// Requests whose service completed during this slot.
+    pub completions: u64,
+    /// Requests dropped this slot (every eligible queue saturated).
+    pub drops: u64,
+    /// Requests resident (queued + in service) after the slot.
+    pub queue_depth: u64,
+    /// Fraction of fleet node-seconds spent serving this slot.
+    pub utilization: f64,
+}
+
+/// End-of-run summary of a fleet simulation.  `summary` is exactly
+/// `report::fleet_to_json` — the same object the golden serialization
+/// embeds, so a JSONL sink doubles as a fleet golden stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetSummaryRow {
+    pub scenario: String,
+    pub summary: Json,
+}
+
 /// One typed event of the streaming record pipeline.
 #[derive(Clone, Debug)]
 pub enum RecordEvent {
@@ -139,6 +168,11 @@ pub enum RecordEvent {
     /// A device quarantined after exhausting its fault retries; its
     /// remaining schedule steps skip with a typed reason.
     Quarantine { scenario: String, app: String, device: String, reason: String },
+    /// One committed time slot of a fleet request-stream simulation.
+    FleetSlot(FleetSlotRow),
+    /// The end-of-run fleet summary (tail latencies, utilization,
+    /// drops, price ledger — see `fleet/sim.rs`).
+    FleetSummary(FleetSummaryRow),
 }
 
 impl RecordEvent {
@@ -154,6 +188,8 @@ impl RecordEvent {
             RecordEvent::Fault { .. } => "fault",
             RecordEvent::Retry { .. } => "retry",
             RecordEvent::Quarantine { .. } => "quarantine",
+            RecordEvent::FleetSlot(_) => "fleet_slot",
+            RecordEvent::FleetSummary(_) => "fleet_summary",
         }
     }
 
@@ -166,7 +202,9 @@ impl RecordEvent {
             | RecordEvent::Clock { scenario, .. }
             | RecordEvent::Fault { scenario, .. }
             | RecordEvent::Retry { scenario, .. }
-            | RecordEvent::Quarantine { scenario, .. } => {
+            | RecordEvent::Quarantine { scenario, .. }
+            | RecordEvent::FleetSlot(FleetSlotRow { scenario, .. })
+            | RecordEvent::FleetSummary(FleetSummaryRow { scenario, .. }) => {
                 *scenario = name.to_string();
             }
             _ => {}
@@ -264,6 +302,20 @@ impl RecordEvent {
                 m.insert("app".into(), Json::Str(app.clone()));
                 m.insert("device".into(), Json::Str(device.clone()));
                 m.insert("reason".into(), Json::Str(reason.clone()));
+            }
+            RecordEvent::FleetSlot(r) => {
+                m.insert("scenario".into(), Json::Str(r.scenario.clone()));
+                m.insert("slot".into(), Json::Num(r.slot as f64));
+                m.insert("time_s".into(), num(r.time_s));
+                m.insert("arrivals".into(), Json::Num(r.arrivals as f64));
+                m.insert("completions".into(), Json::Num(r.completions as f64));
+                m.insert("drops".into(), Json::Num(r.drops as f64));
+                m.insert("queue_depth".into(), Json::Num(r.queue_depth as f64));
+                m.insert("utilization".into(), num(r.utilization));
+            }
+            RecordEvent::FleetSummary(r) => {
+                m.insert("scenario".into(), Json::Str(r.scenario.clone()));
+                m.insert("summary".into(), r.summary.clone());
             }
         }
         Json::Obj(m)
@@ -432,6 +484,34 @@ mod tests {
         let j = events[1].to_json();
         assert_eq!(j.req("attempt").unwrap().as_f64(), Some(2.0));
         assert_eq!(j.req("wait_s").unwrap().as_f64(), Some(60.0));
+    }
+
+    #[test]
+    fn fleet_events_serialize_and_take_the_scenario_label() {
+        let slot = RecordEvent::FleetSlot(FleetSlotRow {
+            scenario: String::new(),
+            slot: 3,
+            time_s: 4.0,
+            arrivals: 2,
+            completions: 1,
+            drops: 0,
+            queue_depth: 5,
+            utilization: 0.75,
+        });
+        let summary = RecordEvent::FleetSummary(FleetSummaryRow {
+            scenario: String::new(),
+            summary: Json::parse(r#"{"p99_sojourn_s": 1.5}"#).unwrap(),
+        });
+        for (ev, kind) in [(&slot, "fleet_slot"), (&summary, "fleet_summary")] {
+            assert_eq!(ev.kind(), kind);
+            let j = ev.with_scenario("fleet-smoke").to_json();
+            assert_eq!(j.req("type").unwrap().as_str(), Some(kind));
+            assert_eq!(j.req("scenario").unwrap().as_str(), Some("fleet-smoke"));
+            assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        }
+        let j = slot.to_json();
+        assert_eq!(j.req("slot").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.req("queue_depth").unwrap().as_f64(), Some(5.0));
     }
 
     #[test]

@@ -283,6 +283,31 @@ fn csv_row(ev: &RecordEvent) -> String {
             f[5] = device.clone();
             f[10] = reason.clone();
         }
+        RecordEvent::FleetSlot(r) => {
+            f[1] = r.scenario.clone();
+            f[4] = "slot".to_string();
+            f[5] = format!("{}", r.slot);
+            f[6] = csv_num(r.time_s);
+            f[7] = csv_num(r.utilization);
+            f[9] = format!("{}", r.arrivals);
+            f[10] = format!(
+                "completions={}, drops={}, queue_depth={}",
+                r.completions, r.drops, r.queue_depth
+            );
+        }
+        RecordEvent::FleetSummary(r) => {
+            f[1] = r.scenario.clone();
+            f[5] = "summary".to_string();
+            f[6] = csv_num(r.summary.get("p99_sojourn_s").and_then(|v| v.as_f64()).unwrap_or(0.0));
+            f[8] = csv_num(r.summary.get("ledger_usd_s").and_then(|v| v.as_f64()).unwrap_or(0.0));
+            f[9] = r
+                .summary
+                .get("completed")
+                .and_then(|v| v.as_f64())
+                .map(|v| format!("{v}"))
+                .unwrap_or_default();
+            f[10] = r.summary.to_string();
+        }
     }
     f.iter().map(|s| csv_escape(s)).collect::<Vec<_>>().join(",")
 }
@@ -556,6 +581,49 @@ mod tests {
                 .count();
             assert_eq!(cells, cols, "{line}");
         }
+    }
+
+    #[test]
+    fn fleet_rows_keep_the_csv_column_count() {
+        use super::super::{FleetSlotRow, FleetSummaryRow};
+        let buf = SharedBuffer::new();
+        let sink = CsvSink::to_buffer(&buf);
+        sink.emit(&RecordEvent::FleetSlot(FleetSlotRow {
+            scenario: "s".into(),
+            slot: 0,
+            time_s: 1.0,
+            arrivals: 2,
+            completions: 1,
+            drops: 0,
+            queue_depth: 1,
+            utilization: 0.5,
+        }));
+        sink.emit(&RecordEvent::FleetSummary(FleetSummaryRow {
+            scenario: "s".into(),
+            summary: Json::parse(
+                r#"{"completed": 10, "ledger_usd_s": 2.5, "p99_sojourn_s": 0.75}"#,
+            )
+            .unwrap(),
+        }));
+        sink.close().unwrap();
+        let lines = buf.lines();
+        let cols = CSV_HEADER.split(',').count();
+        assert_eq!(lines.len(), 3, "header + two rows");
+        for (line, kind) in lines[1..].iter().zip(["fleet_slot", "fleet_summary"]) {
+            assert!(line.starts_with(kind), "{line}");
+            let mut in_quotes = false;
+            let cells = 1 + line
+                .chars()
+                .filter(|c| {
+                    if *c == '"' {
+                        in_quotes = !in_quotes;
+                    }
+                    *c == ',' && !in_quotes
+                })
+                .count();
+            assert_eq!(cells, cols, "{line}");
+        }
+        assert!(lines[2].contains("0.75"), "summary p99 lands in the seconds column");
     }
 
     #[test]

@@ -6,6 +6,7 @@ use std::fmt::{self, Write};
 
 use crate::coordinator::{BatchOutcome, OffloadOutcome, Selection, TrialKind};
 use crate::devices::DeviceKind;
+use crate::fleet::FleetRun;
 use crate::offload::pattern::Method;
 use crate::scenario::{ScenarioOutcome, StreamOutcome, SweepOutcome};
 use crate::util::json::Json;
@@ -401,7 +402,68 @@ pub fn scenario_to_json(s: &ScenarioOutcome) -> Json {
         "apps".into(),
         Json::Arr(s.batch.outcomes.iter().map(to_json_full).collect()),
     );
+    // Fleet-sim extras, emitted only when the spec carried a "fleet" key:
+    // fleet-less scenarios must serialize byte-identically to the
+    // pre-fleet golden corpus (DESIGN.md invariant 10).
+    if let Some(run) = &s.fleet_run {
+        root.insert("fleet_sim".into(), run.to_json());
+    }
     Json::Obj(root)
+}
+
+/// The fleet-simulation report behind `mixoff fleet <scenario>`: totals,
+/// tail latency, saturation headroom, the price ledger and one row per
+/// node, streamed into any [`fmt::Write`] sink.
+pub fn write_fleet<W: Write>(w: &mut W, run: &FleetRun) -> fmt::Result {
+    writeln!(
+        w,
+        "fleet: {} slots x {} s — {} arrivals, {} completed, {} overflowed to CPU, {} dropped, {} resident",
+        run.slots, run.slot_s, run.arrivals, run.completed, run.overflowed, run.dropped,
+        run.resident,
+    )?;
+    writeln!(
+        w,
+        "sojourn: mean {:.4} s (wait {:.4} s)  p50 {:.4} s  p95 {:.4} s  p99 {:.4} s",
+        run.mean_sojourn_s, run.mean_wait_s, run.p50_sojourn_s, run.p95_sojourn_s,
+        run.p99_sojourn_s,
+    )?;
+    writeln!(
+        w,
+        "saturation arrival rate: {:.4} req/s; price ledger: {:.2} USD-s",
+        run.saturation_rate_per_s, run.ledger_usd_s,
+    )?;
+    writeln!(
+        w,
+        "{:<10} {:>5} {:>12} {:>8} {:>10} {:>12} {:>10} {:>7}",
+        "device", "node", "busy [s]", "util", "completed", "ledger", "peak q", "queued"
+    )?;
+    for n in &run.nodes {
+        writeln!(
+            w,
+            "{:<10} {:>5} {:>12.2} {:>7.1}% {:>10} {:>12.1} {:>10} {:>7}",
+            n.device,
+            n.node,
+            n.busy_s,
+            n.utilization * 100.0,
+            n.completed,
+            n.ledger_usd_s,
+            n.peak_queue,
+            n.queued,
+        )?;
+    }
+    for (device, dropped) in &run.drops_by_class {
+        if *dropped > 0 {
+            writeln!(w, "!! {device} refused {dropped} requests (dropped)")?;
+        }
+    }
+    Ok(())
+}
+
+/// [`write_fleet`] into a string pre-sized for the node count.
+pub fn render_fleet(run: &FleetRun) -> String {
+    let mut s = String::with_capacity(96 * (run.nodes.len() + 5));
+    let _ = write_fleet(&mut s, run);
+    s
 }
 
 /// The per-scenario comparison table behind `mixoff sweep <dir>`,
@@ -732,6 +794,42 @@ mod tests {
             assert!(g.req(key).is_ok(), "golden JSON must carry {key:?}");
         }
         assert!(g.to_string().contains("clock"));
+    }
+
+    /// The golden serialization carries a "fleet_sim" member exactly when
+    /// the spec opted in, and the fleet report renders every surface the
+    /// issue names: per-node utilization, tail percentiles, drops, ledger.
+    #[test]
+    fn fleet_sim_joins_the_golden_json_only_on_opt_in() {
+        use crate::scenario::ScenarioSpec;
+        let base = r#"{"applications": [{"workload": "vecadd", "n": 1048576}]"#;
+        let off = ScenarioSpec::from_str(&format!("{base}}}"), "off").unwrap().run().unwrap();
+        assert!(off.fleet_run.is_none());
+        assert!(!scenario_to_json(&off).to_string().contains("fleet_sim"));
+
+        let on = ScenarioSpec::from_str(
+            &format!(
+                r#"{base}, "fleet": {{"slots": 40,
+                    "arrivals": {{"process": "deterministic", "rate": 0.5}}}}}}"#
+            ),
+            "on",
+        )
+        .unwrap()
+        .run()
+        .unwrap();
+        let run = on.fleet_run.as_ref().unwrap();
+        assert_eq!(run.arrivals, 20);
+        let g = scenario_to_json(&on);
+        let sim = g.req("fleet_sim").unwrap();
+        for key in ["arrivals", "completed", "p99_sojourn_s", "ledger_usd_s", "nodes", "drops"] {
+            assert!(sim.req(key).is_ok(), "fleet_sim JSON must carry {key:?}");
+        }
+        assert_eq!(Json::parse(&g.to_string()).unwrap(), g, "round-trips");
+
+        let table = render_fleet(run);
+        for needle in ["fleet: 40 slots", "p99", "saturation arrival rate", "ledger", "util"] {
+            assert!(table.contains(needle), "{needle:?} missing from:\n{table}");
+        }
     }
 
     /// The streaming summary carries the early-exit reason, the frontier

@@ -45,6 +45,10 @@
 //! * `faults` — fault-plan objects (same grammar as a scenario's
 //!   `"faults"`; see `fault/`) or `null` for a fault-free cell; omitted =
 //!   every cell fault-free.  The chaos-sweep axis.
+//! * `arrivals` — fleet-simulation objects (same grammar as a scenario's
+//!   `"fleet"`; see `fleet/`) or `null` for a simulation-free cell;
+//!   omitted = no cell simulates.  The saturation-curve axis: sweep the
+//!   arrival rate across cells to trace latency against offered load.
 //!
 //! Validation is eager and total: device names, parameter names,
 //! multipliers and every workload are checked (and built once) at parse
@@ -59,6 +63,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::coordinator::{SchedulePolicy, TrialConcurrency, UserRequirements};
 use crate::devices::{default_param, known_params, DeviceSpec, EnvSpec, Testbed};
 use crate::fault::FaultPlan;
+use crate::fleet::FleetSpec;
 use crate::util::fnv::Fnv;
 use crate::util::json::Json;
 
@@ -71,8 +76,8 @@ pub type Calibration = BTreeMap<String, BTreeMap<String, f64>>;
 
 /// A declarative scenario grid: shared run configuration plus one list
 /// per axis.  The cross-product (axis order: fleets, calibrations,
-/// price_scales, workloads, seeds, schedules, faults — last axis
-/// fastest) expands lazily into [`ScenarioSpec`]s.
+/// price_scales, workloads, seeds, schedules, faults, arrivals — last
+/// axis fastest) expands lazily into [`ScenarioSpec`]s.
 #[derive(Clone, Debug, PartialEq)]
 pub struct GridSpec {
     pub name: String,
@@ -90,6 +95,9 @@ pub struct GridSpec {
     pub schedules: Vec<SchedulePolicy>,
     /// Fault plans (`None` = fault-free cell) — the chaos-sweep axis.
     pub faults: Vec<Option<FaultPlan>>,
+    /// Fleet-simulation specs (`None` = no simulation) — the
+    /// saturation-curve axis.
+    pub arrivals: Vec<Option<FleetSpec>>,
 }
 
 /// One expanded grid cell: its flat index, the materialized spec, and
@@ -236,6 +244,7 @@ impl GridSpec {
             "seeds",
             "schedules",
             "faults",
+            "arrivals",
         ];
         for k in axes.keys() {
             if !AXES.contains(&k.as_str()) {
@@ -324,6 +333,17 @@ impl GridSpec {
                 .collect::<Result<Vec<_>>>()?,
             None => vec![None],
         };
+        let arrivals = match axis("arrivals")? {
+            Some(items) => items
+                .iter()
+                .enumerate()
+                .map(|(i, j)| match j {
+                    Json::Null => Ok(None),
+                    _ => FleetSpec::parse(j).map(Some).map_err(|e| anyhow!("arrivals[{i}]: {e}")),
+                })
+                .collect::<Result<Vec<_>>>()?,
+            None => vec![None],
+        };
 
         Ok(Self {
             name,
@@ -337,6 +357,7 @@ impl GridSpec {
             seeds,
             schedules,
             faults,
+            arrivals,
         })
     }
 
@@ -395,6 +416,18 @@ impl GridSpec {
                     .collect(),
             ),
         );
+        axes.insert(
+            "arrivals".to_string(),
+            Json::Arr(
+                self.arrivals
+                    .iter()
+                    .map(|f| match f {
+                        Some(s) => s.to_json(),
+                        None => Json::Null,
+                    })
+                    .collect(),
+            ),
+        );
         let mut m = BTreeMap::new();
         m.insert("name".to_string(), Json::Str(self.name.clone()));
         if !self.description.is_empty() {
@@ -427,6 +460,7 @@ impl GridSpec {
             * self.seeds.len()
             * self.schedules.len()
             * self.faults.len()
+            * self.arrivals.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -470,6 +504,7 @@ impl GridSpec {
             rest /= len;
             i
         };
+        let arr_i = pick(self.arrivals.len());
         let fault_i = pick(self.faults.len());
         let sched_i = pick(self.schedules.len());
         let seed_i = pick(self.seeds.len());
@@ -479,7 +514,7 @@ impl GridSpec {
         let fleet_i = pick(self.fleets.len());
 
         let devices = self.cell_fleet(fleet_i, cal_i, price_i);
-        let labels: [(&str, usize, String); 7] = [
+        let labels: [(&str, usize, String); 8] = [
             ("fleet", self.fleets.len(), devices.fleet_label()),
             (
                 "calibration",
@@ -499,6 +534,14 @@ impl GridSpec {
                 self.faults.len(),
                 match &self.faults[fault_i] {
                     Some(p) => p.tag(),
+                    None => "none".to_string(),
+                },
+            ),
+            (
+                "arrivals",
+                self.arrivals.len(),
+                match &self.arrivals[arr_i] {
+                    Some(s) => s.label(),
                     None => "none".to_string(),
                 },
             ),
@@ -525,6 +568,7 @@ impl GridSpec {
                 devices,
                 apps: self.workloads[wl_i].clone(),
                 faults: self.faults[fault_i].clone(),
+                fleet: self.arrivals[arr_i].clone(),
             },
             coords,
         }
@@ -691,6 +735,48 @@ mod tests {
         assert_eq!(g, back);
         // The plan reaches the cell's coordinator.
         assert!(b.spec.offloader().unwrap().faults.is_some());
+    }
+
+    const SATURATION_SRC: &str = r#"{
+        "name": "sat",
+        "axes": {
+            "workloads": [{"workload": "vecadd", "n": 1048576}],
+            "seeds": [1, 2],
+            "arrivals": [null,
+                         {"slots": 20, "arrivals": {"process": "deterministic", "rate": 0.5}},
+                         {"slots": 20, "arrivals": {"process": "deterministic", "rate": 4}}]
+        }
+    }"#;
+
+    #[test]
+    fn arrivals_axis_expands_fastest_and_labels_cells() {
+        let g = GridSpec::from_str(SATURATION_SRC, "sat").unwrap();
+        assert_eq!(g.len(), 2 * 3, "seeds x arrivals");
+        let (a, b, c) = (g.scenario(0), g.scenario(1), g.scenario(2));
+        assert!(a.spec.fleet.is_none());
+        assert_eq!(b.spec.fleet.as_ref().unwrap().arrivals.rate, 0.5);
+        assert_eq!(c.spec.fleet.as_ref().unwrap().arrivals.rate, 4.0);
+        assert_eq!(a.spec.seed, c.spec.seed, "only the arrivals axis moved");
+        assert!(a.coords.iter().any(|(ax, l)| ax == "arrivals" && l == "none"));
+        assert!(
+            b.coords.iter().any(|(ax, l)| ax == "arrivals" && l == "deterministic-0.5x20"),
+            "{:?}",
+            b.coords
+        );
+        // Round-trips with the null entry intact.
+        let back =
+            GridSpec::parse(&Json::parse(&g.to_json().to_string()).unwrap(), "sat").unwrap();
+        assert_eq!(g, back);
+        // A malformed entry names the axis cell.
+        let e = GridSpec::from_str(
+            r#"{"axes": {"workloads": [{"workload": "vecadd"}],
+                "arrivals": [{"slots": 0,
+                              "arrivals": {"process": "deterministic", "rate": 1}}]}}"#,
+            "bad",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("arrivals[0]") && e.contains("fleet.slots"), "{e}");
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub mod spec;
 pub mod sweep;
 
 use crate::coordinator::{BatchOutcome, SchedulePolicy};
+use crate::fleet::FleetRun;
 
 pub use grid::{load_grid, GridScenario, GridSpec};
 pub use spec::{AppSpec, ScenarioSpec};
@@ -43,6 +44,10 @@ pub struct ScenarioOutcome {
     pub fleet: String,
     pub schedule: SchedulePolicy,
     pub batch: BatchOutcome,
+    /// The fleet simulation summary, when the spec carried a `"fleet"`
+    /// key.  `None` for every pre-fleet scenario — the golden
+    /// serialization omits the member entirely (outcome neutrality).
+    pub fleet_run: Option<FleetRun>,
 }
 
 /// What a whole sweep produced.

@@ -37,6 +37,7 @@ use crate::coordinator::{
 };
 use crate::devices::{EnvSpec, EvalCache, PlanCache, Testbed};
 use crate::fault::FaultPlan;
+use crate::fleet::{self, FleetSpec};
 use crate::record::{NullSink, RecordSink, ScopedSink};
 use crate::util::json::Json;
 
@@ -163,6 +164,11 @@ pub struct ScenarioSpec {
     /// Deterministic fault injection (`"faults"` object, see `fault/`).
     /// `None` — the default — runs fault-free.
     pub faults: Option<FaultPlan>,
+    /// Time-sliced request-stream simulation over the chosen
+    /// destinations (`"fleet"` object, see `fleet/`).  `None` — the
+    /// default — skips the fleet layer entirely: the scenario's records
+    /// and golden serialization are byte-identical to a pre-fleet run.
+    pub fleet: Option<FleetSpec>,
 }
 
 pub(crate) fn concurrency_from_label(s: &str) -> Result<TrialConcurrency> {
@@ -218,6 +224,7 @@ impl ScenarioSpec {
             "devices",
             "applications",
             "faults",
+            "fleet",
         ];
         for k in m.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -255,6 +262,7 @@ impl ScenarioSpec {
             },
             apps,
             faults: m.get("faults").map(FaultPlan::parse).transpose()?,
+            fleet: m.get("fleet").map(FleetSpec::parse).transpose()?,
         })
     }
 
@@ -293,6 +301,9 @@ impl ScenarioSpec {
         );
         if let Some(f) = &self.faults {
             m.insert("faults".into(), f.to_json());
+        }
+        if let Some(f) = &self.fleet {
+            m.insert("fleet".into(), f.to_json());
         }
         Json::Obj(m)
     }
@@ -378,11 +389,17 @@ impl ScenarioSpec {
             batcher.offloader.sink = Arc::new(ScopedSink::new(self.name.clone(), Arc::clone(sink)));
         }
         let batch = batcher.run_with_caches(&apps, plans, evals);
+        // The fleet layer runs strictly *after* the search, over its
+        // outcomes — it can never alter them (DESIGN.md invariant 10).
+        let fleet_run = self.fleet.as_ref().map(|f| {
+            fleet::run_for_scenario(f, &self.devices, &batch.outcomes, &self.name, sink.as_ref())
+        });
         Ok(ScenarioOutcome {
             name: self.name.clone(),
             fleet: self.devices.fleet_label(),
             schedule: self.schedule,
             batch,
+            fleet_run,
         })
     }
 }
@@ -466,6 +483,40 @@ mod tests {
         assert!(bare.faults.is_none());
         assert!(!bare.to_json().to_string().contains("faults"));
         assert!(bare.offloader().unwrap().faults.is_none());
+    }
+
+    #[test]
+    fn fleet_key_parses_roundtrips_and_stays_optional() {
+        let src = r#"{
+            "applications": [{"workload": "vecadd", "n": 1048576}],
+            "fleet": {
+                "slots": 50,
+                "slot_s": 0.5,
+                "arrivals": {"process": "deterministic", "rate": 2.0},
+                "queue_capacity": 4,
+                "seed": 11
+            }
+        }"#;
+        let spec = ScenarioSpec::from_str(src, "fleeted").unwrap();
+        let f = spec.fleet.as_ref().unwrap();
+        assert_eq!(f.slots, 50);
+        assert_eq!(f.queue_capacity, Some(4));
+        let back = ScenarioSpec::parse(&spec.to_json(), "fleeted").unwrap();
+        assert_eq!(back, spec);
+        // A fleet-less spec serializes without the key at all.
+        let bare =
+            ScenarioSpec::from_str(r#"{"applications": [{"workload": "vecadd"}]}"#, "d").unwrap();
+        assert!(bare.fleet.is_none());
+        assert!(!bare.to_json().to_string().contains("fleet"));
+        // Malformed fleet objects name the offending field.
+        let e = ScenarioSpec::from_str(
+            r#"{"applications": [{"workload": "vecadd"}], "fleet": {"slots": 0,
+                "arrivals": {"process": "deterministic", "rate": 1}}}"#,
+            "bad",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("fleet.slots"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Fleet-simulation integration battery (DESIGN.md invariant 10).
+//!
+//! * Determinism/mode-invariance: the same scenario + fleet seed yields
+//!   a byte-identical slot timeline and summary under Sequential and
+//!   Staged trial concurrency and any batch worker count.
+//! * Analytic sanity: a single-node Poisson/Exponential run is an M/M/1
+//!   queue; the simulated mean wait must sit within 10% of the textbook
+//!   `Wq = ρ/(μ − λ)` at ρ ∈ {0.3, 0.6, 0.9}.
+//! * Conservation: arrivals = completed + in-queue + dropped, and the
+//!   price ledger is exactly Σ busy node-seconds × node price.
+//! * Checkpoint/resume through the fleet journal is byte-identical to
+//!   an uninterrupted run.
+//! * Fleet spec errors name the offending file and field.
+
+use std::fs;
+use std::path::PathBuf;
+
+use mixoff::coordinator::{BatchOffloader, TrialConcurrency};
+use mixoff::devices::{EvalCache, PlanCache};
+use mixoff::durable::{FleetLog, FleetLogHeader};
+use mixoff::fleet::{
+    AppService, ArrivalProcess, ArrivalSpec, FleetClass, FleetModel, FleetRun, FleetSim,
+    FleetSpec, ServiceProcess,
+};
+use mixoff::record::{MemorySink, NullSink};
+use mixoff::scenario::ScenarioSpec;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mixoff-fleet-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A one-node, one-app model: the M/M/1 testbench.  Price 1 USD makes
+/// the ledger numerically equal to busy seconds.
+fn mm1_model(service_s: f64) -> FleetModel {
+    FleetModel {
+        classes: vec![FleetClass { device: "cpu".into(), count: 1, price_usd: 1.0 }],
+        apps: vec![AppService {
+            app: "svc".into(),
+            class: 0,
+            service_s,
+            fallback_s: service_s,
+        }],
+    }
+}
+
+fn poisson_exp_spec(rate: f64, seed: u64, slots: u64) -> FleetSpec {
+    FleetSpec {
+        slots,
+        slot_s: 1.0,
+        arrivals: ArrivalSpec { process: ArrivalProcess::Poisson, rate },
+        seed,
+        queue_capacity: None,
+        service: ServiceProcess::Exponential,
+    }
+}
+
+/// Conservation + ledger invariants every fleet run must satisfy.
+fn assert_conserved(run: &FleetRun) {
+    assert_eq!(
+        run.arrivals,
+        run.completed + run.resident + run.dropped,
+        "arrivals must equal completed + in-queue + dropped"
+    );
+    let node_sum: f64 = run.nodes.iter().map(|n| n.ledger_usd_s).sum();
+    assert!(
+        (run.ledger_usd_s - node_sum).abs() <= 1e-9 * run.ledger_usd_s.abs().max(1.0),
+        "ledger {} must be the sum of per-node ledgers {}",
+        run.ledger_usd_s,
+        node_sum
+    );
+    for n in &run.nodes {
+        assert!(
+            (n.ledger_usd_s - n.busy_s * n.price_usd).abs()
+                <= 1e-9 * n.ledger_usd_s.abs().max(1.0),
+            "node ledger must be busy seconds x price"
+        );
+    }
+}
+
+/// Single-node Poisson arrivals + exponential service is an M/M/1
+/// queue: mean waiting time must match `Wq = ρ/(μ − λ)` within 10%.
+/// Horizons and seeds are fixed (the run is deterministic), sized so
+/// the sampled mean sits well inside the tolerance.
+#[test]
+fn mm1_mean_wait_matches_the_textbook_formula() {
+    // (ρ, arrivals per slot, slots, fleet seed)
+    let cases = [(0.3, 0.017, 600_000u64, 13u64), (0.6, 0.06, 400_000, 11), (0.9, 0.18, 800_000, 15)];
+    for (rho, rate, slots, seed) in cases {
+        let service_s = rho / rate;
+        let wq = rho * service_s / (1.0 - rho);
+        let mut sim = FleetSim::new(mm1_model(service_s), &poisson_exp_spec(rate, seed, slots));
+        let run = sim.run("mm1", &NullSink);
+        assert_conserved(&run);
+        assert_eq!(run.slots, slots);
+        assert!(run.completed > slots / 100, "the queue must actually serve traffic");
+        let err = (run.mean_wait_s - wq).abs() / wq;
+        assert!(
+            err < 0.10,
+            "rho={rho}: simulated mean wait {:.3}s vs M/M/1 Wq {wq:.3}s (error {:.1}%)",
+            run.mean_wait_s,
+            err * 100.0
+        );
+        // Sojourn = wait + service, so its mean must clear the service mean.
+        assert!(run.mean_sojourn_s > run.mean_wait_s);
+        assert!(run.p99_sojourn_s >= run.p50_sojourn_s);
+    }
+}
+
+/// A deterministic overload against a bounded queue: the class refuses
+/// requests once its nodes and the CPU fallback are full, and every
+/// counter still reconciles.
+#[test]
+fn saturated_run_drops_overflows_and_still_conserves() {
+    let model = FleetModel {
+        classes: vec![
+            FleetClass { device: "cpu".into(), count: 1, price_usd: 100.0 },
+            FleetClass { device: "gpu".into(), count: 2, price_usd: 50.0 },
+        ],
+        apps: vec![AppService {
+            app: "hot".into(),
+            class: 1,
+            service_s: 3.0,
+            fallback_s: 5.0,
+        }],
+    };
+    let spec = FleetSpec {
+        slots: 200,
+        slot_s: 1.0,
+        arrivals: ArrivalSpec { process: ArrivalProcess::Deterministic, rate: 2.0 },
+        seed: 0,
+        queue_capacity: Some(2),
+        service: ServiceProcess::Deterministic,
+    };
+    let mut sim = FleetSim::new(model, &spec);
+    let run = sim.run("sat", &NullSink);
+    assert_conserved(&run);
+    assert_eq!(run.arrivals, 400);
+    assert!(run.overflowed > 0, "the CPU fallback must absorb some overflow");
+    assert!(run.dropped > 0, "demand at 3x capacity must drop requests");
+    let gpu_drops = run
+        .drops_by_class
+        .iter()
+        .find(|(d, _)| d == "gpu")
+        .map(|&(_, n)| n)
+        .unwrap_or(0);
+    assert_eq!(gpu_drops, run.dropped, "drops are charged to the class that refused them");
+    // Demand (2 req/s x 3 s) is well past saturation (2 nodes / 3 s).
+    assert!(run.saturation_rate_per_s < spec.arrivals.rate);
+}
+
+/// The property the record pipeline leans on: one scenario + one fleet
+/// seed ⇒ one byte stream.  Trial concurrency and batch worker count
+/// change wall clock only — the fleet timeline and summary JSON are
+/// byte-identical across all of them.
+#[test]
+fn fleet_sim_is_deterministic_and_mode_invariant() {
+    const SRC: &str = r#"{
+        "seed": 5,
+        "devices": {"manycore": {"count": 2}, "gpu": {}},
+        "applications": [
+            {"workload": "vecadd", "n": 1048576},
+            {"workload": "atax", "n": 2000}
+        ],
+        "fleet": {
+            "slots": 400,
+            "arrivals": {"process": "poisson", "rate": 1.5},
+            "seed": 9,
+            "queue_capacity": 3,
+            "service": "exponential"
+        }
+    }"#;
+    let spec = ScenarioSpec::from_str(SRC, "mode-invariant").unwrap();
+
+    let run_one = |concurrency: TrialConcurrency, workers: usize| -> (String, String) {
+        let apps = spec.applications().unwrap();
+        let mut batcher = BatchOffloader::default();
+        batcher.offloader = spec.offloader().unwrap();
+        batcher.offloader.workers = 1;
+        batcher.offloader.concurrency = concurrency;
+        batcher.batch_workers = workers;
+        let batch = batcher.run_with_caches(&apps, &PlanCache::new(), &EvalCache::new());
+        let model = FleetModel::from_outcomes(&spec.devices, &batch.outcomes);
+        let mut sim = FleetSim::new(model, spec.fleet.as_ref().unwrap());
+        let sink = MemorySink::unbounded();
+        let run = sim.run(&spec.name, &sink);
+        assert_conserved(&run);
+        let timeline: Vec<String> =
+            sink.events().iter().map(|e| e.to_json().to_string()).collect();
+        (timeline.join("\n"), run.to_json().to_string())
+    };
+
+    let (timeline0, summary0) = run_one(TrialConcurrency::Sequential, 1);
+    assert!(timeline0.contains("fleet_slot") && timeline0.contains("fleet_summary"));
+    for (concurrency, workers) in [
+        (TrialConcurrency::Sequential, 2),
+        (TrialConcurrency::Sequential, 8),
+        (TrialConcurrency::Staged, 1),
+        (TrialConcurrency::Staged, 2),
+        (TrialConcurrency::Staged, 8),
+    ] {
+        let (timeline, summary) = run_one(concurrency, workers);
+        assert_eq!(timeline, timeline0, "slot timeline must not depend on {concurrency:?}/{workers} workers");
+        assert_eq!(summary, summary0, "summary must not depend on {concurrency:?}/{workers} workers");
+    }
+}
+
+/// Checkpoint at slot 300 through the on-disk fleet journal, "crash",
+/// resume, and require the continued timeline and summary to be
+/// byte-identical to an uninterrupted run.
+#[test]
+fn journal_resume_is_byte_identical_to_an_uninterrupted_run() {
+    let dir = tmp_dir("resume");
+    let model = mm1_model(4.0);
+    let spec = poisson_exp_spec(0.2, 42, 1_000);
+    let header = FleetLogHeader::new("resume-case", &spec);
+
+    // The uninterrupted reference.
+    let full_sink = MemorySink::unbounded();
+    let full_run = FleetSim::new(model.clone(), &spec).run("resume-case", &full_sink);
+    let full_events: Vec<String> =
+        full_sink.events().iter().map(|e| e.to_json().to_string()).collect();
+
+    // First life: step 300 slots, checkpoint, drop mid-run.
+    {
+        let opened = FleetLog::open(&dir, &header, false).unwrap();
+        assert!(opened.checkpoint.is_none());
+        let mut log = opened.log;
+        let mut sim = FleetSim::new(model.clone(), &spec);
+        for _ in 0..300 {
+            sim.step();
+        }
+        log.append(sim.slot(), &sim.state_json()).unwrap();
+    }
+
+    // Second life: resume from the journal and finish.
+    let opened = FleetLog::open(&dir, &header, true).unwrap();
+    let cp = opened.checkpoint.expect("checkpoint survives reopen");
+    assert_eq!(cp.slot, 300);
+    let mut sim = FleetSim::new(model, &spec);
+    sim.restore(&cp.state).unwrap();
+    let tail_sink = MemorySink::unbounded();
+    let resumed_run = sim.run("resume-case", &tail_sink);
+    let tail_events: Vec<String> =
+        tail_sink.events().iter().map(|e| e.to_json().to_string()).collect();
+
+    assert_eq!(tail_events.as_slice(), &full_events[300..], "resumed tail must replay exactly");
+    assert_eq!(resumed_run.to_json().to_string(), full_run.to_json().to_string());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Every malformed fleet spec fails `scenario::load_file` with an error
+/// naming the offending file *and* field.
+#[test]
+fn fleet_spec_errors_name_the_file_and_field() {
+    let dir = tmp_dir("badspecs");
+    fs::create_dir_all(&dir).unwrap();
+    let write = |name: &str, body: &str| -> PathBuf {
+        let p = dir.join(name);
+        fs::write(&p, body).unwrap();
+        p
+    };
+    let fleet_scenario = |fleet: &str| {
+        format!(
+            r#"{{"devices": {{"gpu": {{}}}},
+                "applications": [{{"workload": "vecadd", "n": 1048576}}],
+                "fleet": {fleet}}}"#
+        )
+    };
+    let cases = [
+        (
+            "zero-count.json",
+            r#"{"devices": {"gpu": {"count": 0}},
+                "applications": [{"workload": "vecadd", "n": 1048576}]}"#
+                .to_string(),
+            "count must be a positive integer",
+        ),
+        (
+            "unknown-process.json",
+            fleet_scenario(
+                r#"{"slots": 10, "arrivals": {"process": "weibull", "rate": 1.0}}"#,
+            ),
+            "fleet.arrivals.process: unknown arrival process \"weibull\"",
+        ),
+        (
+            "negative-rate.json",
+            fleet_scenario(
+                r#"{"slots": 10, "arrivals": {"process": "poisson", "rate": -2}}"#,
+            ),
+            "fleet.arrivals.rate: must be a positive finite number",
+        ),
+        (
+            "zero-slots.json",
+            fleet_scenario(
+                r#"{"slots": 0, "arrivals": {"process": "poisson", "rate": 1.0}}"#,
+            ),
+            "fleet.slots: must be a positive integer",
+        ),
+    ];
+    for (name, body, want) in cases {
+        let path = write(name, &body);
+        let err = mixoff::scenario::load_file(&path).unwrap_err().to_string();
+        assert!(
+            err.contains(name),
+            "{name}: error must name the offending file, got: {err}"
+        );
+        assert!(
+            err.contains(want),
+            "{name}: error must name the offending field ({want:?}), got: {err}"
+        );
+    }
+    let _ = fs::remove_dir_all(&dir);
+}

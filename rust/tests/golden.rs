@@ -21,6 +21,7 @@ use mixoff::coordinator::TrialConcurrency;
 use mixoff::report;
 use mixoff::scenario;
 use mixoff::util::atomic::atomic_write;
+use mixoff::util::Json;
 
 fn scenarios_dir() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios")
@@ -59,6 +60,49 @@ fn corpus_loads_and_stays_at_least_ten_scenarios() {
     has(&scenarios, "multi-node", |s| {
         s.spec.devices.fpga.as_ref().map(|d| d.count > 1).unwrap_or(false)
     });
+    has(&scenarios, "fleet-enabled", |s| s.spec.fleet.is_some());
+    has(&scenarios, "fleet-saturating (bounded queues)", |s| {
+        s.spec.fleet.as_ref().map(|f| f.queue_capacity.is_some()).unwrap_or(false)
+    });
+}
+
+/// DESIGN.md invariant 10: the fleet layer never alters offload
+/// outcomes.  A fleet-enabled scenario with its `fleet` key stripped
+/// must replay byte-identically minus the `fleet_sim` member, and a
+/// fleet-off scenario must never grow one.
+#[test]
+fn fleet_key_is_outcome_neutral_across_the_corpus() {
+    let scenarios = scenario::load_dir(&scenarios_dir()).expect("scenario corpus loads");
+    let mut fleet_checked = 0;
+    for sc in &scenarios {
+        let out = sc.spec.run_with(TrialConcurrency::Staged).expect("scenario runs");
+        let mut j = report::scenario_to_json(&out);
+        if sc.spec.fleet.is_none() {
+            assert!(
+                !j.to_string().contains("\"fleet_sim\""),
+                "{}: a scenario without a fleet key must not emit fleet_sim",
+                sc.spec.name
+            );
+            continue;
+        }
+        fleet_checked += 1;
+        let Json::Obj(m) = &mut j else { panic!("scenario JSON is an object") };
+        assert!(
+            m.remove("fleet_sim").is_some(),
+            "{}: fleet-enabled scenario must report fleet_sim",
+            sc.spec.name
+        );
+        let mut stripped = sc.spec.clone();
+        stripped.fleet = None;
+        let without = stripped.run_with(TrialConcurrency::Staged).expect("stripped runs");
+        assert_eq!(
+            Json::Obj(m.clone()).to_string(),
+            report::scenario_to_json(&without).to_string(),
+            "{}: the fleet key changed the offload outcome",
+            sc.spec.name
+        );
+    }
+    assert!(fleet_checked >= 2, "the corpus must keep >= 2 fleet-enabled scenarios");
 }
 
 #[test]
